@@ -1,0 +1,56 @@
+//! Fine-tuning gradient-integrity experiment — reproduces Table 4 (§4.4,
+//! scaled).
+//!
+//! Dense pre-training -> truncated-SVD conversion at 95% energy retention
+//! (rust Jacobi SVD + orthonormal rank padding) -> fine-tune the converted
+//! and the dense model on the same held-out corpus with the same seed and
+//! LR. The claim under test is gradient integrity through the spectral
+//! parameterization: SCT must recover from the conversion loss spike and
+//! land within a small factor of dense PPL (paper: 1.38x at 135M).
+//!
+//! Run: `cargo run --release --example finetune_integrity -- [--finetune-steps N]`
+
+use sct::coordinator::finetune::{render_table4, run_finetune, FinetuneOpts};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut opts = FinetuneOpts::default();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--pretrain-steps" => {
+                opts.pretrain_steps = it.next().and_then(|s| s.parse().ok()).unwrap_or(opts.pretrain_steps)
+            }
+            "--finetune-steps" => {
+                opts.finetune_steps = it.next().and_then(|s| s.parse().ok()).unwrap_or(opts.finetune_steps)
+            }
+            "--energy" => opts.energy = it.next().and_then(|s| s.parse().ok()).unwrap_or(opts.energy),
+            "--seed" => opts.seed = it.next().and_then(|s| s.parse().ok()).unwrap_or(opts.seed),
+            other => anyhow::bail!("unknown arg {other}"),
+        }
+    }
+
+    println!(
+        "== fine-tune gradient integrity: {} pretrain + {} finetune steps, {:.0}% energy ==\n",
+        opts.pretrain_steps,
+        opts.finetune_steps,
+        opts.energy * 100.0
+    );
+    let result = run_finetune(&opts)?;
+    println!("{}", render_table4(&result));
+
+    let ratio = result.sct.ppl / result.dense.ppl;
+    // The paper's quantitative claim at its scale is 1.38x; the qualitative
+    // claim — SCT recovers to within a small factor — is what survives
+    // scaling. Accept up to 2x.
+    anyhow::ensure!(
+        ratio < 2.0,
+        "SCT should recover to within 2x of dense PPL, got {ratio:.2}x"
+    );
+    anyhow::ensure!(
+        result.sct.final_loss < result.sct.initial_loss,
+        "SCT must recover from the conversion spike"
+    );
+    println!("finetune_integrity OK (PPL ratio {ratio:.2}x; paper reports 1.38x at 135M)");
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! End-to-end pre-training driver — the full-system workload.
+//!
+//! Trains the `e2e_r64` preset (a ~28M-parameter SmolLM2-family transformer
+//! with spectral MLPs — the "100M-class" testbed scaled to what XLA-CPU
+//! trains in minutes; DESIGN.md §4) for a few hundred steps on the synthetic
+//! instruction corpus, exercising every layer of the stack: AOT artifacts,
+//! PJRT runtime, fused train chunks, prefetching data pipeline, LR
+//! schedules, checkpointing, metrics. Logs the loss curve (CSV + ASCII) and
+//! throughput; results are recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `cargo run --release --example pretrain_e2e -- [steps] [preset]`
+
+use sct::coordinator::{LrPlan, RunConfig, Trainer};
+use sct::coordinator::schedule::Schedule;
+use sct::metrics::{export, plot};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let preset = args.get(2).cloned().unwrap_or_else(|| "e2e_r64".into());
+
+    let mut cfg = RunConfig::default();
+    cfg.preset = preset.clone();
+    cfg.steps = steps;
+    cfg.corpus_bytes = 4 << 20;
+    // Warmup-cosine on both groups; spectral factors run hotter (the
+    // paper's §5 per-component proposal).
+    cfg.lr_plan = LrPlan {
+        dense: Schedule::WarmupCosine { peak: 3e-4, floor: 3e-5, warmup: 20, total: steps },
+        spectral: Schedule::WarmupCosine { peak: 1.5e-3, floor: 1.5e-4, warmup: 20, total: steps },
+    };
+    cfg.eval_every = 50;
+    cfg.ortho_every = 100;
+    cfg.ckpt_dir = Some(format!("runs/{preset}_ckpt"));
+    cfg.ckpt_every = 100;
+
+    println!("== SCT end-to-end pre-training: {preset}, {steps} steps ==");
+    let t_open = std::time::Instant::now();
+    let mut trainer = Trainer::new(cfg)?;
+    let m = trainer.session.preset.model.clone();
+    let tokens_per_step = m.batch * m.seq_len;
+    println!(
+        "model: d={} L={} ffn={} vocab={} rank={:?} -> {:.1}M params; state {:.0} MB",
+        m.d_model,
+        m.n_layers,
+        m.d_ffn,
+        m.vocab,
+        m.rank,
+        m.param_count as f64 / 1e6,
+        trainer.session.preset.state_bytes() as f64 / 1e6
+    );
+
+    let summary = trainer.run()?;
+    let wall = t_open.elapsed().as_secs_f64();
+    println!("\nfinished {} steps in {:.0}s (incl. XLA compile)", summary.steps, wall);
+    for (name, secs) in &trainer.session.compile_times {
+        println!("  compile {name}: {secs:.1}s");
+    }
+    println!(
+        "loss {:.3} -> {:.3} (ppl {:.1}); eval {:?}; ortho {:?}",
+        summary.losses[0],
+        summary.final_loss_smoothed,
+        summary.ppl,
+        summary.eval_loss,
+        summary.ortho_error
+    );
+    println!(
+        "throughput: {:.0} tokens/s ({:.0} ms/step)",
+        tokens_per_step as f64 / summary.mean_step_s,
+        summary.mean_step_s * 1e3
+    );
+
+    // loss curve: CSV + ASCII
+    std::fs::create_dir_all("runs")?;
+    let csv = std::path::PathBuf::from(format!("runs/{preset}_e2e_loss.csv"));
+    export::write_loss_csv(&trainer.tracker, &csv)?;
+    println!("\nloss curve -> {}", csv.display());
+    let series = vec![(preset.clone(), trainer.tracker.smoothed_series())];
+    println!("{}", plot::line_plot(&series, 16, 70));
+
+    anyhow::ensure!(
+        summary.final_loss_smoothed < summary.losses[0] - 0.5,
+        "e2e pre-training must make real progress (got {:.3} -> {:.3})",
+        summary.losses[0],
+        summary.final_loss_smoothed
+    );
+    println!("e2e pre-training OK");
+    Ok(())
+}

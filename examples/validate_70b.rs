@@ -1,0 +1,54 @@
+//! 70B architecture validation — reproduces Table 2 and Figure 1 (§4.1).
+//!
+//! Memory is analytic (the same arithmetic the paper uses — its own dense
+//! 1,245 GB number is analytic); phase times are MEASURED at the true 70B
+//! factor shapes (8192x28672 @ k=32) through the native rust SpectralLinear
+//! — running a full forward/backward/AdamW/QR-retraction step at 70B shapes
+//! on whatever machine this is, which is precisely the capability the paper
+//! claims to unlock. Also prints Table 1 and the baseline-method comparison.
+//!
+//! Run: `cargo run --release --example validate_70b -- [--rank K] [--layers N]`
+
+use sct::coordinator::validate70b::{measure_70b_phases, render_table2};
+use sct::memmodel::report::{baseline_rows, render_table1};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut rank = 32usize;
+    let mut layers = 2usize;
+    let mut batch = 4usize;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--rank" => rank = it.next().and_then(|s| s.parse().ok()).unwrap_or(rank),
+            "--layers" => layers = it.next().and_then(|s| s.parse().ok()).unwrap_or(layers),
+            "--batch" => batch = it.next().and_then(|s| s.parse().ok()).unwrap_or(batch),
+            other => anyhow::bail!("unknown arg {other}"),
+        }
+    }
+
+    println!("== 70B validation: k={rank}, measuring {layers}/80 layers at true shapes ==\n");
+    let phases = measure_70b_phases(rank, batch, layers)?;
+    println!("{}", render_table2(rank, &phases));
+
+    println!("{}", render_table1(rank));
+
+    println!("70B MLP-stack training memory by method (GB):");
+    for (name, gb) in baseline_rows(rank) {
+        println!("  {name:<12} {gb:>10.1}");
+    }
+
+    // The paper's structural claim worth machine-checking: retraction is a
+    // major phase cost (40-50% on their hardware).
+    let frac = phases.retract_fraction();
+    println!(
+        "\nretraction share of total step: {:.0}% (paper: 40-50%)",
+        frac * 100.0
+    );
+    anyhow::ensure!(
+        phases.ortho_error < 2e-6,
+        "orthonormality after a true-shape step must hold"
+    );
+    println!("validate_70b OK");
+    Ok(())
+}

@@ -1,0 +1,3 @@
+"""Build-time Python for SCT: L1 Pallas kernels, L2 JAX model/optimizer, and
+the AOT exporter. Never imported at runtime — the rust binary only consumes
+artifacts/*.hlo.txt + manifest.json produced by `python -m compile.aot`."""

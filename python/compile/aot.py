@@ -1,0 +1,192 @@
+"""AOT exporter: lower every step function to HLO *text* + a manifest.
+
+This is the only bridge between the Python build layer and the rust runtime.
+``python -m compile.aot`` runs once (``make artifacts``); afterwards the rust
+binary is self-contained.
+
+Interchange format gotcha (see /opt/xla-example/README.md): we emit HLO
+**text**, not a serialized HloModuleProto — jax >= 0.5 writes protos with
+64-bit instruction ids that the runtime's XLA (xla_extension 0.5.1) rejects;
+the text parser reassigns ids and round-trips cleanly. Lowered with
+``return_tuple=True``; the rust session unwraps the single tuple output.
+
+Manifest contract (artifacts/manifest.json)
+-------------------------------------------
+For each preset: the model config, the ordered flat tensor specs of every
+artifact's inputs and outputs (name/dtype/shape in jax tree-flatten order),
+and the state layout. For state-carrying artifacts (``train_step``) the
+first ``n_state`` inputs and outputs are the same tensors in the same order,
+so the rust hot loop feeds step outputs straight back as next-step inputs
+without any host round-trip.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+# The runtime's XLA (xla_extension 0.5.1) predates jax's typed-FFI custom
+# calls. The default threefry PRNG lowers to one; 'rbg' lowers to the native
+# HLO RngBitGenerator op instead. Must be set before any tracing happens.
+jax.config.update("jax_default_prng_impl", "rbg")
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, train
+from .optim import path_str
+
+# --------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return jnp.dtype(dt).name  # 'float32', 'int32', ...
+
+
+def flat_specs(tree, prefix: str) -> list[dict]:
+    """Ordered (name, dtype, shape) for every leaf, in tree-flatten order —
+    the exact order XLA parameters / tuple outputs appear in."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [
+        {
+            "name": f"{prefix}/{path_str(path)}" if path else prefix,
+            "dtype": _dtype_name(leaf.dtype),
+            "shape": [int(d) for d in leaf.shape],
+        }
+        for path, leaf in leaves
+    ]
+
+
+def lower_artifact(fn, example_args, arg_prefixes, out_dir, name):
+    """Lower ``fn(*example_args)`` to HLO text; return its manifest entry."""
+    # keep_unused=True: the manifest contract is positional over the FULL
+    # input tree; without it XLA drops unused parameters (e.g. ortho_check
+    # reads only the 2·3·L factor matrices) and the buffer counts diverge.
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+
+    inputs = []
+    for prefix, arg in zip(arg_prefixes, example_args):
+        inputs.extend(flat_specs(arg, prefix))
+    out_shape = jax.eval_shape(fn, *example_args)
+    outputs = flat_specs(out_shape, "out")
+    return {
+        "file": fname,
+        "inputs": inputs,
+        "outputs": outputs,
+        "bytes": len(text),
+    }
+
+
+# --------------------------------------------------------------------------
+
+
+def export_preset(cfg: configs.ModelConfig, root: str, chunk_k: int = 10) -> dict:
+    out_dir = os.path.join(root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    params, opt, tokens, scalar, seed = train.example_inputs(cfg)
+
+    n_params = len(jax.tree_util.tree_leaves(params))
+    n_opt = len(jax.tree_util.tree_leaves(opt))
+
+    arts = {}
+    arts["init"] = lower_artifact(
+        train.make_init(cfg), (seed,), ("seed",), out_dir, "init"
+    )
+    # Pallas interpret-mode kernels have no registered VJP, so the pallas
+    # integration preset exports only the inference-side artifacts (its
+    # training math is identical to the ref path — proven by pytest).
+    if not cfg.use_pallas:
+        arts["train_step"] = lower_artifact(
+            train.make_train_step(cfg),
+            (params, opt, tokens, scalar, scalar),
+            ("params", "opt", "tokens", "lr_dense", "lr_spectral"),
+            out_dir,
+            "train_step",
+        )
+        chunk_tokens = jax.ShapeDtypeStruct(
+            (chunk_k, cfg.batch, cfg.seq_len + 1), jnp.int32
+        )
+        arts["train_chunk"] = lower_artifact(
+            train.make_train_chunk(cfg, chunk_k),
+            (params, opt, chunk_tokens, scalar, scalar),
+            ("params", "opt", "tokens", "lr_dense", "lr_spectral"),
+            out_dir,
+            "train_chunk",
+        )
+    arts["eval_step"] = lower_artifact(
+        train.make_eval_step(cfg), (params, tokens), ("params", "tokens"), out_dir, "eval_step"
+    )
+    # forward takes input tokens (B, T) — no next-token column.
+    fwd_tokens = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    arts["forward"] = lower_artifact(
+        train.make_forward(cfg), (params, fwd_tokens), ("params", "tokens"), out_dir, "forward"
+    )
+    arts["retract"] = lower_artifact(
+        train.make_retract(cfg), (params,), ("params",), out_dir, "retract"
+    )
+    arts["ortho_check"] = lower_artifact(
+        train.make_ortho_check(cfg), (params,), ("params",), out_dir, "ortho_check"
+    )
+
+    return {
+        "model": cfg.to_json_dict(),
+        "param_count": cfg.param_count(),
+        "n_state": n_params + n_opt,  # state prefix length of train_step I/O
+        "n_params": n_params,
+        # Canonical state layout: names/dtypes/shapes of every state tensor
+        # (params then optimizer) in flatten order — what `init` returns and
+        # what the state-prefix of `train_step` I/O means. The rust session
+        # and checkpoint format key off these names.
+        "state": flat_specs(params, "params") + flat_specs(opt, "opt"),
+        "artifacts": arts,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact root dir")
+    ap.add_argument(
+        "--presets",
+        default="",
+        help="comma-separated preset names (default: all in configs.PRESETS)",
+    )
+    args = ap.parse_args()
+
+    names = [n for n in args.presets.split(",") if n] or sorted(configs.PRESETS)
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": 1, "presets": {}}
+    for name in names:
+        cfg = configs.get(name)
+        print(f"[aot] lowering preset {name} "
+              f"({cfg.param_count():,} params, rank={cfg.rank})", flush=True)
+        manifest["presets"][name] = export_preset(cfg, args.out)
+
+    path = os.path.join(args.out, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    total = sum(
+        a["bytes"]
+        for p in manifest["presets"].values()
+        for a in p["artifacts"].values()
+    )
+    print(f"[aot] wrote {path} ({len(names)} presets, {total/1e6:.1f} MB of HLO)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Model/run presets for the AOT exporter.
+
+The paper's testbeds (SmolLM2-1.7B on an A100, a 70B-class architecture on a
+Steam Deck) are hardware-gated here, so artifacts are exported at CPU-scale
+presets with the *same architecture family* (RoPE attention, RMSNorm, SwiGLU
+MLP with spectral gate/up/down). The paper's exact layer shapes
+(SmolLM2-135M/360M/1.7B, LLaMA-7B, Qwen-27B, LLaMA-70B) live in the rust
+analytic memory model (`rust/src/memmodel/presets.rs`), which regenerates
+Tables 1-2 / Figure 1 at the true dimensions.
+
+Rank mapping for the scaled rank sweep (Table 3): the paper sweeps
+k in {32, 64, 128, 256} on d=2048/ffn=8192; at the `sweep` preset
+(d=128/ffn=384) the ranks {8, 16, 32, 64} occupy the same relative band
+(k/min(m,n) from ~6% to ~50%), so the qualitative claims — every rank hits
+the same loss floor, dense sits below, memory and step time fall with k —
+are probed at matched compression ratios.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + batch geometry for one exported artifact set."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ffn: int
+    seq_len: int
+    batch: int
+    # None -> dense MLP baseline; otherwise the spectral rank k for the MLP
+    # projections (attention/embeddings/norms stay dense, as in the paper).
+    rank: Optional[int] = None
+    # route the MLP through the Pallas kernels instead of the jnp oracle
+    # (interpret mode: correct everywhere, fast nowhere — used for the
+    # kernel-path integration artifact).
+    use_pallas: bool = False
+    tie_embeddings: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Exact trainable-parameter count (matches model.init_params)."""
+        d, f, v = self.d_model, self.d_ffn, self.vocab
+        attn = 4 * d * d
+        if self.rank is None:
+            mlp = 3 * d * f
+        else:
+            k = self.rank
+            mlp = 2 * (d * k + k + f * k) + (f * k + k + d * k)
+        per_layer = attn + mlp + 2 * d  # + two RMSNorm gains
+        head = 0 if self.tie_embeddings else d * v
+        return v * d + self.n_layers * per_layer + d + head
+
+    def to_json_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _base(name, vocab, d, layers, heads, ffn, seq, batch, **kw) -> ModelConfig:
+    return ModelConfig(
+        name=name, vocab=vocab, d_model=d, n_layers=layers, n_heads=heads,
+        d_ffn=ffn, seq_len=seq, batch=batch, **kw,
+    )
+
+
+#: Presets exported by `python -m compile.aot`. Keys are artifact-set names.
+PRESETS: dict[str, ModelConfig] = {}
+
+
+def _register(cfg: ModelConfig) -> ModelConfig:
+    PRESETS[cfg.name] = cfg
+    return cfg
+
+
+# --- tiny: unit/integration tests, finetune-integrity experiment (Table 4) --
+for k in (4, 8, 16, 32):
+    _register(_base(f"tiny_r{k}", 256, 64, 2, 4, 192, 64, 4, rank=k))
+_register(_base("tiny_dense", 256, 64, 2, 4, 192, 64, 4, rank=None))
+# Pallas-kernel-path variant: proves the interpret-lowered kernel HLO runs
+# end-to-end from rust (forward only; see aot.py).
+_register(_base("tiny_r8_pallas", 256, 64, 2, 4, 192, 64, 4, rank=8, use_pallas=True))
+
+# --- sweep: the scaled Table 3 / Fig 2 / Fig 3 rank sweep ------------------
+for k in (8, 16, 32, 64):
+    _register(_base(f"sweep_r{k}", 512, 128, 4, 4, 384, 128, 4, rank=k))
+_register(_base("sweep_dense", 512, 128, 4, 4, 384, 128, 4, rank=None))
+
+# --- e2e: the end-to-end pretraining driver (examples/pretrain_e2e.rs) -----
+# ~28M params — the "100M-class" driver scaled to what XLA-CPU trains in
+# minutes; same structure as the paper's SmolLM2 testbed.
+_register(_base("e2e_r64", 8192, 384, 6, 6, 1024, 128, 4, rank=64))
+_register(_base("e2e_dense", 8192, 384, 6, 6, 1024, 128, 4, rank=None))
+
+
+def get(name: str) -> ModelConfig:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise KeyError(f"unknown preset {name!r}; have {sorted(PRESETS)}") from None

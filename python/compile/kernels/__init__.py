@@ -1,0 +1,7 @@
+"""L1 — Pallas kernels for SCT (interpret=True on CPU; see each module's
+docstring for the real-TPU mapping) plus their pure-jnp oracles."""
+
+from . import ref  # noqa: F401
+from .qr_retract import qr_retract  # noqa: F401
+from .spectral_matmul import spectral_matmul  # noqa: F401
+from .spectral_swiglu import spectral_swiglu  # noqa: F401

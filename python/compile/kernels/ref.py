@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here, written in
+the most obvious jnp form. pytest (``python/tests/``) asserts allclose
+between kernel and oracle across a hypothesis sweep of shapes/dtypes; the
+oracles are also what the L2 model uses when ``use_pallas=False`` (the
+default for the big AOT artifacts, since interpret-mode Pallas inside a
+multi-layer training graph would be pointlessly slow on CPU — the math is
+identical, which is exactly what the kernel-vs-ref tests prove).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spectral_matmul(x: jax.Array, u: jax.Array, s: jax.Array, v: jax.Array) -> jax.Array:
+    """Paper Eq. (2)-(4): ``y = ((x @ U) * s) @ V^T``.
+
+    x: (..., m), u: (m, k), s: (k,), v: (n, k)  ->  (..., n).
+
+    The dense matrix ``W = U diag(s) V^T`` is never formed; cost is
+    O(b*k*(m+n)) instead of O(b*m*n).
+    """
+    h = x @ u  # (..., k)
+    hs = h * s  # (..., k)
+    return hs @ v.T  # (..., n)
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def spectral_swiglu(x, gate, up, down):
+    """SCT SwiGLU MLP: ``down(silu(gate(x)) * up(x))`` with all three
+    projections in spectral form (the paper converts gate_proj, up_proj and
+    down_proj of every MLP block).
+
+    x: (..., d); ``gate``/``up`` are (U, s, V) factor triples mapping d -> f,
+    ``down`` maps f -> d.
+    """
+    g = spectral_matmul(x, *gate)
+    u_ = spectral_matmul(x, *up)
+    h = silu(g) * u_
+    return spectral_matmul(h, *down)
+
+
+def qr_retract(a: jax.Array) -> jax.Array:
+    """Paper Eq. (5): Stiefel retraction ``Q, R = qr(A); Q * sign(diag(R))``.
+
+    The sign correction makes diag(R) positive, which selects the unique QR
+    factorization with positive diagonal — keeping the retraction continuous
+    across steps (Householder QR is only defined up to column signs).
+    """
+    q, r = jnp.linalg.qr(a, mode="reduced")
+    d = jnp.sign(jnp.diagonal(r))
+    d = jnp.where(d == 0, jnp.ones_like(d), d).astype(a.dtype)
+    return q * d[None, :]
+
+
+def qr_retract_cgs(a: jax.Array, eps: float = 1e-30) -> jax.Array:
+    """Graph-safe Stiefel retraction: CGS2 (classical Gram-Schmidt, twice)
+    in pure jnp.
+
+    Numerically equivalent to :func:`qr_retract` (CGS2's R has a positive
+    diagonal by construction, so the sign fix is built in), but lowers to
+    native HLO (while-loop + dots). ``jnp.linalg.qr`` lowers to a LAPACK
+    custom-call on CPU that the runtime's XLA 0.5.1 cannot compile, so every
+    *exported* graph (train_step, retract, init) uses this path; the
+    LAPACK version remains the pytest oracle.
+    """
+    m, k = a.shape
+    a32 = a.astype(jnp.float32)
+
+    def body(j, q):
+        v = jax.lax.dynamic_slice(a32, (0, j), (m, 1))
+        v = v - q @ (q.T @ v)
+        v = v - q @ (q.T @ v)  # reorthogonalize: "twice is enough"
+        r_jj = jnp.sqrt(jnp.sum(v * v))
+        qj = v / jnp.maximum(r_jj, eps)
+        return jax.lax.dynamic_update_slice(q, qj, (0, j))
+
+    q = jax.lax.fori_loop(0, k, body, jnp.zeros_like(a32))
+    return q.astype(a.dtype)
+
+
+def ortho_error(q: jax.Array) -> jax.Array:
+    """``max |Q^T Q - I|`` — the paper reports < 2e-6 after retraction."""
+    k = q.shape[-1]
+    return jnp.max(jnp.abs(q.T @ q - jnp.eye(k, dtype=q.dtype)))

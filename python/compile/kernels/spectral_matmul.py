@@ -1,0 +1,129 @@
+"""Pallas kernel for the SCT spectral linear hot path.
+
+Computes ``y = ((x @ U) * s) @ V^T`` — paper Eq. (2)-(4) — without ever
+materializing ``W = U diag(s) V^T``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation)
+--------------------------------------------
+The paper's CUDA view ("three small GEMMs") becomes, on TPU:
+
+* The **factors are VMEM-resident**: ``k(m+n+1)`` floats is tiny (70B MLP at
+  k=32: 4.7 MB), so ``U``, ``s``, ``V`` use BlockSpecs whose index_map is
+  constant — Pallas keeps one copy in VMEM for the whole grid instead of
+  re-streaming from HBM per tile. This is the kernel-level expression of the
+  paper's core memory argument.
+* The **rows stream**: the grid walks (row-tiles, n-tiles); each program
+  computes a ``(bm, k)`` intermediate on the MXU, applies the ``* s`` scaling
+  as a register-level epilogue (no third op), then the second MXU pass
+  against the ``(bn, k)`` V-tile.
+* ``h = x @ U`` depends only on the row tile, so it is computed in the
+  ``j == 0`` program of each row and cached in a VMEM scratch buffer for the
+  remaining n-tiles (the standard Pallas revisiting-grid idiom); the
+  alternative (recompute per n-tile) costs an extra (#n-tiles - 1) MXU passes
+  over U.
+
+On CPU this runs under ``interpret=True`` (Mosaic custom-calls cannot execute
+on the CPU PJRT plugin); correctness vs ``ref.spectral_matmul`` is the
+pytest/hypothesis signal.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, u_ref, s_ref, v_ref, o_ref, h_ref, *, n_tiles: int):
+    """One (row-tile, n-tile) program.
+
+    x_ref: (bm, m)   row tile (full reduction dim)
+    u_ref: (m, k)    whole U, VMEM-resident
+    s_ref: (k,)      whole s
+    v_ref: (bn, k)   V tile for this n-tile
+    o_ref: (bm, bn)  output tile
+    h_ref: (bm, k)   VMEM scratch: cached (x@U)*s for the current row tile
+    """
+    j = pl.program_id(1)
+
+    # First n-tile of each row tile computes the shared rank-space projection
+    # once; later n-tiles reuse it from scratch (grid iterates j fastest).
+    @pl.when(j == 0)
+    def _compute_h():
+        h = jnp.dot(x_ref[...], u_ref[...], preferred_element_type=jnp.float32)
+        h_ref[...] = (h * s_ref[...][None, :]).astype(h_ref.dtype)
+
+    # Second MXU pass: (bm, k) x (k, bn).
+    o_ref[...] = jnp.dot(
+        h_ref[...], v_ref[...].T, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+    del n_tiles  # structural constant, kept for cost documentation
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (prefer exact tiling —
+    interpret mode zero-pads partial blocks, and on real TPU ragged edges
+    waste MXU lanes)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_n"))
+def spectral_matmul(
+    x: jax.Array,
+    u: jax.Array,
+    s: jax.Array,
+    v: jax.Array,
+    *,
+    block_rows: int = 128,
+    block_n: int = 256,
+) -> jax.Array:
+    """``y = ((x @ U) * s) @ V^T`` as a Pallas call.
+
+    x: (..., m), u: (m, k), s: (k,), v: (n, k) -> (..., n).
+    Leading dims of ``x`` are flattened into a row dimension.
+    """
+    m, k = u.shape
+    n = v.shape[0]
+    lead = x.shape[:-1]
+    rows = 1
+    for d in lead:
+        rows *= d
+    x2 = x.reshape(rows, m)
+
+    bm = _pick_block(rows, block_rows)
+    bn = _pick_block(n, block_n)
+    grid = (rows // bm, n // bn)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_tiles=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, m), lambda i, j: (i, 0)),  # x: row tile
+            pl.BlockSpec((m, k), lambda i, j: (0, 0)),  # U: pinned
+            pl.BlockSpec((k,), lambda i, j: (0,)),  # s: pinned
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),  # V: n tile
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        # VMEM scratch on real TPU (pltpu.VMEM); memory-space-agnostic here so
+        # the interpret path stays backend-neutral.
+        scratch_shapes=[pl.MemorySpace.ANY((bm, k), jnp.float32)],
+        interpret=True,
+    )(x2, u, s, v)
+    return out.reshape(*lead, n)
+
+
+def vmem_bytes(m: int, n: int, k: int, bm: int = 128, bn: int = 256, itemsize: int = 4) -> int:
+    """Estimated VMEM working set of one program — used by the perf notes in
+    EXPERIMENTS.md §Perf (interpret-mode wallclock is not a TPU proxy, the
+    footprint is what we can reason about)."""
+    x_tile = bm * m
+    factors = m * k + k + bn * k
+    h = bm * k
+    o = bm * bn
+    return (x_tile + factors + h + o) * itemsize

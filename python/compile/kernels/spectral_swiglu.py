@@ -1,0 +1,109 @@
+"""Fused Pallas kernel for the SCT SwiGLU MLP block.
+
+The paper converts the three MLP projections of every transformer layer
+(gate_proj, up_proj, down_proj) to spectral form. Done naively that is nine
+skinny GEMMs with two (rows x ffn) intermediates round-tripping through HBM.
+This kernel fuses the whole block per row-tile:
+
+    y = spectral_down( silu(spectral_gate(x)) * spectral_up(x) )
+
+TPU mapping (DESIGN.md §Hardware-Adaptation)
+--------------------------------------------
+* All six factor matrices + three singular-value vectors are VMEM-pinned
+  (constant index_map): total ``k(2d + 4f + 3)`` floats — for the paper's
+  70B MLP at k=32 that is ~14 MB of factors *replacing* 235M dense weights.
+* Grid walks row tiles only. The (bm, f) SwiGLU intermediate lives in the
+  program's registers/VMEM and never reaches HBM — this is the fusion the
+  paper's CUDA implementation gets from torch.compile, expressed with
+  BlockSpecs.
+* Six MXU passes per tile: x@Ug, *@Vg^T, x@Uu, *@Vu^T, h@Ud, *@Vd^T, with
+  the diag(s) scalings folded into epilogues.
+
+Runs under interpret=True on CPU; oracle: ``ref.spectral_swiglu``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _silu(x):
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def _kernel(
+    x_ref,
+    ug_ref, sg_ref, vg_ref,
+    uu_ref, su_ref, vu_ref,
+    ud_ref, sd_ref, vd_ref,
+    o_ref,
+):
+    x = x_ref[...]
+    f32 = jnp.float32
+
+    def spec(xv, u_ref, s_ref, v_ref):
+        h = jnp.dot(xv, u_ref[...], preferred_element_type=f32)
+        h = h * s_ref[...][None, :]
+        return jnp.dot(h, v_ref[...].T, preferred_element_type=f32)
+
+    g = spec(x, ug_ref, sg_ref, vg_ref)  # (bm, f)
+    u = spec(x, uu_ref, su_ref, vu_ref)  # (bm, f)
+    h = _silu(g) * u                     # fused SwiGLU intermediate, VMEM-only
+    y = spec(h, ud_ref, sd_ref, vd_ref)  # (bm, d)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, target: int) -> int:
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def spectral_swiglu(
+    x: jax.Array,
+    gate: tuple[jax.Array, jax.Array, jax.Array],
+    up: tuple[jax.Array, jax.Array, jax.Array],
+    down: tuple[jax.Array, jax.Array, jax.Array],
+    *,
+    block_rows: int = 128,
+) -> jax.Array:
+    """Fused SCT SwiGLU MLP. x: (..., d) -> (..., d).
+
+    ``gate``/``up``: (U: (d,k), s: (k,), V: (f,k)); ``down``: (U: (f,k),
+    s: (k,), V: (d,k)).
+    """
+    d = x.shape[-1]
+    lead = x.shape[:-1]
+    rows = 1
+    for dd in lead:
+        rows *= dd
+    x2 = x.reshape(rows, d)
+    bm = _pick_block(rows, block_rows)
+
+    pinned = lambda *shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    specs = [pl.BlockSpec((bm, d), lambda i: (i, 0))]
+    for (u, s, v) in (gate, up, down):
+        specs += [pinned(*u.shape), pinned(*s.shape), pinned(*v.shape)]
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(rows // bm,),
+        in_specs=specs,
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(x2, *gate, *up, *down)
+    return out.reshape(*lead, d)
+
+
+def vmem_bytes(d: int, f: int, k: int, bm: int = 128, itemsize: int = 4) -> int:
+    """VMEM working-set estimate per program (perf notes, EXPERIMENTS.md)."""
+    factors = 2 * (d * k + k + f * k) + (f * k + k + d * k)
+    tiles = bm * d * 2 + bm * f * 2  # x & y tiles + g/u intermediates
+    return (factors + tiles) * itemsize

@@ -1,0 +1,181 @@
+"""L2 — the transformer LM whose MLP layers are SpectralLinear.
+
+Architecture mirrors the paper's SmolLM2/LLaMA testbed family: RMSNorm,
+rotary-position attention, SwiGLU MLP. Exactly as in the paper (§4.2), only
+the MLP projections (gate/up/down) are spectral; attention projections,
+embeddings and norms remain dense.
+
+The module is functional: parameters are a nested-dict pytree and every
+entry point is a pure function of (params, inputs), so `aot.py` can lower
+whole training steps to single HLO modules.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import spectral
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.spectral_matmul import spectral_matmul as pallas_spectral_matmul
+from .kernels.spectral_swiglu import spectral_swiglu as pallas_spectral_swiglu
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    """Initialize the full parameter pytree for ``cfg``.
+
+    Dense inits are Glorot-normal; spectral triples use
+    :func:`spectral.init_spectral` (orthonormal factors, variance-matched
+    singular values) so dense and spectral runs start at the same activation
+    scale.
+    """
+    d, f, v = cfg.d_model, cfg.d_ffn, cfg.vocab
+    keys = iter(jax.random.split(key, 8 + 16 * cfg.n_layers))
+
+    def glorot(m, n):
+        sigma = jnp.sqrt(2.0 / (m + n))
+        return sigma * jax.random.normal(next(keys), (m, n), jnp.float32)
+
+    def mlp_params() -> dict:
+        if cfg.rank is None:
+            return {"gate": glorot(d, f), "up": glorot(d, f), "down": glorot(f, d)}
+        k = cfg.rank
+        return {
+            "gate": spectral.init_spectral(next(keys), d, f, k),
+            "up": spectral.init_spectral(next(keys), d, f, k),
+            "down": spectral.init_spectral(next(keys), f, d, k),
+        }
+
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(
+            {
+                "attn": {
+                    "wq": glorot(d, d),
+                    "wk": glorot(d, d),
+                    "wv": glorot(d, d),
+                    "wo": glorot(d, d),
+                },
+                "mlp": mlp_params(),
+                "ln1": jnp.ones((d,), jnp.float32),
+                "ln2": jnp.ones((d,), jnp.float32),
+            }
+        )
+    params = {
+        "embed": 0.02 * jax.random.normal(next(keys), (v, d), jnp.float32),
+        "layers": layers,
+        "ln_f": jnp.ones((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = glorot(d, v)
+    return params
+
+
+# --------------------------------------------------------------------------
+# building blocks
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, gain: jax.Array, eps: float = 1e-6) -> jax.Array:
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def _rope_tables(seq: int, head_dim: int):
+    half = head_dim // 2
+    inv = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    t = jnp.arange(seq, dtype=jnp.float32)
+    ang = jnp.outer(t, inv)  # (seq, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, H, T, hd); rotate pairs (x1, x2) by position-dependent angles."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def attention(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Standard causal multi-head attention with RoPE. Dense projections —
+    the paper leaves attention dense (§4.2); extending SCT to q/k/v/o is its
+    §5 future work and is exercised separately in the ablation configs."""
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def proj(w):
+        return (x @ w).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = proj(p["wq"]), proj(p["wk"]), proj(p["wv"])
+    cos, sin = _rope_tables(t, hd)
+    q, k = _apply_rope(q, cos, sin), _apply_rope(k, cos, sin)
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None, None], scores, jnp.finfo(scores.dtype).min)
+    att = jax.nn.softmax(scores, axis=-1)
+    y = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return y @ p["wo"]
+
+
+def mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """SwiGLU MLP — spectral (SCT) or dense depending on the config."""
+    if cfg.rank is None:
+        return (ref.silu(x @ p["gate"]) * (x @ p["up"])) @ p["down"]
+    tri = lambda q: (q["u"], q["s"], q["v"])
+    if cfg.use_pallas:
+        return pallas_spectral_swiglu(x, tri(p["gate"]), tri(p["up"]), tri(p["down"]))
+    return ref.spectral_swiglu(x, tri(p["gate"]), tri(p["up"]), tri(p["down"]))
+
+
+def spectral_linear(p: dict, x: jax.Array, use_pallas: bool = False) -> jax.Array:
+    """Single spectral projection (exported standalone for kernel tests)."""
+    fn = pallas_spectral_matmul if use_pallas else ref.spectral_matmul
+    return fn(x, p["u"], p["s"], p["v"])
+
+
+# --------------------------------------------------------------------------
+# model
+# --------------------------------------------------------------------------
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """tokens: (B, T) int32 -> logits (B, T, vocab)."""
+    x = params["embed"][tokens]
+    for layer in params["layers"]:
+        x = x + attention(layer["attn"], rmsnorm(x, layer["ln1"]), cfg)
+        x = x + mlp(layer["mlp"], rmsnorm(x, layer["ln2"]), cfg)
+    x = rmsnorm(x, params["ln_f"])
+    head = params["head"] if "head" in params else params["embed"].T
+    return x @ head
+
+
+def loss_fn(params: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Causal LM cross-entropy. tokens: (B, T+1); inputs are tokens[:, :-1],
+    targets tokens[:, 1:] — the batch is a single i32 tensor on the wire so
+    the rust data pipeline feeds one buffer per step."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(params, inp, cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def ortho_error_all(params: dict) -> jax.Array:
+    """Max orthonormality error over every spectral factor in the model —
+    the paper's Table 2 'Ortho. Error' metric (< 2e-6)."""
+    errs = [jnp.asarray(0.0, jnp.float32)]
+    for layer in params["layers"]:
+        for name in ("gate", "up", "down"):
+            p = layer["mlp"][name]
+            if isinstance(p, dict):
+                errs.append(ref.ortho_error(p["u"]))
+                errs.append(ref.ortho_error(p["v"]))
+    return jnp.stack(errs).max()

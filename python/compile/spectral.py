@@ -1,0 +1,107 @@
+"""Spectral (truncated-SVD) parameterization: init, dense conversion, checks.
+
+A spectral parameter is the triple ``(U, s, V)`` with ``U: (m, k)``,
+``s: (k,)``, ``V: (n, k)``, representing — but never materializing —
+``W = U diag(s) V^T`` (paper Eq. 1). Storage: ``k(m+n+1)`` vs ``m*n``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+
+def orthonormal(key: jax.Array, rows: int, cols: int, dtype=jnp.float32) -> jax.Array:
+    """Random (rows, cols) matrix with orthonormal columns: QR of a Gaussian,
+    sign-fixed so the distribution is Haar on the Stiefel manifold."""
+    g = jax.random.normal(key, (rows, cols), dtype=jnp.float32)
+    q = ref.qr_retract_cgs(g)  # graph-safe; see kernels.ref
+    return q.astype(dtype)
+
+
+def init_spectral(key: jax.Array, m: int, n: int, k: int, dtype=jnp.float32) -> dict:
+    """From-scratch init for a spectral layer.
+
+    U, V are Haar-orthonormal; ``s`` is constant and chosen so the implied
+    dense matrix matches Glorot variance:  dense Glorot has
+    E||W||_F^2 = m*n*sigma^2 with sigma^2 = 2/(m+n); since U, V are
+    orthonormal, ||W||_F^2 = sum s_i^2, so  s_i = sigma * sqrt(m*n / k).
+    This keeps activation scales rank-independent at init, which is what
+    makes the paper's cross-rank loss comparisons meaningful.
+    """
+    ku, kv = jax.random.split(key)
+    sigma = jnp.sqrt(2.0 / (m + n))
+    s0 = sigma * jnp.sqrt(m * n / k)
+    return {
+        "u": orthonormal(ku, m, k, dtype),
+        "s": jnp.full((k,), s0, dtype),
+        "v": orthonormal(kv, n, k, dtype),
+    }
+
+
+def from_dense(w: jax.Array, k: int) -> dict:
+    """Truncated SVD of a dense ``(m, n)`` matrix -> rank-k spectral triple.
+
+    This is the paper's conversion path (§4.2: pretrained MLP weights are
+    converted via truncated SVD; §4.4: at an energy threshold). If
+    ``k > rank(w)`` the extra singular values are zero and U, V are completed
+    to orthonormal bases, so the representation is exact.
+    """
+    u, s, vt = jnp.linalg.svd(w, full_matrices=False)
+    kk = min(k, s.shape[0])
+    tri = {"u": u[:, :kk], "s": s[:kk], "v": vt[:kk, :].T}
+    if kk < k:
+        tri = pad_rank(tri, k, jax.random.PRNGKey(0))
+    return tri
+
+
+def energy_rank(s: jax.Array, energy: float) -> int:
+    """Smallest k with sum(s[:k]^2) >= energy * sum(s^2) (§4.4's 95%)."""
+    e = jnp.cumsum(s**2) / jnp.sum(s**2)
+    return int(jnp.searchsorted(e, energy) + 1)
+
+
+def pad_rank(tri: dict, k: int, key: jax.Array) -> dict:
+    """Zero-pad a rank-r triple to rank k > r without changing W.
+
+    s gets zeros; U, V get orthonormal completions of their column spaces
+    (project a Gaussian block off the existing basis, CGS-style, then
+    retract). W = U diag(s) V^T is unchanged because the new directions are
+    multiplied by zero — this is how the rust finetune driver feeds an
+    energy-rank conversion into a fixed-k artifact.
+    """
+    u, s, v = tri["u"], tri["s"], tri["v"]
+    r = s.shape[0]
+    if r >= k:
+        return tri
+    ku, kv = jax.random.split(key)
+
+    def complete(q, key, rows):
+        extra = k - q.shape[1]
+        g = jax.random.normal(key, (rows, extra), dtype=q.dtype)
+        g = g - q @ (q.T @ g)
+        g = g - q @ (q.T @ g)  # twice, CGS2
+        return jnp.concatenate([q, ref.qr_retract(g)], axis=1)
+
+    return {
+        "u": complete(u, ku, u.shape[0]),
+        "s": jnp.concatenate([s, jnp.zeros((k - r,), s.dtype)]),
+        "v": complete(v, kv, v.shape[0]),
+    }
+
+
+def to_dense(tri: dict) -> jax.Array:
+    """Materialize W — FOR TESTS ONLY. The training path never calls this."""
+    return tri["u"] @ jnp.diag(tri["s"]) @ tri["v"].T
+
+
+def ortho_error(tri: dict) -> jax.Array:
+    """max of the two factor orthonormality errors (paper reports < 2e-6)."""
+    return jnp.maximum(ref.ortho_error(tri["u"]), ref.ortho_error(tri["v"]))
+
+
+def spectral_size(m: int, n: int, k: int) -> int:
+    """Parameter count k(m+n+1) — paper §3 Memory analysis."""
+    return k * (m + n + 1)

@@ -1,0 +1,114 @@
+"""L2 — the exported step functions (paper Alg. 1 as one HLO module each).
+
+Everything the rust coordinator executes at runtime is defined here as a
+pure function and lowered once by `aot.py`:
+
+* ``init``        seed                                  -> (params, opt)
+* ``train_step``  (params, opt, tokens, lr_d, lr_s)     -> (params, opt, loss)
+* ``eval_step``   (params, tokens)                      -> loss
+* ``forward``     (params, tokens)                      -> logits
+* ``retract``     params                                -> params
+* ``ortho_check`` params                                -> max ||Q^TQ - I||
+
+``train_step`` is the whole of Algorithm 1 — forward, backward, AdamW,
+Stiefel QR retraction — fused into a single XLA computation, so the rust
+hot loop makes exactly one PJRT call per step and no dense (m, n) tensor
+ever exists on any path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model, optim
+from .configs import ModelConfig
+
+
+def make_init(cfg: ModelConfig):
+    def init(seed: jax.Array):
+        params = model.init_params(jax.random.PRNGKey(seed), cfg)
+        return params, optim.init_opt_state(params)
+
+    return init
+
+
+def make_train_step(cfg: ModelConfig, *, weight_decay: float = 0.0, retract_every: int = 1):
+    """Alg. 1. ``retract_every`` is an ablation knob (DESIGN.md): the paper
+    retracts after every step; the coordinator can also run the exported
+    ``retract`` artifact on its own cadence when this is 0."""
+
+    def train_step(params, opt, tokens, lr_dense, lr_spectral):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, tokens, cfg)
+        params, opt = optim.adamw_update(
+            params, grads, opt, lr_dense, lr_spectral, weight_decay=weight_decay
+        )
+        if retract_every:
+            params = optim.retract_params(params, use_pallas=cfg.use_pallas)
+        return params, opt, loss
+
+    return train_step
+
+
+def make_train_chunk(cfg: ModelConfig, k: int, *, weight_decay: float = 0.0):
+    """K training steps fused into one HLO via lax.scan.
+
+    The PJRT shim returns step outputs as a single host tuple, so a chunked
+    step amortizes the host<->device state round-trip and dispatch overhead
+    by K — the rust driver's default hot path (EXPERIMENTS.md §Perf).
+    Semantics are identical to K calls of `train_step` (retraction after
+    every optimizer step, per the paper's Algorithm 1).
+
+    tokens: (k, batch, seq+1) i32; returns (params, opt, losses[k]).
+    """
+    step = make_train_step(cfg, weight_decay=weight_decay)
+
+    def train_chunk(params, opt, tokens, lr_dense, lr_spectral):
+        def body(carry, tok):
+            params, opt = carry
+            params, opt, loss = step(params, opt, tok, lr_dense, lr_spectral)
+            return (params, opt), loss
+
+        (params, opt), losses = jax.lax.scan(body, (params, opt), tokens)
+        return params, opt, losses
+
+    return train_chunk
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, tokens):
+        return model.loss_fn(params, tokens, cfg)
+
+    return eval_step
+
+
+def make_forward(cfg: ModelConfig):
+    def forward(params, tokens):
+        return model.forward(params, tokens, cfg)
+
+    return forward
+
+
+def make_retract(cfg: ModelConfig):
+    def retract(params):
+        return optim.retract_params(params, use_pallas=cfg.use_pallas)
+
+    return retract
+
+
+def make_ortho_check(cfg: ModelConfig):
+    def ortho_check(params):
+        return model.ortho_error_all(params)
+
+    return ortho_check
+
+
+def example_inputs(cfg: ModelConfig):
+    """ShapeDtypeStructs used to lower each artifact (and recorded in the
+    manifest so the rust session wires buffers positionally)."""
+    params = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0), cfg))
+    opt = jax.eval_shape(optim.init_opt_state, params)
+    tokens = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    seed = jax.ShapeDtypeStruct((), jnp.int32)
+    return params, opt, tokens, scalar, seed

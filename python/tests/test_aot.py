@@ -1,0 +1,106 @@
+"""AOT exporter tests: manifest structure, HLO text invariants.
+
+These run the lowering in-process on the tiny preset (seconds) — they do not
+require `make artifacts` to have been run.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, configs, train
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    root = tmp_path_factory.mktemp("artifacts")
+    entry = aot.export_preset(configs.get("tiny_r4"), str(root), chunk_k=2)
+    return root, entry
+
+
+def test_manifest_entry_structure(exported):
+    _, entry = exported
+    assert entry["n_state"] == entry["n_params"] * 3 + 1  # m, v mirrors + t
+    assert len(entry["state"]) == entry["n_state"]
+    for name in ("init", "train_step", "train_chunk", "eval_step", "forward",
+                 "retract", "ortho_check"):
+        assert name in entry["artifacts"], name
+
+
+def test_hlo_files_exist_and_are_text(exported):
+    root, entry = exported
+    for art in entry["artifacts"].values():
+        path = os.path.join(root, "tiny_r4", art["file"])
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, f"{path} does not look like HLO text"
+
+
+def test_no_unsupported_custom_calls(exported):
+    """The runtime XLA (0.5.1) rejects typed-FFI custom calls (LAPACK QR,
+    threefry). Exported HLO must contain none."""
+    root, entry = exported
+    for name, art in entry["artifacts"].items():
+        path = os.path.join(root, "tiny_r4", art["file"])
+        text = open(path).read()
+        assert "custom-call" not in text, f"{name} contains a custom call"
+
+
+def test_train_step_io_contract(exported):
+    """First n_state inputs and outputs are the same tensors in the same
+    order; the final output is the scalar loss."""
+    _, entry = exported
+    ts = entry["artifacts"]["train_step"]
+    n = entry["n_state"]
+    in_state = [(t["dtype"], tuple(t["shape"])) for t in ts["inputs"][:n]]
+    out_state = [(t["dtype"], tuple(t["shape"])) for t in ts["outputs"][:n]]
+    assert in_state == out_state
+    assert ts["inputs"][n]["name"] == "tokens"
+    assert ts["outputs"][-1]["shape"] == []
+    # state list matches the train_step prefix
+    st = [(t["dtype"], tuple(t["shape"])) for t in entry["state"]]
+    assert st == in_state
+
+
+def test_init_outputs_match_state(exported):
+    _, entry = exported
+    init = entry["artifacts"]["init"]
+    assert [tuple(t["shape"]) for t in init["outputs"]] == [
+        tuple(t["shape"]) for t in entry["state"]
+    ]
+
+
+def test_forward_takes_inputs_without_target_column(exported):
+    _, entry = exported
+    cfg = configs.get("tiny_r4")
+    fwd = entry["artifacts"]["forward"]
+    tok = [t for t in fwd["inputs"] if t["name"] == "tokens"][0]
+    assert tok["shape"] == [cfg.batch, cfg.seq_len]
+    assert fwd["outputs"][0]["shape"] == [cfg.batch, cfg.seq_len, cfg.vocab]
+
+
+def test_example_inputs_consistency():
+    cfg = configs.get("tiny_r4")
+    params, opt, tokens, scalar, seed = train.example_inputs(cfg)
+    n_params = len(jax.tree_util.tree_leaves(params))
+    n_opt = len(jax.tree_util.tree_leaves(opt))
+    assert tokens.shape == (cfg.batch, cfg.seq_len + 1)
+    assert tokens.dtype == jnp.int32
+    assert n_opt == 2 * n_params + 1
+
+
+def test_pallas_preset_skips_grad_artifacts(tmp_path):
+    entry = aot.export_preset(configs.get("tiny_r8_pallas"), str(tmp_path), chunk_k=2)
+    assert "train_step" not in entry["artifacts"]
+    assert "forward" in entry["artifacts"]
+    assert "retract" in entry["artifacts"]
+
+
+def test_manifest_json_roundtrips(exported):
+    _, entry = exported
+    text = json.dumps({"format": 1, "presets": {"tiny_r4": entry}})
+    back = json.loads(text)
+    assert back["presets"]["tiny_r4"]["n_state"] == entry["n_state"]

@@ -1,0 +1,215 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (including ragged / non-power-of-two dims) and value
+scales; every kernel must match its oracle to tight tolerance. This is THE
+correctness signal for the kernel layer — the AOT model graphs use the same
+math via ref.py, so kernel==ref ties all three layers together.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.qr_retract import qr_retract
+from compile.kernels.spectral_matmul import spectral_matmul, vmem_bytes
+from compile.kernels.spectral_swiglu import spectral_swiglu
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+def rel_err(a, b):
+    denom = float(jnp.max(jnp.abs(b))) + 1e-6
+    return float(jnp.max(jnp.abs(a - b))) / denom
+
+
+# ---------------------------------------------------------------------------
+# spectral_matmul
+# ---------------------------------------------------------------------------
+
+
+@given(
+    rows=st.integers(1, 33),
+    m=st.integers(1, 96),
+    n=st.integers(1, 96),
+    k=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spectral_matmul_matches_ref(rows, m, n, k, seed):
+    rng = np.random.default_rng(seed)
+    x, u = rand(rng, rows, m), rand(rng, m, k)
+    s, v = rand(rng, k), rand(rng, n, k)
+    got = spectral_matmul(x, u, s, v)
+    want = ref.spectral_matmul(x, u, s, v)
+    assert got.shape == (rows, n)
+    assert rel_err(got, want) < 1e-5
+
+
+@given(
+    b=st.integers(1, 4),
+    t=st.integers(1, 9),
+    m=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spectral_matmul_leading_dims(b, t, m, seed):
+    """3-D inputs (batch, seq, features) flatten and reshape correctly."""
+    rng = np.random.default_rng(seed)
+    k, n = 4, 24
+    x, u = rand(rng, b, t, m), rand(rng, m, k)
+    s, v = rand(rng, k), rand(rng, n, k)
+    got = spectral_matmul(x, u, s, v)
+    want = ref.spectral_matmul(x, u, s, v)
+    assert got.shape == (b, t, n)
+    assert rel_err(got, want) < 1e-5
+
+
+@pytest.mark.parametrize("block_rows,block_n", [(1, 1), (2, 7), (128, 256), (8, 16)])
+def test_spectral_matmul_block_shape_invariance(block_rows, block_n):
+    """The result must not depend on the tiling — pure schedule change."""
+    rng = np.random.default_rng(0)
+    x, u = rand(rng, 16, 32), rand(rng, 32, 8)
+    s, v = rand(rng, 8), rand(rng, 56, 8)
+    base = ref.spectral_matmul(x, u, s, v)
+    got = spectral_matmul(x, u, s, v, block_rows=block_rows, block_n=block_n)
+    assert rel_err(got, base) < 1e-5
+
+
+def test_spectral_matmul_large_values():
+    """No catastrophic cancellation with big magnitudes (f32 accumulate)."""
+    rng = np.random.default_rng(1)
+    x, u = rand(rng, 8, 64, scale=100.0), rand(rng, 64, 16)
+    s, v = rand(rng, 16, scale=10.0), rand(rng, 48, 16)
+    assert rel_err(spectral_matmul(x, u, s, v), ref.spectral_matmul(x, u, s, v)) < 1e-4
+
+
+def test_vmem_estimate_is_positive_and_monotonic():
+    a = vmem_bytes(512, 512, 32)
+    b = vmem_bytes(1024, 1024, 32)
+    assert 0 < a < b
+
+
+# ---------------------------------------------------------------------------
+# spectral_swiglu
+# ---------------------------------------------------------------------------
+
+
+def make_mlp_factors(rng, d, f, k):
+    gate = (rand(rng, d, k), jnp.abs(rand(rng, k)), rand(rng, f, k))
+    up = (rand(rng, d, k), jnp.abs(rand(rng, k)), rand(rng, f, k))
+    down = (rand(rng, f, k), jnp.abs(rand(rng, k)), rand(rng, d, k))
+    return gate, up, down
+
+
+@given(
+    rows=st.integers(1, 17),
+    d=st.integers(4, 48),
+    f=st.integers(4, 64),
+    k=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spectral_swiglu_matches_ref(rows, d, f, k, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, rows, d)
+    gate, up, down = make_mlp_factors(rng, d, f, k)
+    got = spectral_swiglu(x, gate, up, down)
+    want = ref.spectral_swiglu(x, gate, up, down)
+    assert got.shape == (rows, d)
+    assert rel_err(got, want) < 2e-5
+
+
+def test_spectral_swiglu_3d_input():
+    rng = np.random.default_rng(2)
+    x = rand(rng, 2, 5, 32)
+    gate, up, down = make_mlp_factors(rng, 32, 96, 8)
+    got = spectral_swiglu(x, gate, up, down)
+    want = ref.spectral_swiglu(x, gate, up, down)
+    assert got.shape == (2, 5, 32)
+    assert rel_err(got, want) < 2e-5
+
+
+def test_swiglu_equals_composed_spectral_matmuls():
+    """The fused kernel == three separate kernel calls + elementwise glue."""
+    rng = np.random.default_rng(3)
+    d, f, k = 24, 72, 6
+    x = rand(rng, 8, d)
+    gate, up, down = make_mlp_factors(rng, d, f, k)
+    fused = spectral_swiglu(x, gate, up, down)
+    g = spectral_matmul(x, *gate)
+    u = spectral_matmul(x, *up)
+    composed = spectral_matmul(ref.silu(g) * u, *down)
+    assert rel_err(fused, composed) < 2e-5
+
+
+# ---------------------------------------------------------------------------
+# qr_retract
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(2, 96),
+    k=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qr_retract_matches_lapack_oracle(m, k, seed):
+    if k > m:
+        k = m
+    rng = np.random.default_rng(seed)
+    a = rand(rng, m, k)
+    got = qr_retract(a)
+    want = ref.qr_retract(a)
+    assert rel_err(got, want) < 5e-4  # sign-fixed QR is unique; CGS2 vs Householder
+
+
+@given(m=st.integers(2, 128), k=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
+def test_qr_retract_orthonormality(m, k, seed):
+    """Paper Table 2: ortho error < 2e-6."""
+    if k > m:
+        k = m
+    rng = np.random.default_rng(seed)
+    q = qr_retract(rand(rng, m, k))
+    assert float(ref.ortho_error(q)) < 2e-6
+
+
+@given(m=st.integers(4, 64), k=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_qr_retract_preserves_span(m, k, seed):
+    """span(Q) == span(A): A must be exactly representable as Q (Q^T A)."""
+    if k > m:
+        k = m
+    rng = np.random.default_rng(seed)
+    a = rand(rng, m, k)
+    q = qr_retract(a)
+    recon = q @ (q.T @ a)
+    assert rel_err(recon, a) < 1e-4
+
+
+def test_qr_retract_identity_on_orthonormal():
+    """Retraction of an already-orthonormal matrix is the identity."""
+    rng = np.random.default_rng(4)
+    q0 = ref.qr_retract(rand(rng, 40, 8))
+    q1 = qr_retract(q0)
+    assert rel_err(q1, q0) < 1e-5
+
+
+def test_qr_retract_positive_diagonal():
+    """R = Q^T A must have a positive diagonal (the paper's sign fix)."""
+    rng = np.random.default_rng(5)
+    a = rand(rng, 32, 8)
+    q = qr_retract(a)
+    r = q.T @ a
+    assert bool(jnp.all(jnp.diagonal(r) > 0))
+
+
+def test_graph_safe_cgs_matches_oracle():
+    """ref.qr_retract_cgs (used inside every exported graph) == LAPACK path."""
+    rng = np.random.default_rng(6)
+    for m, k in [(16, 4), (64, 16), (128, 32), (7, 7)]:
+        a = rand(rng, m, k)
+        assert rel_err(ref.qr_retract_cgs(a), ref.qr_retract(a)) < 5e-4
+        assert float(ref.ortho_error(ref.qr_retract_cgs(a))) < 2e-6

@@ -1,0 +1,143 @@
+"""L2 model tests: shapes, loss behaviour, spectral==dense at full rank."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model, optim, spectral, train
+
+TINY = configs.get("tiny_r8")
+TINY_DENSE = configs.get("tiny_dense")
+
+
+def toks(cfg, seed=0, plus_one=True):
+    rng = np.random.default_rng(seed)
+    t = cfg.seq_len + (1 if plus_one else 0)
+    return jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, t)), jnp.int32)
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_DENSE], ids=["spectral", "dense"])
+def test_forward_shapes(cfg):
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    logits = model.forward(params, toks(cfg, plus_one=False), cfg)
+    assert logits.shape == (cfg.batch, cfg.seq_len, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_DENSE], ids=["spectral", "dense"])
+def test_param_count_matches_config(cfg):
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+    assert n == cfg.param_count()
+
+
+def test_initial_loss_near_uniform():
+    """Fresh model should score ~log(vocab) — catches init-scale bugs."""
+    params = model.init_params(jax.random.PRNGKey(1), TINY)
+    loss = float(model.loss_fn(params, toks(TINY), TINY))
+    expect = float(jnp.log(TINY.vocab))
+    assert abs(loss - expect) < 1.0, f"{loss} vs log(vocab)={expect}"
+
+
+def test_causality():
+    """Changing future tokens must not change past logits."""
+    cfg = TINY
+    params = model.init_params(jax.random.PRNGKey(2), cfg)
+    t = toks(cfg, plus_one=False)
+    t2 = t.at[:, -1].set((t[:, -1] + 1) % cfg.vocab)
+    l1 = model.forward(params, t, cfg)
+    l2 = model.forward(params, t2, cfg)
+    # All positions except the last must be identical.
+    assert float(jnp.max(jnp.abs(l1[:, :-1] - l2[:, :-1]))) == 0.0
+    assert float(jnp.max(jnp.abs(l1[:, -1] - l2[:, -1]))) > 0.0
+
+
+def test_loss_decreases_under_training():
+    cfg = TINY
+    step = jax.jit(train.make_train_step(cfg))
+    params, opt = jax.jit(train.make_init(cfg))(jnp.int32(0))
+    batch = toks(cfg, 3)
+    losses = []
+    for _ in range(12):
+        params, opt, loss = step(params, opt, batch, jnp.float32(1e-3), jnp.float32(5e-3))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.2
+
+
+def test_training_keeps_factors_orthonormal():
+    cfg = TINY
+    step = jax.jit(train.make_train_step(cfg))
+    params, opt = jax.jit(train.make_init(cfg))(jnp.int32(1))
+    for i in range(5):
+        params, opt, _ = step(params, opt, toks(cfg, i), jnp.float32(1e-3), jnp.float32(5e-3))
+    err = float(model.ortho_error_all(params))
+    assert err < 2e-6, f"paper threshold violated: {err}"
+
+
+def test_without_retraction_factors_drift():
+    """Ablation: skipping retraction lets U drift off the manifold — the
+    reason Alg. 1 retracts every step."""
+    cfg = TINY
+    step = jax.jit(train.make_train_step(cfg, retract_every=0))
+    params, opt = jax.jit(train.make_init(cfg))(jnp.int32(1))
+    for i in range(5):
+        params, opt, _ = step(params, opt, toks(cfg, i), jnp.float32(1e-3), jnp.float32(5e-2))
+    err = float(model.ortho_error_all(params))
+    assert err > 2e-6, f"expected drift without retraction, got {err}"
+
+
+def test_full_rank_spectral_matches_dense_forward():
+    """At k=min(m,n), a spectral layer converted from dense weights computes
+    the same function as the dense layer."""
+    cfg_d = TINY_DENSE
+    cfg_s = TINY.with_(rank=64)  # d_model=64, f=192 -> full rank = 64
+    params = model.init_params(jax.random.PRNGKey(4), cfg_d)
+    # convert each MLP to spectral at full rank
+    sp = jax.tree_util.tree_map(lambda x: x, params)
+    for layer in sp["layers"]:
+        m_ = layer["mlp"]
+        layer["mlp"] = {
+            "gate": spectral.from_dense(m_["gate"], 64),
+            "up": spectral.from_dense(m_["up"], 64),
+            "down": spectral.from_dense(m_["down"], 64),
+        }
+    t = toks(cfg_d, plus_one=False)
+    ld = model.forward(params, t, cfg_d)
+    ls = model.forward(sp, t, cfg_s)
+    rel = float(jnp.max(jnp.abs(ld - ls))) / (float(jnp.max(jnp.abs(ld))) + 1e-6)
+    assert rel < 1e-3
+
+
+def test_train_chunk_equals_step_loop():
+    cfg = TINY
+    k = 3
+    chunk = jax.jit(train.make_train_chunk(cfg, k))
+    step = jax.jit(train.make_train_step(cfg))
+    p0, o0 = jax.jit(train.make_init(cfg))(jnp.int32(5))
+    batches = jnp.stack([toks(cfg, i) for i in range(k)])
+    lr_d, lr_s = jnp.float32(1e-3), jnp.float32(5e-3)
+
+    pc, oc, losses_c = chunk(p0, o0, batches, lr_d, lr_s)
+    p, o = p0, o0
+    losses_l = []
+    for i in range(k):
+        p, o, l = step(p, o, batches[i], lr_d, lr_s)
+        losses_l.append(float(l))
+    np.testing.assert_allclose(np.asarray(losses_c), np.asarray(losses_l), rtol=1e-5)
+    # final params identical too
+    diff = jax.tree_util.tree_map(lambda a, b: float(jnp.max(jnp.abs(a - b))), pc, p)
+    assert max(jax.tree_util.tree_leaves(diff)) < 1e-5
+
+
+def test_pallas_config_matches_ref_forward():
+    """use_pallas=True routes the MLP through the interpret-mode kernels —
+    same numbers as the jnp oracle path."""
+    cfg_ref = TINY
+    cfg_pal = configs.get("tiny_r8_pallas")
+    params = model.init_params(jax.random.PRNGKey(6), cfg_ref)
+    t = toks(cfg_ref, plus_one=False)
+    lr = model.forward(params, t, cfg_ref)
+    lp = model.forward(params, t, cfg_pal)
+    rel = float(jnp.max(jnp.abs(lr - lp))) / (float(jnp.max(jnp.abs(lr))) + 1e-6)
+    assert rel < 1e-4

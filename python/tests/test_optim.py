@@ -1,0 +1,128 @@
+"""Optimizer tests: AdamW mechanics, LR groups, retraction wiring."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import configs, model, optim
+
+CFG = configs.get("tiny_r8")
+
+
+def make_state(seed=0):
+    params = model.init_params(jax.random.PRNGKey(seed), CFG)
+    return params, optim.init_opt_state(params)
+
+
+def uniform_grads(params, value=0.01):
+    return jax.tree_util.tree_map(lambda p: jnp.full_like(p, value), params)
+
+
+def test_opt_state_shapes_mirror_params():
+    params, opt = make_state()
+    jax.tree_util.tree_map(
+        lambda p, m: (_ for _ in ()).throw(AssertionError) if p.shape != m.shape else None,
+        params,
+        opt["m"],
+    )
+    assert int(opt["t"]) == 0
+
+
+def test_step_counter_increments():
+    params, opt = make_state()
+    g = uniform_grads(params)
+    _, opt = optim.adamw_update(params, g, opt, jnp.float32(1e-3), jnp.float32(1e-3))
+    assert int(opt["t"]) == 1
+    _, opt = optim.adamw_update(params, g, opt, jnp.float32(1e-3), jnp.float32(1e-3))
+    assert int(opt["t"]) == 2
+
+
+def test_first_step_is_signed_lr():
+    """With bias correction, step 1 update is ~lr * sign(g)."""
+    params, opt = make_state()
+    g = uniform_grads(params, 0.5)
+    lr = 1e-3
+    new_params, _ = optim.adamw_update(params, g, opt, jnp.float32(lr), jnp.float32(lr))
+    diff = jax.tree_util.tree_map(lambda a, b: np.asarray(a - b), new_params, params)
+    for leaf in jax.tree_util.tree_leaves(diff):
+        np.testing.assert_allclose(-leaf, lr, rtol=1e-3)
+
+
+def test_lr_groups_route_correctly():
+    """Spectral leaves move with lr_spectral, dense leaves with lr_dense."""
+    params, opt = make_state()
+    g = uniform_grads(params, 1.0)
+    new_params, _ = optim.adamw_update(params, g, opt, jnp.float32(0.0), jnp.float32(1e-2))
+    # dense leaf unchanged
+    d0 = np.asarray(new_params["layers"][0]["attn"]["wq"] - params["layers"][0]["attn"]["wq"])
+    assert np.abs(d0).max() == 0.0
+    # spectral leaf moved by ~1e-2
+    s0 = np.asarray(
+        new_params["layers"][0]["mlp"]["gate"]["u"] - params["layers"][0]["mlp"]["gate"]["u"]
+    )
+    np.testing.assert_allclose(-s0, 1e-2, rtol=1e-3)
+
+
+def test_single_lr_reproduces_paper_config():
+    """lr_dense == lr_spectral must equal a single-group AdamW step (the
+    paper's configuration)."""
+    params, opt = make_state(1)
+    g = jax.tree_util.tree_map(
+        lambda p: 0.01 * jnp.ones_like(p) * (1 + jnp.arange(p.size).reshape(p.shape) % 3),
+        params,
+    )
+    lr = jnp.float32(3e-3)
+    a, _ = optim.adamw_update(params, g, opt, lr, lr)
+    # re-run with groups swapped: same because both lrs equal
+    b, _ = optim.adamw_update(params, g, opt, lr, lr)
+    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        assert float(jnp.max(jnp.abs(la - lb))) == 0.0
+
+
+def test_weight_decay_only_on_decayable():
+    params, opt = make_state(2)
+    g = uniform_grads(params, 0.0)  # zero grads isolate the decay term
+    new_params, _ = optim.adamw_update(
+        params, g, opt, jnp.float32(1e-2), jnp.float32(1e-2), weight_decay=0.1
+    )
+    # attention matrix decays
+    w0 = np.asarray(params["layers"][0]["attn"]["wq"])
+    w1 = np.asarray(new_params["layers"][0]["attn"]["wq"])
+    np.testing.assert_allclose(w1, w0 * (1 - 1e-2 * 0.1), rtol=1e-5)
+    # norm gain, embeddings, U/V factors must NOT decay
+    for name, (a, b) in {
+        "ln1": (params["layers"][0]["ln1"], new_params["layers"][0]["ln1"]),
+        "embed": (params["embed"], new_params["embed"]),
+        "u": (params["layers"][0]["mlp"]["gate"]["u"], new_params["layers"][0]["mlp"]["gate"]["u"]),
+    }.items():
+        assert float(jnp.max(jnp.abs(a - b))) == 0.0, f"{name} should not decay"
+
+
+def test_retract_params_only_touches_factors():
+    params, _ = make_state(3)
+    # perturb a factor off the manifold
+    params["layers"][0]["mlp"]["gate"]["u"] = params["layers"][0]["mlp"]["gate"]["u"] * 1.7
+    before_embed = np.asarray(params["embed"]).copy()
+    before_s = np.asarray(params["layers"][0]["mlp"]["gate"]["s"]).copy()
+    out = optim.retract_params(params)
+    # factor re-orthonormalized
+    u = out["layers"][0]["mlp"]["gate"]["u"]
+    k = u.shape[1]
+    err = float(jnp.max(jnp.abs(u.T @ u - jnp.eye(k))))
+    assert err < 2e-6
+    # everything else untouched
+    assert np.array_equal(before_embed, np.asarray(out["embed"]))
+    assert np.array_equal(before_s, np.asarray(out["layers"][0]["mlp"]["gate"]["s"]))
+
+
+def test_leaf_classification():
+    params, _ = make_state(4)
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    spectral = [optim.path_str(p) for p, _ in leaves if optim.is_spectral_leaf(p)]
+    factors = [optim.path_str(p) for p, _ in leaves if optim.is_factor_leaf(p)]
+    # 2 layers x 3 triples x 3 tensors
+    assert len(spectral) == 18
+    # 2 layers x 3 triples x 2 factors
+    assert len(factors) == 12
+    assert all(s.endswith(("u", "s", "v")) for s in spectral)
+    assert not any(s.endswith("/s") for s in factors)

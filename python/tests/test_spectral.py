@@ -1,0 +1,115 @@
+"""Spectral parameterization: init statistics, dense conversion, rank math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import spectral
+from compile.kernels import ref
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+@given(m=st.integers(4, 64), n=st.integers(4, 64), k=st.integers(1, 16), seed=st.integers(0, 10_000))
+def test_init_spectral_orthonormal(m, n, k, seed):
+    k = min(k, m, n)
+    tri = spectral.init_spectral(jax.random.PRNGKey(seed), m, n, k)
+    assert tri["u"].shape == (m, k)
+    assert tri["v"].shape == (n, k)
+    assert tri["s"].shape == (k,)
+    assert float(spectral.ortho_error(tri)) < 2e-6
+
+
+def test_init_spectral_variance_matches_glorot():
+    """||W||_F^2 of the implied dense matrix ~ Glorot's m*n*2/(m+n),
+    independent of rank — the property that makes cross-rank loss curves
+    comparable (paper §4.2 uses one LR across ranks)."""
+    m, n = 96, 160
+    target = m * n * 2.0 / (m + n)
+    for k in (2, 8, 32):
+        tri = spectral.init_spectral(jax.random.PRNGKey(k), m, n, k)
+        w = spectral.to_dense(tri)
+        fro2 = float(jnp.sum(w * w))
+        assert abs(fro2 - target) / target < 1e-4, f"k={k}: {fro2} vs {target}"
+
+
+@given(m=st.integers(6, 48), n=st.integers(6, 48), seed=st.integers(0, 10_000))
+def test_from_dense_full_rank_exact(m, n, seed):
+    """k = min(m,n) reconstructs W exactly (up to f32 SVD error)."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    tri = spectral.from_dense(w, min(m, n))
+    w2 = spectral.to_dense(tri)
+    assert float(jnp.max(jnp.abs(w - w2))) < 1e-4
+
+
+def test_from_dense_truncation_is_best_approx():
+    """Eckart-Young sanity: rank-k SVD error <= error of any cruder rank."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(32, 48)), jnp.float32)
+    errs = []
+    for k in (2, 4, 8, 16, 32):
+        tri = spectral.from_dense(w, k)
+        errs.append(float(jnp.linalg.norm(w - spectral.to_dense(tri))))
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_from_dense_pads_beyond_rank():
+    """Requesting k > rank(W) zero-pads without changing W."""
+    rng = np.random.default_rng(1)
+    low = jnp.asarray(rng.normal(size=(20, 3)), jnp.float32) @ jnp.asarray(
+        rng.normal(size=(3, 24)), jnp.float32
+    )
+    tri = spectral.from_dense(low, 10)
+    assert tri["s"].shape == (10,)
+    assert float(jnp.max(jnp.abs(spectral.to_dense(tri) - low))) < 1e-3
+    assert float(spectral.ortho_error(tri)) < 5e-6
+    # padded singular values are ~0
+    assert float(jnp.max(jnp.abs(tri["s"][3:]))) < 1e-3
+
+
+@given(seed=st.integers(0, 10_000))
+def test_energy_rank_monotone(seed):
+    rng = np.random.default_rng(seed)
+    s = jnp.sort(jnp.abs(jnp.asarray(rng.normal(size=(32,)), jnp.float32)))[::-1]
+    r50 = spectral.energy_rank(s, 0.50)
+    r95 = spectral.energy_rank(s, 0.95)
+    r999 = spectral.energy_rank(s, 0.999)
+    assert 1 <= r50 <= r95 <= r999 <= 32
+
+
+def test_energy_rank_exact_cases():
+    s = jnp.asarray([2.0, 1.0, 0.0, 0.0])
+    # energies: 4/5, 5/5 -> 80% needs 1, 95% needs 2
+    assert spectral.energy_rank(s, 0.79) == 1
+    assert spectral.energy_rank(s, 0.95) == 2
+
+
+def test_pad_rank_preserves_dense_and_ortho():
+    tri = spectral.init_spectral(jax.random.PRNGKey(0), 24, 36, 4)
+    w = spectral.to_dense(tri)
+    padded = spectral.pad_rank(tri, 12, jax.random.PRNGKey(1))
+    assert padded["s"].shape == (12,)
+    assert float(jnp.max(jnp.abs(spectral.to_dense(padded) - w))) < 1e-5
+    assert float(spectral.ortho_error(padded)) < 5e-6
+
+
+def test_spectral_size_formula():
+    # Paper §3: LLaMA-70B MLP at k=32 -> 1.18M vs 234.9M params.
+    assert spectral.spectral_size(8192, 28672, 32) == 32 * (8192 + 28672 + 1)
+    ratio = (8192 * 28672) / spectral.spectral_size(8192, 28672, 32)
+    assert 198 < ratio < 200  # the paper's 199x
+
+
+@pytest.mark.parametrize("m,n,k", [(16, 16, 4), (64, 32, 8)])
+def test_forward_through_triple_matches_dense(m, n, k):
+    """x @ W == spectral_matmul(x, U, s, V) when W = U diag(s) V^T."""
+    rng = np.random.default_rng(2)
+    tri = spectral.init_spectral(jax.random.PRNGKey(3), m, n, k)
+    x = jnp.asarray(rng.normal(size=(8, m)), jnp.float32)
+    dense = x @ spectral.to_dense(tri)
+    fact = ref.spectral_matmul(x, tri["u"], tri["s"], tri["v"])
+    assert float(jnp.max(jnp.abs(dense - fact))) < 1e-4

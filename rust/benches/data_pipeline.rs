@@ -1,0 +1,48 @@
+//! Data-pipeline benchmarks: corpus generation, BPE training/encoding,
+//! batch packing, prefetch overhead. The pipeline must never be the
+//! bottleneck (train steps are ~tens of ms; batches must be µs).
+//!
+//! Run: `cargo bench --bench data_pipeline`
+
+use sct::data::{build_dataset, CorpusGen, Dataset, Prefetcher, Tokenizer};
+use sct::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+
+    b.run("corpus/generate_1MB", || {
+        let text = CorpusGen::new(0).generate(1 << 20);
+        std::hint::black_box(text.len());
+    });
+
+    let text = CorpusGen::new(0).generate(1 << 20);
+    b.run("tokenizer/bpe_train_v512_1MB", || {
+        let t = Tokenizer::train_bpe(&text[..256 << 10], 512);
+        std::hint::black_box(t.vocab_size);
+    });
+
+    let tok = Tokenizer::train_bpe(&text[..256 << 10], 512);
+    b.run("tokenizer/encode_64KB", || {
+        std::hint::black_box(tok.encode(&text[..64 << 10]).len());
+    });
+
+    let ids = tok.encode(&text);
+    let mut ds = Dataset::new(ids.clone(), 4, 129, 0);
+    b.run("dataset/next_batch_4x129", || {
+        std::hint::black_box(ds.next_batch());
+    });
+    b.run("dataset/next_chunk_k10", || {
+        std::hint::black_box(ds.next_chunk(10));
+    });
+
+    // Prefetcher throughput: consuming from the channel must be far cheaper
+    // than generating inline.
+    let (_t, ds2) = build_dataset(512, 4, 129, 1 << 20, 0);
+    let pf = Prefetcher::spawn(ds2, 10, 4);
+    let _ = pf.next(); // warm the queue
+    b.run("prefetcher/next_chunk_k10_warm", || {
+        std::hint::black_box(pf.next());
+    });
+
+    println!("\n(data path must stay < ~1 ms/batch; train steps are 10-1000x that)");
+}

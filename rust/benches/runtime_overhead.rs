@@ -1,0 +1,68 @@
+//! Runtime-layer benchmarks: PJRT dispatch overhead, the host round-trip
+//! tax, and the train_chunk amortization — the L3 numbers behind the §Perf
+//! section of EXPERIMENTS.md.
+//!
+//! Key comparison: `train_step x10` vs `train_chunk(K=10)`. The PJRT shim
+//! returns tuple outputs via the host, so per-step dispatch pays 2x state
+//! traffic every step; the fused chunk pays it once per K steps.
+//!
+//! Requires `make artifacts`. Run: `cargo bench --bench runtime_overhead`
+
+use sct::runtime::Session;
+use sct::util::bench::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let root = std::path::Path::new("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first; skipping bench");
+        return Ok(());
+    }
+
+    let mut bench = Bench::heavy();
+
+    for preset in ["tiny_r8", "sweep_r16"] {
+        let mut s = Session::open(root, preset)?;
+        s.init(0)?;
+        s.warmup(&["train_step", "train_chunk", "eval_step", "forward"])?;
+        let spec = s.preset.tokens_spec()?.clone();
+        let vocab = s.preset.model.vocab;
+        let per = spec.elements();
+        let tokens: Vec<i32> = (0..per).map(|i| (i % vocab) as i32).collect();
+        let k = s.chunk_len().unwrap_or(10);
+        let chunk_tokens: Vec<i32> = (0..per * k).map(|i| (i % vocab) as i32).collect();
+
+        println!(
+            "\n=== {preset}: state {:.1} MB, {} tensors ===",
+            s.preset.state_bytes() as f64 / 1e6,
+            s.preset.n_state
+        );
+
+        let step = bench.run(&format!("{preset}/train_step_x1"), || {
+            s.train_step(&tokens, 1e-3, 1e-3).expect("step");
+        });
+        let per_step_ns = step.median();
+
+        let chunk = bench.run(&format!("{preset}/train_chunk_k{k}"), || {
+            s.train_chunk(&chunk_tokens, 1e-3, 1e-3).expect("chunk");
+        });
+        let per_chunk_step_ns = chunk.median() / k as f64;
+        println!(
+            "  amortized: {:.2} ms/step fused vs {:.2} ms/step loose ({:.2}x)",
+            per_chunk_step_ns / 1e6,
+            per_step_ns / 1e6,
+            per_step_ns / per_chunk_step_ns
+        );
+
+        bench.run(&format!("{preset}/eval_step"), || {
+            s.eval_step(&tokens).expect("eval");
+        });
+
+        // Dispatch-only floor: ortho_check moves params in, one f32 out.
+        bench.run(&format!("{preset}/ortho_check_dispatch"), || {
+            s.ortho_check().expect("ortho");
+        });
+    }
+
+    println!("\n(fused chunks are the default driver path; see EXPERIMENTS.md §Perf)");
+    Ok(())
+}

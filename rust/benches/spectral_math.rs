@@ -1,0 +1,73 @@
+//! Micro-benchmarks of the native spectral substrate: QR retraction across
+//! the paper's factor shapes, truncated SVD (the fine-tune conversion), and
+//! the factored-vs-dense forward cost (the O(bk(m+n)) vs O(bmn) claim).
+//!
+//! These feed the §Perf iteration log in EXPERIMENTS.md — the QR retraction
+//! is the paper's own named bottleneck ("40-50% of total step time", §5).
+//!
+//! Run: `cargo bench --bench spectral_math`
+
+use sct::spectral::{qr_retract, svd_truncated, Matrix, SpectralLinear};
+use sct::util::bench::Bench;
+use sct::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let mut b = Bench::new();
+
+    // QR retraction at every Table 1 factor shape (k=32).
+    println!("=== QR retraction (CGS2), paper factor shapes @ k=32 ===");
+    for (name, m) in [
+        ("smol135m_d", 576),
+        ("smol1.7b_d", 2048),
+        ("llama7b_f", 11008),
+        ("llama70b_d", 8192),
+        ("llama70b_f", 28672),
+    ] {
+        let a = Matrix::randn(&mut rng, m, 32, 1.0);
+        b.run(&format!("qr_retract/{name}_{m}x32"), || {
+            std::hint::black_box(qr_retract(&a));
+        });
+    }
+
+    // Rank scaling at fixed m (the paper's O(mk^2) cost note).
+    println!("\n=== QR retraction rank scaling (m=8192) ===");
+    for k in [8usize, 32, 128] {
+        let a = Matrix::randn(&mut rng, 8192, k, 1.0);
+        b.run(&format!("qr_retract/m8192_k{k}"), || {
+            std::hint::black_box(qr_retract(&a));
+        });
+    }
+
+    // Truncated SVD at the fine-tune conversion shapes.
+    println!("\n=== truncated SVD (Jacobi) — finetune conversion shapes ===");
+    for (rows, cols) in [(64usize, 192usize), (128, 384)] {
+        let w = Matrix::randn(&mut rng, rows, cols, 0.2);
+        b.run(&format!("svd_truncated/{rows}x{cols}_k32"), || {
+            std::hint::black_box(svd_truncated(&w, 32));
+        });
+    }
+
+    // Factored vs dense forward: the FLOP-ratio claim behind Table 3's
+    // step-time column.
+    println!("\n=== forward: factored O(bk(m+n)) vs dense O(bmn) ===");
+    let (batch, m, n, k) = (8, 2048, 8192, 32);
+    let layer = SpectralLinear::init(&mut rng, m, n, k);
+    let dense_w = layer.to_dense();
+    let x = Matrix::randn(&mut rng, batch, m, 1.0);
+    let sf = b.run("forward/factored_2048x8192_k32", || {
+        std::hint::black_box(layer.forward(&x));
+    });
+    let factored_ns = sf.median();
+    let sd = b.run("forward/dense_2048x8192", || {
+        std::hint::black_box(x.matmul(&dense_w));
+    });
+    let dense_ns = sd.median();
+    let speedup = dense_ns / factored_ns;
+    let flop_ratio = (m * n) as f64 / (k * (m + n)) as f64;
+    println!(
+        "\nfactored forward is {speedup:.1}x faster (FLOP ratio predicts up to {flop_ratio:.0}x; \
+         memory traffic caps it)"
+    );
+    assert!(speedup > 2.0, "factored forward must clearly beat dense at k=32");
+}

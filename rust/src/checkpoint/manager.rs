@@ -1,0 +1,156 @@
+//! Rotating checkpoint manager + session save/restore glue.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::format::{read_checkpoint, write_checkpoint, NamedTensor};
+use crate::runtime::{DType, Session};
+
+/// Saves `step_NNNNNN.sct` files in a directory, keeping the newest `keep`.
+pub struct CheckpointManager {
+    pub dir: PathBuf,
+    pub keep: usize,
+}
+
+impl CheckpointManager {
+    pub fn new(dir: impl Into<PathBuf>, keep: usize) -> Result<CheckpointManager> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        Ok(CheckpointManager { dir, keep: keep.max(1) })
+    }
+
+    fn path_for(&self, step: u64) -> PathBuf {
+        self.dir.join(format!("step_{step:08}.sct"))
+    }
+
+    /// All checkpoints, sorted by step ascending.
+    pub fn list(&self) -> Result<Vec<(u64, PathBuf)>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if let Some(num) = name.strip_prefix("step_").and_then(|s| s.strip_suffix(".sct")) {
+                if let Ok(step) = num.parse::<u64>() {
+                    out.push((step, path));
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Save the full session state; prune old checkpoints beyond `keep`.
+    pub fn save(&self, session: &Session) -> Result<PathBuf> {
+        let specs = session.state_specs().to_vec();
+        let state = session.state();
+        if state.len() != specs.len() {
+            bail!("session state not initialized");
+        }
+        let mut tensors = Vec::with_capacity(specs.len());
+        for (spec, lit) in specs.iter().zip(state) {
+            let data = match spec.dtype {
+                DType::F32 => NamedTensor::f32(&spec.name, spec.shape.clone(), &lit.to_vec::<f32>()?),
+                DType::I32 => NamedTensor::i32(&spec.name, spec.shape.clone(), &lit.to_vec::<i32>()?),
+                DType::U32 => {
+                    let v = lit.to_vec::<u32>()?;
+                    let as_i: Vec<i32> = v.iter().map(|&x| x as i32).collect();
+                    let mut t = NamedTensor::i32(&spec.name, spec.shape.clone(), &as_i);
+                    t.dtype = DType::U32;
+                    t
+                }
+            };
+            tensors.push(data);
+        }
+        let path = self.path_for(session.steps_done);
+        write_checkpoint(&path, session.steps_done, &tensors)?;
+        self.prune()?;
+        Ok(path)
+    }
+
+    /// Restore the latest checkpoint into the session (names must match the
+    /// manifest state layout exactly). Returns the restored step.
+    pub fn restore_latest(&self, session: &mut Session) -> Result<u64> {
+        let list = self.list()?;
+        let Some((_, path)) = list.last() else {
+            bail!("no checkpoints in {}", self.dir.display());
+        };
+        self.restore(session, path)
+    }
+
+    pub fn restore(&self, session: &mut Session, path: &Path) -> Result<u64> {
+        let (step, tensors) = read_checkpoint(path)?;
+        let specs = session.state_specs().to_vec();
+        if tensors.len() != specs.len() {
+            bail!(
+                "checkpoint has {} tensors, manifest expects {}",
+                tensors.len(),
+                specs.len()
+            );
+        }
+        let mut state = Vec::with_capacity(specs.len());
+        for (spec, t) in specs.iter().zip(&tensors) {
+            if t.name != spec.name || t.shape != spec.shape {
+                bail!(
+                    "checkpoint tensor {:?} {:?} does not match manifest {:?} {:?}",
+                    t.name,
+                    t.shape,
+                    spec.name,
+                    spec.shape
+                );
+            }
+            state.push(crate::runtime::tensor::literal_from_bytes(
+                spec.dtype,
+                &spec.shape,
+                &t.data,
+            )?);
+        }
+        session.set_state(state)?;
+        session.steps_done = step;
+        Ok(step)
+    }
+
+    fn prune(&self) -> Result<()> {
+        let list = self.list()?;
+        if list.len() > self.keep {
+            for (_, path) in &list[..list.len() - self.keep] {
+                std::fs::remove_file(path).ok();
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn list_and_prune_ordering() {
+        let dir = std::env::temp_dir().join(format!("sct_mgr_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mgr = CheckpointManager::new(&dir, 2).unwrap();
+        for step in [5u64, 1, 9] {
+            let t = vec![NamedTensor::f32("x", vec![1], &[step as f32])];
+            write_checkpoint(&mgr.path_for(step), step, &t).unwrap();
+        }
+        let steps: Vec<u64> = mgr.list().unwrap().into_iter().map(|(s, _)| s).collect();
+        assert_eq!(steps, vec![1, 5, 9]);
+        mgr.prune().unwrap();
+        let steps: Vec<u64> = mgr.list().unwrap().into_iter().map(|(s, _)| s).collect();
+        assert_eq!(steps, vec![5, 9], "keep=2 prunes the oldest");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ignores_foreign_files() {
+        let dir = std::env::temp_dir().join(format!("sct_mgr2_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mgr = CheckpointManager::new(&dir, 3).unwrap();
+        std::fs::write(dir.join("README.txt"), "not a checkpoint").unwrap();
+        std::fs::write(dir.join("step_x.sct"), "bad name").unwrap();
+        assert!(mgr.list().unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

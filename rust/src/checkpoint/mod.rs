@@ -1,0 +1,11 @@
+//! Checkpointing: the `.sct` binary format + a rotating manager.
+//!
+//! A checkpoint stores the full session state (params + AdamW moments) as
+//! named tensors, so training resumes bit-exactly. The format is
+//! self-describing (names/dtypes/shapes in a JSON header) and versioned.
+
+pub mod format;
+pub mod manager;
+
+pub use format::{read_checkpoint, write_checkpoint, NamedTensor};
+pub use manager::CheckpointManager;

@@ -1,0 +1,343 @@
+//! The `sct` launcher CLI.
+//!
+//! Subcommands map onto the paper's experiments (DESIGN.md §3):
+//! * `train`        — one training run (any preset, any LR plan)
+//! * `sweep`        — Table 3 + Figures 2/3 (rank sweep, dense baseline)
+//! * `validate-70b` — Table 2 + Figure 1 (70B step, true factor shapes)
+//! * `finetune`     — Table 4 (dense -> 95%-energy spectral conversion)
+//! * `mem-report`   — Table 1 / Figure 1 analytic memory model
+//! * `info`         — list presets in the artifact manifest
+
+use anyhow::{bail, Result};
+
+use super::config::RunConfig;
+use super::schedule::LrPlan;
+use super::{finetune, sweep, validate70b};
+use crate::memmodel::report;
+use crate::metrics::export;
+use crate::runtime::Manifest;
+use crate::util::args::Command;
+
+pub fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((sub, rest)) = argv.split_first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = rest.to_vec();
+    match sub.as_str() {
+        "train" => cmd_train(&rest),
+        "sweep" => cmd_sweep(&rest),
+        "validate-70b" => cmd_validate_70b(&rest),
+        "finetune" => cmd_finetune(&rest),
+        "generate" => cmd_generate(&rest),
+        "mem-report" => cmd_mem_report(&rest),
+        "info" => cmd_info(&rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n\nrun `sct help`"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "sct — Spectral Compact Training (paper reproduction)\n\n\
+         subcommands:\n\
+         \x20 train         one training run\n\
+         \x20 sweep         rank sweep: Table 3 + Figures 2/3\n\
+         \x20 validate-70b  70B-step validation: Table 2 + Figure 1\n\
+         \x20 finetune      gradient-integrity fine-tune: Table 4\n\
+         \x20 generate      sample text from a (trained) spectral model\n\
+         \x20 mem-report    analytic memory model: Table 1 / Figure 1\n\
+         \x20 info          list presets in the manifest\n\n\
+         `sct <subcommand> --help` for options"
+    );
+}
+
+fn base_config(args: &crate::util::args::Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    if let Some(path) = args.get("config") {
+        cfg.load_file(std::path::Path::new(path))?;
+    }
+    if let Some(p) = args.get("preset") {
+        cfg.preset = p.to_string();
+    }
+    cfg.steps = args.parse_num("steps", cfg.steps)?;
+    cfg.seed = args.parse_num("seed", cfg.seed)?;
+    if let Some(r) = args.get("artifacts") {
+        cfg.artifacts_root = r.to_string();
+    }
+    if let Some(o) = args.get("out") {
+        cfg.out_dir = o.to_string();
+    }
+    if args.flag("no-chunk") {
+        cfg.chunked = false;
+    }
+    let lr_d: Option<f32> = args.get("lr-dense").map(|s| s.parse()).transpose()?;
+    let lr_s: Option<f32> = args.get("lr-spectral").map(|s| s.parse()).transpose()?;
+    if lr_d.is_some() || lr_s.is_some() {
+        let d = lr_d.unwrap_or(5e-4);
+        cfg.lr_plan = LrPlan::split(d, lr_s.unwrap_or(d));
+    }
+    if let Some(dir) = args.get("ckpt-dir") {
+        cfg.ckpt_dir = Some(dir.to_string());
+        cfg.ckpt_every = args.parse_num("ckpt-every", 100)?;
+    }
+    Ok(cfg)
+}
+
+fn train_cmd_spec() -> Command {
+    Command::new("sct train", "run one training job")
+        .opt("config", "TOML config file ([train]/[lr] sections)")
+        .opt("preset", "artifact preset name (see `sct info`)")
+        .opt("steps", "training steps")
+        .opt("seed", "RNG seed (init + data)")
+        .opt("lr-dense", "LR for dense params (attention/embeddings)")
+        .opt("lr-spectral", "LR for spectral factors (U, s, V)")
+        .opt("artifacts", "artifact root [default: artifacts]")
+        .opt("out", "output dir for CSV/JSONL [default: runs]")
+        .opt("ckpt-dir", "checkpoint directory (enables checkpointing)")
+        .opt("ckpt-every", "checkpoint cadence in steps")
+        .flag("no-chunk", "dispatch per-step instead of fused K-step chunks")
+        .flag("resume", "resume from newest checkpoint if present")
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let spec = train_cmd_spec();
+    let args = spec.parse(argv)?;
+    let cfg = base_config(&args)?;
+    let out_dir = std::path::PathBuf::from(&cfg.out_dir);
+    std::fs::create_dir_all(&out_dir)?;
+
+    let mut trainer = super::Trainer::new(cfg.clone())?;
+    if args.flag("resume") {
+        if let Some(step) = trainer.try_resume()? {
+            println!("resumed from step {step}");
+        }
+    }
+    let summary = trainer.run()?;
+    println!(
+        "run {}: {} steps, loss {:.3} (ppl {:.1}), {:.0} ms/step, state {:.1} MB{}",
+        summary.label,
+        summary.steps,
+        summary.final_loss_smoothed,
+        summary.ppl,
+        summary.mean_step_s * 1e3,
+        summary.state_bytes as f64 / 1e6,
+        summary
+            .ortho_error
+            .map(|o| format!(", ortho {o:.1e}"))
+            .unwrap_or_default()
+    );
+    let csv = out_dir.join(format!("{}_loss.csv", summary.label));
+    export::write_loss_csv(&trainer.tracker, &csv)?;
+    let row = export::summary_json(
+        &summary.label,
+        summary.params,
+        trainer.mlp_compression(),
+        &trainer.tracker,
+        summary.state_bytes,
+    );
+    export::append_jsonl(&out_dir.join("runs.jsonl"), &row)?;
+    println!("wrote {}", csv.display());
+    Ok(())
+}
+
+fn cmd_sweep(argv: &[String]) -> Result<()> {
+    let spec = Command::new("sct sweep", "rank sweep (Table 3, Figures 2-3)")
+        .opt("config", "TOML config file")
+        .opt_default("steps", "steps per run", "200")
+        .opt("seed", "RNG seed")
+        .opt("artifacts", "artifact root")
+        .opt("out", "output dir")
+        .flag("split-lr", "per-component LRs (the paper's §5 proposal)")
+        .flag("quick", "small steps count for smoke runs");
+    let args = spec.parse(argv)?;
+    let mut cfg = base_config(&args)?;
+    if args.flag("quick") {
+        cfg.steps = 40;
+    }
+    let presets = sweep::paper_presets(args.flag("split-lr"));
+    let result = sweep::run_sweep(&cfg, &presets)?;
+    println!("{}", sweep::render_table3(&result.rows));
+    println!("{}", sweep::render_fig2(&result.curves));
+    println!("{}", sweep::render_fig3(&result.rows));
+    for (what, ok) in sweep::check_observations(&result.rows) {
+        println!("[{}] {what}", if ok { "OK " } else { "FAIL" });
+    }
+    // persist curves for EXPERIMENTS.md
+    let out_dir = std::path::PathBuf::from(&cfg.out_dir);
+    std::fs::create_dir_all(&out_dir)?;
+    for (label, ys) in &result.curves {
+        let mut t = crate::metrics::Tracker::new(1);
+        for &y in ys {
+            t.record(y, 0.0);
+        }
+        let path = out_dir.join(format!("sweep_{}.csv", label.replace([' ', '='], "_")));
+        export::write_loss_csv(&t, &path)?;
+    }
+    Ok(())
+}
+
+fn cmd_validate_70b(argv: &[String]) -> Result<()> {
+    let spec = Command::new("sct validate-70b", "70B-step validation (Table 2, Figure 1)")
+        .opt_default("rank", "spectral rank k", "32")
+        .opt_default("batch", "token rows through the measured layers", "4")
+        .opt_default("layers", "layers to measure directly (of 80)", "2");
+    let args = spec.parse(argv)?;
+    let k: usize = args.parse_num("rank", 32)?;
+    let batch: usize = args.parse_num("batch", 4)?;
+    let layers: usize = args.parse_num("layers", 2)?;
+    let phases = validate70b::measure_70b_phases(k, batch, layers)?;
+    println!("{}", validate70b::render_table2(k, &phases));
+    Ok(())
+}
+
+fn cmd_finetune(argv: &[String]) -> Result<()> {
+    let spec = Command::new("sct finetune", "gradient-integrity fine-tune (Table 4)")
+        .opt_default("pretrain-steps", "dense pre-training steps", "150")
+        .opt_default("finetune-steps", "fine-tune steps per method", "100")
+        .opt_default("energy", "SVD energy retention", "0.95")
+        .opt_default("seed", "RNG seed", "0")
+        .opt("artifacts", "artifact root");
+    let args = spec.parse(argv)?;
+    let mut opts = finetune::FinetuneOpts::default();
+    opts.pretrain_steps = args.parse_num("pretrain-steps", opts.pretrain_steps)?;
+    opts.finetune_steps = args.parse_num("finetune-steps", opts.finetune_steps)?;
+    opts.energy = args.parse_num("energy", opts.energy)?;
+    opts.seed = args.parse_num("seed", opts.seed)?;
+    if let Some(a) = args.get("artifacts") {
+        opts.artifacts_root = a.to_string();
+    }
+    let result = finetune::run_finetune(&opts)?;
+    println!("{}", finetune::render_table4(&result));
+    Ok(())
+}
+
+fn cmd_generate(argv: &[String]) -> Result<()> {
+    let spec = Command::new("sct generate", "sample text from a spectral model")
+        .opt_default("preset", "artifact preset", "tiny_r8")
+        .opt_default("prompt", "prompt text", "### Instruction: describe the rank of matrices")
+        .opt_default("tokens", "tokens to generate", "48")
+        .opt_default("temperature", "sampling temperature (0 = greedy)", "0.8")
+        .opt_default("train-steps", "steps to train before sampling", "100")
+        .opt_default("seed", "seed", "0")
+        .opt("artifacts", "artifact root")
+        .opt("ckpt", "checkpoint file to restore instead of training");
+    let args = spec.parse(argv)?;
+    let root = args.get_or("artifacts", "artifacts").to_string();
+    let preset = args.get_or("preset", "tiny_r8");
+    let seed: u64 = args.parse_num("seed", 0)?;
+    let mut session = crate::runtime::Session::open(&root, preset)?;
+    session.init(seed as i32)?;
+
+    // tokenizer must match the training corpus
+    let text = crate::data::CorpusGen::new(seed).generate(1 << 20);
+    let tokenizer = if session.preset.model.vocab <= 256 {
+        crate::data::Tokenizer::byte_level()
+    } else {
+        crate::data::Tokenizer::train_bpe(&text, session.preset.model.vocab)
+    };
+
+    if let Some(ckpt) = args.get("ckpt") {
+        let mgr = crate::checkpoint::CheckpointManager::new(
+            std::path::Path::new(ckpt).parent().unwrap_or(std::path::Path::new(".")),
+            3,
+        )?;
+        mgr.restore(&mut session, std::path::Path::new(ckpt))?;
+        println!("restored {ckpt}");
+    } else {
+        let steps: usize = args.parse_num("train-steps", 100)?;
+        if steps > 0 {
+            println!("training {steps} steps so samples aren't pure noise...");
+            let ts = session.preset.tokens_spec()?.clone();
+            let (_tok2, ds) = (
+                (),
+                crate::data::Dataset::new(
+                    {
+                        let mut ids = tokenizer.encode(&text);
+                        let cap = session.preset.model.vocab as i32;
+                        for t in &mut ids { if *t >= cap { *t %= cap; } }
+                        ids
+                    },
+                    ts.shape[0], ts.shape[1], seed,
+                ),
+            );
+            let mut ds = ds;
+            let chunk = session.chunk_len().unwrap_or(1);
+            let mut done = 0;
+            while done < steps {
+                if chunk > 1 {
+                    let t = ds.next_chunk(chunk);
+                    session.train_chunk(&t, 1e-3, 3e-3)?;
+                    done += chunk;
+                } else {
+                    let t = ds.next_batch();
+                    session.train_step(&t, 1e-3, 3e-3)?;
+                    done += 1;
+                }
+            }
+        }
+    }
+
+    let opts = super::generate::SampleOpts {
+        temperature: args.parse_num("temperature", 0.8)?,
+        top_k: 40,
+        seed,
+    };
+    let prompt = args.get_or("prompt", "### Instruction:");
+    let n: usize = args.parse_num("tokens", 48)?;
+    let out = super::generate::generate_text(&mut session, &tokenizer, prompt, n, opts)?;
+    println!("\nprompt: {prompt}\ncompletion: {out}");
+    Ok(())
+}
+
+fn cmd_mem_report(argv: &[String]) -> Result<()> {
+    let spec = Command::new("sct mem-report", "analytic memory model (Table 1, Figure 1)")
+        .opt_default("rank", "spectral rank k", "32")
+        .flag("table1", "print Table 1 only")
+        .flag("fig1", "print Figure 1 only")
+        .flag("baselines", "include GaLore/LoRA accounting rows");
+    let args = spec.parse(argv)?;
+    let k: usize = args.parse_num("rank", 32)?;
+    let all = !args.flag("table1") && !args.flag("fig1");
+    if args.flag("table1") || all {
+        println!("{}", report::render_table1(k));
+    }
+    if args.flag("fig1") || all {
+        println!("{}", report::render_fig1(k));
+    }
+    if args.flag("baselines") {
+        println!("70B MLP-stack training memory by method (GB):");
+        for (name, gb) in report::baseline_rows(k) {
+            println!("  {name:<12} {gb:>10.1}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let spec = Command::new("sct info", "list presets in the manifest")
+        .opt_default("artifacts", "artifact root", "artifacts");
+    let args = spec.parse(argv)?;
+    let manifest = Manifest::load(args.get_or("artifacts", "artifacts"))?;
+    println!(
+        "{:<16} {:>10} {:>6} {:>8} {:>8} {:>9}  artifacts",
+        "preset", "params", "rank", "d_model", "layers", "state MB"
+    );
+    for (name, p) in &manifest.presets {
+        println!(
+            "{:<16} {:>10} {:>6} {:>8} {:>8} {:>9.1}  {}",
+            name,
+            p.model.param_count,
+            p.model.rank.map(|r| r.to_string()).unwrap_or_else(|| "-".into()),
+            p.model.d_model,
+            p.model.n_layers,
+            p.state_bytes() as f64 / 1e6,
+            p.artifacts.keys().cloned().collect::<Vec<_>>().join(",")
+        );
+    }
+    Ok(())
+}

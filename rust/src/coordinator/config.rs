@@ -1,0 +1,292 @@
+//! Run configuration: defaults, TOML-subset file loading, CLI overrides.
+//!
+//! The config system is layered exactly like the big training frameworks:
+//! built-in defaults < config file (`--config run.toml`) < CLI flags. The
+//! offline image has no `toml` crate, so [`parse_toml`] implements the
+//! subset the configs use: `[section]` tables, `key = value` with strings,
+//! integers, floats, booleans and flat arrays, plus `#` comments.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::schedule::{LrPlan, Schedule};
+
+/// A parsed TOML-subset document: section -> key -> raw value.
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f32(&self) -> Result<f32> {
+        match self {
+            TomlValue::Float(f) => Ok(*f as f32),
+            TomlValue::Int(i) => Ok(*i as f32),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// Parse the TOML subset. Unknown syntax is an error, not a silent skip.
+pub fn parse_toml(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::new();
+    let mut section = String::new();
+    doc.insert(String::new(), BTreeMap::new());
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            bail!("line {}: expected `key = value`, got {raw:?}", lineno + 1);
+        };
+        let value = parse_value(value.trim())
+            .with_context(|| format!("line {}: bad value {:?}", lineno + 1, value.trim()))?;
+        doc.get_mut(&section).unwrap().insert(key.trim().to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlValue> {
+    if let Some(inner) = v.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|s| parse_value(s.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = v.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("unparseable value")
+}
+
+/// Everything a training run needs.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub preset: String,
+    pub steps: usize,
+    pub seed: u64,
+    pub lr_plan: LrPlan,
+    /// Use the fused K-step train_chunk artifact when available.
+    pub chunked: bool,
+    pub eval_every: usize,
+    pub ortho_every: usize,
+    pub corpus_bytes: usize,
+    pub ckpt_dir: Option<String>,
+    pub ckpt_every: usize,
+    pub artifacts_root: String,
+    pub out_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> RunConfig {
+        RunConfig {
+            preset: "sweep_r16".into(),
+            steps: 200,
+            seed: 0,
+            lr_plan: LrPlan::paper_sct(),
+            chunked: true,
+            eval_every: 50,
+            ortho_every: 100,
+            corpus_bytes: 1 << 20,
+            ckpt_dir: None,
+            ckpt_every: 0,
+            artifacts_root: "artifacts".into(),
+            out_dir: "runs".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply a `[train]` section from a TOML file.
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
+        static EMPTY: once_cell::sync::Lazy<BTreeMap<String, TomlValue>> =
+            once_cell::sync::Lazy::new(BTreeMap::new);
+        let t = doc.get("train").unwrap_or(&EMPTY);
+        if let Some(v) = t.get("preset") {
+            self.preset = v.as_str()?.to_string();
+        }
+        if let Some(v) = t.get("steps") {
+            self.steps = v.as_usize()?;
+        }
+        if let Some(v) = t.get("seed") {
+            self.seed = v.as_usize()? as u64;
+        }
+        if let Some(v) = t.get("chunked") {
+            self.chunked = v.as_bool()?;
+        }
+        if let Some(v) = t.get("eval_every") {
+            self.eval_every = v.as_usize()?;
+        }
+        if let Some(v) = t.get("corpus_bytes") {
+            self.corpus_bytes = v.as_usize()?;
+        }
+        if let Some(v) = t.get("ckpt_every") {
+            self.ckpt_every = v.as_usize()?;
+        }
+        if let Some(v) = t.get("ckpt_dir") {
+            self.ckpt_dir = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = t.get("artifacts") {
+            self.artifacts_root = v.as_str()?.to_string();
+        }
+        if let Some(v) = t.get("out_dir") {
+            self.out_dir = v.as_str()?.to_string();
+        }
+        // [lr] section: dense / spectral constants or cosine fields.
+        if let Some(lr) = doc.get("lr") {
+            let dense = lr.get("dense").map(|v| v.as_f32()).transpose()?;
+            let spectral = lr.get("spectral").map(|v| v.as_f32()).transpose()?;
+            let d = dense.unwrap_or(5e-4);
+            let s = spectral.unwrap_or(d);
+            if let (Some(warmup), Some(total)) = (lr.get("warmup"), lr.get("total")) {
+                let (w, t_) = (warmup.as_usize()?, total.as_usize()?);
+                let floor = lr.get("floor").map(|v| v.as_f32()).transpose()?.unwrap_or(0.0);
+                self.lr_plan = LrPlan {
+                    dense: Schedule::WarmupCosine { peak: d, floor, warmup: w, total: t_ },
+                    spectral: Schedule::WarmupCosine { peak: s, floor, warmup: w, total: t_ },
+                };
+            } else {
+                self.lr_plan = LrPlan::split(d, s);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let doc = parse_toml(&text)?;
+        self.apply_toml(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# run config
+[train]
+preset = "sweep_r32"   # the rank-32 preset
+steps = 2_000
+seed = 7
+chunked = false
+ckpt_dir = "ckpts/sweep"
+
+[lr]
+dense = 2e-5
+spectral = 5e-4
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let doc = parse_toml(SAMPLE).unwrap();
+        assert_eq!(doc["train"]["preset"], TomlValue::Str("sweep_r32".into()));
+        assert_eq!(doc["train"]["steps"], TomlValue::Int(2000));
+        assert_eq!(doc["lr"]["dense"], TomlValue::Float(2e-5));
+    }
+
+    #[test]
+    fn applies_to_config() {
+        let mut cfg = RunConfig::default();
+        cfg.apply_toml(&parse_toml(SAMPLE).unwrap()).unwrap();
+        assert_eq!(cfg.preset, "sweep_r32");
+        assert_eq!(cfg.steps, 2000);
+        assert_eq!(cfg.seed, 7);
+        assert!(!cfg.chunked);
+        assert_eq!(cfg.ckpt_dir.as_deref(), Some("ckpts/sweep"));
+        assert_eq!(cfg.lr_plan.at(0), (2e-5, 5e-4));
+    }
+
+    #[test]
+    fn cosine_section() {
+        let text = "[lr]\ndense = 1e-3\nwarmup = 10\ntotal = 100\nfloor = 1e-5\n";
+        let mut cfg = RunConfig::default();
+        cfg.apply_toml(&parse_toml(text).unwrap()).unwrap();
+        let (d0, _) = cfg.lr_plan.at(0);
+        let (d100, _) = cfg.lr_plan.at(100);
+        assert!(d0 < 1e-3 && d100 <= 1.1e-5);
+    }
+
+    #[test]
+    fn arrays_bools_strings() {
+        let doc = parse_toml("x = [1, 2, 3]\nflag = true\ns = \"a # not comment\"").unwrap();
+        assert_eq!(
+            doc[""]["x"],
+            TomlValue::Array(vec![TomlValue::Int(1), TomlValue::Int(2), TomlValue::Int(3)])
+        );
+        assert_eq!(doc[""]["flag"], TomlValue::Bool(true));
+        assert_eq!(doc[""]["s"], TomlValue::Str("a # not comment".into()));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_toml("key value no equals").is_err());
+        assert!(parse_toml("k = @nope").is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 coordinator — the training orchestration layer.
+//!
+//! This is where the paper's experiments live as code: the config system
+//! ([`config`]), LR schedules incl. the per-component split the paper names
+//! as future work ([`schedule`]), the training loop ([`trainer`]), and one
+//! driver per experiment ([`sweep`] = Table 3 / Figs 2-3, [`finetune`] =
+//! Table 4, [`validate70b`] = Table 2 / Fig 1). The [`cli`] exposes each as
+//! a subcommand of the `sct` launcher.
+
+pub mod cli;
+pub mod config;
+pub mod finetune;
+pub mod generate;
+pub mod schedule;
+pub mod sweep;
+pub mod trainer;
+pub mod validate70b;
+
+pub use config::RunConfig;
+pub use schedule::{LrPlan, Schedule};
+pub use trainer::{RunSummary, Trainer};

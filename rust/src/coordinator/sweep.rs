@@ -1,0 +1,189 @@
+//! The rank-sweep driver — Table 3, Figure 2 and Figure 3 (scaled).
+//!
+//! Paper protocol (§4.2): dense baseline vs SCT at four ranks, same data,
+//! same steps, dense LR 2e-5, SCT LR 5e-4, loss/PPL smoothed over 50 steps.
+//! Here the SmolLM2-1.7B testbed is scaled to the `sweep_*` presets (same
+//! architecture family; ranks 8..64 occupy the same relative band as the
+//! paper's 32..256 — DESIGN.md §4) and "GPU memory" becomes the training
+//! state footprint (weights+grads+moments), the device-agnostic part of the
+//! paper's VRAM column.
+
+use anyhow::Result;
+
+use super::config::RunConfig;
+use super::schedule::LrPlan;
+use super::trainer::{RunSummary, Trainer};
+use crate::metrics::plot;
+
+/// One Table 3 row.
+#[derive(Debug)]
+pub struct SweepRow {
+    pub label: String,
+    pub params_m: f64,
+    pub mlp_compression: f64,
+    pub loss: f32,
+    pub ppl: f32,
+    pub state_mb: f64,
+    pub step_ms: f64,
+    pub ortho: Option<f32>,
+}
+
+pub struct SweepResult {
+    pub rows: Vec<SweepRow>,
+    pub curves: Vec<(String, Vec<f32>)>,
+}
+
+/// Run the full sweep. `presets` are (label, preset, lr_plan) triples.
+pub fn run_sweep(
+    base: &RunConfig,
+    presets: &[(String, String, LrPlan)],
+) -> Result<SweepResult> {
+    let mut rows = Vec::new();
+    let mut curves = Vec::new();
+    for (label, preset, plan) in presets {
+        let mut cfg = base.clone();
+        cfg.preset = preset.clone();
+        cfg.lr_plan = plan.clone();
+        eprintln!("[sweep] {label}: preset={preset} steps={}", cfg.steps);
+        let mut trainer = Trainer::new(cfg)?;
+        let summary = trainer.run()?;
+        let compression = trainer.mlp_compression();
+        rows.push(to_row(label, compression, &summary));
+        let mut t = crate::metrics::Tracker::paper();
+        t.record_losses(&summary.losses, 0.0);
+        curves.push((label.clone(), t.smoothed_series()));
+    }
+    Ok(SweepResult { rows, curves })
+}
+
+fn to_row(label: &str, compression: f64, s: &RunSummary) -> SweepRow {
+    SweepRow {
+        label: label.to_string(),
+        params_m: s.params as f64 / 1e6,
+        mlp_compression: compression,
+        loss: s.final_loss_smoothed,
+        ppl: s.ppl,
+        state_mb: s.state_bytes as f64 / 1e6,
+        step_ms: s.mean_step_s * 1e3,
+        ortho: s.ortho_error,
+    }
+}
+
+/// The default sweep: dense + four ranks.
+///
+/// LR calibration note (DESIGN.md §4): the paper's literal pairing
+/// (dense 2e-5 vs SCT 5e-4) is tied to *fine-tuning a pretrained 1.7B* —
+/// at 2e-5 a from-scratch model barely moves in 2000 steps. Our scaled runs
+/// train from scratch, so the dense baseline gets a from-scratch-calibrated
+/// 3e-4 while SCT keeps the paper's hotter 5e-4; the paper's qualitative
+/// picture (dense floor below SCT; all SCT ranks at one floor) is what is
+/// being reproduced. Use [`LrPlan::paper_dense`] directly to run the
+/// paper's literal configuration.
+pub fn paper_presets(split_lr: bool) -> Vec<(String, String, LrPlan)> {
+    let mut v = vec![(
+        "Dense".to_string(),
+        "sweep_dense".to_string(),
+        // LR parity with SCT: from scratch, capacity ordering (dense below
+        // every rank) is only meaningful at a matched learning rate.
+        LrPlan::split(5e-4, 5e-4),
+    )];
+    for k in [64usize, 32, 16, 8] {
+        let plan = if split_lr {
+            // §5's per-component proposal: dense-calibrated LR for
+            // attention/embeddings, hot LR for the spectral factors.
+            LrPlan::split(3e-4, 5e-4)
+        } else {
+            LrPlan::paper_sct()
+        };
+        v.push((format!("SCT r={k}"), format!("sweep_r{k}"), plan));
+    }
+    v
+}
+
+/// Render Table 3 in the paper's column order.
+pub fn render_table3(rows: &[SweepRow]) -> String {
+    let mut out = String::new();
+    out.push_str("Table 3 — rank sweep (scaled testbed; see DESIGN.md §4)\n");
+    out.push_str("| Method | Params | MLP Comp. | Loss | PPL | State Mem. | Step Time | Ortho |\n");
+    out.push_str("|---|---|---|---|---|---|---|---|\n");
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {:.1}M | {:.1}x | {:.2} | {:.1} | {:.1} MB | {:.0} ms | {} |\n",
+            r.label,
+            r.params_m,
+            r.mlp_compression,
+            r.loss,
+            r.ppl,
+            r.state_mb,
+            r.step_ms,
+            r.ortho.map(|o| format!("{o:.1e}")).unwrap_or_else(|| "-".into()),
+        ));
+    }
+    out
+}
+
+/// Figure 2: smoothed loss curves, all runs on one grid.
+pub fn render_fig2(curves: &[(String, Vec<f32>)]) -> String {
+    format!(
+        "Figure 2 — loss convergence (smoothed, window=50)\n{}",
+        plot::line_plot(curves, 18, 72)
+    )
+}
+
+/// Figure 3: compression-vs-PPL Pareto + state-memory bars.
+pub fn render_fig3(rows: &[SweepRow]) -> String {
+    let pts: Vec<(String, f64, f64)> = rows
+        .iter()
+        .map(|r| (r.label.clone(), r.mlp_compression, r.ppl as f64))
+        .collect();
+    let mut out = format!(
+        "Figure 3 (left) — compression vs quality Pareto\n{}",
+        plot::scatter_plot(&pts, 14, 60)
+    );
+    out.push_str("\nFigure 3 (right) — training-state memory by method\n");
+    let max_mb = rows.iter().map(|r| r.state_mb).fold(0.0, f64::max).max(1e-9);
+    for r in rows {
+        let chars = (r.state_mb / max_mb * 50.0).round() as usize;
+        out.push_str(&format!(
+            "{:<10} {:>8.1} MB |{}\n",
+            r.label,
+            r.state_mb,
+            "#".repeat(chars.max(1))
+        ));
+    }
+    out
+}
+
+/// The §4.3 observations, computed from our rows (printed with the tables so
+/// the qualitative claims are machine-checked, not eyeballed).
+pub fn check_observations(rows: &[SweepRow]) -> Vec<(String, bool)> {
+    let dense = rows.iter().find(|r| r.label.starts_with("Dense"));
+    let scts: Vec<&SweepRow> = rows.iter().filter(|r| r.label.starts_with("SCT")).collect();
+    let mut checks = Vec::new();
+    if let Some(d) = dense {
+        let best_sct = scts.iter().map(|r| r.loss).fold(f32::INFINITY, f32::min);
+        checks.push((
+            "dense converges below every SCT rank (paper Fig 2)".to_string(),
+            d.loss < best_sct,
+        ));
+        let fastest = scts.iter().map(|r| r.step_ms).fold(f64::INFINITY, f64::min);
+        checks.push((
+            "SCT steps are faster than dense (paper: 2.1x at r=32)".to_string(),
+            fastest < d.step_ms,
+        ));
+        let min_mem = scts.iter().map(|r| r.state_mb).fold(f64::INFINITY, f64::min);
+        checks.push((
+            "SCT state memory below dense (paper: 46% reduction)".to_string(),
+            min_mem < d.state_mb,
+        ));
+    }
+    if scts.len() >= 2 {
+        let max = scts.iter().map(|r| r.loss).fold(f32::NEG_INFINITY, f32::max);
+        let min = scts.iter().map(|r| r.loss).fold(f32::INFINITY, f32::min);
+        checks.push((
+            format!("all ranks converge to the same loss floor (spread {:.2})", max - min),
+            max - min < 0.5,
+        ));
+    }
+    checks
+}

@@ -1,0 +1,164 @@
+//! The training loop: session + data pipeline + schedules + metrics +
+//! checkpoints, wired the way the paper's Algorithm 1 runs.
+//!
+//! The hot path is one PJRT dispatch per chunk (`train_chunk`, K fused
+//! steps) with batches prefetched on a producer thread; falls back to
+//! per-step dispatch when `chunked` is off or the artifact is missing (the
+//! pallas integration preset).
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::config::RunConfig;
+use crate::checkpoint::CheckpointManager;
+use crate::data::{build_dataset, Prefetcher};
+use crate::metrics::Tracker;
+use crate::runtime::Session;
+
+/// Result of a training run — everything Table 3 needs for one row.
+#[derive(Debug)]
+pub struct RunSummary {
+    pub label: String,
+    pub params: usize,
+    pub steps: usize,
+    pub final_loss_smoothed: f32,
+    pub ppl: f32,
+    pub mean_step_s: f64,
+    pub state_bytes: usize,
+    pub eval_loss: Option<f32>,
+    pub ortho_error: Option<f32>,
+    pub losses: Vec<f32>,
+}
+
+pub struct Trainer {
+    pub cfg: RunConfig,
+    pub session: Session,
+    pub tracker: Tracker,
+    ckpt: Option<CheckpointManager>,
+}
+
+impl Trainer {
+    /// Open the session, init from seed, build the checkpoint manager.
+    pub fn new(cfg: RunConfig) -> Result<Trainer> {
+        let mut session = Session::open(&cfg.artifacts_root, &cfg.preset)
+            .with_context(|| format!("opening preset {}", cfg.preset))?;
+        session.init(cfg.seed as i32)?;
+        let ckpt = match &cfg.ckpt_dir {
+            Some(dir) if cfg.ckpt_every > 0 => Some(CheckpointManager::new(dir, 3)?),
+            _ => None,
+        };
+        Ok(Trainer { cfg, session, tracker: Tracker::paper(), ckpt })
+    }
+
+    /// Resume from the newest checkpoint if one exists. Returns the step.
+    pub fn try_resume(&mut self) -> Result<Option<u64>> {
+        if let Some(mgr) = &self.ckpt {
+            if !mgr.list()?.is_empty() {
+                let step = mgr.restore_latest(&mut self.session)?;
+                return Ok(Some(step));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Run `cfg.steps` training steps. Returns the summary row.
+    pub fn run(&mut self) -> Result<RunSummary> {
+        let spec = self
+            .session
+            .preset
+            .artifacts
+            .get("train_step")
+            .context("preset has no train_step artifact (pallas presets are inference-only)")?;
+        let tok_idx = spec.input_index("tokens")?;
+        let seq_plus1 = spec.inputs[tok_idx].shape[1];
+        let batch = spec.inputs[tok_idx].shape[0];
+        let vocab = self.session.preset.model.vocab;
+
+        let chunk_k = if self.cfg.chunked { self.session.chunk_len().unwrap_or(1) } else { 1 };
+        let (_tok, dataset) =
+            build_dataset(vocab, batch, seq_plus1, self.cfg.corpus_bytes, self.cfg.seed);
+        let eval_batch = dataset.eval_batch();
+        let prefetch = Prefetcher::spawn(dataset, chunk_k, 4);
+
+        // Compile up front so step timing excludes XLA compilation.
+        self.session.warmup(&["train_step", "train_chunk", "eval_step", "ortho_check"])?;
+
+        let mut step = self.session.steps_done as usize;
+        let target = self.cfg.steps;
+        let mut last_eval = None;
+        let mut last_ortho = None;
+
+        while step < target {
+            let (ld, ls) = self.cfg.lr_plan.at(step);
+            let t0 = Instant::now();
+            if chunk_k > 1 && step + chunk_k <= target {
+                let tokens = prefetch.next();
+                let losses = self.session.train_chunk(&tokens, ld, ls)?;
+                self.tracker.record_losses(&losses, t0.elapsed().as_secs_f64());
+                step += chunk_k;
+            } else {
+                let tokens = if chunk_k > 1 {
+                    // tail: take the first batch of a chunk item
+                    prefetch.next()[..batch * seq_plus1].to_vec()
+                } else {
+                    prefetch.next()
+                };
+                let loss = self.session.train_step(&tokens, ld, ls)?;
+                self.tracker.record(loss, t0.elapsed().as_secs_f64());
+                step += 1;
+            }
+
+            if self.cfg.eval_every > 0 && step % self.cfg.eval_every < chunk_k.max(1) {
+                last_eval = Some(self.session.eval_step(&eval_batch)?);
+            }
+            if self.cfg.ortho_every > 0
+                && self.session.preset.model.rank.is_some()
+                && step % self.cfg.ortho_every < chunk_k.max(1)
+            {
+                let err = self.session.ortho_check()?;
+                last_ortho = Some(err);
+                // The paper's own acceptance threshold (Table 2).
+                if err > 2e-6 {
+                    eprintln!("[trainer] WARNING ortho error {err} > 2e-6 at step {step}");
+                }
+            }
+            if let Some(mgr) = &self.ckpt {
+                if self.cfg.ckpt_every > 0 && step % self.cfg.ckpt_every < chunk_k.max(1) {
+                    mgr.save(&self.session)?;
+                }
+            }
+        }
+
+        if self.cfg.ortho_every > 0 && self.session.preset.model.rank.is_some() {
+            last_ortho = Some(self.session.ortho_check()?);
+        }
+
+        Ok(RunSummary {
+            label: self.cfg.preset.clone(),
+            params: self.session.preset.model.param_count,
+            steps: step,
+            final_loss_smoothed: self.tracker.smoothed_loss(),
+            ppl: self.tracker.ppl(),
+            mean_step_s: self.tracker.mean_step_s(),
+            state_bytes: self.session.preset.state_bytes(),
+            eval_loss: last_eval,
+            ortho_error: last_ortho,
+            losses: self.tracker.losses.clone(),
+        })
+    }
+
+    /// MLP compression factor vs the dense preset geometry (Table 3 col 3).
+    pub fn mlp_compression(&self) -> f64 {
+        let m = &self.session.preset.model;
+        match m.rank {
+            None => 1.0,
+            Some(k) => {
+                let dense: f64 = (3 * m.d_model * m.d_ffn) as f64;
+                let spectral =
+                    (2 * k * (m.d_model + m.d_ffn + 1) + k * (m.d_ffn + m.d_model + 1)) as f64;
+                dense / spectral
+            }
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! 70B architecture validation — Table 2 + Figure 1 (§4.1).
+//!
+//! The paper runs ONE full training step of a 70B-shape spectral transformer
+//! on consumer hardware and reports peak memory + per-phase time. Our
+//! substitution (DESIGN.md §4):
+//! * **memory** is analytic — identical arithmetic to the paper's (the
+//!   paper's dense 1,245 GB figure is itself analytic);
+//! * **phase times** are measured for real at the TRUE factor shapes: the
+//!   native rust SpectralLinear runs forward/backward/AdamW/QR-retraction on
+//!   an 8192x28672 @ k=32 layer (feasible on any machine — that is the
+//!   paper's whole point) and we scale by the layer count;
+//! * the scaled end-to-end artifact step (sweep preset) cross-checks that
+//!   the runtime path has the same phase structure.
+
+use anyhow::Result;
+
+use crate::memmodel::layer::gb;
+use crate::memmodel::model::{ModelMemory, SpectralScope};
+use crate::memmodel::presets::validation_70b;
+use crate::memmodel::report::render_fig1;
+use crate::memmodel::TrainRegime;
+use crate::spectral::{LayerTrainer, Matrix, SpectralLinear};
+use crate::util::rng::Rng;
+
+#[derive(Debug)]
+pub struct Phase70b {
+    pub fwd_s: f64,
+    pub bwd_s: f64,
+    pub opt_s: f64,
+    pub retract_s: f64,
+    pub ortho_error: f32,
+    /// layers measured directly (the rest is linear extrapolation)
+    pub layers_measured: usize,
+    pub layers_total: usize,
+}
+
+impl Phase70b {
+    pub fn total_s(&self) -> f64 {
+        self.fwd_s + self.bwd_s + self.opt_s + self.retract_s
+    }
+
+    pub fn retract_fraction(&self) -> f64 {
+        self.retract_s / self.total_s().max(1e-12)
+    }
+}
+
+/// Run `layers_measured` real layer-steps at the 70B MLP shape and
+/// extrapolate to the full 80-layer architecture.
+pub fn measure_70b_phases(k: usize, batch: usize, layers_measured: usize) -> Result<Phase70b> {
+    let shape = validation_70b();
+    let (d, f) = (shape.d_model, shape.d_ffn);
+    let mut rng = Rng::new(42);
+
+    // One MLP = three spectral matrices; measure one (d,f) and one (f,d)
+    // projection and weight accordingly: per layer = 2 * (d->f) + 1 * (f->d).
+    let mut acc = [0.0f64; 4];
+    let mut ortho = 0.0f32;
+    for _ in 0..layers_measured {
+        for (m, n, copies) in [(d, f, 2usize), (f, d, 1)] {
+            let layer = SpectralLinear::init(&mut rng, m, n, k);
+            let mut tr = LayerTrainer::new(layer, 5e-4);
+            let x = Matrix::randn(&mut rng, batch, m, 1.0);
+            let t = Matrix::randn(&mut rng, batch, n, 0.5);
+            let (_, phases) = tr.step(&x, &t);
+            for (a, p) in acc.iter_mut().zip(phases) {
+                *a += p * copies as f64;
+            }
+            ortho = ortho.max(tr.layer.ortho_error());
+        }
+    }
+    let scale = shape.n_layers as f64 / layers_measured as f64;
+    Ok(Phase70b {
+        fwd_s: acc[0] * scale,
+        bwd_s: acc[1] * scale,
+        opt_s: acc[2] * scale,
+        retract_s: acc[3] * scale,
+        ortho_error: ortho,
+        layers_measured,
+        layers_total: shape.n_layers,
+    })
+}
+
+pub fn render_table2(k: usize, phases: &Phase70b) -> String {
+    let shape = validation_70b();
+    let sct = ModelMemory::sct(&shape, k, SpectralScope::AllLinear, TrainRegime::AdamW);
+    let dense = ModelMemory::dense(&shape, TrainRegime::AdamW);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Table 2 — 70B architecture validation (this machine; {} of {} layers measured,\n\
+         linearly extrapolated; paper measured Apple M4 Pro / Steam Deck)\n",
+        phases.layers_measured, phases.layers_total
+    ));
+    out.push_str("| Metric | This machine (MLP stack) | Paper (Steam Deck) |\n|---|---|---|\n");
+    out.push_str(&format!(
+        "| Peak training state | {:.2} GB (analytic, all-linear k={k}) | 7.24 GB |\n",
+        sct.gb()
+    ));
+    out.push_str(&format!("| Forward pass | {:.2} s | 0.43 s |\n", phases.fwd_s));
+    out.push_str(&format!("| Backward pass | {:.2} s | 0.92 s |\n", phases.bwd_s));
+    out.push_str(&format!("| Optimizer step | {:.2} s | 2.35 s |\n", phases.opt_s));
+    out.push_str(&format!("| QR retraction | {:.2} s | 2.58 s |\n", phases.retract_s));
+    out.push_str(&format!("| Total step | {:.2} s | 6.28 s |\n", phases.total_s()));
+    out.push_str(&format!(
+        "| Ortho. error | {:.1e} | < 2e-6 |\n",
+        phases.ortho_error
+    ));
+    out.push_str(&format!(
+        "| Retraction share of step | {:.0}% | 41% (paper: \"40-50%\") |\n",
+        100.0 * phases.retract_fraction()
+    ));
+    out.push_str(&format!(
+        "(dense FP32+Adam would need {:.0} GB — {:.0}x more; Figure 1)\n",
+        gb(dense.total_bytes),
+        dense.total_bytes as f64 / sct.total_bytes as f64,
+    ));
+    out.push('\n');
+    out.push_str(&render_fig1(k));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_are_positive_and_scale() {
+        // k tiny + 1 layer so the test is fast; structure is what matters.
+        let p = measure_70b_phases(4, 1, 1).unwrap();
+        assert!(p.fwd_s > 0.0 && p.bwd_s > 0.0 && p.opt_s > 0.0 && p.retract_s > 0.0);
+        assert_eq!(p.layers_total, 80);
+        assert!(p.ortho_error < 2e-6, "retraction must hold the manifold");
+        let total = p.total_s();
+        assert!((p.fwd_s + p.bwd_s + p.opt_s + p.retract_s - total).abs() < 1e-12);
+    }
+}

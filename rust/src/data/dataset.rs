@@ -1,0 +1,170 @@
+//! Token stream -> packed training batches.
+//!
+//! Packing follows the standard causal-LM recipe: the token stream is cut
+//! into contiguous windows of `seq_len + 1` (inputs + shifted targets share
+//! one tensor; the graph slices internally), batch `b` such windows, shuffle
+//! window order per epoch with a seeded RNG.
+
+use crate::util::rng::Rng;
+
+/// An epoch-shuffled, packed batch iterator over a token stream.
+pub struct Dataset {
+    tokens: Vec<i32>,
+    pub batch: usize,
+    pub seq_plus1: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    pub epoch: u64,
+}
+
+impl Dataset {
+    /// `seq_plus1` = seq_len + 1 (the wire shape of the tokens tensor).
+    pub fn new(tokens: Vec<i32>, batch: usize, seq_plus1: usize, seed: u64) -> Dataset {
+        assert!(
+            tokens.len() >= batch * seq_plus1,
+            "corpus too small: {} tokens for batch {batch} x {seq_plus1}",
+            tokens.len()
+        );
+        let n_windows = tokens.len() / seq_plus1;
+        let mut ds = Dataset {
+            tokens,
+            batch,
+            seq_plus1,
+            order: (0..n_windows).collect(),
+            cursor: 0,
+            rng: Rng::new(seed),
+            epoch: 0,
+        };
+        ds.rng.shuffle(&mut ds.order);
+        ds
+    }
+
+    pub fn n_windows(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.n_windows() / self.batch
+    }
+
+    /// Next batch as a flat (batch * seq_plus1) i32 buffer (row-major).
+    /// Reshuffles and bumps `epoch` at epoch end.
+    pub fn next_batch(&mut self) -> Vec<i32> {
+        if self.cursor + self.batch > self.order.len() {
+            self.rng.shuffle(&mut self.order);
+            self.cursor = 0;
+            self.epoch += 1;
+        }
+        let mut out = Vec::with_capacity(self.batch * self.seq_plus1);
+        for i in 0..self.batch {
+            let w = self.order[self.cursor + i];
+            let start = w * self.seq_plus1;
+            out.extend_from_slice(&self.tokens[start..start + self.seq_plus1]);
+        }
+        self.cursor += self.batch;
+        out
+    }
+
+    /// Next K batches concatenated — the train_chunk wire format
+    /// (k, batch, seq+1) row-major.
+    pub fn next_chunk(&mut self, k: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(k * self.batch * self.seq_plus1);
+        for _ in 0..k {
+            out.extend(self.next_batch());
+        }
+        out
+    }
+
+    /// A fixed held-out batch (deterministic, last windows — never yielded
+    /// by `next_batch` when the window count isn't a multiple of batch;
+    /// used for eval loss).
+    pub fn eval_batch(&self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.batch * self.seq_plus1);
+        for i in 0..self.batch {
+            let w = (self.n_windows() - 1 - i) % self.n_windows();
+            let start = w * self.seq_plus1;
+            out.extend_from_slice(&self.tokens[start..start + self.seq_plus1]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize) -> Vec<i32> {
+        (0..n as i32).collect()
+    }
+
+    #[test]
+    fn batch_shape_and_alignment() {
+        let mut ds = Dataset::new(toy(1000), 4, 9, 0);
+        let b = ds.next_batch();
+        assert_eq!(b.len(), 36);
+        // every row must be a contiguous window aligned to seq_plus1
+        for r in 0..4 {
+            let row = &b[r * 9..(r + 1) * 9];
+            assert_eq!(row[0] % 9, 0, "window must start at a multiple of 9");
+            for (i, w) in row.windows(2).enumerate() {
+                assert_eq!(w[1], w[0] + 1, "row {r} pos {i} not contiguous");
+            }
+        }
+    }
+
+    #[test]
+    fn no_token_loss_within_epoch() {
+        // Over one epoch every window index is yielded exactly once.
+        let mut ds = Dataset::new(toy(20 * 5), 2, 5, 1);
+        let per_epoch = ds.batches_per_epoch();
+        let mut starts = Vec::new();
+        for _ in 0..per_epoch {
+            let b = ds.next_batch();
+            starts.push(b[0] / 5);
+            starts.push(b[5] / 5);
+        }
+        starts.sort_unstable();
+        starts.dedup();
+        assert_eq!(starts.len(), per_epoch * 2, "duplicate windows within an epoch");
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        let mut ds = Dataset::new(toy(40 * 7), 2, 7, 2);
+        let e0: Vec<i32> = (0..ds.batches_per_epoch()).flat_map(|_| ds.next_batch()).collect();
+        assert_eq!(ds.epoch, 0);
+        let e1: Vec<i32> = (0..ds.batches_per_epoch()).flat_map(|_| ds.next_batch()).collect();
+        assert_eq!(ds.epoch, 1);
+        assert_ne!(e0, e1, "epoch order should differ");
+        // but the multiset of tokens is identical
+        let (mut a, mut b) = (e0.clone(), e1.clone());
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Dataset::new(toy(500), 2, 10, 3);
+        let mut b = Dataset::new(toy(500), 2, 10, 3);
+        for _ in 0..10 {
+            assert_eq!(a.next_batch(), b.next_batch());
+        }
+    }
+
+    #[test]
+    fn chunk_is_k_batches() {
+        let mut a = Dataset::new(toy(2000), 2, 10, 4);
+        let mut b = Dataset::new(toy(2000), 2, 10, 4);
+        let chunk = a.next_chunk(3);
+        let loose: Vec<i32> = (0..3).flat_map(|_| b.next_batch()).collect();
+        assert_eq!(chunk, loose);
+    }
+
+    #[test]
+    #[should_panic(expected = "corpus too small")]
+    fn rejects_tiny_corpus() {
+        Dataset::new(toy(10), 4, 9, 0);
+    }
+}

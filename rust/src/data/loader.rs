@@ -1,0 +1,112 @@
+//! Async prefetch loader: batch generation off the device thread.
+//!
+//! The PJRT client is thread-bound (see runtime::client), so the training
+//! loop runs on one thread while this loader materializes upcoming batches
+//! on a producer thread with a bounded channel — classic prefetch with
+//! backpressure (the producer blocks when `depth` batches are waiting).
+//! tokio is not vendored in this offline image; std::sync::mpsc's
+//! `sync_channel` provides exactly the bounded-queue semantics needed.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use super::dataset::Dataset;
+
+/// Handle to a background batch producer.
+pub struct Prefetcher {
+    rx: mpsc::Receiver<Vec<i32>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    /// Spawn a producer yielding `chunk_k` batches per item (1 = plain
+    /// batches); `depth` bounds the queue (backpressure).
+    pub fn spawn(mut dataset: Dataset, chunk_k: usize, depth: usize) -> Prefetcher {
+        let (tx, rx) = mpsc::sync_channel(depth);
+        let handle = std::thread::Builder::new()
+            .name("sct-prefetch".into())
+            .spawn(move || {
+                loop {
+                    let item = if chunk_k <= 1 {
+                        dataset.next_batch()
+                    } else {
+                        dataset.next_chunk(chunk_k)
+                    };
+                    // Receiver dropped -> training finished; exit quietly.
+                    if tx.send(item).is_err() {
+                        return;
+                    }
+                }
+            })
+            .expect("spawn prefetch thread");
+        Prefetcher { rx, handle: Some(handle) }
+    }
+
+    /// Blocking fetch of the next item (producer keeps the queue warm).
+    pub fn next(&self) -> Vec<i32> {
+        self.rx.recv().expect("prefetch thread died")
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // Drop the receiver end first (rx is dropped with self); the
+        // producer notices on its next send and exits. Detach politely.
+        if let Some(h) = self.handle.take() {
+            // Drain one pending item so a blocked producer wakes up.
+            let _ = self.rx.try_recv();
+            drop(std::mem::replace(&mut self.rx, {
+                let (_tx, rx) = mpsc::sync_channel(1);
+                rx
+            }));
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dataset(seed: u64) -> Dataset {
+        Dataset::new((0..5000).collect(), 2, 10, seed)
+    }
+
+    #[test]
+    fn prefetch_matches_inline_iteration() {
+        let pf = Prefetcher::spawn(dataset(0), 1, 4);
+        let mut inline = dataset(0);
+        for _ in 0..20 {
+            assert_eq!(pf.next(), inline.next_batch());
+        }
+    }
+
+    #[test]
+    fn prefetch_chunks() {
+        let pf = Prefetcher::spawn(dataset(1), 3, 2);
+        let mut inline = dataset(1);
+        for _ in 0..5 {
+            assert_eq!(pf.next(), inline.next_chunk(3));
+        }
+    }
+
+    #[test]
+    fn drop_terminates_producer() {
+        let pf = Prefetcher::spawn(dataset(2), 1, 2);
+        let _ = pf.next();
+        drop(pf); // must not hang
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure() {
+        // With depth 2 and no consumption, the producer fills the queue and
+        // blocks rather than buffering unboundedly. We can't observe the
+        // block directly, but after a grace period only depth+1 items can
+        // have been produced; consuming them all still works.
+        let pf = Prefetcher::spawn(dataset(3), 1, 2);
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        for _ in 0..10 {
+            assert_eq!(pf.next().len(), 20);
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Tokenizers: byte-level fallback and a trainable mini-BPE.
+//!
+//! The paper fine-tunes on Alpaca with the SmolLM2 tokenizer — both gated
+//! here (no network), so the data substrate provides its own: a BPE trained
+//! on the synthetic corpus, with byte-level as the degenerate case. The
+//! training loop only cares that token ids are < vocab and round-trip.
+
+use std::collections::HashMap;
+
+/// A trained BPE vocabulary (byte-level base, learned merges).
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// merge ranks: (left, right) -> merged token id, in training order.
+    merges: Vec<((u32, u32), u32)>,
+    merge_lookup: HashMap<(u32, u32), u32>,
+    /// token id -> byte string (for decoding).
+    pieces: Vec<Vec<u8>>,
+    pub vocab_size: usize,
+}
+
+impl Tokenizer {
+    /// Byte-level tokenizer: ids 0..255 are raw bytes, no merges.
+    pub fn byte_level() -> Tokenizer {
+        Tokenizer {
+            merges: Vec::new(),
+            merge_lookup: HashMap::new(),
+            pieces: (0..=255u16).map(|b| vec![b as u8]).collect(),
+            vocab_size: 256,
+        }
+    }
+
+    /// Train BPE on `text` until `vocab_size` tokens (>= 256) exist.
+    ///
+    /// Classic algorithm: repeatedly merge the most frequent adjacent pair.
+    /// Counts are recomputed per merge over the working sequence — O(merges
+    /// * corpus), fine for the corpus sizes the drivers use (<= a few MB).
+    pub fn train_bpe(text: &str, vocab_size: usize) -> Tokenizer {
+        assert!(vocab_size >= 256, "vocab must cover raw bytes");
+        let mut tok = Tokenizer::byte_level();
+        tok.vocab_size = vocab_size;
+        let mut seq: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+
+        while tok.pieces.len() < vocab_size {
+            // count adjacent pairs
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in seq.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            // deterministic argmax: count desc, then pair asc
+            let Some((&pair, &cnt)) = counts
+                .iter()
+                .max_by(|(p1, c1), (p2, c2)| c1.cmp(c2).then(p2.cmp(p1)))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break; // nothing worth merging
+            }
+            let new_id = tok.pieces.len() as u32;
+            let mut piece = tok.pieces[pair.0 as usize].clone();
+            piece.extend_from_slice(&tok.pieces[pair.1 as usize]);
+            tok.pieces.push(piece);
+            tok.merges.push((pair, new_id));
+            tok.merge_lookup.insert(pair, new_id);
+            // apply the merge to the working sequence
+            seq = apply_merge(&seq, pair, new_id);
+        }
+        tok.vocab_size = tok.pieces.len().max(vocab_size.min(tok.pieces.len()));
+        tok.vocab_size = tok.pieces.len();
+        tok
+    }
+
+    /// Encode text to token ids (applies merges in training order).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut seq: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        // Apply merges in rank order (training order = priority order).
+        for &(pair, id) in &self.merges {
+            if seq.len() < 2 {
+                break;
+            }
+            seq = apply_merge(&seq, pair, id);
+        }
+        seq.into_iter().map(|t| t as i32).collect()
+    }
+
+    /// Decode token ids back to text (lossy only on invalid UTF-8 joins).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if let Some(p) = self.pieces.get(id as usize) {
+                bytes.extend_from_slice(p);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn piece(&self, id: u32) -> Option<&[u8]> {
+        self.pieces.get(id as usize).map(|v| v.as_slice())
+    }
+}
+
+fn apply_merge(seq: &[u32], pair: (u32, u32), id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(seq.len());
+    let mut i = 0;
+    while i < seq.len() {
+        if i + 1 < seq.len() && seq[i] == pair.0 && seq[i + 1] == pair.1 {
+            out.push(id);
+            i += 2;
+        } else {
+            out.push(seq[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_level_roundtrip() {
+        let t = Tokenizer::byte_level();
+        let s = "hello, Stiefel manifold! éü";
+        assert_eq!(t.decode(&t.encode(s)), s);
+        assert!(t.encode(s).iter().all(|&id| id < 256));
+    }
+
+    #[test]
+    fn bpe_roundtrip_and_compresses() {
+        let corpus = "the quick brown fox jumps over the lazy dog. ".repeat(50);
+        let t = Tokenizer::train_bpe(&corpus, 300);
+        let ids = t.encode(&corpus);
+        assert_eq!(t.decode(&ids), corpus, "lossless round-trip");
+        let byte_len = corpus.len();
+        assert!(
+            ids.len() < byte_len / 2,
+            "BPE should compress repetitive text: {} vs {byte_len}",
+            ids.len()
+        );
+        assert!(ids.iter().all(|&id| (id as usize) < t.vocab_size));
+    }
+
+    #[test]
+    fn bpe_is_deterministic() {
+        let corpus = "abcabcabc abcabc xyz xyz".repeat(20);
+        let a = Tokenizer::train_bpe(&corpus, 280);
+        let b = Tokenizer::train_bpe(&corpus, 280);
+        assert_eq!(a.encode(&corpus), b.encode(&corpus));
+    }
+
+    #[test]
+    fn bpe_handles_unseen_text() {
+        let t = Tokenizer::train_bpe(&"hello world ".repeat(30), 280);
+        let unseen = "completely different zebra text 123";
+        assert_eq!(t.decode(&t.encode(unseen)), unseen);
+    }
+
+    #[test]
+    fn merge_application() {
+        let seq = vec![1, 2, 1, 2, 3];
+        assert_eq!(apply_merge(&seq, (1, 2), 9), vec![9, 9, 3]);
+        // overlapping pairs are left-greedy
+        let seq = vec![1, 1, 1];
+        assert_eq!(apply_merge(&seq, (1, 1), 9), vec![9, 1]);
+    }
+
+    #[test]
+    fn training_stops_when_no_repeats() {
+        // All-unique text: no pair occurs twice; vocab stays at 256.
+        let t = Tokenizer::train_bpe("abcdefghijklmnop", 512);
+        assert_eq!(t.vocab_size, 256);
+    }
+}

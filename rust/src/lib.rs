@@ -1,0 +1,40 @@
+//! # SCT — Spectral Compact Training
+//!
+//! Reproduction of "Spectral Compact Training: Pre-Training Large Language
+//! Models via Permanent Truncated SVD and Stiefel QR Retraction"
+//! (Kohlberger, 2026) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Every weight matrix is stored permanently as its rank-`k` truncated SVD
+//! `W = U·diag(s)·Vᵀ`; the dense matrix is never materialized. Gradients flow
+//! through the compact factors, AdamW updates them, and `U`, `V` are
+//! retracted to the Stiefel manifold via QR after every optimizer step.
+//!
+//! Layer map:
+//! * [`runtime`] — PJRT client wrapper: loads AOT-compiled HLO artifacts
+//!   (produced once by `python/compile/aot.py`) and executes them with
+//!   device-resident state. Python never runs at training time.
+//! * [`coordinator`] — the training orchestrator: config, LR schedules,
+//!   trainer loop, rank-sweep / fine-tune drivers.
+//! * [`spectral`] — pure-Rust spectral linear algebra substrate (matrix ops,
+//!   Householder QR, Jacobi SVD, AdamW, a native SpectralLinear layer) used
+//!   for baselines, property tests, and true-shape 70B phase benchmarks.
+//! * [`memmodel`] — the analytic training-memory model that regenerates the
+//!   paper's Table 1 / Table 2 / Figure 1 numbers exactly.
+//! * [`data`] — tokenizer, synthetic instruction corpus (Alpaca substitute),
+//!   packing, batching, async prefetch.
+//! * [`metrics`] — loss/PPL tracking with the paper's window-50 smoothing,
+//!   CSV/JSON export and ASCII plots for the figures.
+//! * [`checkpoint`] — binary checkpoint format for spectral factors.
+
+pub mod checkpoint;
+pub mod coordinator;
+pub mod data;
+pub mod memmodel;
+pub mod metrics;
+pub mod runtime;
+pub mod spectral;
+pub mod testkit;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

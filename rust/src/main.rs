@@ -1,0 +1,7 @@
+//! `sct` — launcher CLI for Spectral Compact Training.
+//!
+//! Subcommands map one-to-one onto the paper's experiments; see DESIGN.md §3.
+
+fn main() -> anyhow::Result<()> {
+    sct::coordinator::cli::run()
+}

@@ -1,0 +1,163 @@
+//! Per-layer training-memory accounting (paper §3 "Memory analysis",
+//! Table 1).
+//!
+//! For one weight matrix (m x n) trained with Adam the paper counts four
+//! copies — weights, gradients, first moment, second moment:
+//!   dense: 4 * m * n * 4 bytes;   SCT: 4 * k(m+n+1) * 4 bytes.
+
+/// What is stored per trainable tensor under a given training regime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainRegime {
+    /// weights + grads + Adam m + Adam v (the paper's accounting).
+    AdamW,
+    /// weights + grads only (SGD, for ablation tables).
+    Sgd,
+    /// weights only (frozen, e.g. the dense W under LoRA).
+    Frozen,
+}
+
+impl TrainRegime {
+    /// Number of same-sized copies stored.
+    pub fn copies(&self) -> usize {
+        match self {
+            TrainRegime::AdamW => 4,
+            TrainRegime::Sgd => 2,
+            TrainRegime::Frozen => 1,
+        }
+    }
+}
+
+/// Memory accounting for one (m x n) weight matrix.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerMemory {
+    pub m: usize,
+    pub n: usize,
+    pub bytes_per_el: usize,
+}
+
+impl LayerMemory {
+    pub fn fp32(m: usize, n: usize) -> LayerMemory {
+        LayerMemory { m, n, bytes_per_el: 4 }
+    }
+
+    /// Dense parameter count m*n.
+    pub fn dense_params(&self) -> usize {
+        self.m * self.n
+    }
+
+    /// Spectral parameter count k(m+n+1) — paper Eq. 1.
+    pub fn spectral_params(&self, k: usize) -> usize {
+        k * (self.m + self.n + 1)
+    }
+
+    pub fn dense_bytes(&self, regime: TrainRegime) -> usize {
+        self.dense_params() * self.bytes_per_el * regime.copies()
+    }
+
+    pub fn spectral_bytes(&self, k: usize, regime: TrainRegime) -> usize {
+        self.spectral_params(k) * self.bytes_per_el * regime.copies()
+    }
+
+    /// Table 1's "Compression" column: dense+Adam over SCT+Adam.
+    pub fn compression(&self, k: usize) -> f64 {
+        self.dense_bytes(TrainRegime::AdamW) as f64
+            / self.spectral_bytes(k, TrainRegime::AdamW) as f64
+    }
+
+    /// GaLore-style accounting: full weights + grads, but optimizer moments
+    /// in a rank-k projected space (2 * k(m+n) instead of 2 * mn).
+    pub fn galore_bytes(&self, k: usize) -> usize {
+        let weights_grads = 2 * self.dense_params();
+        let moments = 2 * k * (self.m + self.n);
+        (weights_grads + moments) * self.bytes_per_el
+    }
+
+    /// LoRA-style accounting: frozen dense W + trainable rank-k adapters
+    /// (A: m x k, B: k x n) with Adam.
+    pub fn lora_bytes(&self, k: usize) -> usize {
+        let frozen = self.dense_params();
+        let adapters = k * (self.m + self.n) * TrainRegime::AdamW.copies();
+        (frozen + adapters) * self.bytes_per_el
+    }
+}
+
+pub fn mb(bytes: usize) -> f64 {
+    bytes as f64 / 1.0e6
+}
+
+pub fn gb(bytes: usize) -> f64 {
+    bytes as f64 / 1.0e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table 1, row LLaMA-70B: 8192x28672 @ k=32 ->
+    /// dense+Adam 3,758 MB, SCT 18.9 MB, 199x.
+    #[test]
+    fn table1_llama70b_row() {
+        let l = LayerMemory::fp32(8192, 28672);
+        assert_eq!(l.dense_params(), 234_881_024);
+        assert_eq!(l.spectral_params(32), 32 * (8192 + 28672 + 1));
+        let dense_mb = mb(l.dense_bytes(TrainRegime::AdamW));
+        let sct_mb = mb(l.spectral_bytes(32, TrainRegime::AdamW));
+        assert!((dense_mb - 3758.1).abs() < 1.0, "dense {dense_mb} MB");
+        assert!((sct_mb - 18.9).abs() < 0.1, "sct {sct_mb} MB");
+        let c = l.compression(32);
+        assert!((c - 199.0).abs() < 1.0, "compression {c}");
+    }
+
+    /// All six Table 1 rows: compression factors 13/26/51/93/104/199.
+    #[test]
+    fn table1_all_rows() {
+        let rows: [(usize, usize, f64); 6] = [
+            (576, 1536, 13.0),
+            (1024, 4096, 26.0),
+            (2048, 8192, 51.0),
+            (4096, 11008, 93.0),
+            (4096, 17408, 104.0),
+            (8192, 28672, 199.0),
+        ];
+        for (m, n, expect) in rows {
+            let c = LayerMemory::fp32(m, n).compression(32);
+            assert!(
+                (c - expect).abs() / expect < 0.03,
+                "{m}x{n}: got {c:.1}, paper says {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn regime_copies() {
+        let l = LayerMemory::fp32(100, 200);
+        assert_eq!(l.dense_bytes(TrainRegime::AdamW), 4 * 100 * 200 * 4);
+        assert_eq!(l.dense_bytes(TrainRegime::Sgd), 2 * 100 * 200 * 4);
+        assert_eq!(l.dense_bytes(TrainRegime::Frozen), 100 * 200 * 4);
+    }
+
+    #[test]
+    fn baselines_ordering() {
+        // For small k: SCT < GaLore < dense; LoRA sits above frozen dense.
+        let l = LayerMemory::fp32(4096, 11008);
+        let k = 32;
+        let sct = l.spectral_bytes(k, TrainRegime::AdamW);
+        let galore = l.galore_bytes(k);
+        let dense = l.dense_bytes(TrainRegime::AdamW);
+        let lora = l.lora_bytes(k);
+        assert!(sct < galore && galore < dense);
+        assert!(lora > l.dense_bytes(TrainRegime::Frozen));
+        assert!(lora < dense);
+    }
+
+    #[test]
+    fn compression_monotone_in_k() {
+        let l = LayerMemory::fp32(2048, 8192);
+        let mut prev = f64::INFINITY;
+        for k in [16, 32, 64, 128, 256] {
+            let c = l.compression(k);
+            assert!(c < prev);
+            prev = c;
+        }
+    }
+}

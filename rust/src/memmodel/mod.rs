@@ -1,0 +1,17 @@
+//! Analytic training-memory model — regenerates the paper's memory claims.
+//!
+//! The paper's headline numbers (Table 1 per-layer compression, Table 2's
+//! 7.2 GB 70B step, Figure 1's 1,245 GB dense baseline) are arithmetic over
+//! tensor inventories: weights + gradients + two Adam moments, FP32. This
+//! module reproduces that arithmetic exactly at the paper's true model
+//! shapes, and extends it with activation/baseline accounting used by the
+//! comparison figures (LoRA- and GaLore-style baselines).
+
+pub mod layer;
+pub mod model;
+pub mod presets;
+pub mod report;
+
+pub use layer::{LayerMemory, TrainRegime};
+pub use model::{ModelMemory, ModelShape};
+pub use presets::{paper_models, PaperModel};

@@ -1,0 +1,128 @@
+//! Table/figure renderers for the memory model — shared by the CLI
+//! (`sct mem-report`), the benches and the examples so every consumer prints
+//! the same rows the paper does.
+
+use super::layer::{mb, LayerMemory, TrainRegime};
+use super::model::{ModelMemory, SpectralScope};
+use super::presets::{paper_models, validation_70b};
+
+/// Paper Table 1: per-MLP-layer training memory at rank 32 across scales.
+/// Returns (name, m, n, dense_mb, sct_mb, compression) rows.
+pub fn table1(k: usize) -> Vec<(String, usize, usize, f64, f64, f64)> {
+    paper_models()
+        .into_iter()
+        .map(|pm| {
+            let l = LayerMemory::fp32(pm.shape.d_model, pm.shape.d_ffn);
+            (
+                pm.name.to_string(),
+                l.m,
+                l.n,
+                mb(l.dense_bytes(TrainRegime::AdamW)),
+                mb(l.spectral_bytes(k, TrainRegime::AdamW)),
+                l.compression(k),
+            )
+        })
+        .collect()
+}
+
+pub fn render_table1(k: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Table 1 — per-MLP-layer training memory (weights+grads+Adam) at rank {k}\n"
+    ));
+    out.push_str("| Model | Layer (m x n) | Dense+Adam | SCT | Compression |\n");
+    out.push_str("|---|---|---|---|---|\n");
+    for (name, m, n, dense, sct, comp) in table1(k) {
+        out.push_str(&format!(
+            "| {name} | {m}x{n} | {dense:.1} MB | {sct:.1} MB | {comp:.0}x |\n"
+        ));
+    }
+    out
+}
+
+/// Figure 1: 70B training memory, dense vs SCT (all-linear, the §4.1 run).
+pub fn fig1(k: usize) -> (ModelMemory, ModelMemory) {
+    let shape = validation_70b();
+    (
+        ModelMemory::dense(&shape, TrainRegime::AdamW),
+        ModelMemory::sct(&shape, k, SpectralScope::AllLinear, TrainRegime::AdamW),
+    )
+}
+
+pub fn render_fig1(k: usize) -> String {
+    let (dense, sct) = fig1(k);
+    let shape = validation_70b();
+    let ratio = sct.compression_vs_dense(&shape, TrainRegime::AdamW);
+    let mut out = String::new();
+    out.push_str("Figure 1 — training memory at 70B scale (log-scale bars)\n");
+    let bar = |label: &str, gb: f64| -> String {
+        // log bar: 1 char per factor of ~1.26 (10 chars per decade)
+        let chars = (gb.log10() * 10.0).max(1.0) as usize;
+        format!("{label:<14} {:>9.1} GB |{}\n", gb, "#".repeat(chars))
+    };
+    out.push_str(&bar("dense FP32", dense.gb()));
+    out.push_str(&bar(&format!("SCT (k={k})"), sct.gb()));
+    out.push_str(&format!("SCT requires {ratio:.0}x less memory than dense training\n"));
+    out
+}
+
+/// The memory side of Table 2 (peak-memory row).
+pub fn table2_memory(k: usize) -> ModelMemory {
+    let shape = validation_70b();
+    ModelMemory::sct(&shape, k, SpectralScope::AllLinear, TrainRegime::AdamW)
+}
+
+/// Baseline comparison rows used by the extended figure (not in the paper's
+/// tables but cited in its Related Work): GaLore- and LoRA-style accounting
+/// on the 70B MLP stack.
+pub fn baseline_rows(k: usize) -> Vec<(String, f64)> {
+    let shape = validation_70b();
+    let per_layer = LayerMemory::fp32(shape.d_model, shape.d_ffn);
+    let layers = shape.n_layers * 3; // gate/up/down
+    vec![
+        (
+            "dense+Adam".into(),
+            mb(per_layer.dense_bytes(TrainRegime::AdamW) * layers) / 1e3,
+        ),
+        ("GaLore".into(), mb(per_layer.galore_bytes(k) * layers) / 1e3),
+        ("LoRA".into(), mb(per_layer.lora_bytes(k) * layers) / 1e3),
+        (
+            format!("SCT k={k}"),
+            mb(per_layer.spectral_bytes(k, TrainRegime::AdamW) * layers) / 1e3,
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_renders_all_rows() {
+        let s = render_table1(32);
+        for name in ["SmolLM2-135M", "LLaMA-70B", "199x"] {
+            assert!(s.contains(name), "missing {name} in:\n{s}");
+        }
+    }
+
+    #[test]
+    fn fig1_matches_paper_numbers() {
+        let (dense, sct) = fig1(32);
+        assert!((dense.gb() - 1245.0).abs() < 5.0);
+        assert!((sct.gb() - 7.2).abs() < 0.1);
+        let shape = validation_70b();
+        let ratio = sct.compression_vs_dense(&shape, TrainRegime::AdamW);
+        assert!((ratio - 172.0).abs() < 2.0, "paper: 172x, got {ratio:.1}");
+        let s = render_fig1(32);
+        assert!(s.contains("less memory than dense training"), "{s}");
+    }
+
+    #[test]
+    fn baselines_ordered_sct_smallest() {
+        let rows = baseline_rows(32);
+        let sct = rows.last().unwrap().1;
+        for (name, gb) in &rows[..3] {
+            assert!(*gb > sct, "{name} should exceed SCT");
+        }
+    }
+}

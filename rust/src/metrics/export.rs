@@ -1,0 +1,101 @@
+//! CSV/JSON export of run metrics — the experiment drivers write these next
+//! to EXPERIMENTS.md so every table row is regenerable and diffable.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::tracker::Tracker;
+use crate::json_obj;
+use crate::util::json::Json;
+
+/// Write the raw + smoothed loss series as CSV (step,loss,smoothed,step_s).
+pub fn write_loss_csv(tracker: &Tracker, path: &Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    writeln!(f, "step,loss,smoothed,step_seconds")?;
+    let smoothed = tracker.smoothed_series();
+    for i in 0..tracker.losses.len() {
+        writeln!(
+            f,
+            "{},{},{},{}",
+            i, tracker.losses[i], smoothed[i], tracker.step_seconds[i]
+        )?;
+    }
+    Ok(())
+}
+
+/// One summary row (Table 3 style) as a JSON object.
+pub fn summary_json(
+    label: &str,
+    params: usize,
+    compression: f64,
+    tracker: &Tracker,
+    state_bytes: usize,
+) -> Json {
+    json_obj![
+        ("label", label),
+        ("params", params),
+        ("mlp_compression", compression),
+        ("steps", tracker.steps()),
+        ("loss_smoothed", tracker.smoothed_loss() as f64),
+        ("ppl", tracker.ppl() as f64),
+        ("state_bytes", state_bytes),
+        ("mean_step_seconds", tracker.mean_step_s()),
+    ]
+}
+
+/// Append rows to a JSON-lines file (one run summary per line).
+pub fn append_jsonl(path: &Path, row: &Json) -> Result<()> {
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    writeln!(f, "{}", row.to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("sct_test_csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("loss.csv");
+        let mut t = Tracker::new(2);
+        t.record(3.0, 0.1);
+        t.record(1.0, 0.2);
+        write_loss_csv(&t, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("step,"));
+        assert!(lines[2].starts_with("1,1,2")); // smoothed mean(3,1)=2
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn summary_and_jsonl() {
+        let mut t = Tracker::new(50);
+        t.record(2.0, 0.5);
+        let row = summary_json("sct_r8", 1000, 12.5, &t, 4096);
+        let s = row.to_string();
+        assert!(s.contains("\"sct_r8\"") && s.contains("12.5"));
+        let dir = std::env::temp_dir().join("sct_test_jsonl");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("runs.jsonl");
+        std::fs::remove_file(&path).ok();
+        append_jsonl(&path, &row).unwrap();
+        append_jsonl(&path, &row).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            Json::parse(line).unwrap();
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,9 @@
+//! Metrics: loss/PPL tracking with the paper's window-50 smoothing
+//! ([`tracker`]), ASCII figure renderers ([`plot`]) and CSV/JSONL export
+//! ([`export`]).
+
+pub mod export;
+pub mod plot;
+pub mod tracker;
+
+pub use tracker::Tracker;

@@ -1,0 +1,139 @@
+//! ASCII plots — Figure 2 (loss curves) and Figure 3 (Pareto scatter)
+//! renderers for terminal + EXPERIMENTS.md output.
+
+/// Multi-series line plot (Figure 2 style). Each series is (label, ys);
+/// x is the step index. Rows x cols fixed character grid, shared y-range.
+pub fn line_plot(series: &[(String, Vec<f32>)], rows: usize, cols: usize) -> String {
+    let finite = |v: &f32| v.is_finite();
+    let all: Vec<f32> = series.iter().flat_map(|(_, ys)| ys.iter().cloned()).filter(finite).collect();
+    if all.is_empty() {
+        return "(no data)\n".into();
+    }
+    let ymin = all.iter().cloned().fold(f32::INFINITY, f32::min);
+    let ymax = all.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let span = (ymax - ymin).max(1e-6);
+    let marks = ['*', '+', 'o', 'x', '#', '@', '%', '&'];
+
+    let mut grid = vec![vec![' '; cols]; rows];
+    let max_len = series.iter().map(|(_, ys)| ys.len()).max().unwrap_or(1).max(2);
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for (i, &y) in ys.iter().enumerate() {
+            if !y.is_finite() {
+                continue;
+            }
+            let c = i * (cols - 1) / (max_len - 1).max(1);
+            let r = ((ymax - y) / span * (rows - 1) as f32).round() as usize;
+            let r = r.min(rows - 1);
+            grid[r][c] = mark;
+        }
+    }
+
+    let mut out = String::new();
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            format!("{ymax:8.3} ")
+        } else if r == rows - 1 {
+            format!("{ymin:8.3} ")
+        } else {
+            " ".repeat(9)
+        };
+        out.push_str(&label);
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&" ".repeat(9));
+    out.push('+');
+    out.push_str(&"-".repeat(cols));
+    out.push('\n');
+    out.push_str(&" ".repeat(10));
+    out.push_str(&format!("steps 0..{max_len}\n"));
+    for (si, (label, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {label}\n", marks[si % marks.len()]));
+    }
+    out
+}
+
+/// Scatter plot with labelled points (Figure 3 Pareto style).
+/// points: (label, x, y). Axes annotated with min/max.
+pub fn scatter_plot(points: &[(String, f64, f64)], rows: usize, cols: usize) -> String {
+    if points.is_empty() {
+        return "(no data)\n".into();
+    }
+    let xs: Vec<f64> = points.iter().map(|p| p.1).collect();
+    let ys: Vec<f64> = points.iter().map(|p| p.2).collect();
+    let (xmin, xmax) = (xs.iter().cloned().fold(f64::INFINITY, f64::min), xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max));
+    let (ymin, ymax) = (ys.iter().cloned().fold(f64::INFINITY, f64::min), ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max));
+    let xspan = (xmax - xmin).max(1e-9);
+    let yspan = (ymax - ymin).max(1e-9);
+
+    let mut grid = vec![vec![' '; cols]; rows];
+    let marks = ['A', 'B', 'C', 'D', 'E', 'F', 'G', 'H'];
+    for (i, (_, x, y)) in points.iter().enumerate() {
+        let c = (((x - xmin) / xspan) * (cols - 1) as f64).round() as usize;
+        let r = (((ymax - y) / yspan) * (rows - 1) as f64).round() as usize;
+        grid[r.min(rows - 1)][c.min(cols - 1)] = marks[i % marks.len()];
+    }
+    let mut out = String::new();
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            format!("{ymax:9.2} ")
+        } else if r == rows - 1 {
+            format!("{ymin:9.2} ")
+        } else {
+            " ".repeat(10)
+        };
+        out.push_str(&label);
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&" ".repeat(10));
+    out.push('+');
+    out.push_str(&"-".repeat(cols));
+    out.push('\n');
+    out.push_str(&format!("{}x: {xmin:.2} .. {xmax:.2}\n", " ".repeat(10)));
+    for (i, (label, x, y)) in points.iter().enumerate() {
+        out.push_str(&format!("  {} {label} ({x:.2}, {y:.2})\n", marks[i % marks.len()]));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_plot_renders_all_series() {
+        let s = vec![
+            ("dense".to_string(), vec![4.0, 3.0, 2.0, 1.0]),
+            ("sct_r8".to_string(), vec![5.0, 4.5, 4.2, 4.2]),
+        ];
+        let p = line_plot(&s, 10, 40);
+        assert!(p.contains('*') && p.contains('+'));
+        assert!(p.contains("dense") && p.contains("sct_r8"));
+        assert!(p.contains("5.000")); // ymax label
+    }
+
+    #[test]
+    fn scatter_labels_points() {
+        let pts = vec![
+            ("r32".to_string(), 46.9, 86.9),
+            ("r128".to_string(), 11.7, 65.6),
+        ];
+        let p = scatter_plot(&pts, 8, 30);
+        assert!(p.contains('A') && p.contains('B'));
+        assert!(p.contains("r128"));
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_panic() {
+        assert!(line_plot(&[], 5, 10).contains("no data"));
+        assert!(scatter_plot(&[], 5, 10).contains("no data"));
+        let one = vec![("x".to_string(), vec![1.0])];
+        let _ = line_plot(&one, 5, 10);
+        let flat = vec![("f".to_string(), vec![2.0, 2.0, 2.0])];
+        let _ = line_plot(&flat, 5, 10);
+    }
+}

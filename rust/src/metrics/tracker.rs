@@ -1,0 +1,147 @@
+//! Loss/PPL tracking with the paper's smoothing.
+//!
+//! Table 3's loss and PPL columns are "smoothed (window=50)"; Figure 2 plots
+//! the smoothed loss curves. This tracker records the raw series and exposes
+//! windowed means, PPL (= exp(smoothed loss)), throughput, and step-time
+//! stats.
+
+use std::time::Instant;
+
+/// Rolling training metrics for one run.
+#[derive(Debug)]
+pub struct Tracker {
+    pub losses: Vec<f32>,
+    pub step_seconds: Vec<f64>,
+    pub window: usize,
+    started: Instant,
+}
+
+impl Tracker {
+    pub fn new(window: usize) -> Tracker {
+        Tracker { losses: Vec::new(), step_seconds: Vec::new(), window, started: Instant::now() }
+    }
+
+    /// Paper configuration: window = 50.
+    pub fn paper() -> Tracker {
+        Tracker::new(50)
+    }
+
+    pub fn record(&mut self, loss: f32, step_time_s: f64) {
+        self.losses.push(loss);
+        self.step_seconds.push(step_time_s);
+    }
+
+    pub fn record_losses(&mut self, losses: &[f32], total_time_s: f64) {
+        let per = total_time_s / losses.len().max(1) as f64;
+        for &l in losses {
+            self.record(l, per);
+        }
+    }
+
+    pub fn steps(&self) -> usize {
+        self.losses.len()
+    }
+
+    /// Mean of the trailing `window` losses (or all, early on).
+    pub fn smoothed_loss(&self) -> f32 {
+        smooth_tail(&self.losses, self.window)
+    }
+
+    /// exp(smoothed loss) — the paper's PPL column.
+    pub fn ppl(&self) -> f32 {
+        self.smoothed_loss().exp()
+    }
+
+    /// Full smoothed series (trailing-window mean at every step) — the
+    /// Figure 2 curves.
+    pub fn smoothed_series(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.losses.len());
+        let mut acc = 0.0f64;
+        for i in 0..self.losses.len() {
+            acc += self.losses[i] as f64;
+            if i >= self.window {
+                acc -= self.losses[i - self.window] as f64;
+            }
+            let n = (i + 1).min(self.window);
+            out.push((acc / n as f64) as f32);
+        }
+        out
+    }
+
+    /// Mean step time over the run (paper Table 3 "Step Time").
+    pub fn mean_step_s(&self) -> f64 {
+        if self.step_seconds.is_empty() {
+            return 0.0;
+        }
+        self.step_seconds.iter().sum::<f64>() / self.step_seconds.len() as f64
+    }
+
+    pub fn wallclock_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// (min, final smoothed) losses — convergence-floor reporting (§4.3).
+    pub fn loss_floor(&self) -> (f32, f32) {
+        let min = self.losses.iter().cloned().fold(f32::INFINITY, f32::min);
+        (min, self.smoothed_loss())
+    }
+}
+
+fn smooth_tail(xs: &[f32], window: usize) -> f32 {
+    if xs.is_empty() {
+        return f32::NAN;
+    }
+    let n = xs.len().min(window);
+    xs[xs.len() - n..].iter().sum::<f32>() / n as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoothing_matches_manual_mean() {
+        let mut t = Tracker::new(3);
+        for l in [4.0, 3.0, 2.0, 1.0] {
+            t.record(l, 0.1);
+        }
+        assert!((t.smoothed_loss() - 2.0).abs() < 1e-6); // mean(3,2,1)
+        assert!((t.ppl() - 2.0f32.exp()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn smoothed_series_length_and_warmup() {
+        let mut t = Tracker::new(4);
+        for i in 0..10 {
+            t.record(i as f32, 0.0);
+        }
+        let s = t.smoothed_series();
+        assert_eq!(s.len(), 10);
+        assert_eq!(s[0], 0.0); // first value = itself
+        assert!((s[1] - 0.5).abs() < 1e-6); // mean(0,1)
+        assert!((s[9] - 7.5).abs() < 1e-6); // mean(6,7,8,9)
+    }
+
+    #[test]
+    fn step_time_mean() {
+        let mut t = Tracker::new(2);
+        t.record(1.0, 0.5);
+        t.record(1.0, 1.5);
+        assert!((t.mean_step_s() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn record_losses_spreads_time() {
+        let mut t = Tracker::new(50);
+        t.record_losses(&[1.0, 2.0, 3.0, 4.0], 2.0);
+        assert_eq!(t.steps(), 4);
+        assert!((t.mean_step_s() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_tracker_is_sane() {
+        let t = Tracker::paper();
+        assert!(t.smoothed_loss().is_nan());
+        assert_eq!(t.mean_step_s(), 0.0);
+    }
+}

@@ -1,0 +1,285 @@
+//! `artifacts/manifest.json` — the positional contract between the Python
+//! AOT exporter and the rust runtime.
+//!
+//! For every preset the manifest records the model config and, for each
+//! artifact, the ordered flat list of input and output tensor specs (name,
+//! dtype, shape) in jax tree-flatten order — exactly the order of XLA
+//! parameters and output-tuple elements. For `train_step` the first
+//! `n_state` inputs and outputs are the same tensors in the same order, so
+//! the session can recycle output buffers as next-step inputs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::DType;
+use crate::util::json::Json;
+
+/// One tensor on an artifact boundary.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elements() * self.dtype.size_bytes()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req("name")?.as_str()?.to_string(),
+            dtype: DType::parse(j.req("dtype")?.as_str()?)?,
+            shape: j
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// One lowered HLO module + its I/O contract.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    fn parse(j: &Json, dir: &Path) -> Result<ArtifactSpec> {
+        let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.req(key)?.as_arr()?.iter().map(TensorSpec::parse).collect()
+        };
+        Ok(ArtifactSpec {
+            file: dir.join(j.req("file")?.as_str()?),
+            inputs: parse_list("inputs")?,
+            outputs: parse_list("outputs")?,
+        })
+    }
+
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .with_context(|| format!("no input named {name:?}"))
+    }
+}
+
+/// Model architecture of a preset (mirrors python `ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ffn: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    /// None => dense MLP baseline.
+    pub rank: Option<usize>,
+    pub use_pallas: bool,
+    pub param_count: usize,
+}
+
+/// Everything exported for one preset.
+#[derive(Debug, Clone)]
+pub struct PresetManifest {
+    pub model: ModelSpec,
+    /// Number of leading state tensors in train_step I/O (params + opt).
+    pub n_state: usize,
+    /// Number of parameter tensors (prefix of the state).
+    pub n_params: usize,
+    /// Canonical state layout: params then optimizer tensors, in flatten
+    /// order (what `init` returns and the train_step state prefix means).
+    pub state: Vec<TensorSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl PresetManifest {
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("preset {} has no artifact {name:?}", self.model.name))
+    }
+
+    /// Index of a state tensor by manifest name.
+    pub fn state_index(&self, name: &str) -> Result<usize> {
+        self.state
+            .iter()
+            .position(|t| t.name == name)
+            .with_context(|| format!("no state tensor named {name:?}"))
+    }
+
+    /// Tokens-tensor spec of the training step: (batch, seq_len + 1) i32.
+    pub fn tokens_spec(&self) -> Result<&TensorSpec> {
+        let ts = self.artifact("train_step")?;
+        Ok(&ts.inputs[ts.input_index("tokens")?])
+    }
+
+    /// Total state bytes (params + optimizer moments) — the SCT-side term of
+    /// the paper's memory comparison.
+    pub fn state_bytes(&self) -> usize {
+        self.state.iter().map(|t| t.bytes()).sum()
+    }
+}
+
+/// The parsed manifest for an artifact root directory.
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub presets: BTreeMap<String, PresetManifest>,
+}
+
+impl Manifest {
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        Self::parse(&text, &root)
+    }
+
+    pub fn parse(text: &str, root: &Path) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let format = j.req("format")?.as_i64()?;
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let mut presets = BTreeMap::new();
+        for (name, pj) in j.req("presets")?.as_obj()? {
+            let dir = root.join(name);
+            let m = pj.req("model")?;
+            let rank = match m.req("rank")? {
+                Json::Null => None,
+                v => Some(v.as_usize()?),
+            };
+            let model = ModelSpec {
+                name: m.req("name")?.as_str()?.to_string(),
+                vocab: m.req("vocab")?.as_usize()?,
+                d_model: m.req("d_model")?.as_usize()?,
+                n_layers: m.req("n_layers")?.as_usize()?,
+                n_heads: m.req("n_heads")?.as_usize()?,
+                d_ffn: m.req("d_ffn")?.as_usize()?,
+                seq_len: m.req("seq_len")?.as_usize()?,
+                batch: m.req("batch")?.as_usize()?,
+                rank,
+                use_pallas: m.req("use_pallas")?.as_bool()?,
+                param_count: pj.req("param_count")?.as_usize()?,
+            };
+            let mut artifacts = BTreeMap::new();
+            for (aname, aj) in pj.req("artifacts")?.as_obj()? {
+                artifacts.insert(aname.clone(), ArtifactSpec::parse(aj, &dir)?);
+            }
+            let state = pj
+                .req("state")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let n_state = pj.req("n_state")?.as_usize()?;
+            if state.len() != n_state {
+                bail!("preset {name}: state list has {} entries, n_state={n_state}", state.len());
+            }
+            presets.insert(
+                name.clone(),
+                PresetManifest {
+                    model,
+                    n_state,
+                    n_params: pj.req("n_params")?.as_usize()?,
+                    state,
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest { root: root.to_path_buf(), presets })
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&PresetManifest> {
+        self.presets.get(name).with_context(|| {
+            format!("no preset {name:?} in manifest; have {:?}", self.presets.keys().collect::<Vec<_>>())
+        })
+    }
+
+    /// Conventional artifact root: $SCT_ARTIFACTS or ./artifacts.
+    pub fn default_root() -> PathBuf {
+        std::env::var("SCT_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "presets": {
+        "tiny_r8": {
+          "model": {"name": "tiny_r8", "vocab": 256, "d_model": 64,
+                    "n_layers": 2, "n_heads": 4, "d_ffn": 192, "seq_len": 64,
+                    "batch": 4, "rank": 8, "use_pallas": false,
+                    "tie_embeddings": true},
+          "param_count": 61808,
+          "n_state": 2, "n_params": 1,
+          "state": [
+            {"name": "params/embed", "dtype": "float32", "shape": [256, 64]},
+            {"name": "opt/t", "dtype": "int32", "shape": []}
+          ],
+          "artifacts": {
+            "train_step": {
+              "file": "train_step.hlo.txt",
+              "inputs": [
+                {"name": "params/embed", "dtype": "float32", "shape": [256, 64]},
+                {"name": "tokens", "dtype": "int32", "shape": [4, 65]}
+              ],
+              "outputs": [
+                {"name": "out/0/embed", "dtype": "float32", "shape": [256, 64]}
+              ],
+              "bytes": 1
+            }
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let p = m.preset("tiny_r8").unwrap();
+        assert_eq!(p.model.rank, Some(8));
+        assert_eq!(p.n_state, 2);
+        assert_eq!(p.state_index("opt/t").unwrap(), 1);
+        assert!(p.state_index("nope").is_err());
+        assert_eq!(p.state_bytes(), 256 * 64 * 4 + 4);
+        let ts = p.artifact("train_step").unwrap();
+        assert_eq!(ts.inputs.len(), 2);
+        assert_eq!(ts.inputs[1].dtype, DType::I32);
+        assert_eq!(ts.inputs[0].elements(), 256 * 64);
+        assert_eq!(ts.file, Path::new("/tmp/a/tiny_r8/train_step.hlo.txt"));
+        assert!(p.artifact("nope").is_err());
+        assert!(m.preset("nope").is_err());
+    }
+
+    #[test]
+    fn dense_rank_is_null() {
+        let text = SAMPLE.replace("\"rank\": 8", "\"rank\": null");
+        let m = Manifest::parse(&text, Path::new("/tmp")).unwrap();
+        assert_eq!(m.preset("tiny_r8").unwrap().model.rank, None);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let text = SAMPLE.replace("\"format\": 1", "\"format\": 99");
+        assert!(Manifest::parse(&text, Path::new("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,45 @@
+//! PJRT client management.
+//!
+//! The `xla` crate's `PjRtClient` is reference-counted with `Rc`, i.e. not
+//! `Send`/`Sync`, so the client is cached **per thread**. The coordinator
+//! keeps all XLA execution on one dedicated device thread (data generation /
+//! metrics run elsewhere); tests and examples just use whatever thread they
+//! run on. Creating a second client on another thread is legal for the CPU
+//! plugin — it only costs its thread-pool setup.
+
+use std::cell::OnceCell;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+thread_local! {
+    static CLIENT: OnceCell<xla::PjRtClient> = const { OnceCell::new() };
+}
+
+/// The per-thread CPU PJRT client (created on first use).
+pub fn cpu() -> Result<xla::PjRtClient> {
+    CLIENT.with(|cell| {
+        if cell.get().is_none() {
+            let c = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let _ = cell.set(c);
+        }
+        Ok(cell.get().unwrap().clone())
+    })
+}
+
+/// Load an HLO-text artifact and compile it for this thread's client.
+///
+/// HLO *text* is the interchange format: jax >= 0.5 emits HloModuleProtos
+/// with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+/// parser reassigns ids (see DESIGN.md §6 and /opt/xla-example/README.md).
+pub fn compile_hlo_file(path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let client = cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-UTF8 artifact path")?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}

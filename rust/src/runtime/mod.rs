@@ -1,0 +1,26 @@
+//! L3 runtime — PJRT execution of the AOT artifacts.
+//!
+//! `python/compile/aot.py` lowers every step function (init, train_step,
+//! eval_step, forward, retract, ortho_check) to HLO **text** once at build
+//! time; this module loads those files, compiles them on the PJRT CPU
+//! client, and executes them with device-resident state. Python never runs
+//! on the training path.
+//!
+//! Key pieces:
+//! * [`client`] — process-wide `PjRtClient` (CPU), plus compile helpers.
+//! * [`artifact`] — `artifacts/manifest.json` parsing: per-preset model
+//!   config and the positional tensor-spec contract for every artifact.
+//! * [`tensor`] — dtype plumbing between manifest specs, host `Vec`s and
+//!   `xla::Literal`s.
+//! * [`session`] — the training session: owns compiled executables and the
+//!   state buffers (params + optimizer moments), feeds step outputs back as
+//!   next-step inputs, syncing only the loss scalar to the host.
+
+pub mod artifact;
+pub mod client;
+pub mod session;
+pub mod tensor;
+
+pub use artifact::{ArtifactSpec, Manifest, ModelSpec, PresetManifest, TensorSpec};
+pub use session::Session;
+pub use tensor::DType;

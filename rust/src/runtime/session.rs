@@ -1,0 +1,297 @@
+//! The training session: device execution of the AOT step functions with
+//! state threading.
+//!
+//! ## Execution model
+//!
+//! The artifacts are lowered with `return_tuple=True` and the PJRT shim in
+//! this image does **not** untuple results (`ExecuteOptions` default), so a
+//! step returns one tuple literal. The session therefore keeps the training
+//! state (parameters + AdamW moments, `n_state` tensors) as host literals,
+//! passes them positionally, and splits the output tuple after each call.
+//!
+//! The host round-trip costs two state copies per dispatch. Two mitigations,
+//! both measured in EXPERIMENTS.md §Perf:
+//! * [`Session::train_chunk`] executes the `train_chunk` artifact — a
+//!   `lax.scan` over K training steps fused into one HLO — amortizing the
+//!   round-trip and dispatch overhead by K (the default driver path).
+//! * Only the loss scalar is *parsed* per step; state tensors are moved,
+//!   never decoded.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{ArtifactSpec, Manifest, PresetManifest};
+use super::client;
+use super::tensor;
+
+/// A compiled, stateful training session for one preset.
+pub struct Session {
+    pub preset: PresetManifest,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Training state: params then optimizer tensors, in manifest order.
+    state: Vec<xla::Literal>,
+    /// Wall-clock compile seconds per artifact (perf accounting).
+    pub compile_times: BTreeMap<String, f64>,
+    pub steps_done: u64,
+}
+
+impl Session {
+    /// Load the manifest at `root` and prepare a session for `preset`.
+    /// Artifacts compile lazily on first use.
+    pub fn open(root: impl AsRef<Path>, preset: &str) -> Result<Session> {
+        let manifest = Manifest::load(root)?;
+        let preset = manifest.preset(preset)?.clone();
+        Ok(Session {
+            preset,
+            exes: BTreeMap::new(),
+            state: Vec::new(),
+            compile_times: BTreeMap::new(),
+            steps_done: 0,
+        })
+    }
+
+    /// Compile `name` if not yet compiled.
+    fn prepare(&mut self, name: &str) -> Result<()> {
+        if !self.exes.contains_key(name) {
+            let spec = self.preset.artifact(name)?;
+            let t0 = Instant::now();
+            let exe = client::compile_hlo_file(&spec.file)?;
+            self.compile_times.insert(name.to_string(), t0.elapsed().as_secs_f64());
+            self.exes.insert(name.to_string(), exe);
+        }
+        Ok(())
+    }
+
+    /// Immutable access to a prepared artifact.
+    fn get(&self, name: &str) -> Result<(&xla::PjRtLoadedExecutable, &ArtifactSpec)> {
+        let exe = self.exes.get(name).with_context(|| format!("{name} not prepared"))?;
+        Ok((exe, self.preset.artifact(name)?))
+    }
+
+    /// Pre-compile a set of artifacts (so timing loops exclude compilation).
+    pub fn warmup(&mut self, names: &[&str]) -> Result<()> {
+        for n in names {
+            if self.preset.artifacts.contains_key(*n) {
+                self.prepare(n)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.preset.artifacts.contains_key(name)
+    }
+
+    fn run(
+        exe: &xla::PjRtLoadedExecutable,
+        spec: &ArtifactSpec,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {:?}: got {} inputs, expected {}",
+                spec.file,
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        let result = exe.execute::<&xla::Literal>(inputs)?;
+        let root = result[0][0].to_literal_sync()?;
+        let outs = root.to_tuple()?;
+        if outs.len() != spec.outputs.len() {
+            bail!(
+                "artifact {:?}: got {} outputs, expected {}",
+                spec.file,
+                outs.len(),
+                spec.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    // ---------------------------------------------------------------------
+    // state lifecycle
+    // ---------------------------------------------------------------------
+
+    /// Run the `init` artifact: fresh params + optimizer state from a seed.
+    pub fn init(&mut self, seed: i32) -> Result<()> {
+        self.prepare("init")?;
+        let (exe, spec) = self.get("init")?;
+        let seed_lit = tensor::scalar_i32(seed);
+        let outs = Self::run(exe, spec, &[&seed_lit])?;
+        if outs.len() != self.preset.n_state {
+            bail!("init returned {} tensors, n_state={}", outs.len(), self.preset.n_state);
+        }
+        self.state = outs;
+        self.steps_done = 0;
+        Ok(())
+    }
+
+    /// Replace the state wholesale (checkpoint restore).
+    pub fn set_state(&mut self, state: Vec<xla::Literal>) -> Result<()> {
+        if state.len() != self.preset.n_state {
+            bail!("state has {} tensors, expected {}", state.len(), self.preset.n_state);
+        }
+        self.state = state;
+        Ok(())
+    }
+
+    pub fn state(&self) -> &[xla::Literal] {
+        &self.state
+    }
+
+    /// Overwrite one state tensor by manifest name (e.g.
+    /// `params/layers/0/mlp/gate/u`) — used by the dense->spectral
+    /// conversion in the fine-tune driver.
+    pub fn set_tensor(&mut self, name: &str, shape: &[usize], data: &[f32]) -> Result<()> {
+        let idx = self.preset.state_index(name)?;
+        let spec = &self.preset.state[idx];
+        if spec.shape != shape {
+            bail!("{name:?}: shape {shape:?} != manifest {:?}", spec.shape);
+        }
+        self.state[idx] = tensor::literal_f32(shape, data)?;
+        Ok(())
+    }
+
+    /// Read one state tensor back as f32 values (returns shape + data).
+    pub fn tensor_f32(&self, name: &str) -> Result<(Vec<usize>, Vec<f32>)> {
+        let idx = self.preset.state_index(name)?;
+        let spec = &self.preset.state[idx];
+        Ok((spec.shape.clone(), tensor::to_f32_vec(&self.state[idx])?))
+    }
+
+    /// Names + specs of all state tensors, in order.
+    pub fn state_specs(&self) -> &[super::TensorSpec] {
+        &self.preset.state
+    }
+
+    fn check_ready(&self) -> Result<()> {
+        if self.state.is_empty() {
+            bail!("session has no state; call init() or restore a checkpoint first");
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------------
+    // steps
+    // ---------------------------------------------------------------------
+
+    /// One training step (paper Alg. 1 as one XLA call). Returns the loss.
+    pub fn train_step(&mut self, tokens: &[i32], lr_dense: f32, lr_spectral: f32) -> Result<f32> {
+        self.check_ready()?;
+        self.prepare("train_step")?;
+        let (exe, spec) = self.get("train_step")?;
+        let idx = spec.input_index("tokens")?;
+        let tok = tensor::literal_i32(&spec.inputs[idx].shape, tokens)?;
+        let ld = tensor::scalar_f32(lr_dense);
+        let ls = tensor::scalar_f32(lr_spectral);
+
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.preset.n_state + 3);
+        inputs.extend(self.state.iter());
+        inputs.push(&tok);
+        inputs.push(&ld);
+        inputs.push(&ls);
+        let mut outs = Self::run(exe, spec, &inputs)?;
+
+        let loss = outs.pop().context("train_step returned no loss")?.to_vec::<f32>()?[0];
+        self.state = outs;
+        self.steps_done += 1;
+        Ok(loss)
+    }
+
+    /// K fused training steps (`train_chunk` artifact: lax.scan over the
+    /// leading axis of `tokens` inside one HLO). Returns the K losses.
+    /// `tokens` is K * batch * (seq+1) i32 values.
+    pub fn train_chunk(
+        &mut self,
+        tokens: &[i32],
+        lr_dense: f32,
+        lr_spectral: f32,
+    ) -> Result<Vec<f32>> {
+        self.check_ready()?;
+        self.prepare("train_chunk")?;
+        let (exe, spec) = self.get("train_chunk")?;
+        let idx = spec.input_index("tokens")?;
+        let tok_spec = &spec.inputs[idx];
+        let k = tok_spec.shape[0];
+        let tok = tensor::literal_i32(&tok_spec.shape, tokens)?;
+        let ld = tensor::scalar_f32(lr_dense);
+        let ls = tensor::scalar_f32(lr_spectral);
+
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.preset.n_state + 3);
+        inputs.extend(self.state.iter());
+        inputs.push(&tok);
+        inputs.push(&ld);
+        inputs.push(&ls);
+        let mut outs = Self::run(exe, spec, &inputs)?;
+
+        let losses = outs.pop().context("train_chunk returned no losses")?.to_vec::<f32>()?;
+        self.state = outs;
+        self.steps_done += k as u64;
+        Ok(losses)
+    }
+
+    /// Chunk length K of the exported `train_chunk` artifact (if present).
+    pub fn chunk_len(&self) -> Option<usize> {
+        let spec = self.preset.artifacts.get("train_chunk")?;
+        let idx = spec.input_index("tokens").ok()?;
+        Some(spec.inputs[idx].shape[0])
+    }
+
+    /// Evaluation loss on one batch (no state update).
+    pub fn eval_step(&mut self, tokens: &[i32]) -> Result<f32> {
+        self.check_ready()?;
+        self.prepare("eval_step")?;
+        let (exe, spec) = self.get("eval_step")?;
+        let idx = spec.input_index("tokens")?;
+        let tok = tensor::literal_i32(&spec.inputs[idx].shape, tokens)?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.preset.n_params + 1);
+        inputs.extend(self.state.iter().take(self.preset.n_params));
+        inputs.push(&tok);
+        let outs = Self::run(exe, spec, &inputs)?;
+        Ok(outs[0].to_vec::<f32>()?[0])
+    }
+
+    /// Forward-pass logits for a batch: returns (shape, data).
+    pub fn forward(&mut self, tokens: &[i32]) -> Result<(Vec<usize>, Vec<f32>)> {
+        self.check_ready()?;
+        self.prepare("forward")?;
+        let (exe, spec) = self.get("forward")?;
+        let idx = spec.input_index("tokens")?;
+        let tok = tensor::literal_i32(&spec.inputs[idx].shape, tokens)?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.preset.n_params + 1);
+        inputs.extend(self.state.iter().take(self.preset.n_params));
+        inputs.push(&tok);
+        let outs = Self::run(exe, spec, &inputs)?;
+        let shape = spec.outputs[0].shape.clone();
+        Ok((shape, outs[0].to_vec::<f32>()?))
+    }
+
+    /// Re-retract every spectral factor (standalone `retract` artifact; used
+    /// for the retraction-cadence ablation and after checkpoint restores).
+    pub fn retract(&mut self) -> Result<()> {
+        self.check_ready()?;
+        self.prepare("retract")?;
+        let (exe, spec) = self.get("retract")?;
+        let inputs: Vec<&xla::Literal> = self.state.iter().take(self.preset.n_params).collect();
+        let outs = Self::run(exe, spec, &inputs)?;
+        for (i, lit) in outs.into_iter().enumerate() {
+            self.state[i] = lit;
+        }
+        Ok(())
+    }
+
+    /// Max ||Q^T Q - I||_inf over all spectral factors (paper Table 2 row
+    /// "Ortho. Error"; must stay < 2e-6 throughout training).
+    pub fn ortho_check(&mut self) -> Result<f32> {
+        self.check_ready()?;
+        self.prepare("ortho_check")?;
+        let (exe, spec) = self.get("ortho_check")?;
+        let inputs: Vec<&xla::Literal> = self.state.iter().take(self.preset.n_params).collect();
+        let outs = Self::run(exe, spec, &inputs)?;
+        Ok(outs[0].to_vec::<f32>()?[0])
+    }
+}

@@ -1,0 +1,115 @@
+//! Dtype plumbing between manifest specs, host buffers and `xla::Literal`s.
+
+use anyhow::{bail, Result};
+
+/// The dtypes the SCT artifacts use on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(name: &str) -> Result<DType> {
+        Ok(match name {
+            "float32" | "f32" => DType::F32,
+            "int32" | "i32" => DType::I32,
+            "uint32" | "u32" => DType::U32,
+            other => bail!("unsupported dtype {other:?} in manifest"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I32 => "int32",
+            DType::U32 => "uint32",
+        }
+    }
+
+    pub fn element_type(&self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::U32 => xla::ElementType::U32,
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// Build a literal from raw little-endian bytes + spec.
+pub fn literal_from_bytes(dtype: DType, shape: &[usize], bytes: &[u8]) -> Result<xla::Literal> {
+    let expected = shape.iter().product::<usize>() * dtype.size_bytes();
+    if bytes.len() != expected {
+        bail!("byte length {} != expected {} for shape {:?}", bytes.len(), expected, shape);
+    }
+    Ok(xla::Literal::create_from_shape_and_untyped_data(dtype.element_type(), shape, bytes)?)
+}
+
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    literal_from_bytes(DType::F32, shape, bytes)
+}
+
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    literal_from_bytes(DType::I32, shape, bytes)
+}
+
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read a literal back to an f32 vec (checks the element type).
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn to_i32_vec(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse_roundtrip() {
+        for name in ["float32", "int32", "uint32"] {
+            assert_eq!(DType::parse(name).unwrap().name(), name);
+        }
+        assert!(DType::parse("bfloat16").is_err());
+    }
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        let bytes = vec![0u8; 12];
+        assert!(literal_from_bytes(DType::F32, &[2, 2], &bytes).is_err());
+        assert!(literal_from_bytes(DType::F32, &[3], &bytes).is_ok());
+    }
+
+    #[test]
+    fn literal_f32_roundtrip() {
+        let data = vec![1.0f32, -2.5, 3.25, 0.0, 5.5, -6.0];
+        let lit = literal_f32(&[2, 3], &data).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), data);
+        assert_eq!(lit.element_count(), 6);
+    }
+
+    #[test]
+    fn literal_i32_roundtrip() {
+        let data = vec![1i32, -2, 3, 4];
+        let lit = literal_i32(&[4], &data).unwrap();
+        assert_eq!(to_i32_vec(&lit).unwrap(), data);
+    }
+}

@@ -1,0 +1,325 @@
+//! Native SpectralLinear layer: forward + manual backward through the
+//! compact factors, plus a full SCT "training phase" driver at true shapes.
+//!
+//! This is the rust-side twin of the L1/L2 math. Its jobs:
+//! * property-test the factored gradients against finite differences —
+//!   independent confirmation that "gradients flow through the compact
+//!   spectral factors via standard backprop" (paper §3) with no (m, n)
+//!   tensor anywhere;
+//! * run the paper's Table 2 phase benchmark (forward / backward /
+//!   optimizer / retraction) at the REAL 70B factor shapes (8192x28672 @
+//!   k=32), which fits trivially in RAM precisely because of SCT;
+//! * provide the dense baseline for the same phases at small shapes.
+
+use super::adamw::AdamW;
+use super::matrix::Matrix;
+use super::qr::qr_retract;
+use crate::util::rng::Rng;
+
+/// Spectral parameter triple: W = U diag(s) V^T, never materialized.
+#[derive(Debug, Clone)]
+pub struct SpectralLinear {
+    pub u: Matrix,     // m x k
+    pub s: Vec<f32>,   // k
+    pub v: Matrix,     // n x k
+}
+
+/// Gradients w.r.t. the triple — shapes (m,k), (k), (n,k): the whole point
+/// is that no (m,n) gradient exists.
+#[derive(Debug, Clone)]
+pub struct SpectralGrads {
+    pub du: Matrix,
+    pub ds: Vec<f32>,
+    pub dv: Matrix,
+}
+
+/// Cached activations from forward needed by backward.
+pub struct SpectralCache {
+    h: Matrix,  // x U        (b x k)
+    hs: Matrix, // h * s      (b x k)
+}
+
+impl SpectralLinear {
+    /// Variance-matched init (mirrors python `spectral.init_spectral`):
+    /// Haar-orthonormal U, V; s_i = sqrt(2/(m+n)) * sqrt(mn/k).
+    pub fn init(rng: &mut Rng, m: usize, n: usize, k: usize) -> SpectralLinear {
+        let u = qr_retract(&Matrix::randn(rng, m, k, 1.0));
+        let v = qr_retract(&Matrix::randn(rng, n, k, 1.0));
+        let sigma = (2.0 / (m + n) as f32).sqrt();
+        let s0 = sigma * ((m * n) as f32 / k as f32).sqrt();
+        SpectralLinear { u, s: vec![s0; k], v }
+    }
+
+    pub fn m(&self) -> usize {
+        self.u.rows
+    }
+
+    pub fn n(&self) -> usize {
+        self.v.rows
+    }
+
+    pub fn k(&self) -> usize {
+        self.s.len()
+    }
+
+    /// Parameter count k(m+n+1) — paper Eq. 1 storage analysis.
+    pub fn param_count(&self) -> usize {
+        self.k() * (self.m() + self.n() + 1)
+    }
+
+    /// y = ((x U) * s) V^T. x: (b x m) -> y: (b x n).
+    pub fn forward(&self, x: &Matrix) -> (Matrix, SpectralCache) {
+        let h = x.matmul(&self.u); // b x k
+        let mut hs = h.clone();
+        for j in 0..self.k() {
+            hs.scale_col(j, self.s[j]);
+        }
+        let y = hs.matmul_t(&self.v); // b x n
+        (y, SpectralCache { h, hs })
+    }
+
+    /// Backward: given dL/dy, produce (dL/dx, grads). Derivation:
+    ///   dhs = dy V;  dV = dy^T hs;  ds = sum_b(dhs * h);
+    ///   dh = dhs * s;  dU = x^T dh;  dx = dh U^T.
+    pub fn backward(
+        &self,
+        x: &Matrix,
+        dy: &Matrix,
+        cache: &SpectralCache,
+    ) -> (Matrix, SpectralGrads) {
+        let k = self.k();
+        let dhs = dy.matmul(&self.v); // b x k
+        let dv = dy.t_matmul(&cache.hs); // n x k
+        let mut ds = vec![0.0f32; k];
+        for b in 0..dhs.rows {
+            for j in 0..k {
+                ds[j] += dhs[(b, j)] * cache.h[(b, j)];
+            }
+        }
+        let mut dh = dhs;
+        for j in 0..k {
+            dh.scale_col(j, self.s[j]);
+        }
+        let du = x.t_matmul(&dh); // m x k
+        let dx = dh.matmul_t(&self.u); // b x m  (dh @ U^T)
+        (dx, SpectralGrads { du, ds, dv })
+    }
+
+    /// Materialize W — FOR TESTS ONLY (the training path never does this).
+    pub fn to_dense(&self) -> Matrix {
+        let mut us = self.u.clone();
+        for j in 0..self.k() {
+            us.scale_col(j, self.s[j]);
+        }
+        us.matmul_t(&self.v)
+    }
+
+    /// Retract both factors (paper Alg. 1 lines 5-7). U and V are
+    /// independent, so they retract on two threads — the §Perf fix that
+    /// moved the 70B retraction phase (see EXPERIMENTS.md §Perf; the paper's
+    /// sequential per-factor loop is 40-50% of its step time).
+    pub fn retract(&mut self) {
+        let (u, v) = std::thread::scope(|s| {
+            let hu = s.spawn(|| qr_retract(&self.u));
+            let hv = s.spawn(|| qr_retract(&self.v));
+            (hu.join().unwrap(), hv.join().unwrap())
+        });
+        self.u = u;
+        self.v = v;
+    }
+
+    /// max of the two factor orthonormality errors.
+    pub fn ortho_error(&self) -> f32 {
+        self.u.ortho_error().max(self.v.ortho_error())
+    }
+}
+
+/// One full SCT training step on a single layer with MSE-to-target loss:
+/// forward, backward, AdamW on (U, s, V), QR retraction. Returns per-phase
+/// seconds (fwd, bwd, opt, retract) — the Table 2 decomposition.
+pub struct LayerTrainer {
+    pub layer: SpectralLinear,
+    opt_u: AdamW,
+    opt_s: AdamW,
+    opt_v: AdamW,
+}
+
+impl LayerTrainer {
+    pub fn new(layer: SpectralLinear, lr: f32) -> LayerTrainer {
+        let (mu, k, nv) = (layer.m() * layer.k(), layer.k(), layer.n() * layer.k());
+        LayerTrainer {
+            layer,
+            opt_u: AdamW::new(mu, lr),
+            opt_s: AdamW::new(k, lr),
+            opt_v: AdamW::new(nv, lr),
+        }
+    }
+
+    /// Returns (loss, [fwd_s, bwd_s, opt_s, retract_s]).
+    pub fn step(&mut self, x: &Matrix, target: &Matrix) -> (f32, [f64; 4]) {
+        use std::time::Instant;
+        let t0 = Instant::now();
+        let (y, cache) = self.layer.forward(x);
+        let t_fwd = t0.elapsed().as_secs_f64();
+
+        // MSE loss and its gradient.
+        let bn = (y.rows * y.cols) as f32;
+        let mut dy = Matrix::zeros(y.rows, y.cols);
+        let mut loss = 0.0f32;
+        for i in 0..y.data.len() {
+            let d = y.data[i] - target.data[i];
+            loss += d * d;
+            dy.data[i] = 2.0 * d / bn;
+        }
+        loss /= bn;
+
+        let t1 = Instant::now();
+        let (_dx, grads) = self.layer.backward(x, &dy, &cache);
+        let t_bwd = t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        self.opt_u.step(&mut self.layer.u.data, &grads.du.data);
+        self.opt_s.step(&mut self.layer.s, &grads.ds);
+        self.opt_v.step(&mut self.layer.v.data, &grads.dv.data);
+        let t_opt = t2.elapsed().as_secs_f64();
+
+        let t3 = Instant::now();
+        self.layer.retract();
+        let t_retract = t3.elapsed().as_secs_f64();
+
+        (loss, [t_fwd, t_bwd, t_opt, t_retract])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finite_diff_check(
+        layer: &SpectralLinear,
+        x: &Matrix,
+        dy: &Matrix,
+        grads: &SpectralGrads,
+    ) -> f32 {
+        // Check a handful of entries of each gradient by central differences
+        // of L = sum(y * dy) (linear functional so dL/dtheta is exact).
+        let eval = |l: &SpectralLinear| -> f32 {
+            let (y, _) = l.forward(x);
+            y.data.iter().zip(&dy.data).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-3f32;
+        let mut max_rel = 0.0f32;
+        let probes = [(0usize, 0usize), (1, 0), (0, 1)];
+        for &(r, c) in &probes {
+            // dU
+            let mut lp = layer.clone();
+            lp.u[(r, c)] += eps;
+            let mut lm = layer.clone();
+            lm.u[(r, c)] -= eps;
+            let fd = (eval(&lp) - eval(&lm)) / (2.0 * eps);
+            let an = grads.du[(r, c)];
+            max_rel = max_rel.max((fd - an).abs() / (an.abs().max(1e-3)));
+            // dV
+            let mut lp = layer.clone();
+            lp.v[(r, c)] += eps;
+            let mut lm = layer.clone();
+            lm.v[(r, c)] -= eps;
+            let fd = (eval(&lp) - eval(&lm)) / (2.0 * eps);
+            let an = grads.dv[(r, c)];
+            max_rel = max_rel.max((fd - an).abs() / (an.abs().max(1e-3)));
+        }
+        // ds[0]
+        let mut lp = layer.clone();
+        lp.s[0] += eps;
+        let mut lm = layer.clone();
+        lm.s[0] -= eps;
+        let fd = (eval(&lp) - eval(&lm)) / (2.0 * eps);
+        max_rel.max((fd - grads.ds[0]).abs() / grads.ds[0].abs().max(1e-3))
+    }
+
+    #[test]
+    fn forward_matches_dense() {
+        let mut rng = Rng::new(0);
+        let layer = SpectralLinear::init(&mut rng, 24, 16, 6);
+        let x = Matrix::randn(&mut rng, 5, 24, 1.0);
+        let (y, _) = layer.forward(&x);
+        let y_dense = x.matmul(&layer.to_dense());
+        assert!(y.max_abs_diff(&y_dense) < 1e-4);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut rng = Rng::new(1);
+        let layer = SpectralLinear::init(&mut rng, 12, 10, 4);
+        let x = Matrix::randn(&mut rng, 3, 12, 1.0);
+        let dy = Matrix::randn(&mut rng, 3, 10, 1.0);
+        let (_, cache) = layer.forward(&x);
+        let (_dx, grads) = layer.backward(&x, &dy, &cache);
+        let rel = finite_diff_check(&layer, &x, &dy, &grads);
+        assert!(rel < 2e-2, "finite-diff rel err {rel}");
+    }
+
+    #[test]
+    fn dx_matches_finite_differences() {
+        let mut rng = Rng::new(2);
+        let layer = SpectralLinear::init(&mut rng, 8, 6, 3);
+        let mut x = Matrix::randn(&mut rng, 2, 8, 1.0);
+        let dy = Matrix::randn(&mut rng, 2, 6, 1.0);
+        let (_, cache) = layer.forward(&x);
+        let (dx, _) = layer.backward(&x, &dy, &cache);
+        let eval = |x: &Matrix| -> f32 {
+            let (y, _) = layer.forward(x);
+            y.data.iter().zip(&dy.data).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-3;
+        let base00 = x[(0, 0)];
+        x[(0, 0)] = base00 + eps;
+        let fp = eval(&x);
+        x[(0, 0)] = base00 - eps;
+        let fm = eval(&x);
+        x[(0, 0)] = base00;
+        let fd = (fp - fm) / (2.0 * eps);
+        assert!((fd - dx[(0, 0)]).abs() / dx[(0, 0)].abs().max(1e-3) < 2e-2);
+    }
+
+    #[test]
+    fn grad_shapes_are_compact() {
+        // The paper's claim: gradient shapes are (m,k), (k), (n,k) — never (m,n).
+        let mut rng = Rng::new(3);
+        let layer = SpectralLinear::init(&mut rng, 32, 20, 5);
+        let x = Matrix::randn(&mut rng, 4, 32, 1.0);
+        let dy = Matrix::randn(&mut rng, 4, 20, 1.0);
+        let (_, cache) = layer.forward(&x);
+        let (_, g) = layer.backward(&x, &dy, &cache);
+        assert_eq!((g.du.rows, g.du.cols), (32, 5));
+        assert_eq!(g.ds.len(), 5);
+        assert_eq!((g.dv.rows, g.dv.cols), (20, 5));
+    }
+
+    #[test]
+    fn training_step_reduces_loss_and_keeps_manifold() {
+        let mut rng = Rng::new(4);
+        let layer = SpectralLinear::init(&mut rng, 16, 12, 4);
+        let mut trainer = LayerTrainer::new(layer, 5e-3);
+        let x = Matrix::randn(&mut rng, 8, 16, 1.0);
+        let target = Matrix::randn(&mut rng, 8, 12, 0.5);
+        let (first, _) = trainer.step(&x, &target);
+        let mut last = first;
+        for _ in 0..40 {
+            let (l, _) = trainer.step(&x, &target);
+            last = l;
+        }
+        assert!(last < first * 0.8, "loss {first} -> {last}");
+        assert!(trainer.layer.ortho_error() < 2e-6);
+    }
+
+    #[test]
+    fn init_variance_matches_glorot() {
+        let mut rng = Rng::new(5);
+        let layer = SpectralLinear::init(&mut rng, 48, 80, 8);
+        let w = layer.to_dense();
+        let fro2 = w.data.iter().map(|x| x * x).sum::<f32>();
+        let target = 48.0 * 80.0 * 2.0 / (48.0 + 80.0);
+        assert!((fro2 - target).abs() / target < 1e-3);
+    }
+}

@@ -1,0 +1,266 @@
+//! Dense row-major f32 matrices — the minimal linear-algebra substrate for
+//! the native SCT implementation (QR retraction, truncated SVD, AdamW).
+//!
+//! Deliberately not a general BLAS: only what the spectral math needs, with
+//! a cache-blocked `matmul` for the hot paths (the 70B-shape retraction
+//! benches run through this code).
+
+use crate::util::rng::Rng;
+
+/// Row-major matrix of f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Gaussian N(0, sigma^2) entries.
+    pub fn randn(rng: &mut Rng, rows: usize, cols: usize, sigma: f32) -> Matrix {
+        let data = (0..rows * cols).map(|_| rng.normal() as f32 * sigma).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Column `c` as a fresh Vec (rows are contiguous, columns are not).
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self[(r, c)]).collect()
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t[(c, r)] = self[(r, c)];
+            }
+        }
+        t
+    }
+
+    /// `self @ other`, cache-blocked (i,k,j loop order keeps the inner loop
+    /// streaming over contiguous rows of both output and `other`).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, kdim, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            let out_row = out.row_mut(i);
+            for (k, &a_ik) in a_row.iter().enumerate().take(kdim) {
+                if a_ik == 0.0 {
+                    continue;
+                }
+                let b_row = other.row(k);
+                for j in 0..n {
+                    out_row[j] += a_ik * b_row[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self^T @ other` without materializing the transpose.
+    pub fn t_matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let (m, n) = (self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for r in 0..self.rows {
+            let a_row = self.row(r);
+            let b_row = other.row(r);
+            for (i, &a_ri) in a_row.iter().enumerate() {
+                if a_ri == 0.0 {
+                    continue;
+                }
+                let out_row = out.row_mut(i);
+                for (j, &b_rj) in b_row.iter().enumerate() {
+                    out_row[j] += a_ri * b_rj;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ other^T` without materializing the transpose.
+    pub fn matmul_t(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let (m, n) = (self.rows, other.rows);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            let out_row = out.row_mut(i);
+            for j in 0..n {
+                out_row[j] = dot(a_row, other.row(j));
+            }
+        }
+        out
+    }
+
+    /// Scale column `c` by `f` in place.
+    pub fn scale_col(&mut self, c: usize, f: f32) {
+        for r in 0..self.rows {
+            self[(r, c)] *= f;
+        }
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// max |Q^T Q - I| — factor orthonormality error (paper: < 2e-6).
+    /// Accumulates in f64: at the 70B factor shapes (m ~ 3e4) an f32 Gram
+    /// accumulation alone contributes ~1e-5 of *measurement* noise, swamping
+    /// the threshold being verified.
+    pub fn ortho_error(&self) -> f32 {
+        let k = self.cols;
+        let mut err = 0.0f64;
+        for i in 0..k {
+            for j in i..k {
+                let mut acc = 0.0f64;
+                for r in 0..self.rows {
+                    acc += self[(r, i)] as f64 * self[(r, j)] as f64;
+                }
+                let target = if i == j { 1.0 } else { 0.0 };
+                err = err.max((acc - target).abs());
+            }
+        }
+        err as f32
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-lane unrolling; LLVM vectorizes this reliably.
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        for l in 0..4 {
+            acc[l] += a[i * 4 + l] * b[i * 4 + l];
+        }
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::randn(&mut rng, 5, 7, 1.0);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(&mut rng, 6, 4, 1.0);
+        let b = Matrix::randn(&mut rng, 6, 5, 1.0);
+        let fast = a.t_matmul(&b);
+        let slow = a.transpose().matmul(&b);
+        assert!(fast.max_abs_diff(&slow) < 1e-5);
+    }
+
+    #[test]
+    fn matmul_t_matches_explicit_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(&mut rng, 6, 4, 1.0);
+        let b = Matrix::randn(&mut rng, 5, 4, 1.0);
+        let fast = a.matmul_t(&b);
+        let slow = a.matmul(&b.transpose());
+        assert!(fast.max_abs_diff(&slow) < 1e-5);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(&mut rng, 4, 4, 1.0);
+        assert!(a.matmul(&Matrix::eye(4)).max_abs_diff(&a) < 1e-6);
+        assert!(Matrix::eye(4).matmul(&a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn ortho_error_of_identity_is_zero() {
+        assert_eq!(Matrix::eye(8).ortho_error(), 0.0);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<f32> = (0..37).map(|i| i as f32 * 0.5).collect();
+        let y: Vec<f32> = (0..37).map(|i| 1.0 - i as f32 * 0.1).collect();
+        let naive: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,26 @@
+//! Pure-Rust spectral linear algebra substrate.
+//!
+//! Everything SCT needs, implemented from scratch (the runtime has no BLAS /
+//! LAPACK and the image is offline): dense row-major matrices, CGS2 +
+//! Householder QR, one-sided Jacobi truncated SVD, AdamW, and a native
+//! SpectralLinear layer with manual backprop through the factors.
+//!
+//! Roles in the reproduction:
+//! * Table 2's phase timings (forward/backward/optimizer/retraction) are
+//!   measured here at the paper's REAL 70B factor shapes — possible on this
+//!   machine only because the factors are k(m+n+1) floats.
+//! * The fine-tune driver's dense->spectral conversion (95% energy, §4.4)
+//!   runs [`svd::svd_truncated`] + [`svd::Svd::pad_to`].
+//! * Property tests cross-check the Pallas/JAX kernels' algorithm.
+
+pub mod adamw;
+pub mod layer;
+pub mod matrix;
+pub mod qr;
+pub mod svd;
+
+pub use adamw::AdamW;
+pub use layer::{LayerTrainer, SpectralGrads, SpectralLinear};
+pub use matrix::Matrix;
+pub use qr::{polar_retract, qr_householder, qr_retract, qr_retract_parallel, qr_retract_serial};
+pub use svd::{svd, svd_truncated, Svd};

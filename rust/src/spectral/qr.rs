@@ -1,0 +1,476 @@
+//! Stiefel QR retraction (paper Eq. 5) — native Rust implementation.
+//!
+//! Used for (a) the true-shape 70B retraction benchmark (Table 2's phase
+//! timing, where the factor shapes 8192x32 / 28672x32 are run for real on
+//! this machine), (b) the dense->spectral conversion in the fine-tune
+//! driver, and (c) property tests that cross-check the Pallas/JAX kernels'
+//! algorithm (same CGS2 construction).
+//!
+//! CGS2 (classical Gram-Schmidt, applied twice) matches the exported-graph
+//! and Pallas kernels exactly in structure: R has a positive diagonal by
+//! construction, so `Q * sign(diag(R))` is the identity fix — the retraction
+//! is the unique positive-diagonal QR of the input.
+
+use super::matrix::{dot, Matrix};
+
+/// Accuracy-preserving fast dot: plain f32 accumulation over m ~ 3e4 rows
+/// injects ~1e-5 of error (above the paper's 2e-6 orthonormality budget),
+/// while a straight f64 accumulation blocks SIMD vectorization (measured
+/// ~2 GFLOP/s — EXPERIMENTS.md §Perf). Blocked summation gets both: f32
+/// 8-lane dots within 128-element chunks (vectorizable), f64 across chunks
+/// (error grows with #chunks, not m — ~244x fewer terms at 70B shapes).
+#[inline]
+fn dot64(a: &[f32], b: &[f32]) -> f64 {
+    const CHUNK: usize = 128;
+    let mut total = 0.0f64;
+    let mut i = 0;
+    while i + CHUNK <= a.len() {
+        let mut acc = [0.0f32; 8];
+        for j in (i..i + CHUNK).step_by(8) {
+            for l in 0..8 {
+                acc[l] += a[j + l] * b[j + l];
+            }
+        }
+        total += acc.iter().sum::<f32>() as f64;
+        i += CHUNK;
+    }
+    // ragged tail in f64 (short, cost-free)
+    for j in i..a.len() {
+        total += a[j] as f64 * b[j] as f64;
+    }
+    total
+}
+
+/// Retract `a` (m x k, m >= k) onto the Stiefel manifold.
+/// Returns Q with orthonormal columns spanning col(a).
+///
+/// §Perf outcome (EXPERIMENTS.md): after the blocked-summation `dot64`
+/// (f32 SIMD within 128-element chunks, f64 across chunks) the serial CGS2
+/// beats the row-sharded parallel variant at every paper shape — the column
+/// dependency chain plus per-panel thread fan-out costs more than it saves.
+/// Serial is therefore the default; the parallel and polar variants remain
+/// for the `retraction_ablation` bench. Factor-level parallelism (U ∥ V,
+/// see `SpectralLinear::retract`) is where threads actually pay off.
+pub fn qr_retract(a: &Matrix) -> Matrix {
+    qr_retract_serial(a)
+}
+
+/// Serial CGS2 — the reference implementation (and the faster one for small
+/// factors, where thread fan-out costs more than it saves).
+pub fn qr_retract_serial(a: &Matrix) -> Matrix {
+    let (m, k) = (a.rows, a.cols);
+    assert!(m >= k, "retraction needs m >= k, got {m} x {k}");
+    // Column-major scratch: columns are the unit of work here.
+    let mut q_cols: Vec<Vec<f32>> = Vec::with_capacity(k);
+    let mut v = vec![0.0f32; m];
+    for j in 0..k {
+        for (r, vr) in v.iter_mut().enumerate() {
+            *vr = a[(r, j)];
+        }
+        // Two projection passes ("twice is enough"), f64 coefficients.
+        for _pass in 0..2 {
+            for q in &q_cols {
+                let c = dot64(q, &v) as f32;
+                for (vi, qi) in v.iter_mut().zip(q) {
+                    *vi -= c * qi;
+                }
+            }
+        }
+        let norm = dot64(&v, &v).sqrt();
+        let inv = if norm > 1e-30 { (1.0 / norm) as f32 } else { 0.0 };
+        q_cols.push(v.iter().map(|x| x * inv).collect());
+    }
+    let mut q = Matrix::zeros(m, k);
+    for (j, qc) in q_cols.iter().enumerate() {
+        for (r, &val) in qc.iter().enumerate() {
+            q[(r, j)] = val;
+        }
+    }
+    q
+}
+
+/// Blocked-parallel CGS2 (§Perf optimization of the paper's named
+/// bottleneck — retraction is 40-50% of its 70B step time).
+///
+/// Two structural changes over the serial version:
+/// * **panel blocking**: columns are orthogonalized against the finished
+///   prefix in panels of `PANEL`, so the projection against earlier columns
+///   becomes two (k_done x PANEL)-shaped GEMM-like passes instead of
+///   column-at-a-time sweeps — far better cache reuse on the m-major data;
+/// * **row-sharded threads**: each projection pass partitions the m rows
+///   across `std::thread::scope` workers (partial dot products reduced in
+///   f64, then the update applied shard-local) — the factor matrices at 70B
+///   shapes (28672 x 32) are ~3.7 MB, well worth the fan-out.
+pub fn qr_retract_parallel(a: &Matrix) -> Matrix {
+    const PANEL: usize = 8;
+    let (m, k) = (a.rows, a.cols);
+    assert!(m >= k, "retraction needs m >= k, got {m} x {k}");
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16);
+    // Column-major working set.
+    let mut cols: Vec<Vec<f32>> = (0..k).map(|j| a.col(j)).collect();
+
+    let mut done = 0usize;
+    while done < k {
+        let panel_end = (done + PANEL).min(k);
+        // 1) project the panel against all finished columns, twice (CGS2).
+        if done > 0 {
+            for _pass in 0..2 {
+                let (fin, panel) = cols.split_at_mut(done);
+                let fin: &[Vec<f32>] = fin;
+                let panel_cols = &mut panel[..panel_end - done];
+                // coefficients c[j][p] = fin[j] . panel[p], f64-accumulated,
+                // rows sharded across threads then reduced.
+                let chunk = m.div_ceil(threads);
+                let mut coeffs = vec![vec![0.0f64; panel_cols.len()]; done];
+                // pass A: coefficients c[j][p] = fin[j] . panel[p]
+                std::thread::scope(|s| {
+                    let mut handles = Vec::new();
+                    for t in 0..threads {
+                        let lo = t * chunk;
+                        let hi = ((t + 1) * chunk).min(m);
+                        if lo >= hi {
+                            break;
+                        }
+                        let fin_ref = fin;
+                        let panel_ref: Vec<&[f32]> =
+                            panel_cols.iter().map(|c| &c[lo..hi]).collect();
+                        handles.push(s.spawn(move || {
+                            let mut part = vec![vec![0.0f64; panel_ref.len()]; fin_ref.len()];
+                            for (j, fcol) in fin_ref.iter().enumerate() {
+                                let fseg = &fcol[lo..hi];
+                                for (p, pseg) in panel_ref.iter().enumerate() {
+                                    part[j][p] = dot64(fseg, pseg);
+                                }
+                            }
+                            part
+                        }));
+                    }
+                    for h in handles {
+                        let part = h.join().unwrap();
+                        for j in 0..done {
+                            for p in 0..part[j].len() {
+                                coeffs[j][p] += part[j][p];
+                            }
+                        }
+                    }
+                });
+                // pass B: panel[p] -= sum_j c[j][p] * fin[j], row-sharded.
+                // Threads own disjoint row ranges of each panel column
+                // (raw-pointer shim because the ranges are provably disjoint).
+                let panel_ptrs: Vec<SendPtr> =
+                    panel_cols.iter_mut().map(|c| SendPtr(c.as_mut_ptr())).collect();
+                std::thread::scope(|s| {
+                    let coeffs_ref = &coeffs;
+                    let mut handles = Vec::new();
+                    let panel_ptrs = &panel_ptrs;
+                    for t in 0..threads {
+                        let lo = t * chunk;
+                        let hi = ((t + 1) * chunk).min(m);
+                        if lo >= hi {
+                            break;
+                        }
+                        let fin_ref = fin;
+                        handles.push(s.spawn(move || {
+                            for (p, ptr) in panel_ptrs.iter().enumerate() {
+                                let seg = unsafe {
+                                    std::slice::from_raw_parts_mut(ptr.0.add(lo), hi - lo)
+                                };
+                                for (j, fcol) in fin_ref.iter().enumerate() {
+                                    let c = coeffs_ref[j][p] as f32;
+                                    if c != 0.0 {
+                                        for (sv, fv) in seg.iter_mut().zip(&fcol[lo..hi]) {
+                                            *sv -= c * fv;
+                                        }
+                                    }
+                                }
+                            }
+                        }));
+                    }
+                    for h in handles {
+                        h.join().unwrap();
+                    }
+                });
+            }
+        }
+        // 2) serial CGS2 within the small panel.
+        for j in done..panel_end {
+            for _pass in 0..2 {
+                for prev in done..j {
+                    let (a_, b_) = cols.split_at_mut(j);
+                    let c = dot64(&a_[prev], &b_[0]) as f32;
+                    for (vi, qi) in b_[0].iter_mut().zip(&a_[prev]) {
+                        *vi -= c * qi;
+                    }
+                }
+            }
+            let norm = dot64(&cols[j], &cols[j]).sqrt();
+            let inv = if norm > 1e-30 { (1.0 / norm) as f32 } else { 0.0 };
+            for v in cols[j].iter_mut() {
+                *v *= inv;
+            }
+        }
+        done = panel_end;
+    }
+
+    let mut q = Matrix::zeros(m, k);
+    for (j, qc) in cols.iter().enumerate() {
+        for (r, &val) in qc.iter().enumerate() {
+            q[(r, j)] = val;
+        }
+    }
+    q
+}
+
+/// Raw-pointer Send shim for disjoint row-range writes (each thread touches
+/// a distinct `lo..hi` slice of each column).
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Polar retraction via Newton-Schulz iteration — the lower-cost
+/// alternative the paper's §5 asks for (it names Cayley; polar has the same
+/// matmul-only structure and maps perfectly to an MXU).
+///
+/// After an AdamW step with a sane LR, U is a small perturbation of an
+/// orthonormal matrix, so NS converges quadratically: 2-4 iterations of
+/// `Q <- 1.5 Q - 0.5 Q (Q^T Q)` reach < 2e-6. This is a *different*
+/// retraction (to the polar factor, not the positive-diagonal QR Q), but
+/// equally valid Stiefel-manifold-wise; the ablation bench compares cost
+/// and the orthonormality it achieves.
+pub fn polar_retract(a: &Matrix, iters: usize) -> Matrix {
+    // Scale so sigma_max <= 1 (NS requires sigma in (0, sqrt(3))): a tight,
+    // cheap bound is sigma_max^2 <= ||A^T A||_inf. Near the manifold the
+    // Gram matrix is ~I, so the scale is ~1 and convergence is quadratic.
+    let g0 = a.t_matmul(a);
+    let mut bound: f32 = 0.0;
+    for i in 0..g0.rows {
+        let row_sum: f32 = g0.row(i).iter().map(|x| x.abs()).sum();
+        bound = bound.max(row_sum);
+    }
+    let scale = bound.sqrt().max(1e-30);
+    let mut q = a.clone();
+    for v in q.data.iter_mut() {
+        *v /= scale;
+    }
+    for _ in 0..iters {
+        // Gram in f64: an f32 accumulation over m ~ 3e4 rows floors the
+        // achievable orthonormality at ~2e-6 — exactly the threshold being
+        // targeted. (Found empirically; see EXPERIMENTS.md §Perf.)
+        let g = gram64(&q); // k x k
+        // q <- 1.5 q - 0.5 q g
+        let qg = q.matmul(&g);
+        for (qi, qgi) in q.data.iter_mut().zip(&qg.data) {
+            *qi = 1.5 * *qi - 0.5 * qgi;
+        }
+    }
+    q
+}
+
+/// Q^T Q with f64 accumulation, result in f32.
+fn gram64(q: &Matrix) -> Matrix {
+    let k = q.cols;
+    let mut g = Matrix::zeros(k, k);
+    for i in 0..k {
+        for j in i..k {
+            let mut acc = 0.0f64;
+            for r in 0..q.rows {
+                acc += q[(r, i)] as f64 * q[(r, j)] as f64;
+            }
+            g[(i, j)] = acc as f32;
+            g[(j, i)] = acc as f32;
+        }
+    }
+    g
+}
+
+/// Householder QR returning (Q, R) with the paper's sign fix applied
+/// (diag(R) > 0). Slower than [`qr_retract`] but exposes R — used by the SVD
+/// and by tests as an independent oracle for the CGS2 path.
+pub fn qr_householder(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, k) = (a.rows, a.cols);
+    assert!(m >= k);
+    let mut r = a.clone();
+    // Accumulate Q by applying the reflectors to an m x k identity block.
+    let mut q = Matrix::zeros(m, k);
+    for i in 0..k {
+        q[(i, i)] = 1.0;
+    }
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(k);
+    for j in 0..k {
+        // Build the Householder vector for column j.
+        let mut v = vec![0.0f32; m - j];
+        for i in j..m {
+            v[i - j] = r[(i, j)];
+        }
+        let alpha = -v[0].signum() * dot(&v, &v).sqrt();
+        v[0] -= alpha;
+        let vnorm2 = dot(&v, &v);
+        if vnorm2 > 1e-30 {
+            // Apply (I - 2 v v^T / v^T v) to the trailing columns of R.
+            for c in j..k {
+                let mut s = 0.0;
+                for i in j..m {
+                    s += v[i - j] * r[(i, c)];
+                }
+                let f = 2.0 * s / vnorm2;
+                for i in j..m {
+                    r[(i, c)] -= f * v[i - j];
+                }
+            }
+        }
+        vs.push(v);
+    }
+    // Q = H_0 H_1 ... H_{k-1} I  (apply in reverse to the identity block).
+    for j in (0..k).rev() {
+        let v = &vs[j];
+        let vnorm2 = dot(v, v);
+        if vnorm2 <= 1e-30 {
+            continue;
+        }
+        for c in 0..k {
+            let mut s = 0.0;
+            for i in j..m {
+                s += v[i - j] * q[(i, c)];
+            }
+            let f = 2.0 * s / vnorm2;
+            for i in j..m {
+                q[(i, c)] -= f * v[i - j];
+            }
+        }
+    }
+    // Sign fix: make diag(R) positive (paper Eq. 5's sign(diag(R))).
+    let mut r_out = Matrix::zeros(k, k);
+    for i in 0..k {
+        for c in 0..k {
+            r_out[(i, c)] = r[(i, c)];
+        }
+    }
+    for j in 0..k {
+        if r_out[(j, j)] < 0.0 {
+            for c in 0..k {
+                r_out[(j, c)] = -r_out[(j, c)];
+            }
+            q.scale_col(j, -1.0);
+        }
+    }
+    (q, r_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::new(10);
+        for &(m, k) in &[(64usize, 16usize), (300, 24), (1000, 33), (2048, 8)] {
+            let a = Matrix::randn(&mut rng, m, k, 1.0);
+            let qs = qr_retract_serial(&a);
+            let qp = qr_retract_parallel(&a);
+            let diff = qs.max_abs_diff(&qp);
+            assert!(diff < 1e-4, "{m}x{k}: serial vs parallel diff {diff}");
+            assert!(qp.ortho_error() < 2e-6, "{m}x{k}: parallel ortho");
+        }
+    }
+
+    #[test]
+    fn parallel_handles_degenerate_shapes() {
+        let mut rng = Rng::new(11);
+        for &(m, k) in &[(1usize, 1usize), (5, 5), (7, 1)] {
+            let a = Matrix::randn(&mut rng, m, k, 1.0);
+            let q = qr_retract_parallel(&a);
+            assert!(q.ortho_error() < 2e-6);
+        }
+    }
+
+    #[test]
+    fn polar_retract_near_manifold_is_accurate() {
+        let mut rng = Rng::new(12);
+        // Perturb an orthonormal matrix like one AdamW step would.
+        let q0 = qr_retract(&Matrix::randn(&mut rng, 512, 32, 1.0));
+        let mut a = q0.clone();
+        for v in a.data.iter_mut() {
+            *v += 1e-3 * rng.normal() as f32;
+        }
+        let q = polar_retract(&a, 3);
+        assert!(q.ortho_error() < 2e-6, "NS ortho {}", q.ortho_error());
+        // stays close to the input (it's a retraction, not a projection to
+        // something far away)
+        assert!(q.max_abs_diff(&a) < 0.01);
+    }
+
+    #[test]
+    fn polar_retract_far_from_manifold_still_converges() {
+        let mut rng = Rng::new(13);
+        let a = Matrix::randn(&mut rng, 64, 8, 3.0);
+        let q = polar_retract(&a, 30);
+        assert!(q.ortho_error() < 1e-4, "NS from cold start: {}", q.ortho_error());
+    }
+
+    #[test]
+    fn cgs2_orthonormal_and_span_preserving() {
+        let mut rng = Rng::new(0);
+        for &(m, k) in &[(8, 3), (64, 16), (100, 1), (33, 33)] {
+            let a = Matrix::randn(&mut rng, m, k, 1.0);
+            let q = qr_retract(&a);
+            assert!(q.ortho_error() < 2e-6, "ortho {} for {m}x{k}", q.ortho_error());
+            // A = Q (Q^T A) exactly when span is preserved.
+            let recon = q.matmul(&q.t_matmul(&a));
+            assert!(recon.max_abs_diff(&a) < 1e-4 * (m as f32).sqrt());
+        }
+    }
+
+    #[test]
+    fn cgs2_matches_householder_oracle() {
+        let mut rng = Rng::new(1);
+        for &(m, k) in &[(16, 4), (48, 12)] {
+            let a = Matrix::randn(&mut rng, m, k, 1.0);
+            let q1 = qr_retract(&a);
+            let (q2, _r) = qr_householder(&a);
+            assert!(
+                q1.max_abs_diff(&q2) < 1e-4,
+                "CGS2 vs Householder diff {}",
+                q1.max_abs_diff(&q2)
+            );
+        }
+    }
+
+    #[test]
+    fn householder_reconstructs_a() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(&mut rng, 20, 6, 1.0);
+        let (q, r) = qr_householder(&a);
+        let recon = q.matmul(&r);
+        assert!(recon.max_abs_diff(&a) < 1e-4);
+        // R upper-triangular with positive diagonal
+        for i in 0..r.rows {
+            assert!(r[(i, i)] > 0.0);
+            for j in 0..i {
+                assert!(r[(i, j)].abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn retraction_is_identity_on_orthonormal() {
+        let mut rng = Rng::new(3);
+        let q0 = qr_retract(&Matrix::randn(&mut rng, 32, 8, 1.0));
+        let q1 = qr_retract(&q0);
+        assert!(q1.max_abs_diff(&q0) < 1e-5);
+    }
+
+    #[test]
+    fn retraction_scale_invariant_up_to_column_scale() {
+        // Q(A D) == Q(A) for positive diagonal D — retraction kills scale.
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(&mut rng, 24, 5, 1.0);
+        let mut scaled = a.clone();
+        for j in 0..5 {
+            scaled.scale_col(j, (j + 1) as f32 * 0.7);
+        }
+        let q1 = qr_retract(&a);
+        let q2 = qr_retract(&scaled);
+        assert!(q1.max_abs_diff(&q2) < 1e-4);
+    }
+}

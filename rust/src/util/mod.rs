@@ -1,0 +1,8 @@
+//! Small in-tree substrates that would normally be crates (serde_json, clap,
+//! rand, criterion) — the build environment is offline, so they are built
+//! from scratch here.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,162 @@
+//! Coordinator-level integration tests: trainer loop, checkpoint
+//! resume-bit-exactness, per-component LRs through the real artifacts, and
+//! the pallas-kernel-path preset. Skip cleanly when artifacts are missing.
+
+use sct::checkpoint::CheckpointManager;
+use sct::coordinator::{LrPlan, RunConfig, Trainer};
+use sct::runtime::{Manifest, Session};
+
+fn artifacts_root() -> Option<std::path::PathBuf> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    root.join("manifest.json").exists().then_some(root)
+}
+
+fn base_cfg(preset: &str, steps: usize) -> Option<RunConfig> {
+    let root = artifacts_root()?;
+    let mut cfg = RunConfig::default();
+    cfg.artifacts_root = root.to_str().unwrap().to_string();
+    cfg.preset = preset.into();
+    cfg.steps = steps;
+    cfg.corpus_bytes = 300 << 10;
+    cfg.eval_every = 0;
+    cfg.ortho_every = 0;
+    Some(cfg)
+}
+
+#[test]
+fn trainer_loop_runs_and_learns() {
+    let Some(mut cfg) = base_cfg("tiny_r8", 30) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    cfg.lr_plan = LrPlan::split(1e-3, 5e-3);
+    cfg.ortho_every = 10;
+    let mut t = Trainer::new(cfg).unwrap();
+    let s = t.run().unwrap();
+    assert_eq!(s.steps, 30);
+    assert!(s.final_loss_smoothed < s.losses[0], "{} -> {}", s.losses[0], s.final_loss_smoothed);
+    assert!(s.ortho_error.unwrap() < 2e-6);
+    assert!(s.mean_step_s > 0.0);
+}
+
+#[test]
+fn chunked_and_unchunked_agree() {
+    let Some(cfg) = base_cfg("tiny_r8", 20) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut c1 = cfg.clone();
+    c1.chunked = true;
+    let mut c2 = cfg;
+    c2.chunked = false;
+    let s1 = Trainer::new(c1).unwrap().run().unwrap();
+    let s2 = Trainer::new(c2).unwrap().run().unwrap();
+    // identical data (same seed) + identical math -> near-identical losses
+    assert_eq!(s1.losses.len(), s2.losses.len());
+    for (i, (a, b)) in s1.losses.iter().zip(&s2.losses).enumerate() {
+        assert!((a - b).abs() < 1e-4 * b.abs().max(1.0), "step {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn checkpoint_resume_is_bit_exact() {
+    let Some(root) = artifacts_root() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let dir = std::env::temp_dir().join(format!("sct_resume_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Session A: train 10 steps, checkpoint, train 10 more.
+    let toks = |seed: i64, n: usize| -> Vec<i32> {
+        (0..n).map(|i| ((i as i64 * 13 + seed * 31) % 256) as i32).collect()
+    };
+    let mut a = Session::open(&root, "tiny_r8").unwrap();
+    a.init(11).unwrap();
+    let n = a.preset.tokens_spec().unwrap().elements();
+    for i in 0..10 {
+        a.train_step(&toks(i, n), 1e-3, 1e-3).unwrap();
+    }
+    let mgr = CheckpointManager::new(&dir, 2).unwrap();
+    mgr.save(&a).unwrap();
+    let mut losses_a = Vec::new();
+    for i in 10..20 {
+        losses_a.push(a.train_step(&toks(i, n), 1e-3, 1e-3).unwrap());
+    }
+
+    // Session B: restore the checkpoint, train the same 10 steps.
+    let mut b = Session::open(&root, "tiny_r8").unwrap();
+    let step = mgr.restore_latest(&mut b).unwrap();
+    assert_eq!(step, 10);
+    let mut losses_b = Vec::new();
+    for i in 10..20 {
+        losses_b.push(b.train_step(&toks(i, n), 1e-3, 1e-3).unwrap());
+    }
+    assert_eq!(losses_a, losses_b, "resume must be bit-exact");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn split_lr_freezes_dense_when_zero() {
+    // lr_dense = 0: attention/embeddings must not move; spectral must.
+    let Some(root) = artifacts_root() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut s = Session::open(&root, "tiny_r8").unwrap();
+    s.init(3).unwrap();
+    let (_, wq_before) = s.tensor_f32("params/layers/0/attn/wq").unwrap();
+    let (_, u_before) = s.tensor_f32("params/layers/0/mlp/gate/u").unwrap();
+    let n = s.preset.tokens_spec().unwrap().elements();
+    let toks: Vec<i32> = (0..n).map(|i| (i % 256) as i32).collect();
+    s.train_step(&toks, 0.0, 1e-3).unwrap();
+    let (_, wq_after) = s.tensor_f32("params/layers/0/attn/wq").unwrap();
+    let (_, u_after) = s.tensor_f32("params/layers/0/mlp/gate/u").unwrap();
+    assert_eq!(wq_before, wq_after, "dense params moved with lr_dense=0");
+    assert_ne!(u_before, u_after, "spectral factors should move");
+}
+
+#[test]
+fn pallas_preset_forward_matches_ref_preset() {
+    // The pallas-kernel-lowered HLO must produce the same forward numbers
+    // as the jnp-oracle path, run END TO END through the rust runtime.
+    let Some(root) = artifacts_root() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let m = Manifest::load(&root).unwrap();
+    if !m.presets.contains_key("tiny_r8_pallas") {
+        eprintln!("skipping: pallas preset not exported");
+        return;
+    }
+    let mut a = Session::open(&root, "tiny_r8").unwrap();
+    let mut b = Session::open(&root, "tiny_r8_pallas").unwrap();
+    a.init(5).unwrap();
+    b.init(5).unwrap(); // same init graph -> identical params
+
+    let fwd = a.preset.artifact("forward").unwrap();
+    let ti = fwd.input_index("tokens").unwrap();
+    let n = fwd.inputs[ti].elements();
+    let toks: Vec<i32> = (0..n).map(|i| ((i * 7) % 256) as i32).collect();
+
+    let (shape_a, logits_a) = a.forward(&toks).unwrap();
+    let (shape_b, logits_b) = b.forward(&toks).unwrap();
+    assert_eq!(shape_a, shape_b);
+    let max = logits_a.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+    for (i, (x, y)) in logits_a.iter().zip(&logits_b).enumerate() {
+        assert!(
+            (x - y).abs() < 1e-4 * max.max(1.0),
+            "logit {i}: ref {x} vs pallas {y}"
+        );
+    }
+}
+
+#[test]
+fn trainer_rejects_missing_preset() {
+    let Some(mut cfg) = base_cfg("tiny_r8", 1) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    cfg.preset = "no_such_preset".into();
+    assert!(Trainer::new(cfg).is_err());
+}

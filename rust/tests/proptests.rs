@@ -1,0 +1,292 @@
+//! Property-based tests over the rust substrates (in-tree testkit — the
+//! offline image has no proptest crate). Each property runs dozens to
+//! hundreds of seeded cases; failures print the seed + generation log.
+
+use sct::checkpoint::{read_checkpoint, write_checkpoint, NamedTensor};
+use sct::coordinator::config::{parse_toml, TomlValue};
+use sct::coordinator::schedule::Schedule;
+use sct::data::{Dataset, Tokenizer};
+use sct::memmodel::layer::{LayerMemory, TrainRegime};
+use sct::spectral::{qr_householder, qr_retract, svd, SpectralLinear};
+use sct::testkit::Prop;
+use sct::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// spectral math
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_qr_retract_orthonormal_and_span() {
+    Prop::new("qr orthonormal+span").cases(120).run(|g| {
+        let m = g.usize(2, 96);
+        let k = g.usize(1, m.min(24));
+        let scale = g.f32(0.1, 10.0);
+        let a = g.matrix(m, k, scale);
+        let q = qr_retract(&a);
+        g.check(q.ortho_error() < 2e-6, "ortho error >= 2e-6");
+        let recon = q.matmul(&q.t_matmul(&a));
+        g.check(
+            recon.max_abs_diff(&a) < 1e-3 * scale * (m as f32).sqrt(),
+            "span not preserved",
+        );
+    });
+}
+
+#[test]
+fn prop_qr_cgs2_matches_householder() {
+    Prop::new("cgs2 == householder+signfix").cases(60).run(|g| {
+        let m = g.usize(2, 48);
+        let k = g.usize(1, m.min(12));
+        let a = g.matrix(m, k, 1.0);
+        let q1 = qr_retract(&a);
+        let (q2, r) = qr_householder(&a);
+        g.check(q1.max_abs_diff(&q2) < 5e-3, "CGS2 and Householder disagree");
+        for j in 0..k {
+            g.check(r[(j, j)] >= 0.0, "R diagonal must be non-negative");
+        }
+    });
+}
+
+#[test]
+fn prop_qr_idempotent() {
+    Prop::new("retraction idempotent").cases(60).run(|g| {
+        let m = g.usize(2, 64);
+        let k = g.usize(1, m.min(16));
+        let q0 = qr_retract(&g.matrix(m, k, 1.0));
+        let q1 = qr_retract(&q0);
+        g.check(q1.max_abs_diff(&q0) < 1e-4, "retract(retract(A)) != retract(A)");
+    });
+}
+
+#[test]
+fn prop_svd_reconstruction_and_ortho() {
+    Prop::new("svd reconstructs").cases(40).run(|g| {
+        let m = g.usize(2, 28);
+        let n = g.usize(2, 28);
+        let scale = g.f32(0.2, 3.0);
+        let a = g.matrix(m, n, scale);
+        let d = svd(&a);
+        g.check(
+            d.reconstruct().max_abs_diff(&a) < 1e-3 * scale.max(1.0),
+            "A != U S V^T",
+        );
+        g.check(d.u.ortho_error() < 1e-4, "U not orthonormal");
+        g.check(d.v.ortho_error() < 1e-4, "V not orthonormal");
+        for w in d.s.windows(2) {
+            g.check(w[0] >= w[1] - 1e-4, "singular values not sorted");
+        }
+        g.check(d.s.iter().all(|&x| x >= 0.0), "negative singular value");
+    });
+}
+
+#[test]
+fn prop_svd_energy_rank_bounds() {
+    Prop::new("energy rank bounds").cases(60).run(|g| {
+        let m = g.usize(3, 24);
+        let n = g.usize(3, 24);
+        let d = svd(&g.matrix(m, n, 1.0));
+        let r50 = d.energy_rank(0.5);
+        let r95 = d.energy_rank(0.95);
+        g.check(r50 >= 1 && r50 <= r95, "rank not monotone in energy");
+        g.check(r95 <= m.min(n), "rank exceeds matrix rank");
+    });
+}
+
+#[test]
+fn prop_spectral_forward_matches_dense() {
+    Prop::new("factored fwd == dense fwd").cases(50).run(|g| {
+        let m = g.usize(2, 32);
+        let n = g.usize(2, 32);
+        let k = g.usize(1, m.min(n).min(8));
+        let b = g.usize(1, 6);
+        let mut rng = sct::util::rng::Rng::new(g.seed);
+        let layer = SpectralLinear::init(&mut rng, m, n, k);
+        let x = g.matrix(b, m, 1.0);
+        let (y, _) = layer.forward(&x);
+        let yd = x.matmul(&layer.to_dense());
+        g.check(y.max_abs_diff(&yd) < 1e-3, "factored != dense");
+    });
+}
+
+#[test]
+fn prop_layer_grads_have_compact_shapes() {
+    Prop::new("no (m,n) gradient exists").cases(40).run(|g| {
+        let m = g.usize(2, 40);
+        let n = g.usize(2, 40);
+        let k = g.usize(1, m.min(n).min(6));
+        let b = g.usize(1, 4);
+        let mut rng = sct::util::rng::Rng::new(g.seed);
+        let layer = SpectralLinear::init(&mut rng, m, n, k);
+        let x = g.matrix(b, m, 1.0);
+        let dy = g.matrix(b, n, 1.0);
+        let (_, cache) = layer.forward(&x);
+        let (dx, grads) = layer.backward(&x, &dy, &cache);
+        g.check(grads.du.rows == m && grads.du.cols == k, "dU shape");
+        g.check(grads.ds.len() == k, "ds shape");
+        g.check(grads.dv.rows == n && grads.dv.cols == k, "dV shape");
+        g.check(dx.rows == b && dx.cols == m, "dx shape");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// memory model
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_memmodel_invariants() {
+    Prop::new("memory model invariants").cases(150).run(|g| {
+        let m = g.usize(8, 40000);
+        let n = g.usize(8, 40000);
+        let k = g.usize(1, 512);
+        let l = LayerMemory::fp32(m, n);
+        // spectral beats dense iff k(m+n+1) < mn
+        let wins = l.spectral_params(k) < l.dense_params();
+        g.check(wins == (k * (m + n + 1) < m * n), "break-even point wrong");
+        // regime ordering
+        g.check(
+            l.dense_bytes(TrainRegime::AdamW) > l.dense_bytes(TrainRegime::Sgd),
+            "Adam must cost more than SGD",
+        );
+        g.check(
+            l.dense_bytes(TrainRegime::Sgd) > l.dense_bytes(TrainRegime::Frozen),
+            "SGD must cost more than frozen",
+        );
+        // GaLore sits between SCT and dense for small k
+        if k * (m + n + 1) < m * n / 4 {
+            g.check(
+                l.spectral_bytes(k, TrainRegime::AdamW) < l.galore_bytes(k),
+                "SCT should beat GaLore",
+            );
+            g.check(l.galore_bytes(k) < l.dense_bytes(TrainRegime::AdamW), "GaLore < dense");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// data pipeline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_tokenizer_roundtrip() {
+    Prop::new("bpe roundtrip").cases(20).run(|g| {
+        let words = ["spectral", "rank", "训练", "q", "factor ", "W=USV^T ", "🤖", "\n"];
+        let mut text = String::new();
+        let n = g.usize(10, 300);
+        for _ in 0..n {
+            text.push_str(words[g.usize(0, words.len() - 1)]);
+        }
+        let vocab = 256 + g.usize(0, 64);
+        let tok = Tokenizer::train_bpe(&text, vocab);
+        g.check(tok.decode(&tok.encode(&text)) == text, "lossy roundtrip");
+        g.check(
+            tok.encode(&text).iter().all(|&id| (id as usize) < tok.vocab_size),
+            "token id out of range",
+        );
+    });
+}
+
+#[test]
+fn prop_dataset_windows_partition_epoch() {
+    Prop::new("dataset epoch partition").cases(40).run(|g| {
+        let seq1 = g.usize(2, 40);
+        let batch = g.usize(1, 6);
+        let windows = g.usize(batch, 50);
+        let tokens: Vec<i32> = (0..(windows * seq1) as i32).collect();
+        let mut ds = Dataset::new(tokens, batch, seq1, g.seed);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..ds.batches_per_epoch() {
+            let b = ds.next_batch();
+            g.check(b.len() == batch * seq1, "batch size");
+            for r in 0..batch {
+                let start = b[r * seq1];
+                g.check(start as usize % seq1 == 0, "window misaligned");
+                g.check(seen.insert(start), "window repeated within epoch");
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// serialization
+// ---------------------------------------------------------------------------
+
+fn build_json(g: &mut sct::testkit::Gen, depth: usize) -> Json {
+    match if depth > 2 { g.usize(0, 3) } else { g.usize(0, 5) } {
+        0 => Json::Null,
+        1 => Json::Bool(g.bool()),
+        2 => Json::Num((g.f32(-1e6, 1e6) as f64 * 100.0).round() / 100.0),
+        3 => Json::Str(format!("s{}-\"quote\\slash\n", g.usize(0, 999))),
+        4 => Json::Arr((0..g.usize(0, 4)).map(|_| build_json(g, depth + 1)).collect()),
+        _ => Json::Obj(
+            (0..g.usize(0, 4))
+                .map(|i| (format!("k{i}"), build_json(g, depth + 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    Prop::new("json roundtrip").cases(80).run(|g| {
+        let v = build_json(g, 0);
+        let compact = Json::parse(&v.to_string());
+        let pretty = Json::parse(&v.to_string_pretty());
+        g.check(compact.as_ref().ok() == Some(&v), "compact roundtrip");
+        g.check(pretty.as_ref().ok() == Some(&v), "pretty roundtrip");
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip() {
+    Prop::new("checkpoint roundtrip").cases(25).run(|g| {
+        let dir = std::env::temp_dir().join(format!("sct_prop_{}", g.seed));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.sct");
+        let n_tensors = g.usize(1, 6);
+        let mut tensors = Vec::new();
+        for i in 0..n_tensors {
+            let rows = g.usize(1, 8);
+            let cols = g.usize(1, 8);
+            let vals = g.vec_f32(rows * cols, 10.0);
+            tensors.push(NamedTensor::f32(&format!("t{i}"), vec![rows, cols], &vals));
+        }
+        let step = g.usize(0, 1_000_000) as u64;
+        write_checkpoint(&path, step, &tensors).unwrap();
+        let (s2, back) = read_checkpoint(&path).unwrap();
+        g.check(s2 == step, "step mismatch");
+        g.check(back == tensors, "tensors mismatch");
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+// ---------------------------------------------------------------------------
+// config / schedules
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_schedule_bounds() {
+    Prop::new("schedule stays in [floor, peak]").cases(100).run(|g| {
+        let peak = g.f32(1e-6, 1.0);
+        let floor = peak * g.f32(0.0, 0.9);
+        let warmup = g.usize(0, 50);
+        let total = warmup + g.usize(1, 500);
+        let s = Schedule::WarmupCosine { peak, floor, warmup, total };
+        for step in [0, warmup, warmup + 1, total / 2, total, total * 2] {
+            let v = s.at(step);
+            g.check(v <= peak * 1.0001, "above peak");
+            g.check(v >= -1e-9, "negative LR");
+            if step >= warmup {
+                g.check(v >= floor * 0.999 - 1e-12, "below floor after warmup");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_toml_int_roundtrip() {
+    Prop::new("toml numeric parse").cases(60).run(|g| {
+        let i = g.usize(0, 1_000_000) as i64 - 500_000;
+        let doc = parse_toml(&format!("x = {i}\n")).unwrap();
+        g.check(doc[""]["x"] == TomlValue::Int(i), "int roundtrip");
+    });
+}
