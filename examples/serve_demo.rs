@@ -1,0 +1,128 @@
+//! Serving demo: the whole `serve` subsystem end-to-end on one machine.
+//!
+//! Starts the spectral inference server on a loopback port with a tiny
+//! random-init model (rank-8 spectral MLPs — no dense weight exists), fires
+//! 12 concurrent HTTP generation requests at it, verifies every one
+//! completes, checks that greedy requests are reproducible, and prints the
+//! queue/decode latency per request plus aggregate throughput. Finishes
+//! with the correctness anchor: the KV-cached decoder emits exactly the
+//! same tokens as the full re-encode baseline at temperature 0.
+//!
+//! Run: `cargo run --release --example serve_demo`
+
+use std::time::Instant;
+
+use sct::data::Tokenizer;
+use sct::serve::{
+    http_post_json, Engine, EngineConfig, SampleOpts, ServeConfig, Server, SpectralModel,
+};
+use sct::util::json::Json;
+
+const CLIENTS: usize = 12;
+const TOKENS_PER_REQUEST: usize = 24;
+
+fn main() -> anyhow::Result<()> {
+    let model_cfg = EngineConfig::default(); // the tiny_r8 testbed shape
+    let model = SpectralModel::init(model_cfg, 7);
+    println!("== SCT serve demo ==\n");
+    println!(
+        "model: d={} layers={} heads={} ffn={} vocab={} rank={} ({} params, factors only)",
+        model_cfg.d_model,
+        model_cfg.n_layers,
+        model_cfg.n_heads,
+        model_cfg.d_ffn,
+        model_cfg.vocab,
+        model_cfg.rank,
+        model.param_count(),
+    );
+
+    let serve_cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        slots: 8,
+        queue_depth: 32,
+        max_new_default: TOKENS_PER_REQUEST,
+    };
+    let server = Server::start(&serve_cfg, Engine::new(model), Tokenizer::byte_level())?;
+    println!(
+        "serving on http://{} with {} slots, queue depth {}\n",
+        server.addr, serve_cfg.slots, serve_cfg.queue_depth
+    );
+
+    // -- 12 concurrent clients ---------------------------------------------
+    let t0 = Instant::now();
+    let addr = server.addr;
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|i| {
+            std::thread::spawn(move || {
+                // Two greedy clients share a prompt (reproducibility probe);
+                // the rest sample with distinct seeds.
+                let body = if i < 2 {
+                    format!(
+                        r#"{{"prompt": "### Instruction: explain truncated SVD", "tokens": {TOKENS_PER_REQUEST}, "temperature": 0}}"#
+                    )
+                } else {
+                    format!(
+                        r#"{{"prompt": "client {i} asks about Stiefel manifolds", "tokens": {TOKENS_PER_REQUEST}, "temperature": 0.8, "seed": {i}}}"#
+                    )
+                };
+                http_post_json(addr, "/v1/generate", &body).expect("request failed")
+            })
+        })
+        .collect();
+    let responses: Vec<(u16, Json)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("{:<8} {:>8} {:>12} {:>12}", "client", "status", "queue ms", "decode ms");
+    let mut total_tokens = 0usize;
+    for (i, (code, body)) in responses.iter().enumerate() {
+        anyhow::ensure!(*code == 200, "client {i} got HTTP {code}: {body:?}");
+        let n = body.get("tokens").unwrap().as_arr()?.len();
+        anyhow::ensure!(n == TOKENS_PER_REQUEST, "client {i}: {n} tokens");
+        total_tokens += n;
+        println!(
+            "{i:<8} {code:>8} {:>12.2} {:>12.2}",
+            body.get("queue_ms").unwrap().as_f64()?,
+            body.get("decode_ms").unwrap().as_f64()?
+        );
+    }
+    println!(
+        "\nall {CLIENTS} concurrent requests completed: {total_tokens} tokens in {:.2}s ({:.0} tok/s aggregate)",
+        wall,
+        total_tokens as f64 / wall
+    );
+
+    // greedy reproducibility across requests
+    let greedy_a = responses[0].1.get("tokens").unwrap().to_string();
+    let greedy_b = responses[1].1.get("tokens").unwrap().to_string();
+    anyhow::ensure!(greedy_a == greedy_b, "greedy requests with one prompt must agree");
+    println!("greedy requests with identical prompts produced identical tokens");
+
+    let (admitted, completed, _tokens, peak) = server.stats();
+    println!("scheduler: admitted={admitted} completed={completed} peak_active={peak}");
+    anyhow::ensure!(completed == CLIENTS as u64, "scheduler must complete every request");
+    server.stop();
+
+    // -- correctness anchor: KV decode == re-encode baseline ----------------
+    println!("\nKV-cache equivalence check (temperature 0):");
+    let engine = Engine::new(SpectralModel::init(EngineConfig::default(), 7));
+    let prompt = Tokenizer::byte_level().encode("### Instruction: explain truncated SVD");
+    let opts = SampleOpts { temperature: 0.0, top_k: 0, seed: 0 };
+    let t_re = Instant::now();
+    let baseline = engine.generate_reencode(&prompt, 32, &opts);
+    let t_re = t_re.elapsed().as_secs_f64();
+    let mut kv = engine.new_kv(1);
+    let slot = kv.alloc().unwrap();
+    let t_kv = Instant::now();
+    let cached = engine.generate_kv(&prompt, 32, &opts, &mut kv, slot);
+    let t_kv = t_kv.elapsed().as_secs_f64();
+    anyhow::ensure!(baseline == cached, "KV decode diverged from the re-encode baseline");
+    println!(
+        "  token-identical over {} tokens; re-encode {:.1} ms vs KV {:.1} ms ({:.1}x)",
+        baseline.len(),
+        t_re * 1e3,
+        t_kv * 1e3,
+        t_re / t_kv.max(1e-9)
+    );
+    println!("\nserve demo OK");
+    Ok(())
+}

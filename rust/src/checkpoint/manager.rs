@@ -1,10 +1,22 @@
 //! Rotating checkpoint manager + session save/restore glue.
+//!
+//! The manager itself (directory layout, listing, pruning) is pure
+//! filesystem code; the [`Session`] save/restore glue needs the `pjrt`
+//! feature because session state lives in device literals.
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
+#[cfg(feature = "pjrt")]
+use std::path::Path;
+
+#[cfg(feature = "pjrt")]
+use anyhow::bail;
+
+#[cfg(feature = "pjrt")]
 use super::format::{read_checkpoint, write_checkpoint, NamedTensor};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{DType, Session};
 
 /// Saves `step_NNNNNN.sct` files in a directory, keeping the newest `keep`.
@@ -42,6 +54,7 @@ impl CheckpointManager {
     }
 
     /// Save the full session state; prune old checkpoints beyond `keep`.
+    #[cfg(feature = "pjrt")]
     pub fn save(&self, session: &Session) -> Result<PathBuf> {
         let specs = session.state_specs().to_vec();
         let state = session.state();
@@ -71,6 +84,7 @@ impl CheckpointManager {
 
     /// Restore the latest checkpoint into the session (names must match the
     /// manifest state layout exactly). Returns the restored step.
+    #[cfg(feature = "pjrt")]
     pub fn restore_latest(&self, session: &mut Session) -> Result<u64> {
         let list = self.list()?;
         let Some((_, path)) = list.last() else {
@@ -79,6 +93,7 @@ impl CheckpointManager {
         self.restore(session, path)
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn restore(&self, session: &mut Session, path: &Path) -> Result<u64> {
         let (step, tensors) = read_checkpoint(path)?;
         let specs = session.state_specs().to_vec();
@@ -111,6 +126,7 @@ impl CheckpointManager {
         Ok(step)
     }
 
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))] // only save() prunes
     fn prune(&self) -> Result<()> {
         let list = self.list()?;
         if list.len() > self.keep {
@@ -125,6 +141,7 @@ impl CheckpointManager {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::checkpoint::format::{write_checkpoint, NamedTensor};
 
     #[test]
     fn list_and_prune_ordering() {

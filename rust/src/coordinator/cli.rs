@@ -6,17 +6,29 @@
 //! * `validate-70b` — Table 2 + Figure 1 (70B step, true factor shapes)
 //! * `finetune`     — Table 4 (dense -> 95%-energy spectral conversion)
 //! * `mem-report`   — Table 1 / Figure 1 analytic memory model
+//! * `serve`        — pure-Rust spectral inference server (KV cache +
+//!   continuous batching; no PJRT needed)
 //! * `info`         — list presets in the artifact manifest
+//!
+//! Training subcommands execute AOT artifacts through PJRT and need the
+//! `pjrt` feature; without it they exit with a pointer to the feature flag.
 
 use anyhow::{bail, Result};
 
+use super::validate70b;
+#[cfg(feature = "pjrt")]
 use super::config::RunConfig;
+#[cfg(feature = "pjrt")]
 use super::schedule::LrPlan;
-use super::{finetune, sweep, validate70b};
+#[cfg(feature = "pjrt")]
+use super::{finetune, sweep};
 use crate::memmodel::report;
-use crate::metrics::export;
 use crate::runtime::Manifest;
+use crate::serve;
 use crate::util::args::Command;
+
+#[cfg(feature = "pjrt")]
+use crate::metrics::export;
 
 pub fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -31,6 +43,7 @@ pub fn run() -> Result<()> {
         "validate-70b" => cmd_validate_70b(&rest),
         "finetune" => cmd_finetune(&rest),
         "generate" => cmd_generate(&rest),
+        "serve" => cmd_serve(&rest),
         "mem-report" => cmd_mem_report(&rest),
         "info" => cmd_info(&rest),
         "help" | "--help" | "-h" => {
@@ -50,12 +63,23 @@ fn print_usage() {
          \x20 validate-70b  70B-step validation: Table 2 + Figure 1\n\
          \x20 finetune      gradient-integrity fine-tune: Table 4\n\
          \x20 generate      sample text from a (trained) spectral model\n\
+         \x20 serve         spectral inference server (KV cache + batching)\n\
          \x20 mem-report    analytic memory model: Table 1 / Figure 1\n\
          \x20 info          list presets in the manifest\n\n\
          `sct <subcommand> --help` for options"
     );
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn needs_pjrt(cmd: &str) -> Result<()> {
+    bail!(
+        "`sct {cmd}` executes AOT artifacts through PJRT, which this binary \
+         was built without; rebuild with `cargo build --features pjrt` \
+         (pure-Rust subcommands: serve, validate-70b, mem-report, info)"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn base_config(args: &crate::util::args::Args) -> Result<RunConfig> {
     let mut cfg = RunConfig::default();
     if let Some(path) = args.get("config") {
@@ -88,6 +112,7 @@ fn base_config(args: &crate::util::args::Args) -> Result<RunConfig> {
     Ok(cfg)
 }
 
+#[cfg(feature = "pjrt")]
 fn train_cmd_spec() -> Command {
     Command::new("sct train", "run one training job")
         .opt("config", "TOML config file ([train]/[lr] sections)")
@@ -104,6 +129,7 @@ fn train_cmd_spec() -> Command {
         .flag("resume", "resume from newest checkpoint if present")
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_train(argv: &[String]) -> Result<()> {
     let spec = train_cmd_spec();
     let args = spec.parse(argv)?;
@@ -145,6 +171,12 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_argv: &[String]) -> Result<()> {
+    needs_pjrt("train")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_sweep(argv: &[String]) -> Result<()> {
     let spec = Command::new("sct sweep", "rank sweep (Table 3, Figures 2-3)")
         .opt("config", "TOML config file")
@@ -181,6 +213,11 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_sweep(_argv: &[String]) -> Result<()> {
+    needs_pjrt("sweep")
+}
+
 fn cmd_validate_70b(argv: &[String]) -> Result<()> {
     let spec = Command::new("sct validate-70b", "70B-step validation (Table 2, Figure 1)")
         .opt_default("rank", "spectral rank k", "32")
@@ -195,6 +232,7 @@ fn cmd_validate_70b(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_finetune(argv: &[String]) -> Result<()> {
     let spec = Command::new("sct finetune", "gradient-integrity fine-tune (Table 4)")
         .opt_default("pretrain-steps", "dense pre-training steps", "150")
@@ -216,6 +254,12 @@ fn cmd_finetune(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_finetune(_argv: &[String]) -> Result<()> {
+    needs_pjrt("finetune")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_generate(argv: &[String]) -> Result<()> {
     let spec = Command::new("sct generate", "sample text from a spectral model")
         .opt_default("preset", "artifact preset", "tiny_r8")
@@ -291,6 +335,88 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
     let n: usize = args.parse_num("tokens", 48)?;
     let out = super::generate::generate_text(&mut session, &tokenizer, prompt, n, opts)?;
     println!("\nprompt: {prompt}\ncompletion: {out}");
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_generate(_argv: &[String]) -> Result<()> {
+    needs_pjrt("generate")
+}
+
+/// `sct serve` — the pure-Rust spectral inference server. Runs without PJRT:
+/// the engine computes `x → (xU)⊙s → (·)Vᵀ` natively, so a random-init or
+/// checkpointed model serves on any machine the crate builds on.
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    // Server-sizing options deliberately carry no parser-level default:
+    // `opt_default` would pre-populate the value and silently override the
+    // `[serve]` TOML section. Layering is ServeConfig::default < TOML < flag.
+    let spec = Command::new("sct serve", "spectral inference server (KV cache + batching)")
+        .opt("config", "TOML config file ([serve] section)")
+        .opt("addr", "listen address [default: 127.0.0.1:8077]")
+        .opt("slots", "concurrent decode slots (KV cache arena size) [default: 8]")
+        .opt("queue-depth", "bounded admission queue depth [default: 32]")
+        .opt("max-new", "default tokens per request [default: 48]")
+        .opt("ckpt", "serve checkpoint (.sct written by SpectralModel::save)")
+        .opt_default("seed", "weight-init / tokenizer seed", "0")
+        .opt_default("vocab", "vocab size (random-init model)", "256")
+        .opt_default("d-model", "model width (random-init model)", "64")
+        .opt_default("layers", "transformer layers (random-init model)", "2")
+        .opt_default("heads", "attention heads (random-init model)", "4")
+        .opt_default("ffn", "FFN width (random-init model)", "192")
+        .opt_default("rank", "spectral rank k (random-init model)", "8")
+        .opt_default("max-seq", "max sequence length (KV capacity)", "128");
+    let args = spec.parse(argv)?;
+
+    let mut serve_cfg = serve::ServeConfig::default();
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        serve_cfg.apply_toml(&super::config::parse_toml(&text)?)?;
+    }
+    if let Some(a) = args.get("addr") {
+        serve_cfg.addr = a.to_string();
+    }
+    serve_cfg.slots = args.parse_num("slots", serve_cfg.slots)?;
+    serve_cfg.queue_depth = args.parse_num("queue-depth", serve_cfg.queue_depth)?;
+    serve_cfg.max_new_default = args.parse_num("max-new", serve_cfg.max_new_default)?;
+    anyhow::ensure!(serve_cfg.slots > 0, "--slots must be at least 1");
+
+    let seed: u64 = args.parse_num("seed", 0)?;
+    let model = if let Some(ckpt) = args.get("ckpt") {
+        let m = serve::SpectralModel::load(std::path::Path::new(ckpt))?;
+        println!("restored serve checkpoint {ckpt}");
+        m
+    } else {
+        let cfg = serve::EngineConfig {
+            vocab: args.parse_num("vocab", 256)?,
+            d_model: args.parse_num("d-model", 64)?,
+            n_layers: args.parse_num("layers", 2)?,
+            n_heads: args.parse_num("heads", 4)?,
+            d_ffn: args.parse_num("ffn", 192)?,
+            rank: args.parse_num("rank", 8)?,
+            max_seq: args.parse_num("max-seq", 128)?,
+        };
+        serve::SpectralModel::init(cfg, seed)
+    };
+    let m = &model.cfg;
+    println!(
+        "model: d={} layers={} heads={} ffn={} vocab={} rank={} max_seq={} ({} params, no dense W)",
+        m.d_model, m.n_layers, m.n_heads, m.d_ffn, m.vocab, m.rank, m.max_seq,
+        model.param_count(),
+    );
+
+    let tokenizer = if m.vocab <= 256 {
+        crate::data::Tokenizer::byte_level()
+    } else {
+        let text = crate::data::CorpusGen::new(seed).generate(1 << 20);
+        crate::data::Tokenizer::train_bpe(&text, m.vocab)
+    };
+
+    let server = serve::Server::start(&serve_cfg, serve::Engine::new(model), tokenizer)?;
+    println!(
+        "serving on http://{}  (slots={}, queue={}; POST /v1/generate, GET /healthz, GET /v1/stats)",
+        server.addr, serve_cfg.slots, serve_cfg.queue_depth
+    );
+    server.join();
     Ok(())
 }
 

@@ -164,9 +164,8 @@ impl Default for RunConfig {
 impl RunConfig {
     /// Apply a `[train]` section from a TOML file.
     pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
-        static EMPTY: once_cell::sync::Lazy<BTreeMap<String, TomlValue>> =
-            once_cell::sync::Lazy::new(BTreeMap::new);
-        let t = doc.get("train").unwrap_or(&EMPTY);
+        let empty = BTreeMap::new();
+        let t = doc.get("train").unwrap_or(&empty);
         if let Some(v) = t.get("preset") {
             self.preset = v.as_str()?.to_string();
         }

@@ -8,6 +8,10 @@
 //! the window slides by half (positions are absolute RoPE, so a slide is a
 //! re-encode, not a KV shift — the artifact has no KV cache; this is the
 //! simple-and-correct baseline decoder).
+//!
+//! For KV-cached incremental decoding and batched serving, see
+//! [`crate::serve`] — the sampler ([`SampleOpts`], [`sample_logits`]) is
+//! shared with that engine so both paths sample identically.
 
 use anyhow::{Context, Result};
 
@@ -15,21 +19,7 @@ use crate::data::Tokenizer;
 use crate::runtime::Session;
 use crate::util::rng::Rng;
 
-/// Sampling configuration.
-#[derive(Debug, Clone)]
-pub struct SampleOpts {
-    /// 0.0 => greedy argmax.
-    pub temperature: f32,
-    /// keep only the top-k logits before sampling (0 = all).
-    pub top_k: usize,
-    pub seed: u64,
-}
-
-impl Default for SampleOpts {
-    fn default() -> SampleOpts {
-        SampleOpts { temperature: 0.8, top_k: 40, seed: 0 }
-    }
-}
+pub use crate::serve::engine::{sample_logits, SampleOpts};
 
 pub struct Generator<'s> {
     session: &'s mut Session,
@@ -75,47 +65,12 @@ impl<'s> Generator<'s> {
             let (shape, logits) = self.session.forward(&tokens)?;
             debug_assert_eq!(shape, vec![self.batch, self.seq, self.vocab]);
             let row = &logits[(len - 1) * self.vocab..len * self.vocab];
-            let next = self.sample(row);
+            let next = sample_logits(row, self.opts.temperature, self.opts.top_k, &mut self.rng);
             out.push(next);
             context.push(next);
         }
         Ok(out)
     }
-
-    fn sample(&mut self, logits: &[f32]) -> i32 {
-        if self.opts.temperature <= 0.0 {
-            return argmax(logits) as i32;
-        }
-        // top-k filter
-        let k = if self.opts.top_k == 0 { logits.len() } else { self.opts.top_k.min(logits.len()) };
-        let mut idx: Vec<usize> = (0..logits.len()).collect();
-        idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
-        let kept = &idx[..k];
-        // softmax over kept at temperature
-        let t = self.opts.temperature;
-        let mx = logits[kept[0]];
-        let weights: Vec<f64> =
-            kept.iter().map(|&i| (((logits[i] - mx) / t) as f64).exp()).collect();
-        let total: f64 = weights.iter().sum();
-        let mut u = self.rng.f64() * total;
-        for (w, &i) in weights.iter().zip(kept) {
-            u -= w;
-            if u <= 0.0 {
-                return i as i32;
-            }
-        }
-        kept[k - 1] as i32
-    }
-}
-
-fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
-    for (i, &x) in xs.iter().enumerate() {
-        if x > xs[best] {
-            best = i;
-        }
-    }
-    best
 }
 
 /// End-to-end convenience: tokenize a text prompt with the standard corpus
@@ -136,46 +91,4 @@ pub fn generate_text(
     let mut g = Generator::new(session, opts)?;
     let out = g.generate(&ids, n_tokens).context("generation failed")?;
     Ok(tokenizer.decode(&out))
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn argmax_basics() {
-        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
-        assert_eq!(argmax(&[-5.0, -1.0]), 1);
-    }
-
-    #[test]
-    fn sampling_math_is_deterministic_per_seed() {
-        // Pure sampler test without a session: emulate via direct calls.
-        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.3).sin()).collect();
-        let sample_once = |seed: u64| -> Vec<usize> {
-            let mut rng = Rng::new(seed);
-            let t = 0.8f32;
-            let mut idx: Vec<usize> = (0..logits.len()).collect();
-            idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
-            let kept = &idx[..8];
-            let mx = logits[kept[0]];
-            let weights: Vec<f64> =
-                kept.iter().map(|&i| (((logits[i] - mx) / t) as f64).exp()).collect();
-            let total: f64 = weights.iter().sum();
-            (0..20)
-                .map(|_| {
-                    let mut u = rng.f64() * total;
-                    for (w, &i) in weights.iter().zip(kept) {
-                        u -= w;
-                        if u <= 0.0 {
-                            return i;
-                        }
-                    }
-                    kept[7]
-                })
-                .collect()
-        };
-        assert_eq!(sample_once(5), sample_once(5));
-        assert_ne!(sample_once(5), sample_once(6));
-    }
 }

@@ -6,16 +6,25 @@
 //! driver per experiment ([`sweep`] = Table 3 / Figs 2-3, [`finetune`] =
 //! Table 4, [`validate70b`] = Table 2 / Fig 1). The [`cli`] exposes each as
 //! a subcommand of the `sct` launcher.
+//!
+//! Drivers that execute AOT artifacts ([`trainer`], [`sweep`], [`finetune`],
+//! [`generate`]) require the `pjrt` feature; [`config`], [`schedule`],
+//! [`validate70b`] and the CLI shell are always built.
 
 pub mod cli;
 pub mod config;
+#[cfg(feature = "pjrt")]
 pub mod finetune;
+#[cfg(feature = "pjrt")]
 pub mod generate;
 pub mod schedule;
+#[cfg(feature = "pjrt")]
 pub mod sweep;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 pub mod validate70b;
 
 pub use config::RunConfig;
 pub use schedule::{LrPlan, Schedule};
+#[cfg(feature = "pjrt")]
 pub use trainer::{RunSummary, Trainer};

@@ -14,7 +14,9 @@ use super::dataset::Dataset;
 
 /// Handle to a background batch producer.
 pub struct Prefetcher {
-    rx: mpsc::Receiver<Vec<i32>>,
+    /// `Option` so Drop can drop the receiver *before* joining the producer
+    /// (a blocked `send` returns `Err` once the receiver is gone).
+    rx: Option<mpsc::Receiver<Vec<i32>>>,
     handle: Option<JoinHandle<()>>,
 }
 
@@ -39,26 +41,25 @@ impl Prefetcher {
                 }
             })
             .expect("spawn prefetch thread");
-        Prefetcher { rx, handle: Some(handle) }
+        Prefetcher { rx: Some(rx), handle: Some(handle) }
     }
 
     /// Blocking fetch of the next item (producer keeps the queue warm).
     pub fn next(&self) -> Vec<i32> {
-        self.rx.recv().expect("prefetch thread died")
+        self.rx
+            .as_ref()
+            .expect("prefetcher already shut down")
+            .recv()
+            .expect("prefetch thread died")
     }
 }
 
 impl Drop for Prefetcher {
     fn drop(&mut self) {
-        // Drop the receiver end first (rx is dropped with self); the
-        // producer notices on its next send and exits. Detach politely.
+        // Drop the receiver first: a producer blocked in `send` (full queue)
+        // gets an Err immediately and exits, so the join cannot hang.
+        drop(self.rx.take());
         if let Some(h) = self.handle.take() {
-            // Drain one pending item so a blocked producer wakes up.
-            let _ = self.rx.try_recv();
-            drop(std::mem::replace(&mut self.rx, {
-                let (_tx, rx) = mpsc::sync_channel(1);
-                rx
-            }));
             let _ = h.join();
         }
     }
@@ -95,6 +96,22 @@ mod tests {
         let pf = Prefetcher::spawn(dataset(2), 1, 2);
         let _ = pf.next();
         drop(pf); // must not hang
+    }
+
+    #[test]
+    fn drop_under_load_joins_blocked_producer() {
+        // Regression for the dummy-channel Drop hack: with a full queue the
+        // producer sits blocked in `send`; dropping the Prefetcher must wake
+        // it (receiver gone => send errors) and join, never deadlock. Repeat
+        // to catch both block-in-send and between-sends timings.
+        for i in 0..20u64 {
+            let pf = Prefetcher::spawn(dataset(i), 1, 1);
+            // Give the producer time to fill the queue and block in send.
+            if i % 2 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            drop(pf);
+        }
     }
 
     #[test]

@@ -12,19 +12,26 @@
 //! Layer map:
 //! * [`runtime`] — PJRT client wrapper: loads AOT-compiled HLO artifacts
 //!   (produced once by `python/compile/aot.py`) and executes them with
-//!   device-resident state. Python never runs at training time.
+//!   device-resident state. Python never runs at training time. Execution
+//!   requires the `pjrt` feature; the manifest/dtype layer is always built.
 //! * [`coordinator`] — the training orchestrator: config, LR schedules,
-//!   trainer loop, rank-sweep / fine-tune drivers.
+//!   trainer loop, rank-sweep / fine-tune drivers (drivers need `pjrt`).
+//! * [`serve`] — the pure-Rust spectral inference engine: KV-cached
+//!   incremental decoding, continuous-batching scheduler, and a std-net
+//!   HTTP server — the deployment side of "never materialized", no PJRT
+//!   required.
 //! * [`spectral`] — pure-Rust spectral linear algebra substrate (matrix ops,
 //!   Householder QR, Jacobi SVD, AdamW, a native SpectralLinear layer) used
-//!   for baselines, property tests, and true-shape 70B phase benchmarks.
+//!   for baselines, property tests, true-shape 70B phase benchmarks, and
+//!   the serving forward path.
 //! * [`memmodel`] — the analytic training-memory model that regenerates the
 //!   paper's Table 1 / Table 2 / Figure 1 numbers exactly.
 //! * [`data`] — tokenizer, synthetic instruction corpus (Alpaca substitute),
 //!   packing, batching, async prefetch.
 //! * [`metrics`] — loss/PPL tracking with the paper's window-50 smoothing,
 //!   CSV/JSON export and ASCII plots for the figures.
-//! * [`checkpoint`] — binary checkpoint format for spectral factors.
+//! * [`checkpoint`] — binary checkpoint format for spectral factors (shared
+//!   by training sessions and serve models).
 
 pub mod checkpoint;
 pub mod coordinator;
@@ -32,6 +39,7 @@ pub mod data;
 pub mod memmodel;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod spectral;
 pub mod testkit;
 pub mod util;

@@ -17,8 +17,15 @@ pub struct Tracker {
 }
 
 impl Tracker {
+    /// `window == 0` is clamped to 1 (a zero window would divide by zero in
+    /// the smoothing; callers passing a config value stay safe).
     pub fn new(window: usize) -> Tracker {
-        Tracker { losses: Vec::new(), step_seconds: Vec::new(), window, started: Instant::now() }
+        Tracker {
+            losses: Vec::new(),
+            step_seconds: Vec::new(),
+            window: window.max(1),
+            started: Instant::now(),
+        }
     }
 
     /// Paper configuration: window = 50.
@@ -81,17 +88,24 @@ impl Tracker {
     }
 
     /// (min, final smoothed) losses — convergence-floor reporting (§4.3).
+    /// Empty series: `(NaN, NaN)` rather than `(inf, NaN)` so exporters can
+    /// treat "no data" uniformly.
     pub fn loss_floor(&self) -> (f32, f32) {
+        if self.losses.is_empty() {
+            return (f32::NAN, f32::NAN);
+        }
         let min = self.losses.iter().cloned().fold(f32::INFINITY, f32::min);
         (min, self.smoothed_loss())
     }
 }
 
+/// Mean of the trailing `window` values; empty input gives NaN, a series
+/// shorter than the window averages what exists (the paper's warmup rule).
 fn smooth_tail(xs: &[f32], window: usize) -> f32 {
     if xs.is_empty() {
         return f32::NAN;
     }
-    let n = xs.len().min(window);
+    let n = xs.len().min(window.max(1));
     xs[xs.len() - n..].iter().sum::<f32>() / n as f32
 }
 
@@ -142,6 +156,45 @@ mod tests {
     fn empty_tracker_is_sane() {
         let t = Tracker::paper();
         assert!(t.smoothed_loss().is_nan());
+        assert!(t.ppl().is_nan());
         assert_eq!(t.mean_step_s(), 0.0);
+        assert!(t.smoothed_series().is_empty());
+        let (min, fin) = t.loss_floor();
+        assert!(min.is_nan() && fin.is_nan());
+    }
+
+    #[test]
+    fn window_one_is_the_raw_series() {
+        let mut t = Tracker::new(1);
+        for l in [3.0, 1.0, 4.0] {
+            t.record(l, 0.0);
+        }
+        assert_eq!(t.smoothed_loss(), 4.0);
+        assert_eq!(t.smoothed_series(), vec![3.0, 1.0, 4.0]);
+        assert!((t.ppl() - 4.0f32.exp()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn window_zero_is_clamped_to_one() {
+        let mut t = Tracker::new(0);
+        t.record(2.0, 0.0);
+        t.record(6.0, 0.0);
+        assert_eq!(t.window, 1);
+        assert_eq!(t.smoothed_loss(), 6.0);
+        assert_eq!(t.smoothed_series(), vec![2.0, 6.0]);
+    }
+
+    #[test]
+    fn paper_window_on_shorter_series_averages_what_exists() {
+        // window=50 with only 4 points: mean of all 4, not a panic or NaN.
+        let mut t = Tracker::new(50);
+        for l in [2.0, 4.0, 6.0, 8.0] {
+            t.record(l, 0.1);
+        }
+        assert!((t.smoothed_loss() - 5.0).abs() < 1e-6);
+        assert!((t.ppl() - 5.0f32.exp()).abs() < 1e-2);
+        let (min, fin) = t.loss_floor();
+        assert_eq!(min, 2.0);
+        assert!((fin - 5.0).abs() < 1e-6);
     }
 }

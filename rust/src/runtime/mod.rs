@@ -15,12 +15,19 @@
 //! * [`session`] — the training session: owns compiled executables and the
 //!   state buffers (params + optimizer moments), feeds step outputs back as
 //!   next-step inputs, syncing only the loss scalar to the host.
+//!
+//! Execution ([`client`], [`session`]) requires the `pjrt` feature — the
+//! offline default build keeps only the manifest/dtype layer, which the
+//! checkpoint format and the pure-Rust `serve` engine use.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod session;
 pub mod tensor;
 
 pub use artifact::{ArtifactSpec, Manifest, ModelSpec, PresetManifest, TensorSpec};
+#[cfg(feature = "pjrt")]
 pub use session::Session;
 pub use tensor::DType;

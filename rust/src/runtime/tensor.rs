@@ -1,4 +1,8 @@
 //! Dtype plumbing between manifest specs, host buffers and `xla::Literal`s.
+//!
+//! [`DType`] and its parsing are always available (the checkpoint format and
+//! the `serve` engine depend on them); the literal constructors/readers need
+//! the `pjrt` feature.
 
 use anyhow::{bail, Result};
 
@@ -28,6 +32,7 @@ impl DType {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn element_type(&self) -> xla::ElementType {
         match self {
             DType::F32 => xla::ElementType::F32,
@@ -42,6 +47,7 @@ impl DType {
 }
 
 /// Build a literal from raw little-endian bytes + spec.
+#[cfg(feature = "pjrt")]
 pub fn literal_from_bytes(dtype: DType, shape: &[usize], bytes: &[u8]) -> Result<xla::Literal> {
     let expected = shape.iter().product::<usize>() * dtype.size_bytes();
     if bytes.len() != expected {
@@ -50,31 +56,37 @@ pub fn literal_from_bytes(dtype: DType, shape: &[usize], bytes: &[u8]) -> Result
     Ok(xla::Literal::create_from_shape_and_untyped_data(dtype.element_type(), shape, bytes)?)
 }
 
+#[cfg(feature = "pjrt")]
 pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
     let bytes: &[u8] =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     literal_from_bytes(DType::F32, shape, bytes)
 }
 
+#[cfg(feature = "pjrt")]
 pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
     let bytes: &[u8] =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     literal_from_bytes(DType::I32, shape, bytes)
 }
 
+#[cfg(feature = "pjrt")]
 pub fn scalar_f32(v: f32) -> xla::Literal {
     xla::Literal::scalar(v)
 }
 
+#[cfg(feature = "pjrt")]
 pub fn scalar_i32(v: i32) -> xla::Literal {
     xla::Literal::scalar(v)
 }
 
 /// Read a literal back to an f32 vec (checks the element type).
+#[cfg(feature = "pjrt")]
 pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
 }
 
+#[cfg(feature = "pjrt")]
 pub fn to_i32_vec(lit: &xla::Literal) -> Result<Vec<i32>> {
     Ok(lit.to_vec::<i32>()?)
 }
@@ -91,6 +103,7 @@ mod tests {
         assert!(DType::parse("bfloat16").is_err());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_shape_mismatch_errors() {
         let bytes = vec![0u8; 12];
@@ -98,6 +111,7 @@ mod tests {
         assert!(literal_from_bytes(DType::F32, &[3], &bytes).is_ok());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_f32_roundtrip() {
         let data = vec![1.0f32, -2.5, 3.25, 0.0, 5.5, -6.0];
@@ -106,6 +120,7 @@ mod tests {
         assert_eq!(lit.element_count(), 6);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_i32_roundtrip() {
         let data = vec![1i32, -2, 3, 4];

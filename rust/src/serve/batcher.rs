@@ -1,0 +1,387 @@
+//! Continuous-batching scheduler: bounded admission queue, slot-based
+//! admission, batched decode, eviction of finished sequences.
+//!
+//! One scheduler thread owns the [`Engine`] and the [`KvCache`] arena.
+//! Clients submit [`Request`]s through a bounded `sync_channel` (the same
+//! backpressure idiom as `data::loader` — a full queue blocks the submitter
+//! instead of buffering unboundedly). The scheduler loop:
+//!
+//! 1. **admit** — while free slots exist, pull queued requests (blocking
+//!    when idle, opportunistic `try_recv` otherwise), claim a KV slot, and
+//!    prefill the prompt;
+//! 2. **batch** — decode ONE token for every active sequence in a single
+//!    [`Engine::step_batch`] call, so all sequences share the weight-matrix
+//!    traffic of the projections and the logits head;
+//! 3. **evict** — sequences that hit their token budget or fill their KV
+//!    line release the slot (recycled by the next admission) and their
+//!    [`Completion`] is delivered on the per-request channel.
+//!
+//! Sequences join and leave the batch at token granularity — a long request
+//! never blocks a short one behind it (continuous batching), though a
+//! prompt's prefill currently runs inline in the admission step (chunked
+//! prefill is a ROADMAP item).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::engine::{sample_logits, Engine, SampleOpts};
+use super::kv::SlotId;
+use crate::util::rng::Rng;
+
+/// One generation request (token ids in, token ids out).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub opts: SampleOpts,
+}
+
+/// Result of a finished request, with queue/decode timing for the latency
+/// accounting the throughput bench reports.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// Time spent waiting for a slot (admission latency).
+    pub queue_ms: f64,
+    /// Prefill + decode wall time.
+    pub decode_ms: f64,
+}
+
+/// Shared scheduler counters (read via [`Batcher::stats`]).
+#[derive(Debug, Default)]
+pub struct BatchStats {
+    pub admitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub tokens_out: AtomicU64,
+    pub peak_active: AtomicU64,
+}
+
+impl BatchStats {
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.admitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.tokens_out.load(Ordering::Relaxed),
+            self.peak_active.load(Ordering::Relaxed),
+        )
+    }
+}
+
+struct Job {
+    req: Request,
+    done: SyncSender<Completion>,
+    enqueued: Instant,
+}
+
+/// An admitted sequence holding a KV slot.
+struct ActiveSeq {
+    slot: SlotId,
+    cur: i32,
+    produced: Vec<i32>,
+    max_new: usize,
+    rng: Rng,
+    opts: SampleOpts,
+    prompt_len: usize,
+    done: SyncSender<Completion>,
+    queue_ms: f64,
+    admitted_at: Instant,
+}
+
+/// Handle to the scheduler thread. Dropping it closes the queue and joins
+/// the thread after in-flight sequences finish.
+pub struct Batcher {
+    // Mutex<Option<..>> rather than a bare SyncSender so `&Batcher` can be
+    // shared across connection-handler threads on any rustc the image ships
+    // (SyncSender: Sync is a recent guarantee); submitters clone the sender
+    // out and send OUTSIDE the lock so backpressure never holds the mutex.
+    tx: Mutex<Option<SyncSender<Job>>>,
+    handle: Option<JoinHandle<()>>,
+    stats: Arc<BatchStats>,
+    pub slots: usize,
+    pub queue_depth: usize,
+}
+
+impl Batcher {
+    /// Spawn the scheduler with `slots` concurrent sequences and a bounded
+    /// queue of `queue_depth` waiting requests.
+    pub fn spawn(engine: Engine, slots: usize, queue_depth: usize) -> Batcher {
+        assert!(slots > 0, "need at least one decode slot");
+        let (tx, rx) = mpsc::sync_channel::<Job>(queue_depth.max(1));
+        let stats = Arc::new(BatchStats::default());
+        let stats_worker = stats.clone();
+        let handle = std::thread::Builder::new()
+            .name("sct-batcher".into())
+            .spawn(move || scheduler_loop(engine, slots, rx, stats_worker))
+            .expect("spawn batcher thread");
+        Batcher { tx: Mutex::new(Some(tx)), handle: Some(handle), stats, slots, queue_depth }
+    }
+
+    /// Enqueue a request; blocks when the admission queue is full
+    /// (backpressure). Returns the channel the completion arrives on.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Completion>> {
+        let tx = self
+            .tx
+            .lock()
+            .unwrap()
+            .as_ref()
+            .cloned()
+            .ok_or_else(|| anyhow!("batcher is shut down"))?;
+        let (done, done_rx) = mpsc::sync_channel(1);
+        tx.send(Job { req, done, enqueued: Instant::now() })
+            .map_err(|_| anyhow!("batcher thread died"))?;
+        Ok(done_rx)
+    }
+
+    /// Non-blocking submit: errors immediately when the queue is full
+    /// instead of applying backpressure (load-shedding for the server).
+    pub fn try_submit(&self, req: Request) -> Result<Receiver<Completion>> {
+        let tx = self
+            .tx
+            .lock()
+            .unwrap()
+            .as_ref()
+            .cloned()
+            .ok_or_else(|| anyhow!("batcher is shut down"))?;
+        let (done, done_rx) = mpsc::sync_channel(1);
+        match tx.try_send(Job { req, done, enqueued: Instant::now() }) {
+            Ok(()) => Ok(done_rx),
+            Err(TrySendError::Full(_)) => Err(anyhow!("admission queue full")),
+            Err(TrySendError::Disconnected(_)) => Err(anyhow!("batcher thread died")),
+        }
+    }
+
+    /// Submit and block until the completion arrives.
+    pub fn generate(&self, req: Request) -> Result<Completion> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| anyhow!("batcher dropped the request"))
+    }
+
+    pub fn stats(&self) -> &BatchStats {
+        &self.stats
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        // Close the queue first so the scheduler drains and exits, then join.
+        drop(self.tx.lock().unwrap().take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn scheduler_loop(engine: Engine, slots: usize, rx: Receiver<Job>, stats: Arc<BatchStats>) {
+    let cfg = *engine.cfg();
+    let mut kv = engine.new_kv(slots);
+    let mut active: Vec<ActiveSeq> = Vec::with_capacity(slots);
+    loop {
+        // -- admit -----------------------------------------------------------
+        while active.len() < slots {
+            let job = if active.is_empty() {
+                // idle: block for work; a closed queue means shutdown
+                match rx.recv() {
+                    Ok(j) => j,
+                    Err(_) => return,
+                }
+            } else {
+                // decoding: only take what is already waiting
+                match rx.try_recv() {
+                    Ok(j) => j,
+                    Err(_) => break,
+                }
+            };
+            let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
+            let slot = kv.alloc().expect("active < slots implies a free slot");
+            let admitted_at = Instant::now();
+
+            // budget the context window: cap the generation length, keep the
+            // prompt tail that fits in front of it (absolute RoPE positions,
+            // so a long prompt is truncated, not slid).
+            let max_new = job.req.max_new.clamp(1, cfg.max_seq - 1);
+            let keep = (cfg.max_seq - max_new).max(1);
+            let prompt: &[i32] = if job.req.prompt.is_empty() {
+                &[0] // BOS-less model: decode from token 0
+            } else if job.req.prompt.len() > keep {
+                &job.req.prompt[job.req.prompt.len() - keep..]
+            } else {
+                &job.req.prompt
+            };
+
+            // prefill all but the last prompt token (no logits computed)
+            engine.prefill(&prompt[..prompt.len() - 1], slot, &mut kv);
+            active.push(ActiveSeq {
+                slot,
+                cur: prompt[prompt.len() - 1],
+                produced: Vec::with_capacity(max_new),
+                max_new,
+                rng: Rng::new(job.req.opts.seed),
+                opts: job.req.opts.clone(),
+                prompt_len: prompt.len(),
+                done: job.done,
+                queue_ms,
+                admitted_at,
+            });
+            stats.admitted.fetch_add(1, Ordering::Relaxed);
+            stats.peak_active.fetch_max(active.len() as u64, Ordering::Relaxed);
+        }
+        if active.is_empty() {
+            // try_recv saw a closed, drained queue
+            return;
+        }
+
+        // -- batch: one token for every active sequence ----------------------
+        let tokens: Vec<i32> = active.iter().map(|s| s.cur).collect();
+        let seq_slots: Vec<SlotId> = active.iter().map(|s| s.slot).collect();
+        let logits = engine.step_batch(&tokens, &seq_slots, &mut kv);
+        for (i, seq) in active.iter_mut().enumerate() {
+            let next =
+                sample_logits(logits.row(i), seq.opts.temperature, seq.opts.top_k, &mut seq.rng);
+            seq.produced.push(next);
+            seq.cur = next;
+        }
+        stats.tokens_out.fetch_add(active.len() as u64, Ordering::Relaxed);
+
+        // -- evict finished sequences ----------------------------------------
+        let mut i = 0;
+        while i < active.len() {
+            let full = kv.len(active[i].slot) >= cfg.max_seq;
+            if active[i].produced.len() >= active[i].max_new || full {
+                let seq = active.swap_remove(i);
+                kv.release(seq.slot);
+                stats.completed.fetch_add(1, Ordering::Relaxed);
+                // Receiver may have given up; completion is best-effort.
+                let _ = seq.done.try_send(Completion {
+                    tokens: seq.produced,
+                    prompt_len: seq.prompt_len,
+                    queue_ms: seq.queue_ms,
+                    decode_ms: seq.admitted_at.elapsed().as_secs_f64() * 1e3,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::{EngineConfig, SpectralModel};
+
+    fn tiny_batcher(slots: usize, depth: usize) -> Batcher {
+        let cfg = EngineConfig {
+            vocab: 50,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            d_ffn: 48,
+            rank: 4,
+            max_seq: 32,
+        };
+        Batcher::spawn(Engine::new(SpectralModel::init(cfg, 0)), slots, depth)
+    }
+
+    fn greedy(prompt: Vec<i32>, n: usize) -> Request {
+        Request { prompt, max_new: n, opts: SampleOpts { temperature: 0.0, top_k: 0, seed: 0 } }
+    }
+
+    #[test]
+    fn single_request_round_trip() {
+        let b = tiny_batcher(2, 4);
+        let c = b.generate(greedy(vec![1, 2, 3], 5)).unwrap();
+        assert_eq!(c.tokens.len(), 5);
+        assert_eq!(c.prompt_len, 3);
+        assert!(c.decode_ms >= 0.0 && c.queue_ms >= 0.0);
+        let (adm, done, toks, _) = b.stats().snapshot();
+        assert_eq!((adm, done), (1, 1));
+        assert_eq!(toks, 5);
+    }
+
+    #[test]
+    fn concurrent_requests_all_complete_and_match_solo_decode() {
+        // 8 concurrent clients on 4 slots: everything completes, and batched
+        // decode gives each request exactly what a solo engine produces.
+        let b = std::sync::Arc::new(tiny_batcher(4, 8));
+        let prompts: Vec<Vec<i32>> = (0..8).map(|i| vec![i + 1, 2 * i + 3, 7]).collect();
+        let mut handles = Vec::new();
+        for p in prompts.clone() {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || b.generate(greedy(p, 6)).unwrap()));
+        }
+        let results: Vec<Completion> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+        let cfg = EngineConfig {
+            vocab: 50,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            d_ffn: 48,
+            rank: 4,
+            max_seq: 32,
+        };
+        let solo = Engine::new(SpectralModel::init(cfg, 0));
+        let opts = SampleOpts { temperature: 0.0, top_k: 0, seed: 0 };
+        for (p, c) in prompts.iter().zip(&results) {
+            assert_eq!(c.tokens, solo.generate_reencode(p, 6, &opts), "prompt {p:?}");
+        }
+        let (adm, done, toks, peak) = b.stats().snapshot();
+        assert_eq!((adm, done), (8, 8));
+        assert_eq!(toks, 8 * 6);
+        assert!(peak >= 2, "batched decode should overlap sequences (peak {peak})");
+    }
+
+    #[test]
+    fn long_prompt_is_trimmed_to_context_budget() {
+        let b = tiny_batcher(1, 2);
+        // max_seq 32: a 100-token prompt must be trimmed, not panic.
+        let c = b.generate(greedy((0..100).collect(), 4)).unwrap();
+        assert_eq!(c.tokens.len(), 4);
+        assert!(c.prompt_len <= 28);
+    }
+
+    #[test]
+    fn empty_prompt_and_oversized_budget_are_clamped() {
+        let b = tiny_batcher(1, 2);
+        let c = b.generate(greedy(vec![], 10_000)).unwrap();
+        assert!(!c.tokens.is_empty());
+        assert!(c.tokens.len() <= 31, "max_new clamped to max_seq-1");
+    }
+
+    #[test]
+    fn try_submit_sheds_load_when_queue_full() {
+        // One slot + depth-1 queue, and a slow first request: eventually a
+        // try_submit must observe a full queue.
+        let b = tiny_batcher(1, 1);
+        let mut pending = Vec::new();
+        let mut shed = false;
+        for i in 0..50 {
+            match b.try_submit(greedy(vec![i], 20)) {
+                Ok(rx) => pending.push(rx),
+                Err(_) => {
+                    shed = true;
+                    break;
+                }
+            }
+        }
+        assert!(shed, "bounded queue must refuse work eventually");
+        for rx in pending {
+            assert!(rx.recv().is_ok());
+        }
+    }
+
+    #[test]
+    fn drop_with_queued_work_completes_in_flight() {
+        let b = tiny_batcher(2, 4);
+        let rx = b.submit(greedy(vec![5, 6], 4)).unwrap();
+        drop(b); // closes the queue, scheduler drains, thread joins
+        let c = rx.recv().expect("in-flight request still completes");
+        assert_eq!(c.tokens.len(), 4);
+    }
+}

@@ -1,0 +1,773 @@
+//! The spectral inference engine: a pure-Rust transformer decoder whose MLP
+//! projections are [`SpectralLinear`] triples — every MLP matmul computes
+//! `x → (xU) ⊙ s → (·)Vᵀ`, so no `(m, n)` weight ever exists, during
+//! serving exactly as during training (paper §3's "never materialized"
+//! claim, now on the deployment path).
+//!
+//! Two forward paths:
+//! * [`Engine::step_batch`] — incremental decode: one token per sequence per
+//!   call, attending over that sequence's [`KvCache`] line. This is the
+//!   serving hot path; a step over B admitted sequences shares every weight
+//!   matrix across the batch rows (the projections and the logits matmul run
+//!   as one (B, d) GEMM), which is where continuous batching earns its
+//!   throughput on a memory-bound CPU decode.
+//! * [`Engine::forward_full`] — whole-sequence re-encode with an explicit
+//!   causal mask. The correctness baseline: the KV path must produce
+//!   token-identical greedy output (tested below), mirroring how
+//!   `coordinator::generate` re-encodes through the AOT artifact.
+//!
+//! The sampler ([`SampleOpts`], [`sample_logits`]) lives here and is shared
+//! with `coordinator::generate`, so the baseline and the server sample
+//! identically for a given seed.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::kv::{KvCache, SlotId};
+use crate::checkpoint::format::{read_checkpoint, write_checkpoint, NamedTensor};
+use crate::spectral::matrix::{axpy, dot};
+use crate::spectral::{Matrix, SpectralLinear};
+use crate::util::rng::Rng;
+
+const RMS_EPS: f32 = 1e-6;
+
+// ---------------------------------------------------------------------------
+// sampling (shared with coordinator::generate)
+// ---------------------------------------------------------------------------
+
+/// Sampling configuration.
+#[derive(Debug, Clone)]
+pub struct SampleOpts {
+    /// 0.0 => greedy argmax.
+    pub temperature: f32,
+    /// keep only the top-k logits before sampling (0 = all).
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for SampleOpts {
+    fn default() -> SampleOpts {
+        SampleOpts { temperature: 0.8, top_k: 40, seed: 0 }
+    }
+}
+
+/// Sample one token id from a logits row. `temperature <= 0` is greedy
+/// argmax; `top_k == 0` (or >= vocab) keeps the full distribution.
+pub fn sample_logits(logits: &[f32], temperature: f32, top_k: usize, rng: &mut Rng) -> i32 {
+    if temperature <= 0.0 {
+        return argmax(logits) as i32;
+    }
+    // top-k filter
+    let k = if top_k == 0 { logits.len() } else { top_k.min(logits.len()) };
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    let kept = &idx[..k];
+    // softmax over kept at temperature
+    let mx = logits[kept[0]];
+    let weights: Vec<f64> =
+        kept.iter().map(|&i| (((logits[i] - mx) / temperature) as f64).exp()).collect();
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.f64() * total;
+    for (w, &i) in weights.iter().zip(kept) {
+        u -= w;
+        if u <= 0.0 {
+            return i as i32;
+        }
+    }
+    kept[k - 1] as i32
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
+// model
+// ---------------------------------------------------------------------------
+
+/// Architecture of a serve model (mirrors the training `ModelSpec` family:
+/// RMSNorm, RoPE attention, SwiGLU MLP with spectral gate/up/down).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ffn: usize,
+    /// Spectral rank k of the MLP triples.
+    pub rank: usize,
+    /// KV cache capacity per sequence (absolute RoPE positions).
+    pub max_seq: usize,
+}
+
+impl Default for EngineConfig {
+    /// The `tiny_r8` testbed shape — small enough that tests and the demo
+    /// decode in milliseconds.
+    fn default() -> EngineConfig {
+        EngineConfig {
+            vocab: 256,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ffn: 192,
+            rank: 8,
+            max_seq: 128,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    fn validate(&self) {
+        assert!(self.vocab > 0 && self.n_layers > 0 && self.max_seq >= 2);
+        assert!(
+            self.n_heads > 0 && self.d_model > 0,
+            "need at least one head and a positive width"
+        );
+        assert!(self.d_model % self.n_heads == 0, "d_model must divide into heads");
+        assert!(self.head_dim() % 2 == 0, "RoPE needs an even head_dim");
+        assert!(
+            self.rank >= 1 && self.rank <= self.d_model.min(self.d_ffn),
+            "rank {} out of range for ({}, {})",
+            self.rank,
+            self.d_model,
+            self.d_ffn
+        );
+    }
+}
+
+/// One decoder block's weights. Attention stays dense (the paper leaves it
+/// dense, §4.2); the SwiGLU MLP is spectral.
+pub struct LayerWeights {
+    pub wq: Matrix,
+    pub wk: Matrix,
+    pub wv: Matrix,
+    pub wo: Matrix,
+    pub ln1: Vec<f32>,
+    pub ln2: Vec<f32>,
+    pub gate: SpectralLinear,
+    pub up: SpectralLinear,
+    pub down: SpectralLinear,
+}
+
+/// Full model: tied embeddings (`logits = x Eᵀ`), per-layer weights, final norm.
+pub struct SpectralModel {
+    pub cfg: EngineConfig,
+    pub embed: Matrix,
+    pub layers: Vec<LayerWeights>,
+    pub ln_f: Vec<f32>,
+}
+
+impl SpectralModel {
+    /// Random init matching the training-side recipe: Glorot-normal dense
+    /// weights, variance-matched orthonormal spectral triples, 0.02-σ embed.
+    pub fn init(cfg: EngineConfig, seed: u64) -> SpectralModel {
+        cfg.validate();
+        let mut rng = Rng::new(seed);
+        let (d, f, k) = (cfg.d_model, cfg.d_ffn, cfg.rank);
+        let glorot = |rng: &mut Rng, m: usize, n: usize| {
+            Matrix::randn(rng, m, n, (2.0 / (m + n) as f32).sqrt())
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                wq: glorot(&mut rng, d, d),
+                wk: glorot(&mut rng, d, d),
+                wv: glorot(&mut rng, d, d),
+                wo: glorot(&mut rng, d, d),
+                ln1: vec![1.0; d],
+                ln2: vec![1.0; d],
+                gate: SpectralLinear::init(&mut rng, d, f, k),
+                up: SpectralLinear::init(&mut rng, d, f, k),
+                down: SpectralLinear::init(&mut rng, f, d, k),
+            })
+            .collect();
+        SpectralModel {
+            cfg,
+            embed: Matrix::randn(&mut rng, cfg.vocab, d, 0.02),
+            layers,
+            ln_f: vec![1.0; d],
+        }
+    }
+
+    /// Parameter count — compact factors only, k(m+n+1) per projection.
+    pub fn param_count(&self) -> usize {
+        let d = self.cfg.d_model;
+        let per_layer = 4 * d * d
+            + 2 * d
+            + self.layers.first().map_or(0, |l| {
+                l.gate.param_count() + l.up.param_count() + l.down.param_count()
+            });
+        self.cfg.vocab * d + self.cfg.n_layers * per_layer + d
+    }
+
+    // -- checkpoint I/O (reuses the `.sct` container format) ---------------
+
+    /// Save as a `.sct` checkpoint with a `serve/` tensor namespace and a
+    /// meta tensor carrying the architecture, so `load` is self-contained.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let c = &self.cfg;
+        let meta: Vec<i32> = [c.vocab, c.d_model, c.n_layers, c.n_heads, c.d_ffn, c.rank, c.max_seq]
+            .iter()
+            .map(|&x| x as i32)
+            .collect();
+        let mut tensors = vec![
+            NamedTensor::i32("serve/meta", vec![7], &meta),
+            NamedTensor::f32("serve/embed", vec![c.vocab, c.d_model], &self.embed.data),
+        ];
+        for (i, l) in self.layers.iter().enumerate() {
+            let mat = |name: &str, m: &Matrix| {
+                NamedTensor::f32(&format!("serve/layers/{i}/{name}"), vec![m.rows, m.cols], &m.data)
+            };
+            let vec1 = |name: &str, v: &[f32]| {
+                NamedTensor::f32(&format!("serve/layers/{i}/{name}"), vec![v.len()], v)
+            };
+            tensors.extend([
+                mat("attn/wq", &l.wq),
+                mat("attn/wk", &l.wk),
+                mat("attn/wv", &l.wv),
+                mat("attn/wo", &l.wo),
+                vec1("ln1", &l.ln1),
+                vec1("ln2", &l.ln2),
+            ]);
+            for (nm, sl) in [("gate", &l.gate), ("up", &l.up), ("down", &l.down)] {
+                tensors.extend([
+                    mat(&format!("mlp/{nm}/u"), &sl.u),
+                    vec1(&format!("mlp/{nm}/s"), &sl.s),
+                    mat(&format!("mlp/{nm}/v"), &sl.v),
+                ]);
+            }
+        }
+        tensors.push(NamedTensor::f32("serve/ln_f", vec![c.d_model], &self.ln_f));
+        write_checkpoint(path, 0, &tensors)
+    }
+
+    /// Load a checkpoint written by [`SpectralModel::save`].
+    pub fn load(path: &Path) -> Result<SpectralModel> {
+        fn find<'a>(tensors: &'a [NamedTensor], name: &str) -> Result<&'a NamedTensor> {
+            tensors
+                .iter()
+                .find(|t| t.name == name)
+                .with_context(|| format!("serve checkpoint missing tensor {name:?}"))
+        }
+        let (_step, tensors) = read_checkpoint(path)?;
+        let matrix = |name: String| -> Result<Matrix> {
+            let t = find(&tensors, &name)?;
+            if t.shape.len() != 2 {
+                bail!("{}: expected 2-D shape, got {:?}", t.name, t.shape);
+            }
+            Ok(Matrix::from_vec(t.shape[0], t.shape[1], t.as_f32()?))
+        };
+        let vector = |name: String| -> Result<Vec<f32>> { find(&tensors, &name)?.as_f32() };
+
+        let meta = find(&tensors, "serve/meta")?.as_i32()?;
+        if meta.len() != 7 {
+            bail!("serve/meta has {} entries, expected 7", meta.len());
+        }
+        let cfg = EngineConfig {
+            vocab: meta[0] as usize,
+            d_model: meta[1] as usize,
+            n_layers: meta[2] as usize,
+            n_heads: meta[3] as usize,
+            d_ffn: meta[4] as usize,
+            rank: meta[5] as usize,
+            max_seq: meta[6] as usize,
+        };
+        cfg.validate();
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let triple = |nm: &str| -> Result<SpectralLinear> {
+                Ok(SpectralLinear {
+                    u: matrix(format!("serve/layers/{i}/mlp/{nm}/u"))?,
+                    s: vector(format!("serve/layers/{i}/mlp/{nm}/s"))?,
+                    v: matrix(format!("serve/layers/{i}/mlp/{nm}/v"))?,
+                })
+            };
+            layers.push(LayerWeights {
+                wq: matrix(format!("serve/layers/{i}/attn/wq"))?,
+                wk: matrix(format!("serve/layers/{i}/attn/wk"))?,
+                wv: matrix(format!("serve/layers/{i}/attn/wv"))?,
+                wo: matrix(format!("serve/layers/{i}/attn/wo"))?,
+                ln1: vector(format!("serve/layers/{i}/ln1"))?,
+                ln2: vector(format!("serve/layers/{i}/ln2"))?,
+                gate: triple("gate")?,
+                up: triple("up")?,
+                down: triple("down")?,
+            });
+        }
+        Ok(SpectralModel {
+            cfg,
+            embed: matrix("serve/embed".into())?,
+            layers,
+            ln_f: vector("serve/ln_f".into())?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// engine
+// ---------------------------------------------------------------------------
+
+/// Model + precomputed RoPE tables, ready to decode.
+pub struct Engine {
+    pub model: SpectralModel,
+    /// (max_seq, head_dim/2) rotation tables.
+    cos: Matrix,
+    sin: Matrix,
+}
+
+impl Engine {
+    pub fn new(model: SpectralModel) -> Engine {
+        let cfg = model.cfg;
+        let half = cfg.head_dim() / 2;
+        let mut cos = Matrix::zeros(cfg.max_seq, half);
+        let mut sin = Matrix::zeros(cfg.max_seq, half);
+        for pos in 0..cfg.max_seq {
+            for j in 0..half {
+                let inv = 1.0f64 / 10000f64.powf(j as f64 / half as f64);
+                let ang = pos as f64 * inv;
+                cos[(pos, j)] = ang.cos() as f32;
+                sin[(pos, j)] = ang.sin() as f32;
+            }
+        }
+        Engine { model, cos, sin }
+    }
+
+    pub fn cfg(&self) -> &EngineConfig {
+        &self.model.cfg
+    }
+
+    /// Fresh KV arena sized for this model.
+    pub fn new_kv(&self, slots: usize) -> KvCache {
+        let c = &self.model.cfg;
+        KvCache::new(slots, c.n_layers, c.max_seq, c.d_model)
+    }
+
+    /// One incremental decode step for a batch of sequences: `tokens[i]` is
+    /// appended to the sequence in `slots[i]` at its next position, and the
+    /// returned `(B, vocab)` matrix holds the next-token logits per row.
+    /// All per-row math is independent, so decoding B sequences in one call
+    /// is exactly equivalent to B single-row calls — the batch exists to
+    /// share the weight-matrix traffic.
+    pub fn step_batch(&self, tokens: &[i32], slots: &[SlotId], kv: &mut KvCache) -> Matrix {
+        let x = self.advance_batch(tokens, slots, kv);
+        let xf = rmsnorm(&x, &self.model.ln_f);
+        xf.matmul_t(&self.model.embed) // tied head: (B, vocab)
+    }
+
+    /// Feed a prompt's tokens into `slot` without computing logits — the
+    /// admission-path fast prefill (the tied logits head is the single
+    /// largest matmul per step and its output would be discarded).
+    pub fn prefill(&self, tokens: &[i32], slot: SlotId, kv: &mut KvCache) {
+        for &t in tokens {
+            self.advance_batch(&[t], &[slot], kv);
+        }
+    }
+
+    /// Shared body of [`Engine::step_batch`]/[`Engine::prefill`]: run the
+    /// layer stack, populate the KV cache, return the final hidden states.
+    fn advance_batch(&self, tokens: &[i32], slots: &[SlotId], kv: &mut KvCache) -> Matrix {
+        let c = &self.model.cfg;
+        let bsz = tokens.len();
+        assert_eq!(bsz, slots.len(), "one slot per token");
+        let d = c.d_model;
+        let positions: Vec<usize> = slots.iter().map(|&s| kv.len(s)).collect();
+        for &p in &positions {
+            assert!(p < c.max_seq, "KV cache full (max_seq {})", c.max_seq);
+        }
+
+        // embed current tokens
+        let mut x = Matrix::zeros(bsz, d);
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = (t.max(0) as usize) % c.vocab;
+            x.row_mut(i).copy_from_slice(self.model.embed.row(t));
+        }
+
+        for (l, layer) in self.model.layers.iter().enumerate() {
+            // attention
+            let h = rmsnorm(&x, &layer.ln1);
+            let mut q = h.matmul(&layer.wq);
+            let mut k = h.matmul(&layer.wk);
+            let v = h.matmul(&layer.wv);
+            for i in 0..bsz {
+                self.rope_row(q.row_mut(i), positions[i]);
+                self.rope_row(k.row_mut(i), positions[i]);
+                kv.write(slots[i], l, positions[i], k.row(i), v.row(i));
+            }
+            let mut y = Matrix::zeros(bsz, d);
+            for i in 0..bsz {
+                let n_ctx = positions[i] + 1;
+                let krows = kv.k_rows(slots[i], l, n_ctx);
+                let vrows = kv.v_rows(slots[i], l, n_ctx);
+                attend_row(q.row(i), krows, vrows, n_ctx, c.n_heads, d, y.row_mut(i));
+            }
+            add_into(&mut x, &y.matmul(&layer.wo));
+
+            // spectral SwiGLU MLP
+            let m = self.mlp(layer, &x);
+            add_into(&mut x, &m);
+        }
+
+        for &s in slots {
+            kv.advance(s);
+        }
+        x
+    }
+
+    /// Whole-sequence re-encode: logits for every position of `tokens`
+    /// (shape `(T, vocab)`), causal mask, no cache. The baseline the KV path
+    /// is verified against; also the re-encode decoder for benchmarks.
+    pub fn forward_full(&self, tokens: &[i32]) -> Matrix {
+        let c = &self.model.cfg;
+        let t_len = tokens.len();
+        assert!(t_len >= 1 && t_len <= c.max_seq, "sequence length {t_len} out of range");
+        let d = c.d_model;
+
+        let mut x = Matrix::zeros(t_len, d);
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = (t.max(0) as usize) % c.vocab;
+            x.row_mut(i).copy_from_slice(self.model.embed.row(t));
+        }
+
+        for layer in &self.model.layers {
+            let h = rmsnorm(&x, &layer.ln1);
+            let mut q = h.matmul(&layer.wq);
+            let mut k = h.matmul(&layer.wk);
+            let v = h.matmul(&layer.wv);
+            for i in 0..t_len {
+                self.rope_row(q.row_mut(i), i);
+                self.rope_row(k.row_mut(i), i);
+            }
+            let mut y = Matrix::zeros(t_len, d);
+            for i in 0..t_len {
+                // causal: position i attends to 0..=i — the same contiguous
+                // row layout the KV path reads, so the arithmetic matches
+                // bit-for-bit.
+                let n_ctx = i + 1;
+                attend_row(q.row(i), &k.data[..n_ctx * d], &v.data[..n_ctx * d], n_ctx, c.n_heads, d, y.row_mut(i));
+            }
+            add_into(&mut x, &y.matmul(&layer.wo));
+            let m = self.mlp(layer, &x);
+            add_into(&mut x, &m);
+        }
+
+        let xf = rmsnorm(&x, &self.model.ln_f);
+        xf.matmul_t(&self.model.embed)
+    }
+
+    /// Greedy decode via full re-encode — the `generate.rs`-style baseline.
+    pub fn generate_reencode(&self, prompt: &[i32], n_new: usize, opts: &SampleOpts) -> Vec<i32> {
+        let mut rng = Rng::new(opts.seed);
+        let mut ctx = prompt.to_vec();
+        let mut out = Vec::with_capacity(n_new);
+        for _ in 0..n_new {
+            // A context of exactly max_seq tokens still yields one more
+            // sample (forward_full accepts T == max_seq) — the same budget
+            // as the KV path, whose last step writes position max_seq-1.
+            if ctx.len() > self.model.cfg.max_seq {
+                break;
+            }
+            let logits = self.forward_full(&ctx);
+            let row = logits.row(ctx.len() - 1);
+            let next = sample_logits(row, opts.temperature, opts.top_k, &mut rng);
+            out.push(next);
+            ctx.push(next);
+        }
+        out
+    }
+
+    /// Greedy decode via the KV cache — one token per step after prefill.
+    pub fn generate_kv(
+        &self,
+        prompt: &[i32],
+        n_new: usize,
+        opts: &SampleOpts,
+        kv: &mut KvCache,
+        slot: SlotId,
+    ) -> Vec<i32> {
+        assert!(!prompt.is_empty(), "prompt must not be empty");
+        let mut rng = Rng::new(opts.seed);
+        // prefill all but the last prompt token (their logits are unused)
+        self.prefill(&prompt[..prompt.len() - 1], slot, kv);
+        let mut cur = prompt[prompt.len() - 1];
+        let mut out = Vec::with_capacity(n_new);
+        for _ in 0..n_new {
+            if kv.len(slot) >= self.model.cfg.max_seq {
+                break;
+            }
+            let logits = self.step_batch(&[cur], &[slot], kv);
+            let next = sample_logits(logits.row(0), opts.temperature, opts.top_k, &mut rng);
+            out.push(next);
+            cur = next;
+        }
+        out
+    }
+
+    // -- internals ---------------------------------------------------------
+
+    /// Rotate the (head-major) Q/K row in place with the tables at `pos`.
+    fn rope_row(&self, row: &mut [f32], pos: usize) {
+        let c = &self.model.cfg;
+        let hd = c.head_dim();
+        let half = hd / 2;
+        let cos = self.cos.row(pos);
+        let sin = self.sin.row(pos);
+        for h in 0..c.n_heads {
+            let base = h * hd;
+            for j in 0..half {
+                let a = row[base + j];
+                let b = row[base + half + j];
+                row[base + j] = a * cos[j] - b * sin[j];
+                row[base + half + j] = a * sin[j] + b * cos[j];
+            }
+        }
+    }
+
+    /// SwiGLU through the spectral triples: silu(x·gate) ⊙ (x·up) → down.
+    fn mlp(&self, layer: &LayerWeights, x: &Matrix) -> Matrix {
+        let h = rmsnorm(x, &layer.ln2);
+        let (mut g, _) = layer.gate.forward(&h);
+        let (u, _) = layer.up.forward(&h);
+        for (gi, &ui) in g.data.iter_mut().zip(&u.data) {
+            *gi = silu(*gi) * ui;
+        }
+        layer.down.forward(&g).0
+    }
+}
+
+/// Causal softmax attention for one query row over `n_ctx` cached K/V rows
+/// (contiguous `[pos][d_model]` layout), writing the concatenated head
+/// outputs into `out` (d_model).
+fn attend_row(
+    qrow: &[f32],
+    krows: &[f32],
+    vrows: &[f32],
+    n_ctx: usize,
+    n_heads: usize,
+    d_model: usize,
+    out: &mut [f32],
+) {
+    let hd = d_model / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut scores = vec![0.0f32; n_ctx];
+    for h in 0..n_heads {
+        let hb = h * hd;
+        let qh = &qrow[hb..hb + hd];
+        let mut mx = f32::NEG_INFINITY;
+        for (t, sc) in scores.iter_mut().enumerate() {
+            *sc = dot(qh, &krows[t * d_model + hb..t * d_model + hb + hd]) * scale;
+            mx = mx.max(*sc);
+        }
+        let mut denom = 0.0f32;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - mx).exp();
+            denom += *sc;
+        }
+        let inv = 1.0 / denom;
+        let oh = &mut out[hb..hb + hd];
+        for (t, &w) in scores.iter().enumerate() {
+            axpy(w * inv, &vrows[t * d_model + hb..t * d_model + hb + hd], oh);
+        }
+    }
+}
+
+/// Row-wise RMSNorm with gain, into a fresh matrix.
+fn rmsnorm(x: &Matrix, gain: &[f32]) -> Matrix {
+    debug_assert_eq!(x.cols, gain.len());
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / row.len() as f32;
+        let inv = 1.0 / (ms + RMS_EPS).sqrt();
+        for (o, (&v, &g)) in out.row_mut(r).iter_mut().zip(row.iter().zip(gain)) {
+            *o = v * inv * g;
+        }
+    }
+    out
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+fn add_into(x: &mut Matrix, delta: &Matrix) {
+    debug_assert_eq!((x.rows, x.cols), (delta.rows, delta.cols));
+    for (a, &b) in x.data.iter_mut().zip(&delta.data) {
+        *a += b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_engine(seed: u64) -> Engine {
+        let cfg = EngineConfig {
+            vocab: 50,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            d_ffn: 48,
+            rank: 4,
+            max_seq: 32,
+        };
+        Engine::new(SpectralModel::init(cfg, seed))
+    }
+
+    #[test]
+    fn kv_decode_is_token_identical_to_reencode() {
+        let e = tiny_engine(0);
+        let opts = SampleOpts { temperature: 0.0, top_k: 0, seed: 0 };
+        let prompt = [3i32, 17, 5, 9];
+        let baseline = e.generate_reencode(&prompt, 12, &opts);
+        let mut kv = e.new_kv(1);
+        let slot = kv.alloc().unwrap();
+        let cached = e.generate_kv(&prompt, 12, &opts, &mut kv, slot);
+        assert_eq!(baseline, cached, "KV path must match the re-encode baseline at T=0");
+        assert_eq!(cached.len(), 12);
+    }
+
+    #[test]
+    fn kv_logits_match_full_forward() {
+        let e = tiny_engine(1);
+        let tokens = [1i32, 2, 3, 4, 5, 6];
+        let full = e.forward_full(&tokens);
+        let mut kv = e.new_kv(1);
+        let slot = kv.alloc().unwrap();
+        for (i, &t) in tokens.iter().enumerate() {
+            let step = e.step_batch(&[t], &[slot], &mut kv);
+            let mut max_diff = 0.0f32;
+            for (a, b) in step.row(0).iter().zip(full.row(i)) {
+                max_diff = max_diff.max((a - b).abs());
+            }
+            assert!(max_diff < 1e-4, "position {i}: max logit diff {max_diff}");
+        }
+    }
+
+    #[test]
+    fn batched_rows_are_independent() {
+        // Decoding two sequences interleaved in one batch must equal
+        // decoding each alone — slot isolation + row independence.
+        let e = tiny_engine(2);
+        let opts = SampleOpts { temperature: 0.0, top_k: 0, seed: 0 };
+        let pa = [7i32, 3];
+        let pb = [11i32, 2, 30];
+        let mut kv_solo = e.new_kv(1);
+        let sa = kv_solo.alloc().unwrap();
+        let alone_a = e.generate_kv(&pa, 8, &opts, &mut kv_solo, sa);
+        kv_solo.release(sa);
+        let sb = kv_solo.alloc().unwrap();
+        let alone_b = e.generate_kv(&pb, 8, &opts, &mut kv_solo, sb);
+
+        let mut kv = e.new_kv(2);
+        let (a, b) = (kv.alloc().unwrap(), kv.alloc().unwrap());
+        for &t in &pa[..pa.len() - 1] {
+            e.step_batch(&[t], &[a], &mut kv);
+        }
+        for &t in &pb[..pb.len() - 1] {
+            e.step_batch(&[t], &[b], &mut kv);
+        }
+        let (mut ca, mut cb) = (*pa.last().unwrap(), *pb.last().unwrap());
+        let (mut out_a, mut out_b) = (Vec::new(), Vec::new());
+        for _ in 0..8 {
+            let logits = e.step_batch(&[ca, cb], &[a, b], &mut kv);
+            ca = argmax(logits.row(0)) as i32;
+            cb = argmax(logits.row(1)) as i32;
+            out_a.push(ca);
+            out_b.push(cb);
+        }
+        assert_eq!(out_a, alone_a);
+        assert_eq!(out_b, alone_b);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_preserves_decode() {
+        let e = tiny_engine(3);
+        let dir = std::env::temp_dir().join(format!("sct_serve_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.sct");
+        e.model.save(&path).unwrap();
+        let restored = Engine::new(SpectralModel::load(&path).unwrap());
+        assert_eq!(restored.model.cfg, e.model.cfg);
+        let opts = SampleOpts { temperature: 0.0, top_k: 0, seed: 0 };
+        let prompt = [4i32, 8, 15];
+        assert_eq!(
+            e.generate_reencode(&prompt, 6, &opts),
+            restored.generate_reencode(&prompt, 6, &opts)
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn logits_shapes() {
+        let e = tiny_engine(4);
+        let full = e.forward_full(&[1, 2, 3]);
+        assert_eq!((full.rows, full.cols), (3, 50));
+        let mut kv = e.new_kv(2);
+        let (a, b) = (kv.alloc().unwrap(), kv.alloc().unwrap());
+        let step = e.step_batch(&[1, 2], &[a, b], &mut kv);
+        assert_eq!((step.rows, step.cols), (2, 50));
+        assert_eq!(kv.len(a), 1);
+    }
+
+    // -- sampler edge cases (shared with coordinator::generate) -------------
+
+    #[test]
+    fn temperature_zero_is_greedy_argmax() {
+        let logits = [0.1f32, 2.5, -1.0, 2.4];
+        let mut rng = Rng::new(0);
+        for _ in 0..10 {
+            assert_eq!(sample_logits(&logits, 0.0, 40, &mut rng), 1);
+        }
+        // negative temperature degrades to greedy too
+        assert_eq!(sample_logits(&logits, -1.0, 0, &mut rng), 1);
+    }
+
+    #[test]
+    fn top_k_zero_samples_full_distribution() {
+        // With uniform logits and top_k=0 every index must eventually appear.
+        let logits = [0.0f32; 8];
+        let mut rng = Rng::new(7);
+        let mut seen = [false; 8];
+        for _ in 0..500 {
+            let t = sample_logits(&logits, 1.0, 0, &mut rng);
+            seen[t as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "top_k=0 must reach the whole vocab: {seen:?}");
+    }
+
+    #[test]
+    fn top_k_clamps_to_vocab() {
+        let logits = [1.0f32, 0.5, 0.25];
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let t = sample_logits(&logits, 0.7, 1000, &mut rng);
+            assert!((0..3).contains(&t));
+        }
+        // top_k = 1 is greedy regardless of temperature
+        for _ in 0..20 {
+            assert_eq!(sample_logits(&logits, 5.0, 1, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.3).sin()).collect();
+        let draw = |seed: u64| -> Vec<i32> {
+            let mut rng = Rng::new(seed);
+            (0..20).map(|_| sample_logits(&logits, 0.8, 8, &mut rng)).collect()
+        };
+        assert_eq!(draw(5), draw(5));
+        assert_ne!(draw(5), draw(6));
+    }
+}

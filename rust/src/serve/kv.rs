@@ -1,0 +1,180 @@
+//! Per-sequence KV cache arena with slot reuse.
+//!
+//! The serving engine decodes incrementally — one token per step — so every
+//! active sequence needs its attention keys/values from previous positions.
+//! This arena preallocates `slots` fixed-capacity cache lines (one per
+//! concurrent sequence) in two flat buffers and recycles them: when a
+//! sequence finishes, its slot returns to the free list and the next admitted
+//! request reuses the same memory with its length reset. No allocation
+//! happens on the decode path.
+//!
+//! Layout: `k`/`v` are `[slot][layer][pos][d_model]` row-major, so one
+//! layer's cached rows for one sequence are a single contiguous slice — the
+//! shape the per-head attention loop streams over.
+
+/// Identifier of one cache line (index into the arena).
+pub type SlotId = usize;
+
+/// Fixed-capacity KV arena for `slots` concurrent sequences.
+pub struct KvCache {
+    pub slots: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub d_model: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    lens: Vec<usize>,
+    free: Vec<SlotId>,
+}
+
+impl KvCache {
+    pub fn new(slots: usize, n_layers: usize, max_seq: usize, d_model: usize) -> KvCache {
+        assert!(slots > 0 && n_layers > 0 && max_seq > 0 && d_model > 0);
+        let total = slots * n_layers * max_seq * d_model;
+        KvCache {
+            slots,
+            n_layers,
+            max_seq,
+            d_model,
+            k: vec![0.0; total],
+            v: vec![0.0; total],
+            lens: vec![0; slots],
+            // pop() takes from the back; reverse so slot 0 is handed out first.
+            free: (0..slots).rev().collect(),
+        }
+    }
+
+    /// Claim a free slot with length reset to 0; `None` when the arena is full.
+    pub fn alloc(&mut self) -> Option<SlotId> {
+        let slot = self.free.pop()?;
+        self.lens[slot] = 0;
+        Some(slot)
+    }
+
+    /// Return a slot to the free list (its contents become garbage).
+    pub fn release(&mut self, slot: SlotId) {
+        debug_assert!(!self.free.contains(&slot), "double release of slot {slot}");
+        self.lens[slot] = 0;
+        self.free.push(slot);
+    }
+
+    /// Cached length (number of positions written) of a slot.
+    pub fn len(&self, slot: SlotId) -> usize {
+        self.lens[slot]
+    }
+
+    pub fn is_empty(&self, slot: SlotId) -> bool {
+        self.lens[slot] == 0
+    }
+
+    /// Slots currently checked out.
+    pub fn in_use(&self) -> usize {
+        self.slots - self.free.len()
+    }
+
+    /// Arena footprint in bytes (the serving analogue of `state_bytes`).
+    pub fn bytes(&self) -> usize {
+        2 * self.k.len() * std::mem::size_of::<f32>()
+    }
+
+    #[inline]
+    fn base(&self, slot: SlotId, layer: usize) -> usize {
+        debug_assert!(slot < self.slots && layer < self.n_layers);
+        (slot * self.n_layers + layer) * self.max_seq * self.d_model
+    }
+
+    /// Write the K/V rows for one position of one layer. Positions must be
+    /// written in order; the engine advances the slot length only after all
+    /// layers of a step are written (see [`KvCache::advance`]).
+    pub fn write(&mut self, slot: SlotId, layer: usize, pos: usize, krow: &[f32], vrow: &[f32]) {
+        assert!(pos < self.max_seq, "position {pos} beyond cache capacity {}", self.max_seq);
+        debug_assert_eq!(krow.len(), self.d_model);
+        debug_assert_eq!(vrow.len(), self.d_model);
+        let at = self.base(slot, layer) + pos * self.d_model;
+        self.k[at..at + self.d_model].copy_from_slice(krow);
+        self.v[at..at + self.d_model].copy_from_slice(vrow);
+    }
+
+    /// First `n` cached K rows of one layer as one contiguous slice.
+    pub fn k_rows(&self, slot: SlotId, layer: usize, n: usize) -> &[f32] {
+        let at = self.base(slot, layer);
+        &self.k[at..at + n * self.d_model]
+    }
+
+    /// First `n` cached V rows of one layer as one contiguous slice.
+    pub fn v_rows(&self, slot: SlotId, layer: usize, n: usize) -> &[f32] {
+        let at = self.base(slot, layer);
+        &self.v[at..at + n * self.d_model]
+    }
+
+    /// Bump a slot's length after a full decode step wrote all its layers.
+    pub fn advance(&mut self, slot: SlotId) {
+        debug_assert!(self.lens[slot] < self.max_seq);
+        self.lens[slot] += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_recycles_with_reset_len() {
+        let mut kv = KvCache::new(2, 1, 4, 3);
+        let a = kv.alloc().unwrap();
+        let b = kv.alloc().unwrap();
+        assert_ne!(a, b);
+        assert!(kv.alloc().is_none(), "arena exhausted");
+        kv.write(a, 0, 0, &[1.0; 3], &[2.0; 3]);
+        kv.advance(a);
+        assert_eq!(kv.len(a), 1);
+        kv.release(a);
+        let c = kv.alloc().unwrap();
+        assert_eq!(c, a, "freed slot is reused");
+        assert_eq!(kv.len(c), 0, "recycled slot starts empty");
+        assert_eq!(kv.in_use(), 2);
+    }
+
+    #[test]
+    fn slots_are_isolated() {
+        let mut kv = KvCache::new(2, 2, 4, 2);
+        let a = kv.alloc().unwrap();
+        let b = kv.alloc().unwrap();
+        kv.write(a, 0, 0, &[1.0, 2.0], &[3.0, 4.0]);
+        kv.write(b, 0, 0, &[9.0, 9.0], &[9.0, 9.0]);
+        kv.write(a, 1, 0, &[5.0, 6.0], &[7.0, 8.0]);
+        kv.advance(a);
+        kv.advance(b);
+        assert_eq!(kv.k_rows(a, 0, 1), &[1.0, 2.0]);
+        assert_eq!(kv.v_rows(a, 1, 1), &[7.0, 8.0]);
+        assert_eq!(kv.k_rows(b, 0, 1), &[9.0, 9.0]);
+    }
+
+    #[test]
+    fn rows_accumulate_in_position_order() {
+        let mut kv = KvCache::new(1, 1, 3, 2);
+        let s = kv.alloc().unwrap();
+        for pos in 0..3 {
+            let x = pos as f32;
+            kv.write(s, 0, pos, &[x, x], &[-x, -x]);
+            kv.advance(s);
+        }
+        assert_eq!(kv.len(s), 3);
+        assert_eq!(kv.k_rows(s, 0, 3), &[0.0, 0.0, 1.0, 1.0, 2.0, 2.0]);
+        assert_eq!(kv.v_rows(s, 0, 2), &[0.0, 0.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond cache capacity")]
+    fn write_past_capacity_panics() {
+        let mut kv = KvCache::new(1, 1, 2, 2);
+        let s = kv.alloc().unwrap();
+        kv.write(s, 0, 2, &[0.0; 2], &[0.0; 2]);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let kv = KvCache::new(4, 2, 8, 16);
+        assert_eq!(kv.bytes(), 2 * 4 * 2 * 8 * 16 * 4);
+    }
+}

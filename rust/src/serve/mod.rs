@@ -1,0 +1,40 @@
+//! `serve` — the pure-Rust spectral **inference engine**: KV-cached
+//! incremental decoding, a continuous-batching scheduler, and a minimal
+//! HTTP/1.1 server, all built directly on the `spectral` substrate.
+//!
+//! The paper's storage claim — the dense `(m, n)` matrix never exists —
+//! holds on the serving path too: every MLP projection runs as
+//! `x → (xU) ⊙ s → (·)Vᵀ` through [`crate::spectral::SpectralLinear`].
+//! Where `coordinator::generate` re-encodes the whole window per token
+//! through the AOT artifact (and needs PJRT), this subsystem decodes **one
+//! token per step** against a per-sequence KV cache and needs nothing but
+//! the standard library, so a checkpointed (or random-init) model serves on
+//! any machine the crate builds on.
+//!
+//! Pieces:
+//! * [`engine`] — the factored decoder forward (RMSNorm, RoPE attention,
+//!   spectral SwiGLU), incremental + full-re-encode paths, model
+//!   checkpointing, and the sampler shared with `coordinator::generate`.
+//! * [`kv`] — fixed-capacity KV cache arena with slot reuse; no allocation
+//!   on the decode path.
+//! * [`batcher`] — continuous batching: bounded admission queue
+//!   (`sync_channel` backpressure, as in `data::loader`), slot-based
+//!   admission, one batched decode step per token across all active
+//!   sequences, eviction of finished ones.
+//! * [`server`] — `std::net` HTTP front-end (`POST /v1/generate`,
+//!   `GET /healthz`, `GET /v1/stats`) using `util::json`.
+//!
+//! Correctness anchor: at temperature 0 the KV-cached path is
+//! token-identical to the full re-encode baseline (tested in [`engine`]);
+//! throughput of batched vs sequential serving is measured by
+//! `benches/serve_throughput.rs`.
+
+pub mod batcher;
+pub mod engine;
+pub mod kv;
+pub mod server;
+
+pub use batcher::{Batcher, Completion, Request};
+pub use engine::{sample_logits, Engine, EngineConfig, SampleOpts, SpectralModel};
+pub use kv::KvCache;
+pub use server::{http_get_json, http_post_json, http_roundtrip, ServeConfig, Server};

@@ -1,0 +1,443 @@
+//! Minimal HTTP/1.1 front-end for the batching engine.
+//!
+//! The image is offline — no tokio, no hyper, no serde — so this is a
+//! `std::net::TcpListener` accept loop with one short-lived handler thread
+//! per connection and `util::json` for the bodies. Connections are
+//! `Connection: close` (one request per connection), which keeps the parser
+//! to request-line + headers + `Content-Length` body.
+//!
+//! Routes:
+//! * `POST /v1/generate` — body `{"prompt": "...", "tokens": N,
+//!   "temperature": T, "top_k": K, "seed": S}` (all but `prompt` optional;
+//!   `prompt_ids` may replace `prompt`). Responds with the completion text,
+//!   token ids, and queue/decode latency.
+//! * `GET /healthz` — liveness + uptime.
+//! * `GET /v1/stats` — scheduler counters (admitted/completed/tokens/peak).
+//!
+//! A full admission queue answers `503` (load shedding) rather than holding
+//! the connection on the backpressured submit path.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::batcher::{Batcher, Request};
+use super::engine::{Engine, SampleOpts};
+use crate::coordinator::config::TomlDoc;
+use crate::data::Tokenizer;
+use crate::json_obj;
+use crate::util::json::Json;
+
+/// Server + scheduler sizing. CLI flags and the `[serve]` TOML section both
+/// land here.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub addr: String,
+    /// Concurrent decode slots (KV arena size).
+    pub slots: usize,
+    /// Bounded admission queue depth.
+    pub queue_depth: usize,
+    /// Tokens per request when the body does not say.
+    pub max_new_default: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:8077".into(),
+            slots: 8,
+            queue_depth: 32,
+            max_new_default: 48,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Apply a `[serve]` section from a parsed TOML document.
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
+        let Some(s) = doc.get("serve") else {
+            return Ok(());
+        };
+        if let Some(v) = s.get("addr") {
+            self.addr = v.as_str()?.to_string();
+        }
+        if let Some(v) = s.get("slots") {
+            self.slots = v.as_usize()?;
+        }
+        if let Some(v) = s.get("queue_depth") {
+            self.queue_depth = v.as_usize()?;
+        }
+        if let Some(v) = s.get("max_new") {
+            self.max_new_default = v.as_usize()?;
+        }
+        Ok(())
+    }
+}
+
+struct ServerState {
+    batcher: Batcher,
+    tokenizer: Tokenizer,
+    vocab: usize,
+    max_new_default: usize,
+    started: Instant,
+}
+
+/// A running server: accept loop + batcher, stoppable for tests.
+pub struct Server {
+    pub addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    state: Arc<ServerState>,
+}
+
+impl Server {
+    /// Bind `cfg.addr` (port 0 picks a free port) and start serving.
+    pub fn start(cfg: &ServeConfig, engine: Engine, tokenizer: Tokenizer) -> Result<Server> {
+        let vocab = engine.cfg().vocab;
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(ServerState {
+            batcher: Batcher::spawn(engine, cfg.slots, cfg.queue_depth),
+            tokenizer,
+            vocab,
+            max_new_default: cfg.max_new_default,
+            started: Instant::now(),
+        });
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let state = state.clone();
+            let shutdown = shutdown.clone();
+            std::thread::Builder::new()
+                .name("sct-serve-accept".into())
+                .spawn(move || {
+                    for stream in listener.incoming() {
+                        if shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(stream) = stream else { continue };
+                        let state = state.clone();
+                        // Handlers are short-lived (one request, connection
+                        // close); the batcher's bounded queue is the real
+                        // concurrency limit.
+                        std::thread::spawn(move || {
+                            let _ = handle_connection(stream, &state);
+                        });
+                    }
+                })
+                .expect("spawn accept thread")
+        };
+        Ok(Server { addr, shutdown, accept: Some(accept), state })
+    }
+
+    /// Scheduler counters: (admitted, completed, tokens_out, peak_active).
+    pub fn stats(&self) -> (u64, u64, u64, u64) {
+        self.state.batcher.stats().snapshot()
+    }
+
+    /// Block until the accept loop exits (it only exits via [`Server::stop`]
+    /// or process death) — what `sct serve` does after printing the banner.
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, join the accept thread, shut the batcher down.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Unblock the accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // `state` (and the Batcher in it) drops with self once handlers end.
+    }
+}
+
+// ---------------------------------------------------------------------------
+// minimal blocking client (demos, benches, tests)
+// ---------------------------------------------------------------------------
+
+/// Send one raw HTTP/1.1 request and parse the `Connection: close` response:
+/// returns (status code, JSON body). This is the client half the serve demo,
+/// the integration tests, and external smoke checks share.
+pub fn http_roundtrip(addr: SocketAddr, raw: &str) -> Result<(u16, Json)> {
+    let mut s = TcpStream::connect(addr).context("connecting to serve endpoint")?;
+    s.write_all(raw.as_bytes())?;
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf)?;
+    let text = String::from_utf8_lossy(&buf);
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .ok_or_else(|| anyhow!("malformed response: {text:?}"))?
+        .parse()
+        .context("non-numeric status code")?;
+    let payload = text.split("\r\n\r\n").nth(1).unwrap_or("{}");
+    Ok((status, Json::parse(payload)?))
+}
+
+/// `POST path` with a JSON body via [`http_roundtrip`].
+pub fn http_post_json(addr: SocketAddr, path: &str, body: &str) -> Result<(u16, Json)> {
+    http_roundtrip(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: sct\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+/// `GET path` via [`http_roundtrip`].
+pub fn http_get_json(addr: SocketAddr, path: &str) -> Result<(u16, Json)> {
+    http_roundtrip(addr, &format!("GET {path} HTTP/1.1\r\nHost: sct\r\n\r\n"))
+}
+
+// ---------------------------------------------------------------------------
+// HTTP plumbing
+// ---------------------------------------------------------------------------
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+/// Generation requests are small JSON documents; anything bigger is abuse.
+const MAX_BODY_BYTES: usize = 1 << 20;
+/// Hard cap on bytes read per connection (request line + headers + body), so
+/// a newline-less flood cannot grow `read_line` without bound.
+const MAX_REQUEST_BYTES: u64 = 2 << 20;
+const MAX_HEADERS: usize = 64;
+
+fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+    stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+    let mut reader = BufReader::new((&mut *stream).take(MAX_REQUEST_BYTES));
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let path = parts.next().unwrap_or_default().to_string();
+    if method.is_empty() || path.is_empty() {
+        bail!("malformed request line {line:?}");
+    }
+    let mut content_length = 0usize;
+    for n_headers in 0.. {
+        if n_headers >= MAX_HEADERS {
+            bail!("too many headers");
+        }
+        let mut header = String::new();
+        let n = reader.read_line(&mut header)?;
+        if n == 0 || header.trim().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = header.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().context("bad Content-Length")?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        bail!("body too large ({content_length} bytes)");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).context("reading body")?;
+    Ok(HttpRequest { method, path, body })
+}
+
+fn write_response(stream: &mut TcpStream, status: u16, reason: &str, body: &Json) -> Result<()> {
+    let payload = body.to_string();
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\n\
+         Content-Type: application/json\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        payload.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(payload.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn error_json(msg: &str) -> Json {
+    json_obj![("error", msg)]
+}
+
+fn handle_connection(mut stream: TcpStream, state: &ServerState) -> Result<()> {
+    let req = match read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = write_response(&mut stream, 400, "Bad Request", &error_json(&e.to_string()));
+            return Ok(());
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/generate") => match handle_generate(&req.body, state) {
+            Ok(body) => write_response(&mut stream, 200, "OK", &body),
+            Err(e) => {
+                let msg = e.to_string();
+                if msg.contains("admission queue full") {
+                    write_response(&mut stream, 503, "Service Unavailable", &error_json(&msg))
+                } else {
+                    write_response(&mut stream, 400, "Bad Request", &error_json(&msg))
+                }
+            }
+        },
+        ("GET", "/healthz") => {
+            let body = json_obj![
+                ("status", "ok"),
+                ("uptime_s", state.started.elapsed().as_secs_f64()),
+                ("slots", state.batcher.slots),
+                ("queue_depth", state.batcher.queue_depth),
+            ];
+            write_response(&mut stream, 200, "OK", &body)
+        }
+        ("GET", "/v1/stats") => {
+            let (admitted, completed, tokens_out, peak_active) =
+                state.batcher.stats().snapshot();
+            let body = json_obj![
+                ("admitted", admitted as i64),
+                ("completed", completed as i64),
+                ("tokens_out", tokens_out as i64),
+                ("peak_active", peak_active as i64),
+            ];
+            write_response(&mut stream, 200, "OK", &body)
+        }
+        ("POST", _) | ("GET", _) => {
+            write_response(&mut stream, 404, "Not Found", &error_json("no such route"))
+        }
+        _ => write_response(&mut stream, 405, "Method Not Allowed", &error_json("use GET/POST")),
+    }
+}
+
+fn handle_generate(body: &[u8], state: &ServerState) -> Result<Json> {
+    let j = Json::parse(std::str::from_utf8(body).context("body is not UTF-8")?)
+        .context("body is not valid JSON")?;
+
+    // prompt: either text (tokenized here) or explicit ids
+    let prompt_ids: Vec<i32> = if let Some(ids) = j.get("prompt_ids") {
+        ids.as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_i64()? as i32))
+            .collect::<Result<_>>()?
+    } else {
+        let text = j
+            .get("prompt")
+            .ok_or_else(|| anyhow!("missing \"prompt\" (or \"prompt_ids\")"))?
+            .as_str()?;
+        if text.is_empty() {
+            bail!("empty prompt");
+        }
+        state.tokenizer.encode(text)
+    };
+    let cap = state.vocab as i32;
+    let prompt_ids: Vec<i32> = prompt_ids.into_iter().map(|t| t.rem_euclid(cap)).collect();
+
+    let max_new = match j.get("tokens") {
+        Some(v) => v.as_usize()?,
+        None => state.max_new_default,
+    };
+    let opts = SampleOpts {
+        temperature: j.get("temperature").map(|v| v.as_f64()).transpose()? .unwrap_or(0.8) as f32,
+        top_k: j.get("top_k").map(|v| v.as_usize()).transpose()?.unwrap_or(40),
+        seed: j.get("seed").map(|v| v.as_i64()).transpose()?.unwrap_or(0) as u64,
+    };
+
+    let prompt_len = prompt_ids.len();
+    let completion = state
+        .batcher
+        .try_submit(Request { prompt: prompt_ids, max_new, opts })?
+        .recv()
+        .map_err(|_| anyhow!("batcher dropped the request"))?;
+
+    let text = state.tokenizer.decode(&completion.tokens);
+    let n = completion.tokens.len();
+    let tok_per_s = if completion.decode_ms > 0.0 { n as f64 / (completion.decode_ms / 1e3) } else { 0.0 };
+    Ok(json_obj![
+        ("completion", text),
+        ("tokens", completion.tokens.iter().map(|&t| Json::from(t as i64)).collect::<Vec<_>>()),
+        ("prompt_tokens", prompt_len),
+        ("queue_ms", completion.queue_ms),
+        ("decode_ms", completion.decode_ms),
+        ("tok_per_s", tok_per_s),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::{EngineConfig, SpectralModel};
+
+    fn test_server(slots: usize, queue: usize) -> Server {
+        let cfg = EngineConfig { max_seq: 64, ..EngineConfig::default() };
+        let engine = Engine::new(SpectralModel::init(cfg, 0));
+        let serve_cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            slots,
+            queue_depth: queue,
+            max_new_default: 8,
+        };
+        Server::start(&serve_cfg, engine, Tokenizer::byte_level()).unwrap()
+    }
+
+    #[test]
+    fn healthz_and_stats_respond() {
+        let srv = test_server(2, 4);
+        let (code, body) = http_get_json(srv.addr, "/healthz").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body.get("status").unwrap().as_str().unwrap(), "ok");
+        let (code, body) = http_get_json(srv.addr, "/v1/stats").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body.get("admitted").unwrap().as_i64().unwrap(), 0);
+        srv.stop();
+    }
+
+    #[test]
+    fn generate_roundtrip_is_deterministic_at_t0() {
+        let srv = test_server(2, 4);
+        let req = r#"{"prompt": "spectral", "tokens": 6, "temperature": 0}"#;
+        let (code, a) = http_post_json(srv.addr, "/v1/generate", req).unwrap();
+        assert_eq!(code, 200, "body: {a:?}");
+        assert_eq!(a.get("tokens").unwrap().as_arr().unwrap().len(), 6);
+        assert_eq!(a.get("prompt_tokens").unwrap().as_usize().unwrap(), 8);
+        let (_, b) = http_post_json(srv.addr, "/v1/generate", req).unwrap();
+        assert_eq!(
+            a.get("tokens").unwrap(),
+            b.get("tokens").unwrap(),
+            "greedy decode must be reproducible across requests"
+        );
+        srv.stop();
+    }
+
+    #[test]
+    fn bad_requests_get_4xx() {
+        let srv = test_server(1, 2);
+        let (code, _) = http_post_json(srv.addr, "/v1/generate", "{not json").unwrap();
+        assert_eq!(code, 400);
+        let (code, _) = http_post_json(srv.addr, "/v1/generate", r#"{"tokens": 4}"#).unwrap();
+        assert_eq!(code, 400, "missing prompt");
+        let (code, _) = http_get_json(srv.addr, "/nope").unwrap();
+        assert_eq!(code, 404);
+        srv.stop();
+    }
+
+    #[test]
+    fn oversized_body_is_rejected() {
+        let srv = test_server(1, 2);
+        // Declared Content-Length beyond the cap: refused before allocation.
+        let raw = format!(
+            "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        let (code, _) = http_roundtrip(srv.addr, &raw).unwrap();
+        assert_eq!(code, 400);
+        srv.stop();
+    }
+}

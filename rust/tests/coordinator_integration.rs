@@ -2,6 +2,9 @@
 //! resume-bit-exactness, per-component LRs through the real artifacts, and
 //! the pallas-kernel-path preset. Skip cleanly when artifacts are missing.
 
+// Trainer/Session need PJRT execution.
+#![cfg(feature = "pjrt")]
+
 use sct::checkpoint::CheckpointManager;
 use sct::coordinator::{LrPlan, RunConfig, Trainer};
 use sct::runtime::{Manifest, Session};

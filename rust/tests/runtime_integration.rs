@@ -5,6 +5,9 @@
 //! lowered the training step once at build time; everything below here is
 //! rust + compiled HLO.
 
+// PJRT execution only exists behind the `pjrt` feature.
+#![cfg(feature = "pjrt")]
+
 use sct::runtime::{Manifest, Session};
 
 fn artifacts_root() -> Option<std::path::PathBuf> {

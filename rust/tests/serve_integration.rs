@@ -1,0 +1,124 @@
+//! End-to-end tests of the `serve` subsystem: a real TCP server, concurrent
+//! HTTP clients, and the KV-cache-vs-re-encode equivalence through the
+//! public API. Pure std — no PJRT, no artifacts.
+
+use sct::data::Tokenizer;
+use sct::serve::{
+    http_get_json, http_post_json, Engine, EngineConfig, SampleOpts, ServeConfig, Server,
+    SpectralModel,
+};
+
+fn tiny_engine(seed: u64) -> Engine {
+    let cfg = EngineConfig {
+        vocab: 256,
+        d_model: 48,
+        n_layers: 2,
+        n_heads: 4,
+        d_ffn: 96,
+        rank: 6,
+        max_seq: 64,
+    };
+    Engine::new(SpectralModel::init(cfg, seed))
+}
+
+fn start_server(slots: usize, queue: usize) -> Server {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        slots,
+        queue_depth: queue,
+        max_new_default: 8,
+    };
+    Server::start(&cfg, tiny_engine(42), Tokenizer::byte_level()).unwrap()
+}
+
+#[test]
+fn eight_concurrent_requests_all_complete() {
+    // The acceptance workload: >= 8 concurrent generation requests against
+    // a running server, all of which must complete.
+    let srv = start_server(4, 16);
+    let addr = srv.addr;
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let body = format!(
+                    r#"{{"prompt": "request number {i}", "tokens": 10, "temperature": 0.7, "seed": {i}}}"#
+                );
+                http_post_json(addr, "/v1/generate", &body).unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let (code, resp) = h.join().unwrap();
+        assert_eq!(code, 200, "resp: {resp:?}");
+        assert_eq!(resp.get("tokens").unwrap().as_arr().unwrap().len(), 10);
+        assert!(resp.get("decode_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+    let (_, stats) = http_get_json(addr, "/v1/stats").unwrap();
+    assert_eq!(stats.get("completed").unwrap().as_i64().unwrap(), 8);
+    assert_eq!(stats.get("tokens_out").unwrap().as_i64().unwrap(), 80);
+    srv.stop();
+}
+
+#[test]
+fn served_greedy_output_matches_reencode_baseline() {
+    // Token-identical KV-cached decode vs the full re-encode baseline, at
+    // temperature 0, through the whole HTTP + batcher + engine stack.
+    let srv = start_server(2, 8);
+    let prompt = "spectral compact training";
+    let (code, resp) = http_post_json(
+        srv.addr,
+        "/v1/generate",
+        &format!(r#"{{"prompt": "{prompt}", "tokens": 12, "temperature": 0}}"#),
+    )
+    .unwrap();
+    assert_eq!(code, 200);
+    let served: Vec<i32> = resp
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_i64().unwrap() as i32)
+        .collect();
+
+    // Same model seed, same tokenization, re-encode decoder.
+    let engine = tiny_engine(42);
+    let ids = Tokenizer::byte_level().encode(prompt);
+    let opts = SampleOpts { temperature: 0.0, top_k: 0, seed: 0 };
+    let baseline = engine.generate_reencode(&ids, 12, &opts);
+    assert_eq!(served, baseline, "served KV decode must equal re-encode baseline");
+    srv.stop();
+}
+
+#[test]
+fn healthz_reports_configuration() {
+    let srv = start_server(3, 5);
+    let (code, body) = http_get_json(srv.addr, "/healthz").unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(body.get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(body.get("slots").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(body.get("queue_depth").unwrap().as_usize().unwrap(), 5);
+    srv.stop();
+}
+
+#[test]
+fn overload_returns_503_not_a_hang() {
+    // 1 slot + depth-1 queue, long generations: some of a burst of clients
+    // must be shed with 503; the rest complete.
+    let srv = start_server(1, 1);
+    let addr = srv.addr;
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let body = format!(
+                    r#"{{"prompt": "burst {i}", "tokens": 30, "temperature": 0}}"#
+                );
+                http_post_json(addr, "/v1/generate", &body).unwrap().0
+            })
+        })
+        .collect();
+    let codes: Vec<u16> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(codes.iter().all(|&c| c == 200 || c == 503), "codes: {codes:?}");
+    assert!(codes.contains(&200), "at least one request must be served: {codes:?}");
+    srv.stop();
+}

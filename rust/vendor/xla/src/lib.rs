@@ -1,0 +1,131 @@
+//! API-compatible **stub** of the `xla` PJRT bindings.
+//!
+//! The offline image that builds this repository does not ship the XLA
+//! extension library, so the `pjrt` feature resolves this crate instead of
+//! the real bindings. It mirrors exactly the API surface `sct::runtime`
+//! uses — `PjRtClient`, `PjRtLoadedExecutable`, `Literal`, `HloModuleProto`,
+//! `XlaComputation`, `ElementType` — with every entry point that would touch
+//! the PJRT runtime returning a descriptive error at *runtime*. Code gated
+//! behind `--features pjrt` therefore still type-checks and links; a full
+//! environment swaps this path dependency for the real crate (same name,
+//! same API) and nothing else changes.
+//!
+//! Unit tests that exercise real literals/executables are expected to fail
+//! against this stub; they are only meaningful with the real bindings.
+
+use std::borrow::Borrow;
+
+/// Error type matching the real bindings' `anyhow`-compatible surface.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT runtime not linked (this is the offline API stub; \
+         build against the real `xla` crate for execution)"
+    )))
+}
+
+/// Element types the SCT artifacts use on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U32,
+}
+
+/// Host types a [`Literal`] can be read back into.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+impl NativeType for u32 {}
+
+/// Host-side tensor value (opaque in the stub).
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal(())
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _shape: &[usize],
+        _bytes: &[u8],
+    ) -> Result<Literal> {
+        unavailable("Literal::create_from_shape_and_untyped_data")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn element_count(&self) -> usize {
+        0
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// A computation ready for compilation.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device buffer handle returned by an execution.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Process/thread-scoped PJRT client.
+#[derive(Debug, Clone)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
