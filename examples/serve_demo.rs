@@ -3,10 +3,12 @@
 //! Starts the spectral inference server on a loopback port with a tiny
 //! random-init model (rank-8 spectral MLPs — no dense weight exists), fires
 //! 12 concurrent HTTP generation requests at it, verifies every one
-//! completes, checks that greedy requests are reproducible, and prints the
-//! queue/decode latency per request plus aggregate throughput. Finishes
-//! with the correctness anchor: the KV-cached decoder emits exactly the
-//! same tokens as the full re-encode baseline at temperature 0.
+//! completes, checks that greedy requests are reproducible, then streams
+//! the same prompt over SSE — printing time-to-first-token and the
+//! inter-token latency spread, and verifying the streamed tokens equal the
+//! one-shot response. Finishes with the correctness anchor: the KV-cached
+//! decoder emits exactly the same tokens as the full re-encode baseline at
+//! temperature 0.
 //!
 //! Run: `cargo run --release --example serve_demo`
 
@@ -14,7 +16,8 @@ use std::time::Instant;
 
 use sct::data::Tokenizer;
 use sct::serve::{
-    http_post_json, Engine, EngineConfig, SampleOpts, ServeConfig, Server, SpectralModel,
+    http_post_json, http_post_sse, Engine, EngineConfig, SampleOpts, ServeConfig, Server,
+    SpectralModel,
 };
 use sct::util::json::Json;
 
@@ -41,6 +44,7 @@ fn main() -> anyhow::Result<()> {
         slots: 8,
         queue_depth: 32,
         max_new_default: TOKENS_PER_REQUEST,
+        ..ServeConfig::default()
     };
     let server = Server::start(&serve_cfg, Engine::new(model), Tokenizer::byte_level())?;
     println!(
@@ -97,9 +101,58 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(greedy_a == greedy_b, "greedy requests with one prompt must agree");
     println!("greedy requests with identical prompts produced identical tokens");
 
+    // -- streaming: the same greedy prompt over SSE --------------------------
+    println!("\nstreaming the greedy prompt over SSE:");
+    let (code, frames) = http_post_sse(
+        addr,
+        "/v1/generate",
+        &format!(
+            r#"{{"prompt": "### Instruction: explain truncated SVD", "tokens": {TOKENS_PER_REQUEST}, "temperature": 0, "stream": true}}"#
+        ),
+    )?;
+    anyhow::ensure!(code == 200, "streaming request got HTTP {code}");
+    anyhow::ensure!(
+        frames.len() == TOKENS_PER_REQUEST + 1,
+        "expected {TOKENS_PER_REQUEST} token frames + 1 usage frame, got {}",
+        frames.len()
+    );
+    let streamed: Vec<i64> = frames[..TOKENS_PER_REQUEST]
+        .iter()
+        .map(|f| f.data.get("token").unwrap().as_i64())
+        .collect::<anyhow::Result<_>>()?;
+    let oneshot: Vec<i64> = responses[0]
+        .1
+        .get("tokens")
+        .unwrap()
+        .as_arr()?
+        .iter()
+        .map(|v| v.as_i64())
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(streamed == oneshot, "SSE tokens must equal the one-shot sequence");
+    let ttft_ms = frames[0].at_s * 1e3;
+    let itl_ms: Vec<f64> = frames[..TOKENS_PER_REQUEST]
+        .windows(2)
+        .map(|w| (w[1].at_s - w[0].at_s) * 1e3)
+        .collect();
+    let mean_itl = itl_ms.iter().sum::<f64>() / itl_ms.len().max(1) as f64;
+    let max_itl = itl_ms.iter().fold(0.0f64, |a, &b| a.max(b));
+    println!(
+        "  {} frames, token-identical to the one-shot response; \
+         TTFT {ttft_ms:.2} ms, inter-token latency mean {mean_itl:.2} ms / max {max_itl:.2} ms",
+        frames.len()
+    );
+    let usage = &frames[TOKENS_PER_REQUEST].data;
+    println!(
+        "  final frame usage: ttft {:.2} ms, decode {:.2} ms, {:.0} tok/s",
+        usage.get("ttft_ms").unwrap().as_f64()?,
+        usage.get("decode_ms").unwrap().as_f64()?,
+        usage.get("tok_per_s").unwrap().as_f64()?
+    );
+
     let (admitted, completed, _tokens, peak) = server.stats();
     println!("scheduler: admitted={admitted} completed={completed} peak_active={peak}");
-    anyhow::ensure!(completed == CLIENTS as u64, "scheduler must complete every request");
+    // 12 one-shot clients + the SSE streaming request above
+    anyhow::ensure!(completed == CLIENTS as u64 + 1, "scheduler must complete every request");
     server.stop();
 
     // -- correctness anchor: KV decode == re-encode baseline ----------------

@@ -1,107 +1,373 @@
-//! Serving throughput: batched (continuous batching, 8 slots) vs sequential
-//! (1 slot) decode through the scheduler, at spectral ranks 32 and 128,
-//! plus queue latency under concurrent load and the per-path token costs.
+//! Serving latency + throughput: batched (continuous batching) vs
+//! sequential (1 slot) decode through the scheduler, with client-observed
+//! time-to-first-token (TTFT) and inter-token-latency (ITL) percentiles
+//! measured off the streaming channel, plus a chunked-prefill interleave
+//! probe (does a 512-token prompt admission stall an active decode?).
 //!
 //! The batched win comes from weight reuse: one `step_batch` over B rows
 //! streams every projection matrix (and the logits head) once for B
 //! sequences, where sequential decode re-streams them per sequence — on a
 //! memory-bound CPU decode that is the whole game. The same workload runs
 //! through both paths, so `speedup = sequential_wall / batched_wall`.
+//! TTFT/ITL come from per-token `StreamEvent` arrival times, i.e. exactly
+//! what an SSE client observes minus the socket.
 //!
 //! Run: `cargo bench --bench serve_throughput`
+//! Flags: `--smoke` (tiny model, few requests — the CI mode; also enabled
+//! by the `SCT_BENCH_SMOKE` env var) and `--json PATH` (write the numbers
+//! as one JSON document, e.g. `BENCH_serve.json`, so CI can archive the
+//! perf trajectory per PR).
 
+use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use sct::serve::{Batcher, Engine, EngineConfig, Request, SampleOpts, SpectralModel};
+use sct::json_obj;
+use sct::serve::{
+    BatchConfig, Batcher, Completion, Engine, EngineConfig, Request, SampleOpts, SpectralModel,
+    StreamEvent,
+};
 use sct::util::bench::{table_header, table_row};
+use sct::util::json::Json;
 
-const REQUESTS: usize = 8;
-const TOKENS_PER_REQUEST: usize = 24;
-const SLOTS_BATCHED: usize = 8;
+/// One benchmark scale (the smoke variant keeps CI under a few seconds).
+#[derive(Clone, Copy)]
+struct Workload {
+    requests: usize,
+    tokens_per_request: usize,
+    slots_batched: usize,
+    d_model: usize,
+    d_ffn: usize,
+    n_heads: usize,
+    max_seq: usize,
+    ranks: &'static [usize],
+    /// Prefill-probe sizing: the long prompt admitted mid-decode and the
+    /// active sequence's generation budget.
+    long_prompt: usize,
+    active_tokens: usize,
+    prefill_chunk: usize,
+}
 
-fn bench_cfg(rank: usize) -> EngineConfig {
+const FULL: Workload = Workload {
+    requests: 8,
+    tokens_per_request: 24,
+    slots_batched: 8,
+    d_model: 256,
+    d_ffn: 512,
+    n_heads: 8,
+    max_seq: 96,
+    ranks: &[32, 128],
+    long_prompt: 512,
+    active_tokens: 64,
+    prefill_chunk: 64,
+};
+
+const SMOKE: Workload = Workload {
+    requests: 4,
+    tokens_per_request: 8,
+    slots_batched: 4,
+    d_model: 64,
+    d_ffn: 128,
+    n_heads: 4,
+    max_seq: 48,
+    ranks: &[8],
+    long_prompt: 96,
+    active_tokens: 24,
+    prefill_chunk: 16,
+};
+
+fn bench_cfg(w: &Workload, rank: usize) -> EngineConfig {
     EngineConfig {
         vocab: 256,
-        d_model: 256,
+        d_model: w.d_model,
         n_layers: 2,
-        n_heads: 8,
-        d_ffn: 512,
+        n_heads: w.n_heads,
+        d_ffn: w.d_ffn,
         rank,
-        max_seq: 96,
+        max_seq: w.max_seq,
     }
 }
 
-/// Push the standard workload through a batcher with `slots` decode slots;
-/// returns (wall seconds, mean queue ms, mean decode ms).
-fn run_workload(cfg: EngineConfig, slots: usize) -> (f64, f64, f64) {
+fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s[((s.len() as f64 - 1.0) * p).round() as usize]
+}
+
+struct WorkloadResult {
+    wall_s: f64,
+    ttft_ms: Vec<f64>,
+    itl_ms: Vec<f64>,
+    queue_ms_mean: f64,
+    decode_ms_mean: f64,
+}
+
+/// Push the standard workload through a batcher with `slots` decode slots,
+/// streaming every request so TTFT/ITL are measured at token granularity.
+fn run_workload(
+    cfg: EngineConfig,
+    slots: usize,
+    prefill_chunk: usize,
+    requests: usize,
+    tokens: usize,
+) -> WorkloadResult {
     let engine = Engine::new(SpectralModel::init(cfg, 0));
-    let batcher = Arc::new(Batcher::spawn(engine, slots, REQUESTS * 2));
+    let batcher = Arc::new(Batcher::spawn_with(
+        engine,
+        BatchConfig { slots, queue_depth: requests * 2, prefill_chunk },
+    ));
     let t0 = Instant::now();
-    let handles: Vec<_> = (0..REQUESTS)
+    let handles: Vec<_> = (0..requests)
         .map(|i| {
             let b = batcher.clone();
             std::thread::spawn(move || {
-                b.generate(Request {
-                    prompt: vec![(i as i32) + 1, 17, 42, 5],
-                    max_new: TOKENS_PER_REQUEST,
-                    opts: SampleOpts { temperature: 0.0, top_k: 0, seed: 0 },
-                })
-                .unwrap()
+                let sent = Instant::now();
+                let rx = b
+                    .submit_streaming(Request {
+                        prompt: vec![(i as i32) + 1, 17, 42, 5],
+                        max_new: tokens,
+                        opts: SampleOpts { temperature: 0.0, top_k: 0, seed: 0 },
+                    })
+                    .unwrap();
+                let mut ttft = None;
+                let mut prev: Option<f64> = None;
+                let mut itl = Vec::new();
+                let mut done: Option<Completion> = None;
+                for ev in rx {
+                    match ev {
+                        StreamEvent::Token(_) => {
+                            let at = sent.elapsed().as_secs_f64() * 1e3;
+                            if ttft.is_none() {
+                                ttft = Some(at);
+                            }
+                            if let Some(p) = prev {
+                                itl.push(at - p);
+                            }
+                            prev = Some(at);
+                        }
+                        StreamEvent::Done(c) => done = Some(c),
+                    }
+                }
+                let c = done.expect("stream must terminate with Done");
+                assert_eq!(c.tokens.len(), tokens);
+                (ttft.expect("at least one token"), itl, c)
             })
         })
         .collect();
-    let completions: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
-    let wall = t0.elapsed().as_secs_f64();
-    for c in &completions {
-        assert_eq!(c.tokens.len(), TOKENS_PER_REQUEST);
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let n = results.len() as f64;
+    WorkloadResult {
+        wall_s,
+        ttft_ms: results.iter().map(|r| r.0).collect(),
+        itl_ms: results.iter().flat_map(|r| r.1.iter().copied()).collect(),
+        queue_ms_mean: results.iter().map(|r| r.2.queue_ms).sum::<f64>() / n,
+        decode_ms_mean: results.iter().map(|r| r.2.decode_ms).sum::<f64>() / n,
     }
-    let n = completions.len() as f64;
-    let queue_ms = completions.iter().map(|c| c.queue_ms).sum::<f64>() / n;
-    let decode_ms = completions.iter().map(|c| c.decode_ms).sum::<f64>() / n;
-    (wall, queue_ms, decode_ms)
+}
+
+struct ProbeResult {
+    prefill_chunk: usize,
+    b_ttft_ms: f64,
+    active_max_gap_ms: f64,
+    interleaved_tokens: usize,
+}
+
+/// Admit a `long_prompt`-token request while a short-prompt sequence is
+/// actively decoding; measure the long request's TTFT, the worst stall the
+/// active sequence experienced, and how many tokens it managed to produce
+/// during admission. `prefill_chunk = 0` reproduces the pre-chunking inline
+/// prefill (the stall this subsystem removes) for an A/B trajectory in CI.
+fn prefill_probe(
+    cfg: EngineConfig,
+    prefill_chunk: usize,
+    long_prompt: usize,
+    active_tokens: usize,
+) -> ProbeResult {
+    let engine = Engine::new(SpectralModel::init(cfg, 0));
+    let b = Batcher::spawn_with(engine, BatchConfig { slots: 2, queue_depth: 4, prefill_chunk });
+    let greedy = SampleOpts { temperature: 0.0, top_k: 0, seed: 0 };
+    let rxa = b
+        .submit_streaming(Request {
+            prompt: vec![1, 2, 3],
+            max_new: active_tokens,
+            opts: greedy.clone(),
+        })
+        .unwrap();
+    match rxa.recv() {
+        Ok(StreamEvent::Token(_)) => {} // the active sequence is decoding
+        other => panic!("active sequence died early: {other:?}"),
+    }
+
+    let prompt: Vec<i32> = (0..long_prompt as i32).map(|i| (i % 251) + 1).collect();
+    let t_b = Instant::now();
+    let rxb = b.submit_streaming(Request { prompt, max_new: 4, opts: greedy }).unwrap();
+    let mut last_a = Instant::now();
+    let mut max_gap_ms = 0.0f64;
+    let mut interleaved = 0usize;
+    let mut a_open = true;
+    let b_ttft_ms = loop {
+        match rxb.try_recv() {
+            Ok(StreamEvent::Token(_)) | Ok(StreamEvent::Done(_)) => {
+                break t_b.elapsed().as_secs_f64() * 1e3;
+            }
+            Err(_) => {}
+        }
+        if a_open {
+            match rxa.recv_timeout(Duration::from_millis(10)) {
+                Ok(StreamEvent::Token(_)) => {
+                    max_gap_ms = max_gap_ms.max(last_a.elapsed().as_secs_f64() * 1e3);
+                    last_a = Instant::now();
+                    interleaved += 1;
+                }
+                Ok(StreamEvent::Done(_)) | Err(RecvTimeoutError::Disconnected) => a_open = false,
+                Err(RecvTimeoutError::Timeout) => {}
+            }
+        } else {
+            match rxb.recv_timeout(Duration::from_secs(60)) {
+                Ok(_) => break t_b.elapsed().as_secs_f64() * 1e3,
+                Err(e) => panic!("long-prompt request stalled: {e:?}"),
+            }
+        }
+    };
+    // the stall the active sequence is in when B's first token lands counts
+    max_gap_ms = max_gap_ms.max(last_a.elapsed().as_secs_f64() * 1e3);
+    drop(rxa);
+    drop(rxb);
+    ProbeResult {
+        prefill_chunk,
+        b_ttft_ms,
+        active_max_gap_ms: max_gap_ms,
+        interleaved_tokens: interleaved,
+    }
+}
+
+fn probe_json(p: &ProbeResult) -> Json {
+    json_obj![
+        ("prefill_chunk", p.prefill_chunk),
+        ("b_ttft_ms", p.b_ttft_ms),
+        ("active_max_gap_ms", p.active_max_gap_ms),
+        ("interleaved_tokens", p.interleaved_tokens),
+    ]
 }
 
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = argv.iter().any(|a| a == "--smoke") || std::env::var("SCT_BENCH_SMOKE").is_ok();
+    let json_path =
+        argv.iter().position(|a| a == "--json").and_then(|i| argv.get(i + 1).cloned());
+    let w = if smoke { SMOKE } else { FULL };
+    let total_tokens = (w.requests * w.tokens_per_request) as f64;
+
     println!(
-        "serve throughput: {REQUESTS} requests x {TOKENS_PER_REQUEST} tokens, \
-         d_model=256, 2 layers (sequential = 1 slot, batched = {SLOTS_BATCHED} slots)"
+        "serve throughput{}: {} requests x {} tokens, d_model={}, 2 layers \
+         (sequential = 1 slot, batched = {} slots, prefill_chunk = {})",
+        if smoke { " [smoke]" } else { "" },
+        w.requests,
+        w.tokens_per_request,
+        w.d_model,
+        w.slots_batched,
+        w.prefill_chunk,
     );
-    let total_tokens = (REQUESTS * TOKENS_PER_REQUEST) as f64;
 
     table_header(
         "Batched vs sequential serving",
-        &["rank", "mode", "wall s", "tok/s", "mean queue ms", "mean decode ms", "speedup"],
+        &["rank", "mode", "wall s", "tok/s", "ttft p50/p95 ms", "itl p50/p95 ms", "speedup"],
     );
-    for rank in [32usize, 128] {
+    let mut rows: Vec<Json> = Vec::new();
+    for &rank in w.ranks {
         // warmup: one small run per engine shape so first-touch page faults
         // do not land in the sequential column.
-        let _ = run_workload(bench_cfg(rank), 1);
+        let _ =
+            run_workload(bench_cfg(&w, rank), 1, w.prefill_chunk, w.requests, w.tokens_per_request);
 
-        let (seq_wall, seq_q, seq_d) = run_workload(bench_cfg(rank), 1);
-        let (bat_wall, bat_q, bat_d) = run_workload(bench_cfg(rank), SLOTS_BATCHED);
-        let speedup = seq_wall / bat_wall;
-        table_row(&[
-            format!("{rank}"),
-            "sequential".into(),
-            format!("{seq_wall:.3}"),
-            format!("{:.0}", total_tokens / seq_wall),
-            format!("{seq_q:.1}"),
-            format!("{seq_d:.1}"),
-            "1.00x".into(),
-        ]);
-        table_row(&[
-            format!("{rank}"),
-            "batched".into(),
-            format!("{bat_wall:.3}"),
-            format!("{:.0}", total_tokens / bat_wall),
-            format!("{bat_q:.1}"),
-            format!("{bat_d:.1}"),
-            format!("{speedup:.2}x"),
-        ]);
+        let modes = [("sequential", 1), ("batched", w.slots_batched)];
+        let mut seq_wall = 0.0f64;
+        for (mode, slots) in modes {
+            let r = run_workload(
+                bench_cfg(&w, rank),
+                slots,
+                w.prefill_chunk,
+                w.requests,
+                w.tokens_per_request,
+            );
+            if mode == "sequential" {
+                seq_wall = r.wall_s;
+            }
+            let speedup = seq_wall / r.wall_s;
+            let tok_per_s = total_tokens / r.wall_s;
+            let (ttft50, ttft95) = (percentile(&r.ttft_ms, 0.50), percentile(&r.ttft_ms, 0.95));
+            let (itl50, itl95) = (percentile(&r.itl_ms, 0.50), percentile(&r.itl_ms, 0.95));
+            table_row(&[
+                format!("{rank}"),
+                mode.into(),
+                format!("{:.3}", r.wall_s),
+                format!("{tok_per_s:.0}"),
+                format!("{ttft50:.1} / {ttft95:.1}"),
+                format!("{itl50:.2} / {itl95:.2}"),
+                format!("{speedup:.2}x"),
+            ]);
+            rows.push(json_obj![
+                ("rank", rank),
+                ("mode", mode),
+                ("wall_s", r.wall_s),
+                ("tok_per_s", tok_per_s),
+                ("ttft_ms_p50", ttft50),
+                ("ttft_ms_p95", ttft95),
+                ("itl_ms_p50", itl50),
+                ("itl_ms_p95", itl95),
+                ("queue_ms_mean", r.queue_ms_mean),
+                ("decode_ms_mean", r.decode_ms_mean),
+                ("speedup", speedup),
+            ]);
+        }
+    }
+
+    // -- chunked-prefill interleave probe ------------------------------------
+    let probe_cfg = EngineConfig {
+        max_seq: w.long_prompt + 2 * w.active_tokens,
+        ..bench_cfg(&w, w.ranks[0])
+    };
+    let chunked = prefill_probe(probe_cfg, w.prefill_chunk, w.long_prompt, w.active_tokens);
+    let inline = prefill_probe(probe_cfg, 0, w.long_prompt, w.active_tokens);
+    println!(
+        "\nprefill interleave ({}-token prompt admitted mid-decode, rank {}):",
+        w.long_prompt, w.ranks[0]
+    );
+    for p in [&chunked, &inline] {
         println!(
-            "rank {rank}: continuous batching speedup {speedup:.2}x \
-             (sequential queues requests behind one slot: mean wait {seq_q:.0} ms vs {bat_q:.0} ms batched)"
+            "  prefill_chunk {:>3}: long-prompt TTFT {:>8.1} ms, active-seq worst stall \
+             {:>8.1} ms, {} tokens interleaved",
+            p.prefill_chunk, p.b_ttft_ms, p.active_max_gap_ms, p.interleaved_tokens
         );
+    }
+    println!(
+        "  chunking cuts the active sequence's worst stall {:.1}x",
+        inline.active_max_gap_ms / chunked.active_max_gap_ms.max(1e-6)
+    );
+
+    if let Some(path) = json_path {
+        let doc = json_obj![
+            ("bench", "serve_throughput"),
+            ("smoke", smoke),
+            ("requests", w.requests),
+            ("tokens_per_request", w.tokens_per_request),
+            ("d_model", w.d_model),
+            ("rows", rows),
+            (
+                "prefill_probe",
+                json_obj![
+                    ("long_prompt", w.long_prompt),
+                    ("active_tokens", w.active_tokens),
+                    ("chunked", probe_json(&chunked)),
+                    ("inline", probe_json(&inline)),
+                ]
+            ),
+        ];
+        std::fs::write(&path, doc.to_string()).expect("writing bench JSON");
+        println!("\nwrote {path}");
     }
 }

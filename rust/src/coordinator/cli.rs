@@ -7,7 +7,7 @@
 //! * `finetune`     — Table 4 (dense -> 95%-energy spectral conversion)
 //! * `mem-report`   — Table 1 / Figure 1 analytic memory model
 //! * `serve`        — pure-Rust spectral inference server (KV cache +
-//!   continuous batching; no PJRT needed)
+//!   continuous batching + chunked prefill + SSE streaming; no PJRT needed)
 //! * `info`         — list presets in the artifact manifest
 //!
 //! Training subcommands execute AOT artifacts through PJRT and need the
@@ -63,7 +63,7 @@ fn print_usage() {
          \x20 validate-70b  70B-step validation: Table 2 + Figure 1\n\
          \x20 finetune      gradient-integrity fine-tune: Table 4\n\
          \x20 generate      sample text from a (trained) spectral model\n\
-         \x20 serve         spectral inference server (KV cache + batching)\n\
+         \x20 serve         spectral inference server (batching + chunked prefill + SSE streaming)\n\
          \x20 mem-report    analytic memory model: Table 1 / Figure 1\n\
          \x20 info          list presets in the manifest\n\n\
          `sct <subcommand> --help` for options"
@@ -350,12 +350,28 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     // Server-sizing options deliberately carry no parser-level default:
     // `opt_default` would pre-populate the value and silently override the
     // `[serve]` TOML section. Layering is ServeConfig::default < TOML < flag.
-    let spec = Command::new("sct serve", "spectral inference server (KV cache + batching)")
+    let spec = Command::new(
+        "sct serve",
+        "spectral inference server (KV cache + continuous batching + chunked \
+         prefill; POST /v1/generate with \"stream\": true answers Server-Sent \
+         Events, one data: frame per token over a keep-alive connection)",
+    )
         .opt("config", "TOML config file ([serve] section)")
         .opt("addr", "listen address [default: 127.0.0.1:8077]")
         .opt("slots", "concurrent decode slots (KV cache arena size) [default: 8]")
         .opt("queue-depth", "bounded admission queue depth [default: 32]")
         .opt("max-new", "default tokens per request [default: 48]")
+        .opt(
+            "prefill-chunk",
+            "prompt tokens prefilled per scheduler step — the fairness budget \
+             that keeps long-prompt admission from stalling active decodes \
+             (0 = unchunked) [default: 64]",
+        )
+        .opt(
+            "keep-alive-ms",
+            "connection read deadline / keep-alive idle window, ms \
+             (0 = no deadline) [default: 15000]",
+        )
         .opt("ckpt", "serve checkpoint (.sct written by SpectralModel::save)")
         .opt_default("seed", "weight-init / tokenizer seed", "0")
         .opt_default("vocab", "vocab size (random-init model)", "256")
@@ -378,6 +394,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     serve_cfg.slots = args.parse_num("slots", serve_cfg.slots)?;
     serve_cfg.queue_depth = args.parse_num("queue-depth", serve_cfg.queue_depth)?;
     serve_cfg.max_new_default = args.parse_num("max-new", serve_cfg.max_new_default)?;
+    serve_cfg.prefill_chunk = args.parse_num("prefill-chunk", serve_cfg.prefill_chunk)?;
+    serve_cfg.keep_alive_ms = args.parse_num("keep-alive-ms", serve_cfg.keep_alive_ms)?;
     anyhow::ensure!(serve_cfg.slots > 0, "--slots must be at least 1");
 
     let seed: u64 = args.parse_num("seed", 0)?;
@@ -413,8 +431,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 
     let server = serve::Server::start(&serve_cfg, serve::Engine::new(model), tokenizer)?;
     println!(
-        "serving on http://{}  (slots={}, queue={}; POST /v1/generate, GET /healthz, GET /v1/stats)",
-        server.addr, serve_cfg.slots, serve_cfg.queue_depth
+        "serving on http://{}  (slots={}, queue={}, prefill_chunk={}, keep_alive_ms={})\n\
+         routes: POST /v1/generate (\"stream\": true => SSE, one data: frame per \
+         token), GET /healthz, GET /v1/stats",
+        server.addr,
+        serve_cfg.slots,
+        serve_cfg.queue_depth,
+        serve_cfg.prefill_chunk,
+        serve_cfg.keep_alive_ms,
     );
     server.join();
     Ok(())

@@ -17,8 +17,9 @@
 //! * [`coordinator`] — the training orchestrator: config, LR schedules,
 //!   trainer loop, rank-sweep / fine-tune drivers (drivers need `pjrt`).
 //! * [`serve`] — the pure-Rust spectral inference engine: KV-cached
-//!   incremental decoding, continuous-batching scheduler, and a std-net
-//!   HTTP server — the deployment side of "never materialized", no PJRT
+//!   incremental decoding, continuous-batching scheduler with chunked
+//!   prefill, and a std-net HTTP server with keep-alive + SSE token
+//!   streaming — the deployment side of "never materialized", no PJRT
 //!   required.
 //! * [`spectral`] — pure-Rust spectral linear algebra substrate (matrix ops,
 //!   Householder QR, Jacobi SVD, AdamW, a native SpectralLinear layer) used

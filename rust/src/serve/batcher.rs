@@ -1,5 +1,6 @@
 //! Continuous-batching scheduler: bounded admission queue, slot-based
-//! admission, batched decode, eviction of finished sequences.
+//! admission, chunked prefill, batched decode, per-token streaming, eviction
+//! of finished sequences.
 //!
 //! One scheduler thread owns the [`Engine`] and the [`KvCache`] arena.
 //! Clients submit [`Request`]s through a bounded `sync_channel` (the same
@@ -7,22 +8,33 @@
 //! instead of buffering unboundedly). The scheduler loop:
 //!
 //! 1. **admit** — while free slots exist, pull queued requests (blocking
-//!    when idle, opportunistic `try_recv` otherwise), claim a KV slot, and
-//!    prefill the prompt;
-//! 2. **batch** — decode ONE token for every active sequence in a single
+//!    when idle, opportunistic `try_recv` otherwise) and claim a KV slot.
+//!    Admission is O(1): the prompt is *not* prefilled inline — the sequence
+//!    enters the batch in the `Prefilling` state;
+//! 2. **prefill** — spend at most `prefill_chunk` prompt tokens advancing
+//!    `Prefilling` sequences (round-robin across them, one position each,
+//!    batched through [`Engine::prefill_batch`] so they share the projection
+//!    weight traffic). This is the fairness budget: a 512-token prompt costs
+//!    many scheduler steps instead of stalling one, so active decodes keep
+//!    making progress while it is absorbed. A sequence whose prompt is fully
+//!    cached transitions to `Decoding`;
+//! 3. **decode** — ONE token for every `Decoding` sequence in a single
 //!    [`Engine::step_batch`] call, so all sequences share the weight-matrix
-//!    traffic of the projections and the logits head;
-//! 3. **evict** — sequences that hit their token budget or fill their KV
-//!    line release the slot (recycled by the next admission) and their
-//!    [`Completion`] is delivered on the per-request channel.
+//!    traffic of the projections and the logits head. Each sampled token is
+//!    pushed down the per-sequence stream channel immediately (when the
+//!    request was submitted via [`Batcher::submit_streaming`]); a stream
+//!    whose receiver hung up cancels the sequence, freeing its slot;
+//! 4. **evict** — sequences that hit their token budget, fill their KV
+//!    line, or were cancelled release the slot (recycled by the next
+//!    admission) and their [`Completion`] is delivered.
 //!
 //! Sequences join and leave the batch at token granularity — a long request
-//! never blocks a short one behind it (continuous batching), though a
-//! prompt's prefill currently runs inline in the admission step (chunked
-//! prefill is a ROADMAP item).
+//! never blocks a short one behind it (continuous batching), and since
+//! prefill is chunked, a long *prompt* no longer stalls the decode batch
+//! during admission either.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -49,8 +61,42 @@ pub struct Completion {
     pub prompt_len: usize,
     /// Time spent waiting for a slot (admission latency).
     pub queue_ms: f64,
+    /// Enqueue → first generated token (the user-facing latency metric).
+    pub ttft_ms: f64,
     /// Prefill + decode wall time.
     pub decode_ms: f64,
+}
+
+/// One event on a streaming request's channel (see
+/// [`Batcher::submit_streaming`]): every sampled token as soon as the decode
+/// step produces it, then a terminal [`Completion`]. Concatenating the
+/// `Token` payloads yields exactly `Completion::tokens`.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    Token(i32),
+    Done(Completion),
+}
+
+/// Scheduler sizing: slot count, admission queue depth, and the chunked
+/// prefill fairness budget.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchConfig {
+    /// Concurrent sequences (KV arena size).
+    pub slots: usize,
+    /// Bounded admission queue depth.
+    pub queue_depth: usize,
+    /// Max prompt tokens prefilled per scheduler step, shared across all
+    /// `Prefilling` sequences. Bounds how long one decode step can be
+    /// delayed by prompt admission. `0` disables chunking (a prompt is
+    /// absorbed in one step — the pre-chunking stall behavior, kept for
+    /// A/B measurement in the throughput bench).
+    pub prefill_chunk: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> BatchConfig {
+        BatchConfig { slots: 8, queue_depth: 32, prefill_chunk: 64 }
+    }
 }
 
 /// Shared scheduler counters (read via [`Batcher::stats`]).
@@ -60,6 +106,10 @@ pub struct BatchStats {
     pub completed: AtomicU64,
     pub tokens_out: AtomicU64,
     pub peak_active: AtomicU64,
+    /// Prompt tokens absorbed through chunked prefill.
+    pub prefill_tokens: AtomicU64,
+    /// Sequences cancelled because their stream receiver hung up.
+    pub cancelled: AtomicU64,
 }
 
 impl BatchStats {
@@ -71,26 +121,83 @@ impl BatchStats {
             self.peak_active.load(Ordering::Relaxed),
         )
     }
+
+    pub fn prefill_tokens(&self) -> u64 {
+        self.prefill_tokens.load(Ordering::Relaxed)
+    }
+
+    pub fn cancelled(&self) -> u64 {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+}
+
+/// Where a sequence's output goes: a one-shot completion channel or a
+/// per-token stream.
+enum Sink {
+    Oneshot(SyncSender<Completion>),
+    Stream(Sender<StreamEvent>),
+}
+
+impl Sink {
+    /// Push one sampled token; `false` means the receiver hung up and the
+    /// sequence should be cancelled (one-shot sinks never cancel mid-flight).
+    /// std `mpsc` only reveals a dropped receiver on `send`, so a hangup
+    /// during a long prefill is detected at the first decode token — the
+    /// abandoned prompt's prefill work is spent, but the slot is reclaimed
+    /// before any decode steps are wasted on it.
+    fn push_token(&self, t: i32) -> bool {
+        match self {
+            Sink::Oneshot(_) => true,
+            Sink::Stream(tx) => tx.send(StreamEvent::Token(t)).is_ok(),
+        }
+    }
+
+    /// Deliver the terminal completion (best-effort: the receiver may be gone).
+    fn finish(self, c: Completion) {
+        match self {
+            Sink::Oneshot(tx) => {
+                let _ = tx.try_send(c);
+            }
+            Sink::Stream(tx) => {
+                let _ = tx.send(StreamEvent::Done(c));
+            }
+        }
+    }
 }
 
 struct Job {
     req: Request,
-    done: SyncSender<Completion>,
+    sink: Sink,
     enqueued: Instant,
+}
+
+/// Per-slot scheduler state: absorbing the prompt vs emitting tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SeqState {
+    /// `done` of `total` prompt tokens fed into the KV cache so far.
+    Prefilling { done: usize, total: usize },
+    /// Prompt absorbed; one token per batched decode step.
+    Decoding,
 }
 
 /// An admitted sequence holding a KV slot.
 struct ActiveSeq {
     slot: SlotId,
+    /// Context-trimmed prompt. `prompt[..prompt.len()-1]` is prefilled; the
+    /// last token seeds decoding (its logits come from the first decode step).
+    prompt: Vec<i32>,
+    state: SeqState,
     cur: i32,
     produced: Vec<i32>,
     max_new: usize,
     rng: Rng,
     opts: SampleOpts,
-    prompt_len: usize,
-    done: SyncSender<Completion>,
+    sink: Option<Sink>,
     queue_ms: f64,
+    enqueued: Instant,
     admitted_at: Instant,
+    first_token_ms: Option<f64>,
+    cancelled: bool,
 }
 
 /// Handle to the scheduler thread. Dropping it closes the queue and joins
@@ -105,35 +212,52 @@ pub struct Batcher {
     stats: Arc<BatchStats>,
     pub slots: usize,
     pub queue_depth: usize,
+    pub prefill_chunk: usize,
 }
 
 impl Batcher {
-    /// Spawn the scheduler with `slots` concurrent sequences and a bounded
-    /// queue of `queue_depth` waiting requests.
+    /// Spawn the scheduler with `slots` concurrent sequences, a bounded
+    /// queue of `queue_depth` waiting requests, and the default chunked
+    /// prefill budget (see [`BatchConfig`]).
     pub fn spawn(engine: Engine, slots: usize, queue_depth: usize) -> Batcher {
-        assert!(slots > 0, "need at least one decode slot");
-        let (tx, rx) = mpsc::sync_channel::<Job>(queue_depth.max(1));
+        Batcher::spawn_with(engine, BatchConfig { slots, queue_depth, ..BatchConfig::default() })
+    }
+
+    /// Spawn the scheduler with explicit sizing.
+    pub fn spawn_with(engine: Engine, cfg: BatchConfig) -> Batcher {
+        assert!(cfg.slots > 0, "need at least one decode slot");
+        let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth.max(1));
         let stats = Arc::new(BatchStats::default());
         let stats_worker = stats.clone();
         let handle = std::thread::Builder::new()
             .name("sct-batcher".into())
-            .spawn(move || scheduler_loop(engine, slots, rx, stats_worker))
+            .spawn(move || scheduler_loop(engine, cfg, rx, stats_worker))
             .expect("spawn batcher thread");
-        Batcher { tx: Mutex::new(Some(tx)), handle: Some(handle), stats, slots, queue_depth }
+        Batcher {
+            tx: Mutex::new(Some(tx)),
+            handle: Some(handle),
+            stats,
+            slots: cfg.slots,
+            queue_depth: cfg.queue_depth,
+            prefill_chunk: cfg.prefill_chunk,
+        }
+    }
+
+    fn sender(&self) -> Result<SyncSender<Job>> {
+        self.tx
+            .lock()
+            .unwrap()
+            .as_ref()
+            .cloned()
+            .ok_or_else(|| anyhow!("batcher is shut down"))
     }
 
     /// Enqueue a request; blocks when the admission queue is full
     /// (backpressure). Returns the channel the completion arrives on.
     pub fn submit(&self, req: Request) -> Result<Receiver<Completion>> {
-        let tx = self
-            .tx
-            .lock()
-            .unwrap()
-            .as_ref()
-            .cloned()
-            .ok_or_else(|| anyhow!("batcher is shut down"))?;
+        let tx = self.sender()?;
         let (done, done_rx) = mpsc::sync_channel(1);
-        tx.send(Job { req, done, enqueued: Instant::now() })
+        tx.send(Job { req, sink: Sink::Oneshot(done), enqueued: Instant::now() })
             .map_err(|_| anyhow!("batcher thread died"))?;
         Ok(done_rx)
     }
@@ -141,16 +265,34 @@ impl Batcher {
     /// Non-blocking submit: errors immediately when the queue is full
     /// instead of applying backpressure (load-shedding for the server).
     pub fn try_submit(&self, req: Request) -> Result<Receiver<Completion>> {
-        let tx = self
-            .tx
-            .lock()
-            .unwrap()
-            .as_ref()
-            .cloned()
-            .ok_or_else(|| anyhow!("batcher is shut down"))?;
+        let tx = self.sender()?;
         let (done, done_rx) = mpsc::sync_channel(1);
-        match tx.try_send(Job { req, done, enqueued: Instant::now() }) {
+        match tx.try_send(Job { req, sink: Sink::Oneshot(done), enqueued: Instant::now() }) {
             Ok(()) => Ok(done_rx),
+            Err(TrySendError::Full(_)) => Err(anyhow!("admission queue full")),
+            Err(TrySendError::Disconnected(_)) => Err(anyhow!("batcher thread died")),
+        }
+    }
+
+    /// Enqueue a streaming request (backpressure as [`Batcher::submit`]).
+    /// Every sampled token arrives as [`StreamEvent::Token`] the step it is
+    /// produced; the terminal [`StreamEvent::Done`] carries the completion.
+    /// Dropping the receiver cancels the sequence at its next token, freeing
+    /// the slot.
+    pub fn submit_streaming(&self, req: Request) -> Result<Receiver<StreamEvent>> {
+        let tx = self.sender()?;
+        let (ev_tx, ev_rx) = mpsc::channel();
+        tx.send(Job { req, sink: Sink::Stream(ev_tx), enqueued: Instant::now() })
+            .map_err(|_| anyhow!("batcher thread died"))?;
+        Ok(ev_rx)
+    }
+
+    /// Non-blocking [`Batcher::submit_streaming`] (load-shedding).
+    pub fn try_submit_streaming(&self, req: Request) -> Result<Receiver<StreamEvent>> {
+        let tx = self.sender()?;
+        let (ev_tx, ev_rx) = mpsc::channel();
+        match tx.try_send(Job { req, sink: Sink::Stream(ev_tx), enqueued: Instant::now() }) {
+            Ok(()) => Ok(ev_rx),
             Err(TrySendError::Full(_)) => Err(anyhow!("admission queue full")),
             Err(TrySendError::Disconnected(_)) => Err(anyhow!("batcher thread died")),
         }
@@ -177,13 +319,14 @@ impl Drop for Batcher {
     }
 }
 
-fn scheduler_loop(engine: Engine, slots: usize, rx: Receiver<Job>, stats: Arc<BatchStats>) {
+fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: Arc<BatchStats>) {
     let cfg = *engine.cfg();
-    let mut kv = engine.new_kv(slots);
-    let mut active: Vec<ActiveSeq> = Vec::with_capacity(slots);
+    let mut kv = engine.new_kv(bcfg.slots);
+    let mut active: Vec<ActiveSeq> = Vec::with_capacity(bcfg.slots);
+    let mut step: usize = 0; // rotates the prefill round-robin start
     loop {
-        // -- admit -----------------------------------------------------------
-        while active.len() < slots {
+        // -- admit (O(1) per request: no inline prefill) ---------------------
+        while active.len() < bcfg.slots {
             let job = if active.is_empty() {
                 // idle: block for work; a closed queue means shutdown
                 match rx.recv() {
@@ -199,34 +342,43 @@ fn scheduler_loop(engine: Engine, slots: usize, rx: Receiver<Job>, stats: Arc<Ba
             };
             let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
             let slot = kv.alloc().expect("active < slots implies a free slot");
-            let admitted_at = Instant::now();
 
             // budget the context window: cap the generation length, keep the
             // prompt tail that fits in front of it (absolute RoPE positions,
             // so a long prompt is truncated, not slid).
             let max_new = job.req.max_new.clamp(1, cfg.max_seq - 1);
             let keep = (cfg.max_seq - max_new).max(1);
-            let prompt: &[i32] = if job.req.prompt.is_empty() {
-                &[0] // BOS-less model: decode from token 0
+            let prompt: Vec<i32> = if job.req.prompt.is_empty() {
+                vec![0] // BOS-less model: decode from token 0
             } else if job.req.prompt.len() > keep {
-                &job.req.prompt[job.req.prompt.len() - keep..]
+                job.req.prompt[job.req.prompt.len() - keep..].to_vec()
             } else {
-                &job.req.prompt
+                job.req.prompt
             };
 
-            // prefill all but the last prompt token (no logits computed)
-            engine.prefill(&prompt[..prompt.len() - 1], slot, &mut kv);
+            // all but the last prompt token go through chunked prefill (no
+            // logits computed); the last token seeds the first decode step.
+            let total = prompt.len() - 1;
+            let state = if total == 0 {
+                SeqState::Decoding
+            } else {
+                SeqState::Prefilling { done: 0, total }
+            };
             active.push(ActiveSeq {
                 slot,
-                cur: prompt[prompt.len() - 1],
+                cur: prompt[total],
+                prompt,
+                state,
                 produced: Vec::with_capacity(max_new),
                 max_new,
                 rng: Rng::new(job.req.opts.seed),
                 opts: job.req.opts.clone(),
-                prompt_len: prompt.len(),
-                done: job.done,
+                sink: Some(job.sink),
                 queue_ms,
-                admitted_at,
+                enqueued: job.enqueued,
+                admitted_at: Instant::now(),
+                first_token_ms: None,
+                cancelled: false,
             });
             stats.admitted.fetch_add(1, Ordering::Relaxed);
             stats.peak_active.fetch_max(active.len() as u64, Ordering::Relaxed);
@@ -235,34 +387,99 @@ fn scheduler_loop(engine: Engine, slots: usize, rx: Receiver<Job>, stats: Arc<Ba
             // try_recv saw a closed, drained queue
             return;
         }
+        step = step.wrapping_add(1);
 
-        // -- batch: one token for every active sequence ----------------------
-        let tokens: Vec<i32> = active.iter().map(|s| s.cur).collect();
-        let seq_slots: Vec<SlotId> = active.iter().map(|s| s.slot).collect();
-        let logits = engine.step_batch(&tokens, &seq_slots, &mut kv);
-        for (i, seq) in active.iter_mut().enumerate() {
-            let next =
-                sample_logits(logits.row(i), seq.opts.temperature, seq.opts.top_k, &mut seq.rng);
-            seq.produced.push(next);
-            seq.cur = next;
+        // -- chunked prefill: spend the fairness budget ----------------------
+        let mut budget = if bcfg.prefill_chunk == 0 { usize::MAX } else { bcfg.prefill_chunk };
+        loop {
+            // one prompt token from each Prefilling sequence, round-robin
+            // start so a small budget cannot starve later slots
+            let n = active.len();
+            let mut toks: Vec<i32> = Vec::new();
+            let mut seq_slots: Vec<SlotId> = Vec::new();
+            let mut idxs: Vec<usize> = Vec::new();
+            for j in 0..n {
+                let i = (step + j) % n;
+                if let SeqState::Prefilling { done, .. } = active[i].state {
+                    toks.push(active[i].prompt[done]);
+                    seq_slots.push(active[i].slot);
+                    idxs.push(i);
+                    if toks.len() >= budget {
+                        break;
+                    }
+                }
+            }
+            if toks.is_empty() {
+                break;
+            }
+            engine.prefill_batch(&toks, &seq_slots, &mut kv);
+            stats.prefill_tokens.fetch_add(toks.len() as u64, Ordering::Relaxed);
+            budget -= toks.len();
+            for &i in &idxs {
+                if let SeqState::Prefilling { done, total } = active[i].state {
+                    active[i].state = if done + 1 == total {
+                        SeqState::Decoding
+                    } else {
+                        SeqState::Prefilling { done: done + 1, total }
+                    };
+                }
+            }
+            if budget == 0 {
+                break;
+            }
         }
-        stats.tokens_out.fetch_add(active.len() as u64, Ordering::Relaxed);
+
+        // -- decode: one token for every Decoding sequence -------------------
+        let decode_idx: Vec<usize> = active
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.state == SeqState::Decoding)
+            .map(|(i, _)| i)
+            .collect();
+        if !decode_idx.is_empty() {
+            let tokens: Vec<i32> = decode_idx.iter().map(|&i| active[i].cur).collect();
+            let seq_slots: Vec<SlotId> = decode_idx.iter().map(|&i| active[i].slot).collect();
+            let logits = engine.step_batch(&tokens, &seq_slots, &mut kv);
+            for (row, &i) in decode_idx.iter().enumerate() {
+                let seq = &mut active[i];
+                let (temp, top_k) = (seq.opts.temperature, seq.opts.top_k);
+                let next = sample_logits(logits.row(row), temp, top_k, &mut seq.rng);
+                seq.produced.push(next);
+                seq.cur = next;
+                if seq.first_token_ms.is_none() {
+                    seq.first_token_ms = Some(seq.enqueued.elapsed().as_secs_f64() * 1e3);
+                }
+                if let Some(sink) = &seq.sink {
+                    if !sink.push_token(next) {
+                        seq.cancelled = true;
+                        stats.cancelled.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            stats.tokens_out.fetch_add(decode_idx.len() as u64, Ordering::Relaxed);
+        }
 
         // -- evict finished sequences ----------------------------------------
         let mut i = 0;
         while i < active.len() {
-            let full = kv.len(active[i].slot) >= cfg.max_seq;
-            if active[i].produced.len() >= active[i].max_new || full {
-                let seq = active.swap_remove(i);
+            let s = &active[i];
+            let finished = s.cancelled
+                || (s.state == SeqState::Decoding
+                    && (s.produced.len() >= s.max_new || kv.remaining(s.slot) == 0));
+            if finished {
+                let mut seq = active.swap_remove(i);
                 kv.release(seq.slot);
                 stats.completed.fetch_add(1, Ordering::Relaxed);
                 // Receiver may have given up; completion is best-effort.
-                let _ = seq.done.try_send(Completion {
-                    tokens: seq.produced,
-                    prompt_len: seq.prompt_len,
-                    queue_ms: seq.queue_ms,
-                    decode_ms: seq.admitted_at.elapsed().as_secs_f64() * 1e3,
-                });
+                if let Some(sink) = seq.sink.take() {
+                    sink.finish(Completion {
+                        tokens: seq.produced,
+                        prompt_len: seq.prompt.len(),
+                        queue_ms: seq.queue_ms,
+                        ttft_ms: seq.first_token_ms.unwrap_or(0.0),
+                        decode_ms: seq.admitted_at.elapsed().as_secs_f64() * 1e3,
+                    });
+                }
             } else {
                 i += 1;
             }
@@ -275,8 +492,8 @@ mod tests {
     use super::*;
     use crate::serve::engine::{EngineConfig, SpectralModel};
 
-    fn tiny_batcher(slots: usize, depth: usize) -> Batcher {
-        let cfg = EngineConfig {
+    fn tiny_cfg() -> EngineConfig {
+        EngineConfig {
             vocab: 50,
             d_model: 32,
             n_layers: 2,
@@ -284,8 +501,11 @@ mod tests {
             d_ffn: 48,
             rank: 4,
             max_seq: 32,
-        };
-        Batcher::spawn(Engine::new(SpectralModel::init(cfg, 0)), slots, depth)
+        }
+    }
+
+    fn tiny_batcher(slots: usize, depth: usize) -> Batcher {
+        Batcher::spawn(Engine::new(SpectralModel::init(tiny_cfg(), 0)), slots, depth)
     }
 
     fn greedy(prompt: Vec<i32>, n: usize) -> Request {
@@ -299,9 +519,11 @@ mod tests {
         assert_eq!(c.tokens.len(), 5);
         assert_eq!(c.prompt_len, 3);
         assert!(c.decode_ms >= 0.0 && c.queue_ms >= 0.0);
+        assert!(c.ttft_ms > 0.0 && c.ttft_ms <= c.queue_ms + c.decode_ms + 1.0);
         let (adm, done, toks, _) = b.stats().snapshot();
         assert_eq!((adm, done), (1, 1));
         assert_eq!(toks, 5);
+        assert_eq!(b.stats().prefill_tokens(), 2, "prompt[..len-1] goes through prefill");
     }
 
     #[test]
@@ -317,16 +539,7 @@ mod tests {
         }
         let results: Vec<Completion> = handles.into_iter().map(|h| h.join().unwrap()).collect();
 
-        let cfg = EngineConfig {
-            vocab: 50,
-            d_model: 32,
-            n_layers: 2,
-            n_heads: 4,
-            d_ffn: 48,
-            rank: 4,
-            max_seq: 32,
-        };
-        let solo = Engine::new(SpectralModel::init(cfg, 0));
+        let solo = Engine::new(SpectralModel::init(tiny_cfg(), 0));
         let opts = SampleOpts { temperature: 0.0, top_k: 0, seed: 0 };
         for (p, c) in prompts.iter().zip(&results) {
             assert_eq!(c.tokens, solo.generate_reencode(p, 6, &opts), "prompt {p:?}");
@@ -383,5 +596,58 @@ mod tests {
         drop(b); // closes the queue, scheduler drains, thread joins
         let c = rx.recv().expect("in-flight request still completes");
         assert_eq!(c.tokens.len(), 4);
+    }
+
+    #[test]
+    fn streamed_tokens_concatenate_to_the_oneshot_completion() {
+        let b = tiny_batcher(2, 4);
+        let oneshot = b.generate(greedy(vec![3, 9, 27], 7)).unwrap();
+
+        let rx = b.submit_streaming(greedy(vec![3, 9, 27], 7)).unwrap();
+        let mut streamed = Vec::new();
+        let mut done = None;
+        for ev in rx {
+            match ev {
+                StreamEvent::Token(t) => streamed.push(t),
+                StreamEvent::Done(c) => done = Some(c),
+            }
+        }
+        let done = done.expect("terminal Done event");
+        assert_eq!(streamed, done.tokens, "Token frames must concatenate to the completion");
+        assert_eq!(streamed, oneshot.tokens, "streaming must not change greedy decode");
+        assert!(done.ttft_ms > 0.0);
+    }
+
+    #[test]
+    fn chunked_prefill_is_token_identical_to_inline() {
+        // A long prompt absorbed 4 tokens per step must decode exactly what
+        // the unchunked engine produces.
+        let cfg = EngineConfig { max_seq: 128, ..tiny_cfg() };
+        let prompt: Vec<i32> = (0..90).map(|i| (i * 7 + 3) % 50).collect();
+        let solo = Engine::new(SpectralModel::init(cfg, 0));
+        let opts = SampleOpts { temperature: 0.0, top_k: 0, seed: 0 };
+        let baseline = solo.generate_reencode(&prompt, 6, &opts);
+
+        let b = Batcher::spawn_with(
+            Engine::new(SpectralModel::init(cfg, 0)),
+            BatchConfig { slots: 2, queue_depth: 4, prefill_chunk: 4 },
+        );
+        let c = b.generate(greedy(prompt, 6)).unwrap();
+        assert_eq!(c.tokens, baseline, "chunked prefill must not change the decode");
+        assert!(b.stats().prefill_tokens() >= 89);
+    }
+
+    #[test]
+    fn dropped_stream_receiver_frees_the_slot() {
+        // One slot: cancel the first (long) stream by dropping its receiver;
+        // a second request must still get the slot and complete.
+        let b = tiny_batcher(1, 2);
+        let rx = b.submit_streaming(greedy(vec![4, 2], 30)).unwrap();
+        let first = rx.recv();
+        assert!(matches!(first, Ok(StreamEvent::Token(_))));
+        drop(rx);
+        let c = b.generate(greedy(vec![8, 1], 3)).unwrap();
+        assert_eq!(c.tokens.len(), 3, "cancelled stream must release its slot");
+        assert!(b.stats().cancelled() >= 1);
     }
 }

@@ -369,8 +369,19 @@ impl Engine {
     /// largest matmul per step and its output would be discarded).
     pub fn prefill(&self, tokens: &[i32], slot: SlotId, kv: &mut KvCache) {
         for &t in tokens {
-            self.advance_batch(&[t], &[slot], kv);
+            self.prefill_batch(&[t], &[slot], kv);
         }
+    }
+
+    /// One chunked-prefill step: append `tokens[i]` (the next prompt token
+    /// of the sequence in `slots[i]`) to its KV line, skipping the logits
+    /// head. Rows may come from *different* sequences at *different*
+    /// positions — the batcher uses this to absorb several prompts at once
+    /// while sharing the projection weight traffic, exactly like a decode
+    /// batch. Within one sequence, positions must still arrive in order
+    /// (pass its tokens across successive calls, one per call).
+    pub fn prefill_batch(&self, tokens: &[i32], slots: &[SlotId], kv: &mut KvCache) {
+        self.advance_batch(tokens, slots, kv);
     }
 
     /// Shared body of [`Engine::step_batch`]/[`Engine::prefill`]: run the
@@ -688,6 +699,38 @@ mod tests {
         }
         assert_eq!(out_a, alone_a);
         assert_eq!(out_b, alone_b);
+    }
+
+    #[test]
+    fn chunked_prefill_batch_matches_inline_prefill() {
+        // Two sequences absorbed together through prefill_batch (one token
+        // each per call, different prompts) must yield the same next-token
+        // logits as a solo inline prefill of each.
+        let e = tiny_engine(6);
+        let pa = [1i32, 2, 3, 4, 5, 6];
+        let pb = [9i32, 8, 7, 6, 5, 4];
+
+        let mut kv_solo = e.new_kv(1);
+        let s = kv_solo.alloc().unwrap();
+        e.prefill(&pa[..5], s, &mut kv_solo);
+        let la = e.step_batch(&[pa[5]], &[s], &mut kv_solo);
+        kv_solo.release(s);
+        let s = kv_solo.alloc().unwrap();
+        e.prefill(&pb[..5], s, &mut kv_solo);
+        let lb = e.step_batch(&[pb[5]], &[s], &mut kv_solo);
+
+        let mut kv = e.new_kv(2);
+        let (a, b) = (kv.alloc().unwrap(), kv.alloc().unwrap());
+        for (&ta, &tb) in pa[..5].iter().zip(&pb[..5]) {
+            e.prefill_batch(&[ta, tb], &[a, b], &mut kv);
+        }
+        let l = e.step_batch(&[pa[5], pb[5]], &[a, b], &mut kv);
+        for (x, y) in l.row(0).iter().zip(la.row(0)) {
+            assert!((x - y).abs() < 1e-5, "row a diverged: {x} vs {y}");
+        }
+        for (x, y) in l.row(1).iter().zip(lb.row(0)) {
+            assert!((x - y).abs() < 1e-5, "row b diverged: {x} vs {y}");
+        }
     }
 
     #[test]

@@ -67,6 +67,12 @@ impl KvCache {
         self.lens[slot] == 0
     }
 
+    /// Positions still free in a slot's cache line — the scheduler evicts a
+    /// sequence when this hits 0 (its context window is exhausted).
+    pub fn remaining(&self, slot: SlotId) -> usize {
+        self.max_seq - self.lens[slot]
+    }
+
     /// Slots currently checked out.
     pub fn in_use(&self) -> usize {
         self.slots - self.free.len()
@@ -170,6 +176,21 @@ mod tests {
         let mut kv = KvCache::new(1, 1, 2, 2);
         let s = kv.alloc().unwrap();
         kv.write(s, 0, 2, &[0.0; 2], &[0.0; 2]);
+    }
+
+    #[test]
+    fn remaining_counts_down_to_zero() {
+        let mut kv = KvCache::new(1, 1, 3, 2);
+        let s = kv.alloc().unwrap();
+        assert_eq!(kv.remaining(s), 3);
+        for pos in 0..3 {
+            kv.write(s, 0, pos, &[0.0; 2], &[0.0; 2]);
+            kv.advance(s);
+        }
+        assert_eq!(kv.remaining(s), 0);
+        kv.release(s);
+        let s = kv.alloc().unwrap();
+        assert_eq!(kv.remaining(s), 3, "recycled slot has full capacity again");
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! `serve` — the pure-Rust spectral **inference engine**: KV-cached
-//! incremental decoding, a continuous-batching scheduler, and a minimal
-//! HTTP/1.1 server, all built directly on the `spectral` substrate.
+//! incremental decoding, a continuous-batching scheduler with chunked
+//! prefill, and a streaming HTTP/1.1 server, all built directly on the
+//! `spectral` substrate.
 //!
 //! The paper's storage claim — the dense `(m, n)` matrix never exists —
 //! holds on the serving path too: every MLP projection runs as
@@ -13,28 +14,72 @@
 //!
 //! Pieces:
 //! * [`engine`] — the factored decoder forward (RMSNorm, RoPE attention,
-//!   spectral SwiGLU), incremental + full-re-encode paths, model
-//!   checkpointing, and the sampler shared with `coordinator::generate`.
+//!   spectral SwiGLU), incremental + full-re-encode paths, cross-sequence
+//!   batched prefill, model checkpointing, and the sampler shared with
+//!   `coordinator::generate`.
 //! * [`kv`] — fixed-capacity KV cache arena with slot reuse; no allocation
 //!   on the decode path.
 //! * [`batcher`] — continuous batching: bounded admission queue
-//!   (`sync_channel` backpressure, as in `data::loader`), slot-based
-//!   admission, one batched decode step per token across all active
-//!   sequences, eviction of finished ones.
+//!   (`sync_channel` backpressure, as in `data::loader`), O(1) slot-based
+//!   admission, **chunked prefill** (a long prompt is absorbed
+//!   `prefill_chunk` tokens per step, interleaved with decode steps, so it
+//!   cannot stall active sequences), one batched decode step per token
+//!   across all active sequences, per-token streaming channels, eviction of
+//!   finished or cancelled ones.
 //! * [`server`] — `std::net` HTTP front-end (`POST /v1/generate`,
-//!   `GET /healthz`, `GET /v1/stats`) using `util::json`.
+//!   `GET /healthz`, `GET /v1/stats`) using `util::json`, with HTTP/1.1
+//!   keep-alive, a connection read deadline, and SSE streaming.
 //!
-//! Correctness anchor: at temperature 0 the KV-cached path is
-//! token-identical to the full re-encode baseline (tested in [`engine`]);
-//! throughput of batched vs sequential serving is measured by
-//! `benches/serve_throughput.rs`.
+//! # Streaming wire format (SSE)
+//!
+//! `POST /v1/generate` with `"stream": true` answers with
+//! `Content-Type: text/event-stream` over chunked transfer encoding. Each
+//! sampled token is flushed immediately as one Server-Sent-Events frame
+//! (one HTTP chunk per frame):
+//!
+//! ```text
+//! data: {"token": 104, "index": 0, "text": "h"}
+//!
+//! data: {"token": 105, "index": 1, "text": "i"}
+//!
+//! data: {"done": true, "completion": "hi", "prompt_tokens": 8,
+//!        "queue_ms": 0.1, "ttft_ms": 1.9, "decode_ms": 14.2,
+//!        "tok_per_s": 140.8}
+//! ```
+//!
+//! The final frame carries `"done": true` plus the same usage stats a
+//! non-streaming response returns, followed by the zero-length terminating
+//! chunk. Concatenating the `token` fields reproduces the non-streaming
+//! `tokens` array exactly (verified at temperature 0 in the integration
+//! tests); per-frame `text` is a lossy single-token decode, the final
+//! `completion` is the authoritative text. Without `"stream": true` the
+//! response is a single JSON document with the same usage fields.
+//!
+//! # Streaming/serving config keys
+//!
+//! `[serve]` TOML section and `sct serve` flags (see [`ServeConfig`]):
+//! `addr`, `slots`, `queue_depth`, `max_new` — as before;
+//! `prefill_chunk` — prompt tokens absorbed per scheduler step (the
+//! chunked-prefill fairness budget; 0 = unchunked); `keep_alive_ms` — the
+//! connection read deadline / keep-alive idle window (0 = no deadline).
+//!
+//! Correctness anchors: at temperature 0 the KV-cached path is
+//! token-identical to the full re-encode baseline (tested in [`engine`]),
+//! chunked prefill is token-identical to inline prefill (tested in
+//! [`batcher`]), and SSE frames concatenate to the non-streaming output
+//! (integration tests). Throughput, time-to-first-token, and inter-token
+//! latency are measured by `benches/serve_throughput.rs`, which emits
+//! `BENCH_serve.json` for the CI trajectory.
 
 pub mod batcher;
 pub mod engine;
 pub mod kv;
 pub mod server;
 
-pub use batcher::{Batcher, Completion, Request};
+pub use batcher::{BatchConfig, Batcher, Completion, Request, StreamEvent};
 pub use engine::{sample_logits, Engine, EngineConfig, SampleOpts, SpectralModel};
 pub use kv::KvCache;
-pub use server::{http_get_json, http_post_json, http_roundtrip, ServeConfig, Server};
+pub use server::{
+    http_exchange, http_get_json, http_post_json, http_post_sse, http_roundtrip, ServeConfig,
+    Server, SseFrame,
+};

@@ -1,18 +1,27 @@
 //! Minimal HTTP/1.1 front-end for the batching engine.
 //!
 //! The image is offline — no tokio, no hyper, no serde — so this is a
-//! `std::net::TcpListener` accept loop with one short-lived handler thread
-//! per connection and `util::json` for the bodies. Connections are
-//! `Connection: close` (one request per connection), which keeps the parser
-//! to request-line + headers + `Content-Length` body.
+//! `std::net::TcpListener` accept loop with one handler thread per
+//! connection and `util::json` for the bodies. Connections are HTTP/1.1
+//! **keep-alive**: a handler serves requests in a loop until the client
+//! sends `Connection: close`, hangs up, goes idle past the read deadline
+//! (`keep_alive_ms`, also the stalled-client guard — a socket that never
+//! sends a request cannot hold a server thread forever), or exhausts the
+//! per-connection request cap (which bounds thread lifetime against
+//! slow-drip clients). Pipelining is not supported: send one request, read
+//! its full response, then the next.
 //!
 //! Routes:
 //! * `POST /v1/generate` — body `{"prompt": "...", "tokens": N,
-//!   "temperature": T, "top_k": K, "seed": S}` (all but `prompt` optional;
-//!   `prompt_ids` may replace `prompt`). Responds with the completion text,
-//!   token ids, and queue/decode latency.
-//! * `GET /healthz` — liveness + uptime.
-//! * `GET /v1/stats` — scheduler counters (admitted/completed/tokens/peak).
+//!   "temperature": T, "top_k": K, "seed": S, "stream": false}` (all but
+//!   `prompt` optional; `prompt_ids` may replace `prompt`). Without
+//!   `stream`, responds with one JSON document: the completion text, token
+//!   ids, and queue/TTFT/decode latency. With `"stream": true`, responds
+//!   with Server-Sent Events over chunked transfer encoding — see
+//!   [`crate::serve`] module docs for the exact wire format.
+//! * `GET /healthz` — liveness + uptime + scheduler sizing.
+//! * `GET /v1/stats` — scheduler counters (admitted/completed/tokens/peak/
+//!   prefill/cancelled).
 //!
 //! A full admission queue answers `503` (load shedding) rather than holding
 //! the connection on the backpressured submit path.
@@ -20,13 +29,14 @@
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::batcher::{Batcher, Request};
+use super::batcher::{BatchConfig, Batcher, Completion, Request, StreamEvent};
 use super::engine::{Engine, SampleOpts};
 use crate::coordinator::config::TomlDoc;
 use crate::data::Tokenizer;
@@ -44,6 +54,12 @@ pub struct ServeConfig {
     pub queue_depth: usize,
     /// Tokens per request when the body does not say.
     pub max_new_default: usize,
+    /// Prompt tokens prefilled per scheduler step (chunked prefill fairness
+    /// budget; 0 = absorb each prompt in one step).
+    pub prefill_chunk: usize,
+    /// Read deadline on accepted connections, which doubles as the
+    /// keep-alive idle window (0 = no deadline).
+    pub keep_alive_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -53,6 +69,8 @@ impl Default for ServeConfig {
             slots: 8,
             queue_depth: 32,
             max_new_default: 48,
+            prefill_chunk: 64,
+            keep_alive_ms: 15_000,
         }
     }
 }
@@ -75,6 +93,12 @@ impl ServeConfig {
         if let Some(v) = s.get("max_new") {
             self.max_new_default = v.as_usize()?;
         }
+        if let Some(v) = s.get("prefill_chunk") {
+            self.prefill_chunk = v.as_usize()?;
+        }
+        if let Some(v) = s.get("keep_alive_ms") {
+            self.keep_alive_ms = v.as_usize()? as u64;
+        }
         Ok(())
     }
 }
@@ -84,6 +108,7 @@ struct ServerState {
     tokenizer: Tokenizer,
     vocab: usize,
     max_new_default: usize,
+    keep_alive_ms: u64,
     started: Instant,
 }
 
@@ -103,10 +128,18 @@ impl Server {
             .with_context(|| format!("binding {}", cfg.addr))?;
         let addr = listener.local_addr()?;
         let state = Arc::new(ServerState {
-            batcher: Batcher::spawn(engine, cfg.slots, cfg.queue_depth),
+            batcher: Batcher::spawn_with(
+                engine,
+                BatchConfig {
+                    slots: cfg.slots,
+                    queue_depth: cfg.queue_depth,
+                    prefill_chunk: cfg.prefill_chunk,
+                },
+            ),
             tokenizer,
             vocab,
             max_new_default: cfg.max_new_default,
+            keep_alive_ms: cfg.keep_alive_ms,
             started: Instant::now(),
         });
         let shutdown = Arc::new(AtomicBool::new(false));
@@ -122,8 +155,9 @@ impl Server {
                         }
                         let Ok(stream) = stream else { continue };
                         let state = state.clone();
-                        // Handlers are short-lived (one request, connection
-                        // close); the batcher's bounded queue is the real
+                        // Handlers live as long as their connection (keep-
+                        // alive); the read deadline bounds idle lifetime and
+                        // the batcher's bounded queue is the real
                         // concurrency limit.
                         std::thread::spawn(move || {
                             let _ = handle_connection(stream, &state);
@@ -166,12 +200,27 @@ impl Server {
 
 /// Send one raw HTTP/1.1 request and parse the `Connection: close` response:
 /// returns (status code, JSON body). This is the client half the serve demo,
-/// the integration tests, and external smoke checks share.
+/// the integration tests, and external smoke checks share. The raw request
+/// should carry `Connection: close` — this helper reads to EOF. A request
+/// that forgets the header gets a keep-alive response; the bounded read
+/// timeout below turns that from a hang into a short stall (the buffered
+/// response still parses).
 pub fn http_roundtrip(addr: SocketAddr, raw: &str) -> Result<(u16, Json)> {
     let mut s = TcpStream::connect(addr).context("connecting to serve endpoint")?;
+    s.set_read_timeout(Some(Duration::from_secs(30))).ok();
     s.write_all(raw.as_bytes())?;
     let mut buf = Vec::new();
-    s.read_to_end(&mut buf)?;
+    match s.read_to_end(&mut buf) {
+        Ok(_) => {}
+        // Timed out on a kept-alive socket: whatever arrived is the response.
+        Err(e)
+            if !buf.is_empty()
+                && matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) => {}
+        Err(e) => return Err(e).context("reading response"),
+    }
     let text = String::from_utf8_lossy(&buf);
     let status: u16 = text
         .split_whitespace()
@@ -183,20 +232,129 @@ pub fn http_roundtrip(addr: SocketAddr, raw: &str) -> Result<(u16, Json)> {
     Ok((status, Json::parse(payload)?))
 }
 
-/// `POST path` with a JSON body via [`http_roundtrip`].
+/// `POST path` with a JSON body via [`http_roundtrip`] (one-shot connection).
 pub fn http_post_json(addr: SocketAddr, path: &str, body: &str) -> Result<(u16, Json)> {
     http_roundtrip(
         addr,
         &format!(
-            "POST {path} HTTP/1.1\r\nHost: sct\r\nContent-Length: {}\r\n\r\n{body}",
+            "POST {path} HTTP/1.1\r\nHost: sct\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
             body.len()
         ),
     )
 }
 
-/// `GET path` via [`http_roundtrip`].
+/// `GET path` via [`http_roundtrip`] (one-shot connection).
 pub fn http_get_json(addr: SocketAddr, path: &str) -> Result<(u16, Json)> {
-    http_roundtrip(addr, &format!("GET {path} HTTP/1.1\r\nHost: sct\r\n\r\n"))
+    http_roundtrip(addr, &format!("GET {path} HTTP/1.1\r\nHost: sct\r\nConnection: close\r\n\r\n"))
+}
+
+/// One request/response exchange over an already-open connection — the
+/// keep-alive client half. Writes `raw` (which should NOT ask for
+/// `Connection: close`), reads exactly one `Content-Length`-framed response,
+/// and leaves the connection open for the next exchange.
+pub fn http_exchange(stream: &mut TcpStream, raw: &str) -> Result<(u16, Json)> {
+    stream.write_all(raw.as_bytes())?;
+    stream.flush()?;
+    let mut reader = BufReader::new(&mut *stream);
+    let (status, headers) = read_response_head(&mut reader)?;
+    let len: usize = find_header(&headers, "content-length")
+        .ok_or_else(|| anyhow!("keep-alive response carries no Content-Length"))?
+        .parse()
+        .context("bad Content-Length")?;
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).context("reading response body")?;
+    Ok((status, Json::parse(std::str::from_utf8(&body)?)?))
+}
+
+/// One parsed SSE `data:` frame, stamped with its client-side arrival time
+/// (seconds since the request was sent). TTFT is `frames[0].at_s`; the gaps
+/// between consecutive frames are the inter-token latencies.
+#[derive(Debug, Clone)]
+pub struct SseFrame {
+    pub at_s: f64,
+    pub data: Json,
+}
+
+/// `POST path` with `"stream": true` semantics: reads the chunked
+/// `text/event-stream` response incrementally and returns every `data:`
+/// frame with its arrival time. Non-200 responses come back as one frame
+/// holding the error body.
+pub fn http_post_sse(addr: SocketAddr, path: &str, body: &str) -> Result<(u16, Vec<SseFrame>)> {
+    let mut s = TcpStream::connect(addr).context("connecting to serve endpoint")?;
+    let t0 = Instant::now();
+    let raw = format!(
+        "POST {path} HTTP/1.1\r\nHost: sct\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(raw.as_bytes())?;
+    let mut reader = BufReader::new(s);
+    let (status, headers) = read_response_head(&mut reader)?;
+    if status != 200 {
+        // load-shed / bad-request errors are plain JSON bodies
+        let mut text = String::new();
+        reader.read_to_string(&mut text)?;
+        let data = Json::parse(if text.is_empty() { "{}" } else { &text })?;
+        return Ok((status, vec![SseFrame { at_s: t0.elapsed().as_secs_f64(), data }]));
+    }
+    let chunked = matches!(
+        find_header(&headers, "transfer-encoding"), Some(v) if v.eq_ignore_ascii_case("chunked")
+    );
+    if !chunked {
+        bail!("streaming response must use chunked transfer encoding");
+    }
+    let mut pending = String::new();
+    let mut frames = Vec::new();
+    loop {
+        let mut szline = String::new();
+        if reader.read_line(&mut szline)? == 0 {
+            bail!("connection closed mid-stream");
+        }
+        let sz = usize::from_str_radix(szline.trim(), 16)
+            .with_context(|| format!("bad chunk size line {szline:?}"))?;
+        let mut chunk = vec![0u8; sz + 2]; // chunk payload + trailing CRLF
+        reader.read_exact(&mut chunk).context("reading chunk")?;
+        if sz == 0 {
+            break;
+        }
+        chunk.truncate(sz);
+        pending.push_str(std::str::from_utf8(&chunk).context("SSE frame is not UTF-8")?);
+        let at_s = t0.elapsed().as_secs_f64();
+        while let Some(p) = pending.find("\n\n") {
+            let event: String = pending.drain(..p + 2).collect();
+            if let Some(data) = event.trim_end().strip_prefix("data: ") {
+                frames.push(SseFrame { at_s, data: Json::parse(data)? });
+            }
+        }
+    }
+    Ok((200, frames))
+}
+
+/// Parse an HTTP response status line + headers (keys lower-cased).
+fn read_response_head<R: BufRead>(reader: &mut R) -> Result<(u16, Vec<(String, String)>)> {
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading status line")?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .ok_or_else(|| anyhow!("malformed status line {line:?}"))?
+        .parse()
+        .context("non-numeric status code")?;
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        let n = reader.read_line(&mut h)?;
+        if n == 0 || h.trim().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+    Ok((status, headers))
+}
+
+fn find_header<'a>(headers: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    headers.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
 }
 
 // ---------------------------------------------------------------------------
@@ -206,40 +364,79 @@ pub fn http_get_json(addr: SocketAddr, path: &str) -> Result<(u16, Json)> {
 struct HttpRequest {
     method: String,
     path: String,
+    keep_alive: bool,
     body: Vec<u8>,
 }
 
 /// Generation requests are small JSON documents; anything bigger is abuse.
 const MAX_BODY_BYTES: usize = 1 << 20;
-/// Hard cap on bytes read per connection (request line + headers + body), so
+/// Hard cap on bytes read per request (request line + headers + body), so
 /// a newline-less flood cannot grow `read_line` without bound.
 const MAX_REQUEST_BYTES: u64 = 2 << 20;
 const MAX_HEADERS: usize = 64;
+/// Requests served per keep-alive connection before the server closes it.
+/// Bounds the handler-thread lifetime: without it, a client trickling cheap
+/// requests just under the read deadline pins a thread indefinitely.
+const KEEP_ALIVE_MAX_REQUESTS: usize = 1000;
 
-fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
-    stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
-    let mut reader = BufReader::new((&mut *stream).take(MAX_REQUEST_BYTES));
+/// Read one request off a (possibly reused) connection. `Ok(None)` is a
+/// clean end of the connection: the client closed it, reset it, or went
+/// idle past the read deadline without starting a request. Errors are
+/// malformed or abusive requests and deserve a `400`.
+fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<HttpRequest>> {
+    let mut limited = reader.by_ref().take(MAX_REQUEST_BYTES);
     let mut line = String::new();
-    reader.read_line(&mut line).context("reading request line")?;
+    match limited.read_line(&mut line) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(e) => {
+            if line.is_empty()
+                && matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::ConnectionReset
+                )
+            {
+                return Ok(None);
+            }
+            return Err(e).context("reading request line");
+        }
+    }
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or_default().to_string();
     let path = parts.next().unwrap_or_default().to_string();
+    let version = parts.next().unwrap_or("HTTP/1.1").to_string();
     if method.is_empty() || path.is_empty() {
         bail!("malformed request line {line:?}");
     }
     let mut content_length = 0usize;
+    // HTTP/1.1 defaults to keep-alive; `Connection: close` opts out, and
+    // HTTP/1.0 must opt in explicitly.
+    let mut keep_alive = version != "HTTP/1.0";
     for n_headers in 0.. {
         if n_headers >= MAX_HEADERS {
             bail!("too many headers");
         }
         let mut header = String::new();
-        let n = reader.read_line(&mut header)?;
-        if n == 0 || header.trim().is_empty() {
+        let n = limited.read_line(&mut header)?;
+        if n == 0 {
+            // EOF before the blank line: the client closed mid-request, or
+            // the size cap truncated it. Never dispatch a half-parsed
+            // request (under keep-alive its tail would be misread as the
+            // next request).
+            bail!("connection closed mid-headers (or request exceeds the size cap)");
+        }
+        if header.trim().is_empty() {
             break;
         }
         if let Some((k, v)) = header.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                content_length = v.trim().parse().context("bad Content-Length")?;
+            let (k, v) = (k.trim(), v.trim());
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.parse().context("bad Content-Length")?;
+            } else if k.eq_ignore_ascii_case("connection") {
+                keep_alive = !v.eq_ignore_ascii_case("close")
+                    && (keep_alive || v.eq_ignore_ascii_case("keep-alive"));
             }
         }
     }
@@ -247,21 +444,40 @@ fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
         bail!("body too large ({content_length} bytes)");
     }
     let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body).context("reading body")?;
-    Ok(HttpRequest { method, path, body })
+    limited.read_exact(&mut body).context("reading body")?;
+    Ok(Some(HttpRequest { method, path, keep_alive, body }))
 }
 
-fn write_response(stream: &mut TcpStream, status: u16, reason: &str, body: &Json) -> Result<()> {
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    body: &Json,
+    keep_alive: bool,
+) -> Result<()> {
     let payload = body.to_string();
     let head = format!(
         "HTTP/1.1 {status} {reason}\r\n\
          Content-Type: application/json\r\n\
          Content-Length: {}\r\n\
-         Connection: close\r\n\r\n",
-        payload.len()
+         Connection: {}\r\n\r\n",
+        payload.len(),
+        if keep_alive { "keep-alive" } else { "close" },
     );
     stream.write_all(head.as_bytes())?;
     stream.write_all(payload.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Write one SSE frame as its own HTTP chunk and flush, so the client sees
+/// it the moment the token is sampled.
+fn write_sse_frame(stream: &mut TcpStream, data: &Json) -> Result<()> {
+    let json = data.to_string();
+    let payload = format!("data: {json}\n\n");
+    stream.write_all(format!("{:x}\r\n", payload.len()).as_bytes())?;
+    stream.write_all(payload.as_bytes())?;
+    stream.write_all(b"\r\n")?;
     stream.flush()?;
     Ok(())
 }
@@ -271,53 +487,84 @@ fn error_json(msg: &str) -> Json {
 }
 
 fn handle_connection(mut stream: TcpStream, state: &ServerState) -> Result<()> {
-    let req = match read_request(&mut stream) {
-        Ok(r) => r,
-        Err(e) => {
-            let _ = write_response(&mut stream, 400, "Bad Request", &error_json(&e.to_string()));
+    // The read deadline is both the keep-alive idle window and the
+    // stalled-client guard: a socket that opens and never sends a request
+    // can no longer hold this thread forever.
+    let deadline = match state.keep_alive_ms {
+        0 => None,
+        ms => Some(Duration::from_millis(ms)),
+    };
+    stream.set_read_timeout(deadline).ok();
+    // Symmetric write deadline: a client that stops *reading* (full TCP send
+    // buffer) must not hold the handler thread in write_all forever either.
+    stream.set_write_timeout(deadline).ok();
+    let mut reader = BufReader::new(stream.try_clone().context("cloning connection stream")?);
+    for served in 0..KEEP_ALIVE_MAX_REQUESTS {
+        let req = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(()), // client closed / idle deadline
+            Err(e) => {
+                let _ =
+                    write_response(&mut stream, 400, "Bad Request", &error_json(&e.to_string()), false);
+                return Ok(());
+            }
+        };
+        // advertise `Connection: close` on the connection's last allowed
+        // request so well-behaved clients reconnect instead of erroring
+        let keep = req.keep_alive && served + 1 < KEEP_ALIVE_MAX_REQUESTS;
+        match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/v1/generate") => handle_generate(&mut stream, &req.body, state, keep)?,
+            ("GET", "/healthz") => {
+                let body = json_obj![
+                    ("status", "ok"),
+                    ("uptime_s", state.started.elapsed().as_secs_f64()),
+                    ("slots", state.batcher.slots),
+                    ("queue_depth", state.batcher.queue_depth),
+                    ("prefill_chunk", state.batcher.prefill_chunk),
+                    ("keep_alive_ms", state.keep_alive_ms as i64),
+                ];
+                write_response(&mut stream, 200, "OK", &body, keep)?;
+            }
+            ("GET", "/v1/stats") => {
+                let (admitted, completed, tokens_out, peak_active) =
+                    state.batcher.stats().snapshot();
+                let body = json_obj![
+                    ("admitted", admitted as i64),
+                    ("completed", completed as i64),
+                    ("tokens_out", tokens_out as i64),
+                    ("peak_active", peak_active as i64),
+                    ("prefill_tokens", state.batcher.stats().prefill_tokens() as i64),
+                    ("cancelled", state.batcher.stats().cancelled() as i64),
+                ];
+                write_response(&mut stream, 200, "OK", &body, keep)?;
+            }
+            ("POST", _) | ("GET", _) => {
+                write_response(&mut stream, 404, "Not Found", &error_json("no such route"), keep)?;
+            }
+            _ => {
+                write_response(
+                    &mut stream,
+                    405,
+                    "Method Not Allowed",
+                    &error_json("use GET/POST"),
+                    keep,
+                )?;
+            }
+        }
+        if !keep {
             return Ok(());
         }
-    };
-    match (req.method.as_str(), req.path.as_str()) {
-        ("POST", "/v1/generate") => match handle_generate(&req.body, state) {
-            Ok(body) => write_response(&mut stream, 200, "OK", &body),
-            Err(e) => {
-                let msg = e.to_string();
-                if msg.contains("admission queue full") {
-                    write_response(&mut stream, 503, "Service Unavailable", &error_json(&msg))
-                } else {
-                    write_response(&mut stream, 400, "Bad Request", &error_json(&msg))
-                }
-            }
-        },
-        ("GET", "/healthz") => {
-            let body = json_obj![
-                ("status", "ok"),
-                ("uptime_s", state.started.elapsed().as_secs_f64()),
-                ("slots", state.batcher.slots),
-                ("queue_depth", state.batcher.queue_depth),
-            ];
-            write_response(&mut stream, 200, "OK", &body)
-        }
-        ("GET", "/v1/stats") => {
-            let (admitted, completed, tokens_out, peak_active) =
-                state.batcher.stats().snapshot();
-            let body = json_obj![
-                ("admitted", admitted as i64),
-                ("completed", completed as i64),
-                ("tokens_out", tokens_out as i64),
-                ("peak_active", peak_active as i64),
-            ];
-            write_response(&mut stream, 200, "OK", &body)
-        }
-        ("POST", _) | ("GET", _) => {
-            write_response(&mut stream, 404, "Not Found", &error_json("no such route"))
-        }
-        _ => write_response(&mut stream, 405, "Method Not Allowed", &error_json("use GET/POST")),
     }
+    Ok(())
 }
 
-fn handle_generate(body: &[u8], state: &ServerState) -> Result<Json> {
+/// A parsed `/v1/generate` body.
+struct GenRequest {
+    req: Request,
+    stream: bool,
+}
+
+fn parse_generate(body: &[u8], state: &ServerState) -> Result<GenRequest> {
     let j = Json::parse(std::str::from_utf8(body).context("body is not UTF-8")?)
         .context("body is not valid JSON")?;
 
@@ -345,29 +592,131 @@ fn handle_generate(body: &[u8], state: &ServerState) -> Result<Json> {
         None => state.max_new_default,
     };
     let opts = SampleOpts {
-        temperature: j.get("temperature").map(|v| v.as_f64()).transpose()? .unwrap_or(0.8) as f32,
+        temperature: j.get("temperature").map(|v| v.as_f64()).transpose()?.unwrap_or(0.8) as f32,
         top_k: j.get("top_k").map(|v| v.as_usize()).transpose()?.unwrap_or(40),
         seed: j.get("seed").map(|v| v.as_i64()).transpose()?.unwrap_or(0) as u64,
     };
+    let stream = j.get("stream").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
+    Ok(GenRequest { req: Request { prompt: prompt_ids, max_new, opts }, stream })
+}
 
-    let prompt_len = prompt_ids.len();
-    let completion = state
-        .batcher
-        .try_submit(Request { prompt: prompt_ids, max_new, opts })?
-        .recv()
-        .map_err(|_| anyhow!("batcher dropped the request"))?;
-
-    let text = state.tokenizer.decode(&completion.tokens);
-    let n = completion.tokens.len();
-    let tok_per_s = if completion.decode_ms > 0.0 { n as f64 / (completion.decode_ms / 1e3) } else { 0.0 };
-    Ok(json_obj![
+fn completion_json(c: &Completion, state: &ServerState) -> Json {
+    let text = state.tokenizer.decode(&c.tokens);
+    let n = c.tokens.len();
+    let tok_per_s = if c.decode_ms > 0.0 { n as f64 / (c.decode_ms / 1e3) } else { 0.0 };
+    json_obj![
         ("completion", text),
-        ("tokens", completion.tokens.iter().map(|&t| Json::from(t as i64)).collect::<Vec<_>>()),
-        ("prompt_tokens", prompt_len),
-        ("queue_ms", completion.queue_ms),
-        ("decode_ms", completion.decode_ms),
+        ("tokens", c.tokens.iter().map(|&t| Json::from(t as i64)).collect::<Vec<_>>()),
+        ("prompt_tokens", c.prompt_len),
+        ("queue_ms", c.queue_ms),
+        ("ttft_ms", c.ttft_ms),
+        ("decode_ms", c.decode_ms),
         ("tok_per_s", tok_per_s),
-    ])
+    ]
+}
+
+fn write_submit_error(stream: &mut TcpStream, e: &anyhow::Error, keep: bool) -> Result<()> {
+    let msg = e.to_string();
+    if msg.contains("admission queue full") {
+        write_response(stream, 503, "Service Unavailable", &error_json(&msg), keep)
+    } else {
+        write_response(stream, 400, "Bad Request", &error_json(&msg), keep)
+    }
+}
+
+fn handle_generate(
+    stream: &mut TcpStream,
+    body: &[u8],
+    state: &ServerState,
+    keep: bool,
+) -> Result<()> {
+    let greq = match parse_generate(body, state) {
+        Ok(g) => g,
+        Err(e) => {
+            return write_response(stream, 400, "Bad Request", &error_json(&e.to_string()), keep)
+        }
+    };
+    if greq.stream {
+        match state.batcher.try_submit_streaming(greq.req) {
+            Ok(rx) => stream_sse(stream, rx, state, keep),
+            Err(e) => write_submit_error(stream, &e, keep),
+        }
+    } else {
+        let completion = match state.batcher.try_submit(greq.req) {
+            Ok(rx) => rx.recv().map_err(|_| anyhow!("batcher dropped the request")),
+            Err(e) => Err(e),
+        };
+        match completion {
+            Ok(c) => write_response(stream, 200, "OK", &completion_json(&c, state), keep),
+            Err(e) => write_submit_error(stream, &e, keep),
+        }
+    }
+}
+
+/// Relay a streaming generation as Server-Sent Events: one `data:` frame per
+/// token as it is sampled, a terminal frame with the usage stats, then the
+/// zero-length chunk. A write failure (client hung up) drops the event
+/// receiver, which cancels the sequence in the batcher at its next token.
+fn stream_sse(
+    stream: &mut TcpStream,
+    rx: Receiver<StreamEvent>,
+    state: &ServerState,
+    keep: bool,
+) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 200 OK\r\n\
+         Content-Type: text/event-stream\r\n\
+         Cache-Control: no-cache\r\n\
+         Transfer-Encoding: chunked\r\n\
+         Connection: {}\r\n\r\n",
+        if keep { "keep-alive" } else { "close" },
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.flush()?;
+    let mut index = 0usize;
+    let mut finished = false;
+    for ev in rx {
+        match ev {
+            StreamEvent::Token(t) => {
+                // Per-token text is a best-effort lossy decode (a token that
+                // splits a multi-byte character renders as U+FFFD); the
+                // terminal frame carries the full, correctly-decoded text.
+                let frame = json_obj![
+                    ("token", t as i64),
+                    ("index", index),
+                    ("text", state.tokenizer.decode(&[t])),
+                ];
+                write_sse_frame(stream, &frame)?;
+                index += 1;
+            }
+            StreamEvent::Done(c) => {
+                let n = c.tokens.len();
+                let tok_per_s =
+                    if c.decode_ms > 0.0 { n as f64 / (c.decode_ms / 1e3) } else { 0.0 };
+                let frame = json_obj![
+                    ("done", true),
+                    ("completion", state.tokenizer.decode(&c.tokens)),
+                    ("prompt_tokens", c.prompt_len),
+                    ("queue_ms", c.queue_ms),
+                    ("ttft_ms", c.ttft_ms),
+                    ("decode_ms", c.decode_ms),
+                    ("tok_per_s", tok_per_s),
+                ];
+                write_sse_frame(stream, &frame)?;
+                finished = true;
+                break;
+            }
+        }
+    }
+    if !finished {
+        // The batcher died mid-stream. Do NOT write the clean terminating
+        // chunk: dropping the connection makes the truncation visible to the
+        // client as a transport error instead of a short-but-valid stream.
+        bail!("stream ended without a completion event");
+    }
+    stream.write_all(b"0\r\n\r\n")?;
+    stream.flush()?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -375,7 +724,7 @@ mod tests {
     use super::*;
     use crate::serve::engine::{EngineConfig, SpectralModel};
 
-    fn test_server(slots: usize, queue: usize) -> Server {
+    fn test_server_cfg(slots: usize, queue: usize, keep_alive_ms: u64) -> Server {
         let cfg = EngineConfig { max_seq: 64, ..EngineConfig::default() };
         let engine = Engine::new(SpectralModel::init(cfg, 0));
         let serve_cfg = ServeConfig {
@@ -383,8 +732,14 @@ mod tests {
             slots,
             queue_depth: queue,
             max_new_default: 8,
+            prefill_chunk: 4,
+            keep_alive_ms,
         };
         Server::start(&serve_cfg, engine, Tokenizer::byte_level()).unwrap()
+    }
+
+    fn test_server(slots: usize, queue: usize) -> Server {
+        test_server_cfg(slots, queue, 15_000)
     }
 
     #[test]
@@ -393,9 +748,11 @@ mod tests {
         let (code, body) = http_get_json(srv.addr, "/healthz").unwrap();
         assert_eq!(code, 200);
         assert_eq!(body.get("status").unwrap().as_str().unwrap(), "ok");
+        assert_eq!(body.get("prefill_chunk").unwrap().as_usize().unwrap(), 4);
         let (code, body) = http_get_json(srv.addr, "/v1/stats").unwrap();
         assert_eq!(code, 200);
         assert_eq!(body.get("admitted").unwrap().as_i64().unwrap(), 0);
+        assert_eq!(body.get("prefill_tokens").unwrap().as_i64().unwrap(), 0);
         srv.stop();
     }
 
@@ -407,6 +764,7 @@ mod tests {
         assert_eq!(code, 200, "body: {a:?}");
         assert_eq!(a.get("tokens").unwrap().as_arr().unwrap().len(), 6);
         assert_eq!(a.get("prompt_tokens").unwrap().as_usize().unwrap(), 8);
+        assert!(a.get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
         let (_, b) = http_post_json(srv.addr, "/v1/generate", req).unwrap();
         assert_eq!(
             a.get("tokens").unwrap(),
@@ -438,6 +796,62 @@ mod tests {
         );
         let (code, _) = http_roundtrip(srv.addr, &raw).unwrap();
         assert_eq!(code, 400);
+        srv.stop();
+    }
+
+    #[test]
+    fn keep_alive_serves_multiple_requests_on_one_connection() {
+        let srv = test_server(2, 4);
+        let mut conn = TcpStream::connect(srv.addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let body = r#"{"prompt": "hold the line", "tokens": 4, "temperature": 0}"#;
+        let raw = format!(
+            "POST /v1/generate HTTP/1.1\r\nHost: sct\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let (code_a, a) = http_exchange(&mut conn, &raw).unwrap();
+        let (code_b, b) = http_exchange(&mut conn, &raw).unwrap();
+        let (code_h, h) = http_exchange(&mut conn, "GET /healthz HTTP/1.1\r\nHost: sct\r\n\r\n")
+            .unwrap();
+        assert_eq!((code_a, code_b, code_h), (200, 200, 200));
+        assert_eq!(a.get("tokens").unwrap(), b.get("tokens").unwrap());
+        assert_eq!(h.get("status").unwrap().as_str().unwrap(), "ok");
+        srv.stop();
+    }
+
+    #[test]
+    fn stalled_connection_is_closed_by_the_read_deadline() {
+        // A client that opens a socket and never sends a request must not
+        // hold the handler thread past the deadline: the server closes, and
+        // our subsequent read sees EOF.
+        let srv = test_server_cfg(1, 2, 200);
+        let mut conn = TcpStream::connect(srv.addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let t0 = Instant::now();
+        let mut buf = [0u8; 16];
+        let n = conn.read(&mut buf).unwrap();
+        assert_eq!(n, 0, "server must close the idle connection (got {n} bytes)");
+        assert!(
+            t0.elapsed() < Duration::from_secs(8),
+            "close should come from the 200ms deadline, not the client timeout"
+        );
+        srv.stop();
+    }
+
+    #[test]
+    fn sse_stream_smoke() {
+        let srv = test_server(2, 4);
+        let (code, frames) = http_post_sse(
+            srv.addr,
+            "/v1/generate",
+            r#"{"prompt": "stream me", "tokens": 5, "temperature": 0, "stream": true}"#,
+        )
+        .unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(frames.len(), 6, "5 token frames + 1 usage frame: {frames:?}");
+        let last = frames.last().unwrap();
+        assert!(last.data.get("done").unwrap().as_bool().unwrap());
+        assert!(last.data.get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
         srv.stop();
     }
 }

@@ -1,11 +1,17 @@
 //! End-to-end tests of the `serve` subsystem: a real TCP server, concurrent
-//! HTTP clients, and the KV-cache-vs-re-encode equivalence through the
-//! public API. Pure std — no PJRT, no artifacts.
+//! HTTP clients, SSE streaming vs one-shot equivalence, chunked-prefill
+//! fairness, and the KV-cache-vs-re-encode equivalence through the public
+//! API. Pure std — no PJRT, no artifacts.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::Duration;
 
 use sct::data::Tokenizer;
 use sct::serve::{
-    http_get_json, http_post_json, Engine, EngineConfig, SampleOpts, ServeConfig, Server,
-    SpectralModel,
+    http_get_json, http_post_json, http_post_sse, BatchConfig, Batcher, Engine, EngineConfig,
+    Request, SampleOpts, ServeConfig, Server, SpectralModel, StreamEvent,
 };
 
 fn tiny_engine(seed: u64) -> Engine {
@@ -27,6 +33,7 @@ fn start_server(slots: usize, queue: usize) -> Server {
         slots,
         queue_depth: queue,
         max_new_default: 8,
+        ..ServeConfig::default()
     };
     Server::start(&cfg, tiny_engine(42), Tokenizer::byte_level()).unwrap()
 }
@@ -121,4 +128,184 @@ fn overload_returns_503_not_a_hang() {
     assert!(codes.iter().all(|&c| c == 200 || c == 503), "codes: {codes:?}");
     assert!(codes.contains(&200), "at least one request must be served: {codes:?}");
     srv.stop();
+}
+
+#[test]
+fn sse_frames_concatenate_to_the_nonstreaming_token_sequence() {
+    // The streaming acceptance criterion: SSE frames arrive incrementally
+    // (one per token, each in its own timestamped HTTP chunk) and their
+    // token ids concatenate to exactly the one-shot output at temperature 0.
+    let srv = start_server(2, 8);
+    let body = r#"{"prompt": "stream equivalence probe", "tokens": 16, "temperature": 0}"#;
+    let (code, oneshot) = http_post_json(srv.addr, "/v1/generate", body).unwrap();
+    assert_eq!(code, 200);
+    let expected: Vec<i64> = oneshot
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_i64().unwrap())
+        .collect();
+
+    let streaming_body =
+        r#"{"prompt": "stream equivalence probe", "tokens": 16, "temperature": 0, "stream": true}"#;
+    let (code, frames) = http_post_sse(srv.addr, "/v1/generate", streaming_body).unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(frames.len(), 17, "16 token frames + 1 usage frame");
+
+    let token_frames = &frames[..16];
+    let streamed: Vec<i64> =
+        token_frames.iter().map(|f| f.data.get("token").unwrap().as_i64().unwrap()).collect();
+    assert_eq!(streamed, expected, "SSE tokens must equal the one-shot sequence");
+    for (i, f) in token_frames.iter().enumerate() {
+        assert_eq!(f.data.get("index").unwrap().as_usize().unwrap(), i);
+    }
+    // incremental arrival: client-side timestamps are monotone and the
+    // first token landed before the stream finished
+    for w in frames.windows(2) {
+        assert!(w[0].at_s <= w[1].at_s, "frame timestamps must be monotone");
+    }
+    let done = &frames[16].data;
+    assert!(done.get("done").unwrap().as_bool().unwrap());
+    assert_eq!(
+        done.get("completion").unwrap().as_str().unwrap(),
+        oneshot.get("completion").unwrap().as_str().unwrap(),
+        "streamed completion text must equal the one-shot text"
+    );
+    assert!(done.get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
+    srv.stop();
+}
+
+#[test]
+fn keep_alive_connection_survives_an_sse_stream() {
+    // Streaming and keep-alive compose: after the terminating zero-length
+    // chunk, the same connection serves a further request.
+    let srv = start_server(2, 8);
+    let mut conn = TcpStream::connect(srv.addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let body = r#"{"prompt": "keep me", "tokens": 4, "temperature": 0, "stream": true}"#;
+    let raw = format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: sct\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    conn.write_all(raw.as_bytes()).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+    // response head
+    let mut status = String::new();
+    reader.read_line(&mut status).unwrap();
+    assert!(status.contains("200"), "status line: {status:?}");
+    let mut chunked = false;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        if h.trim().is_empty() {
+            break;
+        }
+        let h = h.to_ascii_lowercase();
+        chunked |= h.starts_with("transfer-encoding") && h.contains("chunked");
+    }
+    assert!(chunked, "SSE response must be chunked");
+    // drain chunks to the terminator
+    let mut data_frames = 0;
+    loop {
+        let mut szline = String::new();
+        reader.read_line(&mut szline).unwrap();
+        let sz = usize::from_str_radix(szline.trim(), 16).unwrap();
+        let mut chunk = vec![0u8; sz + 2];
+        reader.read_exact(&mut chunk).unwrap();
+        if sz == 0 {
+            break;
+        }
+        if chunk.starts_with(b"data: ") {
+            data_frames += 1;
+        }
+    }
+    assert_eq!(data_frames, 5, "4 token frames + 1 usage frame");
+
+    // the connection is still usable: plain request over the same socket
+    conn.write_all(b"GET /healthz HTTP/1.1\r\nHost: sct\r\n\r\n").unwrap();
+    let mut status = String::new();
+    reader.read_line(&mut status).unwrap();
+    assert!(status.contains("200"), "healthz after SSE: {status:?}");
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        if h.trim().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap();
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).unwrap();
+    assert!(String::from_utf8_lossy(&body).contains("\"ok\""));
+    srv.stop();
+}
+
+#[test]
+fn chunked_prefill_keeps_active_decodes_responsive() {
+    // The fairness acceptance criterion: while a >=512-token prompt is
+    // being admitted, an already-decoding sequence keeps producing tokens.
+    // With a prefill budget of 8 tokens/step, absorbing the 511 prefill
+    // positions takes ~64 scheduler steps, each of which also decodes one
+    // token of the active sequence — so many tokens of A must land between
+    // B's submission and B's first token. (Inline prefill would admit B in
+    // one stalled step: A would see at most a couple of tokens in between.)
+    let cfg = EngineConfig {
+        vocab: 50,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_ffn: 48,
+        rank: 4,
+        max_seq: 640,
+    };
+    let b = Batcher::spawn_with(
+        Engine::new(SpectralModel::init(cfg, 0)),
+        BatchConfig { slots: 2, queue_depth: 4, prefill_chunk: 8 },
+    );
+    let greedy = SampleOpts { temperature: 0.0, top_k: 0, seed: 0 };
+
+    // A: short prompt, long generation — the active decode.
+    let rxa = b
+        .submit_streaming(Request { prompt: vec![1, 2, 3], max_new: 200, opts: greedy.clone() })
+        .unwrap();
+    match rxa.recv_timeout(Duration::from_secs(30)) {
+        Ok(StreamEvent::Token(_)) => {} // A is admitted and decoding
+        other => panic!("expected A's first token, got {other:?}"),
+    }
+
+    // B: 512-token prompt.
+    let long_prompt: Vec<i32> = (0..512).map(|i| i % 50).collect();
+    let rxb = b
+        .submit_streaming(Request { prompt: long_prompt, max_new: 4, opts: greedy })
+        .unwrap();
+
+    let mut a_tokens_during_admission = 0usize;
+    loop {
+        match rxb.try_recv() {
+            Ok(StreamEvent::Token(_)) | Ok(StreamEvent::Done(_)) => break,
+            Err(_) => {}
+        }
+        match rxa.recv_timeout(Duration::from_secs(30)) {
+            Ok(StreamEvent::Token(_)) => a_tokens_during_admission += 1,
+            Ok(StreamEvent::Done(_)) => panic!("A exhausted its 200-token budget before B decoded"),
+            Err(RecvTimeoutError::Timeout) => panic!("scheduler stalled"),
+            Err(RecvTimeoutError::Disconnected) => panic!("batcher died"),
+        }
+    }
+    assert!(
+        a_tokens_during_admission >= 16,
+        "active decode made only {a_tokens_during_admission} steps of progress while the \
+         512-token prompt was admitted — prefill is stalling the batch"
+    );
+    assert!(b.stats().prefill_tokens() >= 511);
+    drop(rxa);
+    drop(rxb);
 }

@@ -1,43 +1,84 @@
 #!/usr/bin/env bash
-# Tier-1 gate: format check, lints, offline build + tests.
+# Tier-1 gate: format check, lints (default AND pjrt feature surfaces),
+# offline build + tests, and an optional serving bench smoke run.
 #
 # The default feature set is the pure-Rust stack (no PJRT); `--features pjrt`
-# links the vendored xla stub and is compile-checked only (the stub errors at
-# runtime by design). rustfmt/clippy stages are skipped with a notice when
-# the components are not installed (minimal CI images); the build+test stage
-# is mandatory.
+# links the vendored xla stub. The pjrt surface is compile-checked AND
+# clippy-linted (`--all-targets --features pjrt -- -D warnings`) so the
+# stub-gated code stays warning-clean even though it is off by default.
+# rustfmt/clippy stages are skipped with a notice when the components are
+# not installed (minimal CI images); the build+test stage is mandatory.
 #
-# Usage: scripts/tier1.sh
+# Usage: scripts/tier1.sh [all|lint|build|test|bench]
+#   all    (default) lint + build + test
+#   lint   rustfmt --check, clippy (default features), clippy (pjrt feature)
+#   build  cargo build --release, cargo check --features pjrt
+#   test   cargo test -q
+#   bench  serve_throughput in smoke mode, writing BENCH_serve.json at the
+#          repo root (the artifact CI uploads to track the perf trajectory)
 
 set -euo pipefail
-cd "$(dirname "$0")/../rust"
+repo_root="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$repo_root/rust"
+
+stage="${1:-all}"
 
 if ! command -v cargo >/dev/null 2>&1; then
     echo "tier1: cargo not found on PATH" >&2
     exit 127
 fi
 
-echo "== tier1: rustfmt =="
-if cargo fmt --version >/dev/null 2>&1; then
-    cargo fmt --all -- --check
-else
-    echo "tier1: rustfmt not installed, skipping format check"
-fi
+run_lint() {
+    echo "== tier1: rustfmt =="
+    if cargo fmt --version >/dev/null 2>&1; then
+        cargo fmt --all -- --check
+    else
+        echo "tier1: rustfmt not installed, skipping format check"
+    fi
 
-echo "== tier1: clippy (-D warnings) =="
-if cargo clippy --version >/dev/null 2>&1; then
-    cargo clippy --all-targets -- -D warnings
-else
-    echo "tier1: clippy not installed, skipping lints"
-fi
+    if cargo clippy --version >/dev/null 2>&1; then
+        echo "== tier1: clippy (default features, -D warnings) =="
+        cargo clippy --all-targets -- -D warnings
+        echo "== tier1: clippy (pjrt feature, -D warnings) =="
+        cargo clippy --all-targets --features pjrt -- -D warnings
+    else
+        echo "tier1: clippy not installed, skipping lints"
+    fi
+}
 
-echo "== tier1: build (release) =="
-cargo build --release
+run_build() {
+    echo "== tier1: build (release) =="
+    cargo build --release
 
-echo "== tier1: compile check with pjrt feature (xla stub) =="
-cargo check --features pjrt
+    echo "== tier1: compile check with pjrt feature (xla stub) =="
+    cargo check --features pjrt
+}
 
-echo "== tier1: tests =="
-cargo test -q
+run_test() {
+    echo "== tier1: tests =="
+    cargo test -q
+}
 
-echo "tier1 OK"
+run_bench() {
+    echo "== tier1: serve bench smoke (BENCH_serve.json) =="
+    cargo bench --bench serve_throughput -- --smoke --json "$repo_root/BENCH_serve.json"
+    echo "tier1: wrote $repo_root/BENCH_serve.json"
+}
+
+case "$stage" in
+    all)
+        run_lint
+        run_build
+        run_test
+        ;;
+    lint) run_lint ;;
+    build) run_build ;;
+    test) run_test ;;
+    bench) run_bench ;;
+    *)
+        echo "tier1: unknown stage '$stage' (use all|lint|build|test|bench)" >&2
+        exit 2
+        ;;
+esac
+
+echo "tier1 OK ($stage)"
