@@ -85,6 +85,7 @@ fn bench_cfg(w: &Workload, rank: usize) -> EngineConfig {
         d_ffn: w.d_ffn,
         rank,
         max_seq: w.max_seq,
+        tied: true,
     }
 }
 
@@ -130,6 +131,7 @@ fn run_workload(
                         prompt: vec![(i as i32) + 1, 17, 42, 5],
                         max_new: tokens,
                         opts: SampleOpts { temperature: 0.0, top_k: 0, seed: 0 },
+                        stop: vec![],
                     })
                     .unwrap();
                 let mut ttft = None;
@@ -195,6 +197,7 @@ fn prefill_probe(
             prompt: vec![1, 2, 3],
             max_new: active_tokens,
             opts: greedy.clone(),
+            stop: vec![],
         })
         .unwrap();
     match rxa.recv() {
@@ -204,7 +207,8 @@ fn prefill_probe(
 
     let prompt: Vec<i32> = (0..long_prompt as i32).map(|i| (i % 251) + 1).collect();
     let t_b = Instant::now();
-    let rxb = b.submit_streaming(Request { prompt, max_new: 4, opts: greedy }).unwrap();
+    let rxb =
+        b.submit_streaming(Request { prompt, max_new: 4, opts: greedy, stop: vec![] }).unwrap();
     let mut last_a = Instant::now();
     let mut max_gap_ms = 0.0f64;
     let mut interleaved = 0usize;

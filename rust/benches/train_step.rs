@@ -1,0 +1,154 @@
+//! Native training-step benchmark: the paper's Table 2 phase decomposition
+//! (forward / backward / optimizer / retraction) measured on the pure-Rust
+//! engine at ranks 32 and 128, plus end-to-end step time and training
+//! token throughput.
+//!
+//! The phase timers come straight from `NativeTrainer::train_step` (each
+//! step reports its own `[fwd, bwd, opt, retract]` wall times), so the
+//! split reflects exactly what the training loop pays — including the
+//! per-step QR retraction the paper names as its dominant overhead.
+//!
+//! Run: `cargo bench --bench train_step`
+//! Flags: `--smoke` (tiny shape, few steps — the CI mode; also enabled by
+//! the `SCT_BENCH_SMOKE` env var) and `--json PATH` (write the numbers as
+//! one JSON document, e.g. `BENCH_train.json`, so CI can compare the perf
+//! trajectory against the base branch).
+
+use sct::json_obj;
+use sct::serve::EngineConfig;
+use sct::train::{NativeTrainConfig, NativeTrainer};
+use sct::util::bench::{table_header, table_row};
+use sct::util::json::Json;
+use sct::util::rng::Rng;
+
+#[derive(Clone, Copy)]
+struct Workload {
+    ranks: &'static [usize],
+    d_model: usize,
+    d_ffn: usize,
+    n_heads: usize,
+    batch: usize,
+    seq_len: usize,
+    warmup: usize,
+    steps: usize,
+}
+
+const FULL: Workload = Workload {
+    ranks: &[32, 128],
+    d_model: 256,
+    d_ffn: 512,
+    n_heads: 8,
+    batch: 4,
+    seq_len: 32,
+    warmup: 1,
+    steps: 8,
+};
+
+const SMOKE: Workload = Workload {
+    ranks: &[8],
+    d_model: 64,
+    d_ffn: 128,
+    n_heads: 4,
+    batch: 2,
+    seq_len: 16,
+    warmup: 1,
+    steps: 3,
+};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = argv.iter().any(|a| a == "--smoke") || std::env::var("SCT_BENCH_SMOKE").is_ok();
+    let json_path =
+        argv.iter().position(|a| a == "--json").and_then(|i| argv.get(i + 1).cloned());
+    let w = if smoke { SMOKE } else { FULL };
+
+    println!(
+        "native train step{}: batch {} x seq {}, d_model={}, 2 layers, {} measured steps",
+        if smoke { " [smoke]" } else { "" },
+        w.batch,
+        w.seq_len,
+        w.d_model,
+        w.steps,
+    );
+
+    table_header(
+        "Training phase split (native engine)",
+        &["rank", "fwd ms", "bwd ms", "opt ms", "retract ms", "step ms", "tok/s", "retract %"],
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    for &rank in w.ranks {
+        let cfg = NativeTrainConfig {
+            model: EngineConfig {
+                vocab: 256,
+                d_model: w.d_model,
+                n_layers: 2,
+                n_heads: w.n_heads,
+                d_ffn: w.d_ffn,
+                rank,
+                max_seq: w.seq_len.max(2),
+                tied: true,
+            },
+            batch: w.batch,
+            seq_len: w.seq_len,
+            grad_clip: 1.0,
+            retract_every: 1,
+            weight_decay: 0.0,
+        };
+        let mut trainer = NativeTrainer::new(cfg, 0);
+        let mut rng = Rng::new(42);
+        let window = w.batch * (w.seq_len + 1);
+        let batch = |rng: &mut Rng| -> Vec<i32> {
+            (0..window).map(|_| rng.below(256) as i32).collect()
+        };
+        for _ in 0..w.warmup {
+            trainer.train_step(&batch(&mut rng), 5e-4, 5e-4);
+        }
+        let mut phases = [0.0f64; 4];
+        for _ in 0..w.steps {
+            let (_, p) = trainer.train_step(&batch(&mut rng), 5e-4, 5e-4);
+            for (acc, v) in phases.iter_mut().zip(p) {
+                *acc += v;
+            }
+        }
+        let n = w.steps as f64;
+        let [fwd, bwd, opt, retract] = phases.map(|p| p / n * 1e3); // ms/step
+        let step_ms = fwd + bwd + opt + retract;
+        let tok_per_s = (w.batch * w.seq_len) as f64 / (step_ms / 1e3);
+        let retract_pct = 100.0 * retract / step_ms;
+        table_row(&[
+            format!("{rank}"),
+            format!("{fwd:.2}"),
+            format!("{bwd:.2}"),
+            format!("{opt:.2}"),
+            format!("{retract:.2}"),
+            format!("{step_ms:.2}"),
+            format!("{tok_per_s:.0}"),
+            format!("{retract_pct:.1}%"),
+        ]);
+        rows.push(json_obj![
+            ("rank", rank),
+            ("fwd_ms", fwd),
+            ("bwd_ms", bwd),
+            ("opt_ms", opt),
+            ("retract_ms", retract),
+            ("step_ms", step_ms),
+            ("tok_per_s", tok_per_s),
+            ("retract_pct", retract_pct),
+        ]);
+    }
+
+    if let Some(path) = json_path {
+        let doc = json_obj![
+            ("bench", "train_step"),
+            ("smoke", smoke),
+            ("batch", w.batch),
+            ("seq_len", w.seq_len),
+            ("d_model", w.d_model),
+            ("steps", w.steps),
+            ("rows", rows),
+        ];
+        std::fs::write(&path, doc.to_string()).expect("writing bench JSON");
+        println!("\nwrote {path}");
+    }
+}

@@ -1,8 +1,10 @@
 //! Rotating checkpoint manager + session save/restore glue.
 //!
-//! The manager itself (directory layout, listing, pruning) is pure
-//! filesystem code; the [`Session`] save/restore glue needs the `pjrt`
-//! feature because session state lives in device literals.
+//! The manager itself (directory layout, listing, pruning) and the
+//! tensor-level [`CheckpointManager::save_tensors`] path (used by the
+//! native trainer) are pure filesystem code; the [`Session`] save/restore
+//! glue needs the `pjrt` feature because session state lives in device
+//! literals.
 
 use std::path::PathBuf;
 
@@ -14,8 +16,10 @@ use std::path::Path;
 #[cfg(feature = "pjrt")]
 use anyhow::bail;
 
+use super::format::{write_checkpoint, NamedTensor};
+
 #[cfg(feature = "pjrt")]
-use super::format::{read_checkpoint, write_checkpoint, NamedTensor};
+use super::format::read_checkpoint;
 #[cfg(feature = "pjrt")]
 use crate::runtime::{DType, Session};
 
@@ -53,6 +57,20 @@ impl CheckpointManager {
         Ok(out)
     }
 
+    /// Newest checkpoint, if any.
+    pub fn latest(&self) -> Result<Option<(u64, PathBuf)>> {
+        Ok(self.list()?.pop())
+    }
+
+    /// Save pre-built tensors as `step_NNNNNN.sct` and prune beyond `keep`
+    /// — the backend-agnostic path the native trainer uses.
+    pub fn save_tensors(&self, step: u64, tensors: &[NamedTensor]) -> Result<PathBuf> {
+        let path = self.path_for(step);
+        write_checkpoint(&path, step, tensors)?;
+        self.prune()?;
+        Ok(path)
+    }
+
     /// Save the full session state; prune old checkpoints beyond `keep`.
     #[cfg(feature = "pjrt")]
     pub fn save(&self, session: &Session) -> Result<PathBuf> {
@@ -76,10 +94,7 @@ impl CheckpointManager {
             };
             tensors.push(data);
         }
-        let path = self.path_for(session.steps_done);
-        write_checkpoint(&path, session.steps_done, &tensors)?;
-        self.prune()?;
-        Ok(path)
+        self.save_tensors(session.steps_done, &tensors)
     }
 
     /// Restore the latest checkpoint into the session (names must match the
@@ -126,7 +141,6 @@ impl CheckpointManager {
         Ok(step)
     }
 
-    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))] // only save() prunes
     fn prune(&self) -> Result<()> {
         let list = self.list()?;
         if list.len() > self.keep {
@@ -157,6 +171,24 @@ mod tests {
         mgr.prune().unwrap();
         let steps: Vec<u64> = mgr.list().unwrap().into_iter().map(|(s, _)| s).collect();
         assert_eq!(steps, vec![5, 9], "keep=2 prunes the oldest");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_tensors_rotates_and_reports_latest() {
+        let dir = std::env::temp_dir().join(format!("sct_mgr3_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mgr = CheckpointManager::new(&dir, 2).unwrap();
+        assert!(mgr.latest().unwrap().is_none());
+        for step in [3u64, 8, 21] {
+            let t = vec![NamedTensor::f32("params/x", vec![1], &[step as f32])];
+            mgr.save_tensors(step, &t).unwrap();
+        }
+        let steps: Vec<u64> = mgr.list().unwrap().into_iter().map(|(s, _)| s).collect();
+        assert_eq!(steps, vec![8, 21], "save_tensors must prune to keep=2");
+        let (latest, path) = mgr.latest().unwrap().unwrap();
+        assert_eq!(latest, 21);
+        assert!(path.ends_with("step_00000021.sct"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

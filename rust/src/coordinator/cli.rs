@@ -1,7 +1,9 @@
 //! The `sct` launcher CLI.
 //!
 //! Subcommands map onto the paper's experiments (DESIGN.md §3):
-//! * `train`        — one training run (any preset, any LR plan)
+//! * `train`        — one training run (any preset, any LR plan; the
+//!   `--backend native` pure-Rust engine needs no PJRT and its checkpoints
+//!   serve directly via `sct serve --ckpt`)
 //! * `sweep`        — Table 3 + Figures 2/3 (rank sweep, dense baseline)
 //! * `validate-70b` — Table 2 + Figure 1 (70B step, true factor shapes)
 //! * `finetune`     — Table 4 (dense -> 95%-energy spectral conversion)
@@ -10,25 +12,24 @@
 //!   continuous batching + chunked prefill + SSE streaming; no PJRT needed)
 //! * `info`         — list presets in the artifact manifest
 //!
-//! Training subcommands execute AOT artifacts through PJRT and need the
-//! `pjrt` feature; without it they exit with a pointer to the feature flag.
+//! PJRT-backed subcommands (sweep, finetune, generate, and `train` with the
+//! default pjrt backend) need the `pjrt` feature; without it they exit with
+//! a pointer to the feature flag and to `sct train --backend native`, which
+//! runs entirely in Rust.
 
 use anyhow::{bail, Result};
 
-use super::validate70b;
-#[cfg(feature = "pjrt")]
 use super::config::RunConfig;
-#[cfg(feature = "pjrt")]
 use super::schedule::LrPlan;
+use super::trainer::RunSummary;
+use super::validate70b;
 #[cfg(feature = "pjrt")]
 use super::{finetune, sweep};
 use crate::memmodel::report;
+use crate::metrics::{export, Tracker};
 use crate::runtime::Manifest;
 use crate::serve;
 use crate::util::args::Command;
-
-#[cfg(feature = "pjrt")]
-use crate::metrics::export;
 
 pub fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -58,7 +59,7 @@ fn print_usage() {
     println!(
         "sct — Spectral Compact Training (paper reproduction)\n\n\
          subcommands:\n\
-         \x20 train         one training run\n\
+         \x20 train         one training run (PJRT artifacts, or --backend native: pure Rust)\n\
          \x20 sweep         rank sweep: Table 3 + Figures 2/3\n\
          \x20 validate-70b  70B-step validation: Table 2 + Figure 1\n\
          \x20 finetune      gradient-integrity fine-tune: Table 4\n\
@@ -74,12 +75,12 @@ fn print_usage() {
 fn needs_pjrt(cmd: &str) -> Result<()> {
     bail!(
         "`sct {cmd}` executes AOT artifacts through PJRT, which this binary \
-         was built without; rebuild with `cargo build --features pjrt` \
-         (pure-Rust subcommands: serve, validate-70b, mem-report, info)"
+         was built without; rebuild with `cargo build --features pjrt`, or \
+         use the pure-Rust training engine: `sct train --backend native` \
+         (other pure-Rust subcommands: serve, validate-70b, mem-report, info)"
     )
 }
 
-#[cfg(feature = "pjrt")]
 fn base_config(args: &crate::util::args::Args) -> Result<RunConfig> {
     let mut cfg = RunConfig::default();
     if let Some(path) = args.get("config") {
@@ -87,6 +88,9 @@ fn base_config(args: &crate::util::args::Args) -> Result<RunConfig> {
     }
     if let Some(p) = args.get("preset") {
         cfg.preset = p.to_string();
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = b.to_string();
     }
     cfg.steps = args.parse_num("steps", cfg.steps)?;
     cfg.seed = args.parse_num("seed", cfg.seed)?;
@@ -109,41 +113,66 @@ fn base_config(args: &crate::util::args::Args) -> Result<RunConfig> {
         cfg.ckpt_dir = Some(dir.to_string());
         cfg.ckpt_every = args.parse_num("ckpt-every", 100)?;
     }
+    // native-backend knobs (layered: RunConfig defaults < TOML < flags)
+    cfg.grad_clip = args.parse_num("grad-clip", cfg.grad_clip)?;
+    cfg.weight_decay = args.parse_num("weight-decay", cfg.weight_decay)?;
+    cfg.retract_every = args.parse_num("retract-every", cfg.retract_every)?;
+    cfg.batch = args.parse_num("batch", cfg.batch)?;
+    cfg.seq_len = args.parse_num("seq-len", cfg.seq_len)?;
+    let nm = &mut cfg.native_model;
+    nm.vocab = args.parse_num("vocab", nm.vocab)?;
+    nm.d_model = args.parse_num("d-model", nm.d_model)?;
+    nm.n_layers = args.parse_num("layers", nm.n_layers)?;
+    nm.n_heads = args.parse_num("heads", nm.n_heads)?;
+    nm.d_ffn = args.parse_num("ffn", nm.d_ffn)?;
+    nm.rank = args.parse_num("rank", nm.rank)?;
+    nm.max_seq = args.parse_num("max-seq", nm.max_seq)?;
+    if args.flag("untied") {
+        nm.tied = false;
+    }
     Ok(cfg)
 }
 
-#[cfg(feature = "pjrt")]
 fn train_cmd_spec() -> Command {
-    Command::new("sct train", "run one training job")
-        .opt("config", "TOML config file ([train]/[lr] sections)")
-        .opt("preset", "artifact preset name (see `sct info`)")
+    Command::new("sct train", "run one training job (pjrt artifacts or the native engine)")
+        .opt("config", "TOML config file ([train]/[model]/[lr] sections)")
+        .opt("backend", "training backend: pjrt | native [default: pjrt]")
+        .opt("preset", "artifact preset name, pjrt backend (see `sct info`)")
         .opt("steps", "training steps")
         .opt("seed", "RNG seed (init + data)")
         .opt("lr-dense", "LR for dense params (attention/embeddings)")
         .opt("lr-spectral", "LR for spectral factors (U, s, V)")
-        .opt("artifacts", "artifact root [default: artifacts]")
+        .opt("artifacts", "artifact root, pjrt backend [default: artifacts]")
         .opt("out", "output dir for CSV/JSONL [default: runs]")
         .opt("ckpt-dir", "checkpoint directory (enables checkpointing)")
         .opt("ckpt-every", "checkpoint cadence in steps")
-        .flag("no-chunk", "dispatch per-step instead of fused K-step chunks")
+        .opt("grad-clip", "global gradient-norm clip, native backend (0 = off) [default: 1]")
+        .opt(
+            "weight-decay",
+            "decoupled weight decay on attention/head tensors, native backend [default: 0]",
+        )
+        .opt("retract-every", "QR-retract U/V every N steps, native backend [default: 1]")
+        .opt("batch", "batch size, native backend [default: 8]")
+        .opt("seq-len", "input sequence length, native backend [default: 64]")
+        .opt("vocab", "vocab size, native backend [default: 256]")
+        .opt("d-model", "model width, native backend [default: 64]")
+        .opt("layers", "decoder layers, native backend [default: 2]")
+        .opt("heads", "attention heads, native backend [default: 4]")
+        .opt("ffn", "FFN width, native backend [default: 192]")
+        .opt("rank", "spectral rank k, native backend [default: 8]")
+        .opt("max-seq", "max sequence length / RoPE table, native backend [default: 128]")
+        .flag("untied", "untied LM head, native backend (default tied)")
+        .flag("no-chunk", "dispatch per-step instead of fused K-step chunks (pjrt)")
         .flag("resume", "resume from newest checkpoint if present")
 }
 
-#[cfg(feature = "pjrt")]
-fn cmd_train(argv: &[String]) -> Result<()> {
-    let spec = train_cmd_spec();
-    let args = spec.parse(argv)?;
-    let cfg = base_config(&args)?;
-    let out_dir = std::path::PathBuf::from(&cfg.out_dir);
-    std::fs::create_dir_all(&out_dir)?;
-
-    let mut trainer = super::Trainer::new(cfg.clone())?;
-    if args.flag("resume") {
-        if let Some(step) = trainer.try_resume()? {
-            println!("resumed from step {step}");
-        }
-    }
-    let summary = trainer.run()?;
+/// Shared tail of both train backends: banner line, loss CSV, runs.jsonl.
+fn report_run(
+    summary: &RunSummary,
+    tracker: &Tracker,
+    mlp_compression: f64,
+    out_dir: &std::path::Path,
+) -> Result<()> {
     println!(
         "run {}: {} steps, loss {:.3} (ppl {:.1}), {:.0} ms/step, state {:.1} MB{}",
         summary.label,
@@ -158,12 +187,12 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             .unwrap_or_default()
     );
     let csv = out_dir.join(format!("{}_loss.csv", summary.label));
-    export::write_loss_csv(&trainer.tracker, &csv)?;
+    export::write_loss_csv(tracker, &csv)?;
     let row = export::summary_json(
         &summary.label,
         summary.params,
-        trainer.mlp_compression(),
-        &trainer.tracker,
+        mlp_compression,
+        tracker,
         summary.state_bytes,
     );
     export::append_jsonl(&out_dir.join("runs.jsonl"), &row)?;
@@ -171,8 +200,49 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let spec = train_cmd_spec();
+    let args = spec.parse(argv)?;
+    let cfg = base_config(&args)?;
+    match cfg.backend.as_str() {
+        "native" => cmd_train_native(cfg, args.flag("resume")),
+        "pjrt" => cmd_train_pjrt(cfg, args.flag("resume")),
+        other => bail!("unknown train backend {other:?} (expected \"pjrt\" or \"native\")"),
+    }
+}
+
+/// `sct train --backend native` — the pure-Rust training engine: shared
+/// decoder forward, full backward into the compact factors, AdamW + QR
+/// retraction. Needs no PJRT, no artifacts; checkpoints serve directly.
+fn cmd_train_native(cfg: RunConfig, resume: bool) -> Result<()> {
+    let out_dir = std::path::PathBuf::from(&cfg.out_dir);
+    std::fs::create_dir_all(&out_dir)?;
+    let (summary, tracker) = super::trainer::run_native(&cfg, resume)?;
+    report_run(
+        &summary,
+        &tracker,
+        crate::train::mlp_compression(&cfg.native_model),
+        &out_dir,
+    )
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_train_pjrt(cfg: RunConfig, resume: bool) -> Result<()> {
+    let out_dir = std::path::PathBuf::from(&cfg.out_dir);
+    std::fs::create_dir_all(&out_dir)?;
+    let mut trainer = super::Trainer::new(cfg)?;
+    if resume {
+        if let Some(step) = trainer.try_resume()? {
+            println!("resumed from step {step}");
+        }
+    }
+    let summary = trainer.run()?;
+    let compression = trainer.mlp_compression();
+    report_run(&summary, &trainer.tracker, compression, &out_dir)
+}
+
 #[cfg(not(feature = "pjrt"))]
-fn cmd_train(_argv: &[String]) -> Result<()> {
+fn cmd_train_pjrt(_cfg: RunConfig, _resume: bool) -> Result<()> {
     needs_pjrt("train")
 }
 
@@ -372,7 +442,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "connection read deadline / keep-alive idle window, ms \
              (0 = no deadline) [default: 15000]",
         )
-        .opt("ckpt", "serve checkpoint (.sct written by SpectralModel::save)")
+        .opt(
+            "ckpt",
+            ".sct checkpoint (SpectralModel::save or `sct train --backend native`)",
+        )
         .opt_default("seed", "weight-init / tokenizer seed", "0")
         .opt_default("vocab", "vocab size (random-init model)", "256")
         .opt_default("d-model", "model width (random-init model)", "64")
@@ -412,6 +485,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             d_ffn: args.parse_num("ffn", 192)?,
             rank: args.parse_num("rank", 8)?,
             max_seq: args.parse_num("max-seq", 128)?,
+            tied: true,
         };
         serve::SpectralModel::init(cfg, seed)
     };

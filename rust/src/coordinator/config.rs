@@ -12,6 +12,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use super::schedule::{LrPlan, Schedule};
+use crate::serve::EngineConfig;
 
 /// A parsed TOML-subset document: section -> key -> raw value.
 pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
@@ -128,6 +129,9 @@ fn parse_value(v: &str) -> Result<TomlValue> {
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub preset: String,
+    /// Execution backend: `"pjrt"` dispatches the AOT artifacts (needs the
+    /// `pjrt` feature), `"native"` runs the pure-Rust training engine.
+    pub backend: String,
     pub steps: usize,
     pub seed: u64,
     pub lr_plan: LrPlan,
@@ -140,12 +144,28 @@ pub struct RunConfig {
     pub ckpt_every: usize,
     pub artifacts_root: String,
     pub out_dir: String,
+    /// Global gradient-norm clip (native backend; 0 disables).
+    pub grad_clip: f32,
+    /// Decoupled weight decay on decay-eligible tensors — attention
+    /// matrices and an untied head; never embeddings, norms or the
+    /// spectral factors (native backend).
+    pub weight_decay: f32,
+    /// QR-retract every N steps (native backend; paper default 1).
+    pub retract_every: usize,
+    /// Batch size (native backend; the pjrt path reads it from the artifact).
+    pub batch: usize,
+    /// Input sequence length T (native backend).
+    pub seq_len: usize,
+    /// Model geometry for the native backend (`[model]` TOML section /
+    /// `sct train` shape flags; the pjrt path gets geometry from its preset).
+    pub native_model: EngineConfig,
 }
 
 impl Default for RunConfig {
     fn default() -> RunConfig {
         RunConfig {
             preset: "sweep_r16".into(),
+            backend: "pjrt".into(),
             steps: 200,
             seed: 0,
             lr_plan: LrPlan::paper_sct(),
@@ -157,6 +177,12 @@ impl Default for RunConfig {
             ckpt_every: 0,
             artifacts_root: "artifacts".into(),
             out_dir: "runs".into(),
+            grad_clip: 1.0,
+            weight_decay: 0.0,
+            retract_every: 1,
+            batch: 8,
+            seq_len: 64,
+            native_model: EngineConfig::default(),
         }
     }
 }
@@ -168,6 +194,24 @@ impl RunConfig {
         let t = doc.get("train").unwrap_or(&empty);
         if let Some(v) = t.get("preset") {
             self.preset = v.as_str()?.to_string();
+        }
+        if let Some(v) = t.get("backend") {
+            self.backend = v.as_str()?.to_string();
+        }
+        if let Some(v) = t.get("grad_clip") {
+            self.grad_clip = v.as_f32()?;
+        }
+        if let Some(v) = t.get("weight_decay") {
+            self.weight_decay = v.as_f32()?;
+        }
+        if let Some(v) = t.get("retract_every") {
+            self.retract_every = v.as_usize()?;
+        }
+        if let Some(v) = t.get("batch") {
+            self.batch = v.as_usize()?;
+        }
+        if let Some(v) = t.get("seq_len") {
+            self.seq_len = v.as_usize()?;
         }
         if let Some(v) = t.get("steps") {
             self.steps = v.as_usize()?;
@@ -195,6 +239,26 @@ impl RunConfig {
         }
         if let Some(v) = t.get("out_dir") {
             self.out_dir = v.as_str()?.to_string();
+        }
+        // [model] section: native-backend model geometry.
+        if let Some(m) = doc.get("model") {
+            let mm = &mut self.native_model;
+            for (key, field) in [
+                ("vocab", &mut mm.vocab as &mut usize),
+                ("d_model", &mut mm.d_model),
+                ("n_layers", &mut mm.n_layers),
+                ("n_heads", &mut mm.n_heads),
+                ("d_ffn", &mut mm.d_ffn),
+                ("rank", &mut mm.rank),
+                ("max_seq", &mut mm.max_seq),
+            ] {
+                if let Some(v) = m.get(key) {
+                    *field = v.as_usize()?;
+                }
+            }
+            if let Some(v) = m.get("tied") {
+                mm.tied = v.as_bool()?;
+            }
         }
         // [lr] section: dense / spectral constants or cosine fields.
         if let Some(lr) = doc.get("lr") {
@@ -260,6 +324,37 @@ spectral = 5e-4
         assert!(!cfg.chunked);
         assert_eq!(cfg.ckpt_dir.as_deref(), Some("ckpts/sweep"));
         assert_eq!(cfg.lr_plan.at(0), (2e-5, 5e-4));
+    }
+
+    #[test]
+    fn native_backend_and_model_sections() {
+        let text = r#"
+[train]
+backend = "native"
+grad_clip = 0.5
+weight_decay = 0.01
+retract_every = 4
+batch = 2
+seq_len = 24
+
+[model]
+d_model = 48
+rank = 6
+tied = false
+"#;
+        let mut cfg = RunConfig::default();
+        cfg.apply_toml(&parse_toml(text).unwrap()).unwrap();
+        assert_eq!(cfg.backend, "native");
+        assert_eq!(cfg.grad_clip, 0.5);
+        assert!((cfg.weight_decay - 0.01).abs() < 1e-9);
+        assert_eq!(cfg.retract_every, 4);
+        assert_eq!(cfg.batch, 2);
+        assert_eq!(cfg.seq_len, 24);
+        assert_eq!(cfg.native_model.d_model, 48);
+        assert_eq!(cfg.native_model.rank, 6);
+        assert!(!cfg.native_model.tied);
+        // untouched geometry keeps its default
+        assert_eq!(cfg.native_model.vocab, 256);
     }
 
     #[test]

@@ -7,9 +7,10 @@
 //! Table 4, [`validate70b`] = Table 2 / Fig 1). The [`cli`] exposes each as
 //! a subcommand of the `sct` launcher.
 //!
-//! Drivers that execute AOT artifacts ([`trainer`], [`sweep`], [`finetune`],
-//! [`generate`]) require the `pjrt` feature; [`config`], [`schedule`],
-//! [`validate70b`] and the CLI shell are always built.
+//! Drivers that execute AOT artifacts (the pjrt `Trainer`, [`sweep`],
+//! [`finetune`], [`generate`]) require the `pjrt` feature; [`config`],
+//! [`schedule`], [`validate70b`], the native-backend
+//! [`trainer::run_native`] loop and the CLI shell are always built.
 
 pub mod cli;
 pub mod config;
@@ -20,11 +21,11 @@ pub mod generate;
 pub mod schedule;
 #[cfg(feature = "pjrt")]
 pub mod sweep;
-#[cfg(feature = "pjrt")]
 pub mod trainer;
 pub mod validate70b;
 
 pub use config::RunConfig;
 pub use schedule::{LrPlan, Schedule};
+pub use trainer::{run_native, RunSummary};
 #[cfg(feature = "pjrt")]
-pub use trainer::{RunSummary, Trainer};
+pub use trainer::Trainer;

@@ -18,13 +18,19 @@
 //!   trainer loop, rank-sweep / fine-tune drivers (drivers need `pjrt`).
 //! * [`serve`] — the pure-Rust spectral inference engine: KV-cached
 //!   incremental decoding, continuous-batching scheduler with chunked
-//!   prefill, and a std-net HTTP server with keep-alive + SSE token
-//!   streaming — the deployment side of "never materialized", no PJRT
-//!   required.
+//!   prefill + stop sequences, and a std-net HTTP server with keep-alive +
+//!   SSE token streaming — the deployment side of "never materialized", no
+//!   PJRT required.
+//! * [`train`] — the pure-Rust **training** engine: the shared decoder
+//!   blocks (one forward implementation for serve and train), full
+//!   reverse-mode backward into compact factor gradients, per-tensor AdamW
+//!   with the dense/spectral LR split, gradient clipping, and Stiefel QR
+//!   retraction every step — paper Algorithm 1 end-to-end with no PJRT,
+//!   checkpointing to the same `.sct` layout `serve` loads.
 //! * [`spectral`] — pure-Rust spectral linear algebra substrate (matrix ops,
 //!   Householder QR, Jacobi SVD, AdamW, a native SpectralLinear layer) used
 //!   for baselines, property tests, true-shape 70B phase benchmarks, and
-//!   the serving forward path.
+//!   the train/serve forward paths.
 //! * [`memmodel`] — the analytic training-memory model that regenerates the
 //!   paper's Table 1 / Table 2 / Figure 1 numbers exactly.
 //! * [`data`] — tokenizer, synthetic instruction corpus (Alpaca substitute),
@@ -43,6 +49,7 @@ pub mod runtime;
 pub mod serve;
 pub mod spectral;
 pub mod testkit;
+pub mod train;
 pub mod util;
 
 /// Crate-wide result type.

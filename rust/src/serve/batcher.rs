@@ -23,10 +23,16 @@
 //!    traffic of the projections and the logits head. Each sampled token is
 //!    pushed down the per-sequence stream channel immediately (when the
 //!    request was submitted via [`Batcher::submit_streaming`]); a stream
-//!    whose receiver hung up cancels the sequence, freeing its slot;
-//! 4. **evict** — sequences that hit their token budget, fill their KV
-//!    line, or were cancelled release the slot (recycled by the next
-//!    admission) and their [`Completion`] is delivered.
+//!    whose receiver hung up cancels the sequence, freeing its slot. Stop
+//!    sequences ([`Request::stop`]) are checked as each token lands: a match
+//!    ends the sequence with `finish_reason = "stop"` and trims the matched
+//!    tokens; tokens that could still become a match are **held back** from
+//!    the stream until decided, so streamed tokens always concatenate to the
+//!    final trimmed output;
+//! 4. **evict** — sequences that matched a stop sequence, hit their token
+//!    budget, fill their KV line, or were cancelled release the slot
+//!    (recycled by the next admission) and their [`Completion`] is
+//!    delivered with its [`FinishReason`].
 //!
 //! Sequences join and leave the batch at token granularity — a long request
 //! never blocks a short one behind it (continuous batching), and since
@@ -51,7 +57,37 @@ pub struct Request {
     pub prompt: Vec<i32>,
     pub max_new: usize,
     pub opts: SampleOpts,
+    /// Stop sequences as token-id sequences: generation ends the moment the
+    /// produced tokens end with any of them, and the matched sequence is
+    /// trimmed from the output (so a single-entry sequence is exactly EOS
+    /// handling). Empty sequences are ignored; at most
+    /// [`MAX_STOP_SEQUENCES`] are honored.
+    pub stop: Vec<Vec<i32>>,
 }
+
+/// Why a sequence finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// A stop sequence (or EOS token) matched.
+    Stop,
+    /// Token budget or KV capacity exhausted.
+    Length,
+    /// The stream receiver hung up.
+    Cancelled,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Stop => "stop",
+            FinishReason::Length => "length",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Stop sequences honored per request (the rest are ignored).
+pub const MAX_STOP_SEQUENCES: usize = 8;
 
 /// Result of a finished request, with queue/decode timing for the latency
 /// accounting the throughput bench reports.
@@ -65,6 +101,7 @@ pub struct Completion {
     pub ttft_ms: f64,
     /// Prefill + decode wall time.
     pub decode_ms: f64,
+    pub finish_reason: FinishReason,
 }
 
 /// One event on a streaming request's channel (see
@@ -110,6 +147,8 @@ pub struct BatchStats {
     pub prefill_tokens: AtomicU64,
     /// Sequences cancelled because their stream receiver hung up.
     pub cancelled: AtomicU64,
+    /// Sequences that terminated on a stop sequence / EOS match.
+    pub stopped: AtomicU64,
 }
 
 impl BatchStats {
@@ -128,6 +167,10 @@ impl BatchStats {
 
     pub fn cancelled(&self) -> u64 {
         self.cancelled.load(Ordering::Relaxed)
+    }
+
+    pub fn stopped(&self) -> u64 {
+        self.stopped.load(Ordering::Relaxed)
     }
 }
 
@@ -192,12 +235,42 @@ struct ActiveSeq {
     max_new: usize,
     rng: Rng,
     opts: SampleOpts,
+    /// Stop sequences (non-empty, capped — see [`MAX_STOP_SEQUENCES`]).
+    stop: Vec<Vec<i32>>,
+    /// Tokens already pushed down the stream. Lags `produced.len()` by the
+    /// stop-sequence holdback: a token that could be the prefix of a stop
+    /// match is withheld until the match is decided, so the stream never
+    /// emits tokens the final completion trims away.
+    streamed: usize,
     sink: Option<Sink>,
     queue_ms: f64,
     enqueued: Instant,
     admitted_at: Instant,
     first_token_ms: Option<f64>,
     cancelled: bool,
+    stopped: bool,
+}
+
+/// Length of the LONGEST stop sequence `produced` ends with. Longest wins so
+/// an overlapping shorter stop (e.g. `"\n"` vs `"###\n"`) cannot pre-empt a
+/// longer one and leave part of its text untrimmed in the output.
+fn stop_match(produced: &[i32], stops: &[Vec<i32>]) -> Option<usize> {
+    stops.iter().filter(|s| produced.ends_with(s)).map(|s| s.len()).max()
+}
+
+/// How many trailing tokens of `produced` could still become a stop match —
+/// the longest proper prefix of any stop sequence that `produced` currently
+/// ends with. These tokens must not be streamed yet.
+fn stop_holdback(produced: &[i32], stops: &[Vec<i32>]) -> usize {
+    let mut hold = 0usize;
+    for s in stops {
+        for l in (hold + 1)..s.len() {
+            if l <= produced.len() && produced[produced.len() - l..] == s[..l] {
+                hold = hold.max(l);
+            }
+        }
+    }
+    hold
 }
 
 /// Handle to the scheduler thread. Dropping it closes the queue and joins
@@ -364,6 +437,13 @@ fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: A
             } else {
                 SeqState::Prefilling { done: 0, total }
             };
+            let stop: Vec<Vec<i32>> = job
+                .req
+                .stop
+                .into_iter()
+                .filter(|s| !s.is_empty())
+                .take(MAX_STOP_SEQUENCES)
+                .collect();
             active.push(ActiveSeq {
                 slot,
                 cur: prompt[total],
@@ -373,12 +453,15 @@ fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: A
                 max_new,
                 rng: Rng::new(job.req.opts.seed),
                 opts: job.req.opts.clone(),
+                stop,
+                streamed: 0,
                 sink: Some(job.sink),
                 queue_ms,
                 enqueued: job.enqueued,
                 admitted_at: Instant::now(),
                 first_token_ms: None,
                 cancelled: false,
+                stopped: false,
             });
             stats.admitted.fetch_add(1, Ordering::Relaxed);
             stats.peak_active.fetch_max(active.len() as u64, Ordering::Relaxed);
@@ -449,10 +532,29 @@ fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: A
                 if seq.first_token_ms.is_none() {
                     seq.first_token_ms = Some(seq.enqueued.elapsed().as_secs_f64() * 1e3);
                 }
-                if let Some(sink) = &seq.sink {
-                    if !sink.push_token(next) {
-                        seq.cancelled = true;
-                        stats.cancelled.fetch_add(1, Ordering::Relaxed);
+                // Stop sequences: a match ends the sequence and trims the
+                // matched tokens from the output. Tokens that might still
+                // become a match are withheld from the stream (holdback), so
+                // streamed tokens always concatenate to the final output.
+                let hold = if seq.stop.is_empty() {
+                    0
+                } else if let Some(m) = stop_match(&seq.produced, &seq.stop) {
+                    seq.produced.truncate(seq.produced.len() - m);
+                    seq.stopped = true;
+                    stats.stopped.fetch_add(1, Ordering::Relaxed);
+                    0
+                } else {
+                    stop_holdback(&seq.produced, &seq.stop)
+                };
+                let releasable = seq.produced.len() - hold.min(seq.produced.len());
+                while seq.streamed < releasable && !seq.cancelled {
+                    let t = seq.produced[seq.streamed];
+                    match &seq.sink {
+                        Some(sink) if !sink.push_token(t) => {
+                            seq.cancelled = true;
+                            stats.cancelled.fetch_add(1, Ordering::Relaxed);
+                        }
+                        _ => seq.streamed += 1,
                     }
                 }
             }
@@ -464,12 +566,31 @@ fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: A
         while i < active.len() {
             let s = &active[i];
             let finished = s.cancelled
+                || s.stopped
                 || (s.state == SeqState::Decoding
                     && (s.produced.len() >= s.max_new || kv.remaining(s.slot) == 0));
             if finished {
                 let mut seq = active.swap_remove(i);
                 kv.release(seq.slot);
                 stats.completed.fetch_add(1, Ordering::Relaxed);
+                // A length-finish may still hold tokens back (they were a
+                // possible stop prefix); the match is now decided, flush them.
+                if !seq.cancelled {
+                    for j in seq.streamed..seq.produced.len() {
+                        if let Some(sink) = &seq.sink {
+                            if !sink.push_token(seq.produced[j]) {
+                                break;
+                            }
+                        }
+                    }
+                }
+                let finish_reason = if seq.cancelled {
+                    FinishReason::Cancelled
+                } else if seq.stopped {
+                    FinishReason::Stop
+                } else {
+                    FinishReason::Length
+                };
                 // Receiver may have given up; completion is best-effort.
                 if let Some(sink) = seq.sink.take() {
                     sink.finish(Completion {
@@ -478,6 +599,7 @@ fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: A
                         queue_ms: seq.queue_ms,
                         ttft_ms: seq.first_token_ms.unwrap_or(0.0),
                         decode_ms: seq.admitted_at.elapsed().as_secs_f64() * 1e3,
+                        finish_reason,
                     });
                 }
             } else {
@@ -501,6 +623,7 @@ mod tests {
             d_ffn: 48,
             rank: 4,
             max_seq: 32,
+            tied: true,
         }
     }
 
@@ -509,7 +632,16 @@ mod tests {
     }
 
     fn greedy(prompt: Vec<i32>, n: usize) -> Request {
-        Request { prompt, max_new: n, opts: SampleOpts { temperature: 0.0, top_k: 0, seed: 0 } }
+        Request {
+            prompt,
+            max_new: n,
+            opts: SampleOpts { temperature: 0.0, top_k: 0, seed: 0 },
+            stop: vec![],
+        }
+    }
+
+    fn greedy_stop(prompt: Vec<i32>, n: usize, stop: Vec<Vec<i32>>) -> Request {
+        Request { stop, ..greedy(prompt, n) }
     }
 
     #[test]
@@ -635,6 +767,93 @@ mod tests {
         let c = b.generate(greedy(prompt, 6)).unwrap();
         assert_eq!(c.tokens, baseline, "chunked prefill must not change the decode");
         assert!(b.stats().prefill_tokens() >= 89);
+    }
+
+    #[test]
+    fn stop_sequence_truncates_output_and_reports_stop() {
+        let b = tiny_batcher(2, 4);
+        let baseline = b.generate(greedy(vec![1, 2, 3], 12)).unwrap();
+        assert_eq!(baseline.finish_reason, FinishReason::Length);
+        assert_eq!(baseline.tokens.len(), 12);
+
+        // single-token stop (EOS semantics): cut at its first occurrence
+        let eos = baseline.tokens[4];
+        let first = baseline.tokens.iter().position(|&t| t == eos).unwrap();
+        let c = b.generate(greedy_stop(vec![1, 2, 3], 12, vec![vec![eos]])).unwrap();
+        assert_eq!(c.tokens, baseline.tokens[..first], "output truncated before EOS");
+        assert_eq!(c.finish_reason, FinishReason::Stop);
+
+        // two-token stop sequence: cut at its first window match
+        let pair = vec![baseline.tokens[5], baseline.tokens[6]];
+        let at = baseline.tokens.windows(2).position(|w| w == pair[..]).unwrap();
+        let c = b.generate(greedy_stop(vec![1, 2, 3], 12, vec![pair])).unwrap();
+        assert_eq!(c.tokens, baseline.tokens[..at]);
+        assert_eq!(c.finish_reason, FinishReason::Stop);
+        assert!(b.stats().stopped() >= 2);
+    }
+
+    #[test]
+    fn unmatched_stop_runs_to_length() {
+        let b = tiny_batcher(1, 2);
+        // token -5 is never sampled, so the stop can never match
+        let c = b.generate(greedy_stop(vec![4, 2], 6, vec![vec![-5], vec![-5, -5]])).unwrap();
+        assert_eq!(c.tokens.len(), 6);
+        assert_eq!(c.finish_reason, FinishReason::Length);
+    }
+
+    #[test]
+    fn streamed_tokens_with_stop_match_the_trimmed_completion() {
+        // Holdback: even with a multi-token stop sequence, the stream must
+        // emit exactly the tokens the final (trimmed) completion contains.
+        let b = tiny_batcher(2, 4);
+        let baseline = b.generate(greedy(vec![7, 1], 10)).unwrap();
+        let pair = vec![baseline.tokens[3], baseline.tokens[4]];
+
+        let rx = b.submit_streaming(greedy_stop(vec![7, 1], 10, vec![pair])).unwrap();
+        let mut streamed = Vec::new();
+        let mut done = None;
+        for ev in rx {
+            match ev {
+                StreamEvent::Token(t) => streamed.push(t),
+                StreamEvent::Done(c) => done = Some(c),
+            }
+        }
+        let done = done.expect("terminal Done event");
+        assert_eq!(done.finish_reason, FinishReason::Stop);
+        assert_eq!(streamed, done.tokens, "stream must never emit trimmed stop tokens");
+
+        // a stop list on a streaming request that finishes by length still
+        // flushes the held-back tail
+        let rx = b.submit_streaming(greedy_stop(vec![7, 1], 5, vec![vec![-5, -5]])).unwrap();
+        let mut streamed = Vec::new();
+        let mut done = None;
+        for ev in rx {
+            match ev {
+                StreamEvent::Token(t) => streamed.push(t),
+                StreamEvent::Done(c) => done = Some(c),
+            }
+        }
+        let done = done.unwrap();
+        assert_eq!(done.finish_reason, FinishReason::Length);
+        assert_eq!(streamed, done.tokens);
+        assert_eq!(streamed.len(), 5);
+    }
+
+    #[test]
+    fn stop_holdback_prefix_logic() {
+        let stops = vec![vec![1, 2, 3], vec![9, 9]];
+        assert_eq!(stop_holdback(&[5, 1], &stops), 1, "trailing 1 could start 1,2,3");
+        assert_eq!(stop_holdback(&[5, 1, 2], &stops), 2);
+        assert_eq!(stop_holdback(&[5, 9], &stops), 1);
+        assert_eq!(stop_holdback(&[5, 4], &stops), 0);
+        assert_eq!(stop_match(&[5, 1, 2, 3], &stops), Some(3));
+        assert_eq!(stop_match(&[5, 9, 9], &stops), Some(2));
+        assert_eq!(stop_match(&[5, 1, 2], &stops), None);
+        // overlapping stops: the LONGEST match wins, so "###\n"-style stops
+        // are trimmed whole even when "\n" alone is also a stop
+        let overlapping = vec![vec![10], vec![35, 35, 35, 10]];
+        assert_eq!(stop_match(&[7, 35, 35, 35, 10], &overlapping), Some(4));
+        assert_eq!(stop_match(&[7, 10], &overlapping), Some(1));
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! serving exactly as during training (paper §3's "never materialized"
 //! claim, now on the deployment path).
 //!
-//! Two forward paths:
+//! The decoder math itself — RMSNorm, RoPE, SiLU, causal attention — lives
+//! in [`crate::train::blocks`], shared with the native trainer so the two
+//! paths cannot drift. Two forward paths:
 //! * [`Engine::step_batch`] — incremental decode: one token per sequence per
 //!   call, attending over that sequence's [`KvCache`] line. This is the
 //!   serving hot path; a step over B admitted sequences shares every weight
@@ -12,9 +14,10 @@
 //!   as one (B, d) GEMM), which is where continuous batching earns its
 //!   throughput on a memory-bound CPU decode.
 //! * [`Engine::forward_full`] — whole-sequence re-encode with an explicit
-//!   causal mask. The correctness baseline: the KV path must produce
-//!   token-identical greedy output (tested below), mirroring how
-//!   `coordinator::generate` re-encodes through the AOT artifact.
+//!   causal mask, which IS the training forward
+//!   ([`crate::train::decoder::decoder_fwd`]). The correctness baseline:
+//!   the KV path must produce token-identical greedy output (tested below),
+//!   and by the same tests the KV path matches what training computes.
 //!
 //! The sampler ([`SampleOpts`], [`sample_logits`]) lives here and is shared
 //! with `coordinator::generate`, so the baseline and the server sample
@@ -26,11 +29,10 @@ use anyhow::{bail, Context, Result};
 
 use super::kv::{KvCache, SlotId};
 use crate::checkpoint::format::{read_checkpoint, write_checkpoint, NamedTensor};
-use crate::spectral::matrix::{axpy, dot};
 use crate::spectral::{Matrix, SpectralLinear};
+use crate::train::blocks::{add_into, attend_row, rmsnorm, silu, Rope};
+use crate::train::decoder::decoder_fwd;
 use crate::util::rng::Rng;
-
-const RMS_EPS: f32 = 1e-6;
 
 // ---------------------------------------------------------------------------
 // sampling (shared with coordinator::generate)
@@ -92,8 +94,8 @@ pub fn argmax(xs: &[f32]) -> usize {
 // model
 // ---------------------------------------------------------------------------
 
-/// Architecture of a serve model (mirrors the training `ModelSpec` family:
-/// RMSNorm, RoPE attention, SwiGLU MLP with spectral gate/up/down).
+/// Architecture of a spectral decoder (mirrors the training `ModelSpec`
+/// family: RMSNorm, RoPE attention, SwiGLU MLP with spectral gate/up/down).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct EngineConfig {
     pub vocab: usize,
@@ -105,6 +107,8 @@ pub struct EngineConfig {
     pub rank: usize,
     /// KV cache capacity per sequence (absolute RoPE positions).
     pub max_seq: usize,
+    /// Tied LM head (`logits = x Eᵀ`) vs a separate `(d_model, vocab)` head.
+    pub tied: bool,
 }
 
 impl Default for EngineConfig {
@@ -119,6 +123,7 @@ impl Default for EngineConfig {
             d_ffn: 192,
             rank: 8,
             max_seq: 128,
+            tied: true,
         }
     }
 }
@@ -160,12 +165,14 @@ pub struct LayerWeights {
     pub down: SpectralLinear,
 }
 
-/// Full model: tied embeddings (`logits = x Eᵀ`), per-layer weights, final norm.
+/// Full model: embeddings, per-layer weights, final norm, and an optional
+/// untied head (`None` = tied, `logits = x Eᵀ`).
 pub struct SpectralModel {
     pub cfg: EngineConfig,
     pub embed: Matrix,
     pub layers: Vec<LayerWeights>,
     pub ln_f: Vec<f32>,
+    pub head: Option<Matrix>,
 }
 
 impl SpectralModel {
@@ -191,12 +198,9 @@ impl SpectralModel {
                 down: SpectralLinear::init(&mut rng, f, d, k),
             })
             .collect();
-        SpectralModel {
-            cfg,
-            embed: Matrix::randn(&mut rng, cfg.vocab, d, 0.02),
-            layers,
-            ln_f: vec![1.0; d],
-        }
+        let embed = Matrix::randn(&mut rng, cfg.vocab, d, 0.02);
+        let head = if cfg.tied { None } else { Some(glorot(&mut rng, d, cfg.vocab)) };
+        SpectralModel { cfg, embed, layers, ln_f: vec![1.0; d], head }
     }
 
     /// Parameter count — compact factors only, k(m+n+1) per projection.
@@ -207,29 +211,48 @@ impl SpectralModel {
             + self.layers.first().map_or(0, |l| {
                 l.gate.param_count() + l.up.param_count() + l.down.param_count()
             });
-        self.cfg.vocab * d + self.cfg.n_layers * per_layer + d
+        self.cfg.vocab * d
+            + self.cfg.n_layers * per_layer
+            + d
+            + self.head.as_ref().map_or(0, |h| h.rows * h.cols)
     }
 
-    // -- checkpoint I/O (reuses the `.sct` container format) ---------------
+    /// Project final hidden states to logits through the tied or untied head.
+    pub fn logits(&self, hf: &Matrix) -> Matrix {
+        match &self.head {
+            Some(head) => hf.matmul(head),
+            None => hf.matmul_t(&self.embed),
+        }
+    }
 
-    /// Save as a `.sct` checkpoint with a `serve/` tensor namespace and a
-    /// meta tensor carrying the architecture, so `load` is self-contained.
-    pub fn save(&self, path: &Path) -> Result<()> {
+    // -- checkpoint I/O (the `.sct` params layout; see `train` module docs) --
+
+    /// The model as named tensors in the shared `params/layers/...` layout
+    /// (plus a `model/meta` architecture tensor, so loading is
+    /// self-contained). The trainer appends its `opt/...` tensors to this
+    /// same list — a serve checkpoint is a strict subset of a training one.
+    pub fn to_tensors(&self) -> Vec<NamedTensor> {
         let c = &self.cfg;
-        let meta: Vec<i32> = [c.vocab, c.d_model, c.n_layers, c.n_heads, c.d_ffn, c.rank, c.max_seq]
-            .iter()
-            .map(|&x| x as i32)
-            .collect();
+        let meta: Vec<i32> = vec![
+            c.vocab as i32,
+            c.d_model as i32,
+            c.n_layers as i32,
+            c.n_heads as i32,
+            c.d_ffn as i32,
+            c.rank as i32,
+            c.max_seq as i32,
+            c.tied as i32,
+        ];
         let mut tensors = vec![
-            NamedTensor::i32("serve/meta", vec![7], &meta),
-            NamedTensor::f32("serve/embed", vec![c.vocab, c.d_model], &self.embed.data),
+            NamedTensor::i32("model/meta", vec![8], &meta),
+            NamedTensor::f32("params/embed", vec![c.vocab, c.d_model], &self.embed.data),
         ];
         for (i, l) in self.layers.iter().enumerate() {
             let mat = |name: &str, m: &Matrix| {
-                NamedTensor::f32(&format!("serve/layers/{i}/{name}"), vec![m.rows, m.cols], &m.data)
+                NamedTensor::f32(&format!("params/layers/{i}/{name}"), vec![m.rows, m.cols], &m.data)
             };
             let vec1 = |name: &str, v: &[f32]| {
-                NamedTensor::f32(&format!("serve/layers/{i}/{name}"), vec![v.len()], v)
+                NamedTensor::f32(&format!("params/layers/{i}/{name}"), vec![v.len()], v)
             };
             tensors.extend([
                 mat("attn/wq", &l.wq),
@@ -247,31 +270,35 @@ impl SpectralModel {
                 ]);
             }
         }
-        tensors.push(NamedTensor::f32("serve/ln_f", vec![c.d_model], &self.ln_f));
-        write_checkpoint(path, 0, &tensors)
+        tensors.push(NamedTensor::f32("params/ln_f", vec![c.d_model], &self.ln_f));
+        if let Some(h) = &self.head {
+            tensors.push(NamedTensor::f32("params/head", vec![h.rows, h.cols], &h.data));
+        }
+        tensors
     }
 
-    /// Load a checkpoint written by [`SpectralModel::save`].
-    pub fn load(path: &Path) -> Result<SpectralModel> {
+    /// Rebuild a model from `model/meta` + `params/...` tensors. Extra
+    /// tensors (the trainer's `opt/...` moments) are ignored, so a
+    /// mid-training checkpoint loads directly.
+    pub fn from_tensors(tensors: &[NamedTensor]) -> Result<SpectralModel> {
         fn find<'a>(tensors: &'a [NamedTensor], name: &str) -> Result<&'a NamedTensor> {
             tensors
                 .iter()
                 .find(|t| t.name == name)
-                .with_context(|| format!("serve checkpoint missing tensor {name:?}"))
+                .with_context(|| format!("checkpoint missing tensor {name:?}"))
         }
-        let (_step, tensors) = read_checkpoint(path)?;
         let matrix = |name: String| -> Result<Matrix> {
-            let t = find(&tensors, &name)?;
+            let t = find(tensors, &name)?;
             if t.shape.len() != 2 {
                 bail!("{}: expected 2-D shape, got {:?}", t.name, t.shape);
             }
             Ok(Matrix::from_vec(t.shape[0], t.shape[1], t.as_f32()?))
         };
-        let vector = |name: String| -> Result<Vec<f32>> { find(&tensors, &name)?.as_f32() };
+        let vector = |name: String| -> Result<Vec<f32>> { find(tensors, &name)?.as_f32() };
 
-        let meta = find(&tensors, "serve/meta")?.as_i32()?;
-        if meta.len() != 7 {
-            bail!("serve/meta has {} entries, expected 7", meta.len());
+        let meta = find(tensors, "model/meta")?.as_i32()?;
+        if meta.len() != 8 {
+            bail!("model/meta has {} entries, expected 8", meta.len());
         }
         let cfg = EngineConfig {
             vocab: meta[0] as usize,
@@ -281,35 +308,50 @@ impl SpectralModel {
             d_ffn: meta[4] as usize,
             rank: meta[5] as usize,
             max_seq: meta[6] as usize,
+            tied: meta[7] != 0,
         };
         cfg.validate();
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for i in 0..cfg.n_layers {
             let triple = |nm: &str| -> Result<SpectralLinear> {
                 Ok(SpectralLinear {
-                    u: matrix(format!("serve/layers/{i}/mlp/{nm}/u"))?,
-                    s: vector(format!("serve/layers/{i}/mlp/{nm}/s"))?,
-                    v: matrix(format!("serve/layers/{i}/mlp/{nm}/v"))?,
+                    u: matrix(format!("params/layers/{i}/mlp/{nm}/u"))?,
+                    s: vector(format!("params/layers/{i}/mlp/{nm}/s"))?,
+                    v: matrix(format!("params/layers/{i}/mlp/{nm}/v"))?,
                 })
             };
             layers.push(LayerWeights {
-                wq: matrix(format!("serve/layers/{i}/attn/wq"))?,
-                wk: matrix(format!("serve/layers/{i}/attn/wk"))?,
-                wv: matrix(format!("serve/layers/{i}/attn/wv"))?,
-                wo: matrix(format!("serve/layers/{i}/attn/wo"))?,
-                ln1: vector(format!("serve/layers/{i}/ln1"))?,
-                ln2: vector(format!("serve/layers/{i}/ln2"))?,
+                wq: matrix(format!("params/layers/{i}/attn/wq"))?,
+                wk: matrix(format!("params/layers/{i}/attn/wk"))?,
+                wv: matrix(format!("params/layers/{i}/attn/wv"))?,
+                wo: matrix(format!("params/layers/{i}/attn/wo"))?,
+                ln1: vector(format!("params/layers/{i}/ln1"))?,
+                ln2: vector(format!("params/layers/{i}/ln2"))?,
                 gate: triple("gate")?,
                 up: triple("up")?,
                 down: triple("down")?,
             });
         }
+        let head = if cfg.tied { None } else { Some(matrix("params/head".into())?) };
         Ok(SpectralModel {
             cfg,
-            embed: matrix("serve/embed".into())?,
+            embed: matrix("params/embed".into())?,
             layers,
-            ln_f: vector("serve/ln_f".into())?,
+            ln_f: vector("params/ln_f".into())?,
+            head,
         })
+    }
+
+    /// Save as a `.sct` checkpoint (see [`SpectralModel::to_tensors`]).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_checkpoint(path, 0, &self.to_tensors())
+    }
+
+    /// Load a `.sct` checkpoint written by [`SpectralModel::save`] or by
+    /// `train::NativeTrainer::save` — the layouts are the same.
+    pub fn load(path: &Path) -> Result<SpectralModel> {
+        let (_step, tensors) = read_checkpoint(path)?;
+        SpectralModel::from_tensors(&tensors)
     }
 }
 
@@ -320,26 +362,13 @@ impl SpectralModel {
 /// Model + precomputed RoPE tables, ready to decode.
 pub struct Engine {
     pub model: SpectralModel,
-    /// (max_seq, head_dim/2) rotation tables.
-    cos: Matrix,
-    sin: Matrix,
+    rope: Rope,
 }
 
 impl Engine {
     pub fn new(model: SpectralModel) -> Engine {
-        let cfg = model.cfg;
-        let half = cfg.head_dim() / 2;
-        let mut cos = Matrix::zeros(cfg.max_seq, half);
-        let mut sin = Matrix::zeros(cfg.max_seq, half);
-        for pos in 0..cfg.max_seq {
-            for j in 0..half {
-                let inv = 1.0f64 / 10000f64.powf(j as f64 / half as f64);
-                let ang = pos as f64 * inv;
-                cos[(pos, j)] = ang.cos() as f32;
-                sin[(pos, j)] = ang.sin() as f32;
-            }
-        }
-        Engine { model, cos, sin }
+        let rope = Rope::new(model.cfg.max_seq, model.cfg.head_dim());
+        Engine { model, rope }
     }
 
     pub fn cfg(&self) -> &EngineConfig {
@@ -361,12 +390,12 @@ impl Engine {
     pub fn step_batch(&self, tokens: &[i32], slots: &[SlotId], kv: &mut KvCache) -> Matrix {
         let x = self.advance_batch(tokens, slots, kv);
         let xf = rmsnorm(&x, &self.model.ln_f);
-        xf.matmul_t(&self.model.embed) // tied head: (B, vocab)
+        self.model.logits(&xf) // (B, vocab)
     }
 
     /// Feed a prompt's tokens into `slot` without computing logits — the
-    /// admission-path fast prefill (the tied logits head is the single
-    /// largest matmul per step and its output would be discarded).
+    /// admission-path fast prefill (the logits head is the single largest
+    /// matmul per step and its output would be discarded).
     pub fn prefill(&self, tokens: &[i32], slot: SlotId, kv: &mut KvCache) {
         for &t in tokens {
             self.prefill_batch(&[t], &[slot], kv);
@@ -410,8 +439,8 @@ impl Engine {
             let mut k = h.matmul(&layer.wk);
             let v = h.matmul(&layer.wv);
             for i in 0..bsz {
-                self.rope_row(q.row_mut(i), positions[i]);
-                self.rope_row(k.row_mut(i), positions[i]);
+                self.rope.apply_row(q.row_mut(i), positions[i]);
+                self.rope.apply_row(k.row_mut(i), positions[i]);
                 kv.write(slots[i], l, positions[i], k.row(i), v.row(i));
             }
             let mut y = Matrix::zeros(bsz, d);
@@ -435,44 +464,15 @@ impl Engine {
     }
 
     /// Whole-sequence re-encode: logits for every position of `tokens`
-    /// (shape `(T, vocab)`), causal mask, no cache. The baseline the KV path
-    /// is verified against; also the re-encode decoder for benchmarks.
+    /// (shape `(T, vocab)`), causal mask, no KV cache. This IS the training
+    /// forward — one shared implementation in `train::decoder` — so the
+    /// KV-vs-full equivalence tests below also pin serving against
+    /// training. The call builds (and drops) the training activation cache;
+    /// that overhead is deliberate — this is the correctness baseline, the
+    /// serving hot path is [`Engine::step_batch`], and a second cacheless
+    /// forward would reintroduce exactly the drift this refactor removed.
     pub fn forward_full(&self, tokens: &[i32]) -> Matrix {
-        let c = &self.model.cfg;
-        let t_len = tokens.len();
-        assert!(t_len >= 1 && t_len <= c.max_seq, "sequence length {t_len} out of range");
-        let d = c.d_model;
-
-        let mut x = Matrix::zeros(t_len, d);
-        for (i, &t) in tokens.iter().enumerate() {
-            let t = (t.max(0) as usize) % c.vocab;
-            x.row_mut(i).copy_from_slice(self.model.embed.row(t));
-        }
-
-        for layer in &self.model.layers {
-            let h = rmsnorm(&x, &layer.ln1);
-            let mut q = h.matmul(&layer.wq);
-            let mut k = h.matmul(&layer.wk);
-            let v = h.matmul(&layer.wv);
-            for i in 0..t_len {
-                self.rope_row(q.row_mut(i), i);
-                self.rope_row(k.row_mut(i), i);
-            }
-            let mut y = Matrix::zeros(t_len, d);
-            for i in 0..t_len {
-                // causal: position i attends to 0..=i — the same contiguous
-                // row layout the KV path reads, so the arithmetic matches
-                // bit-for-bit.
-                let n_ctx = i + 1;
-                attend_row(q.row(i), &k.data[..n_ctx * d], &v.data[..n_ctx * d], n_ctx, c.n_heads, d, y.row_mut(i));
-            }
-            add_into(&mut x, &y.matmul(&layer.wo));
-            let m = self.mlp(layer, &x);
-            add_into(&mut x, &m);
-        }
-
-        let xf = rmsnorm(&x, &self.model.ln_f);
-        xf.matmul_t(&self.model.embed)
+        decoder_fwd(&self.model, &self.rope, tokens, 1, tokens.len()).0
     }
 
     /// Greedy decode via full re-encode — the `generate.rs`-style baseline.
@@ -525,24 +525,6 @@ impl Engine {
 
     // -- internals ---------------------------------------------------------
 
-    /// Rotate the (head-major) Q/K row in place with the tables at `pos`.
-    fn rope_row(&self, row: &mut [f32], pos: usize) {
-        let c = &self.model.cfg;
-        let hd = c.head_dim();
-        let half = hd / 2;
-        let cos = self.cos.row(pos);
-        let sin = self.sin.row(pos);
-        for h in 0..c.n_heads {
-            let base = h * hd;
-            for j in 0..half {
-                let a = row[base + j];
-                let b = row[base + half + j];
-                row[base + j] = a * cos[j] - b * sin[j];
-                row[base + half + j] = a * sin[j] + b * cos[j];
-            }
-        }
-    }
-
     /// SwiGLU through the spectral triples: silu(x·gate) ⊙ (x·up) → down.
     fn mlp(&self, layer: &LayerWeights, x: &Matrix) -> Matrix {
         let h = rmsnorm(x, &layer.ln2);
@@ -552,69 +534,6 @@ impl Engine {
             *gi = silu(*gi) * ui;
         }
         layer.down.forward(&g).0
-    }
-}
-
-/// Causal softmax attention for one query row over `n_ctx` cached K/V rows
-/// (contiguous `[pos][d_model]` layout), writing the concatenated head
-/// outputs into `out` (d_model).
-fn attend_row(
-    qrow: &[f32],
-    krows: &[f32],
-    vrows: &[f32],
-    n_ctx: usize,
-    n_heads: usize,
-    d_model: usize,
-    out: &mut [f32],
-) {
-    let hd = d_model / n_heads;
-    let scale = 1.0 / (hd as f32).sqrt();
-    let mut scores = vec![0.0f32; n_ctx];
-    for h in 0..n_heads {
-        let hb = h * hd;
-        let qh = &qrow[hb..hb + hd];
-        let mut mx = f32::NEG_INFINITY;
-        for (t, sc) in scores.iter_mut().enumerate() {
-            *sc = dot(qh, &krows[t * d_model + hb..t * d_model + hb + hd]) * scale;
-            mx = mx.max(*sc);
-        }
-        let mut denom = 0.0f32;
-        for sc in scores.iter_mut() {
-            *sc = (*sc - mx).exp();
-            denom += *sc;
-        }
-        let inv = 1.0 / denom;
-        let oh = &mut out[hb..hb + hd];
-        for (t, &w) in scores.iter().enumerate() {
-            axpy(w * inv, &vrows[t * d_model + hb..t * d_model + hb + hd], oh);
-        }
-    }
-}
-
-/// Row-wise RMSNorm with gain, into a fresh matrix.
-fn rmsnorm(x: &Matrix, gain: &[f32]) -> Matrix {
-    debug_assert_eq!(x.cols, gain.len());
-    let mut out = Matrix::zeros(x.rows, x.cols);
-    for r in 0..x.rows {
-        let row = x.row(r);
-        let ms = row.iter().map(|v| v * v).sum::<f32>() / row.len() as f32;
-        let inv = 1.0 / (ms + RMS_EPS).sqrt();
-        for (o, (&v, &g)) in out.row_mut(r).iter_mut().zip(row.iter().zip(gain)) {
-            *o = v * inv * g;
-        }
-    }
-    out
-}
-
-#[inline]
-fn silu(x: f32) -> f32 {
-    x / (1.0 + (-x).exp())
-}
-
-fn add_into(x: &mut Matrix, delta: &Matrix) {
-    debug_assert_eq!((x.rows, x.cols), (delta.rows, delta.cols));
-    for (a, &b) in x.data.iter_mut().zip(&delta.data) {
-        *a += b;
     }
 }
 
@@ -631,6 +550,7 @@ mod tests {
             d_ffn: 48,
             rank: 4,
             max_seq: 32,
+            tied: true,
         };
         Engine::new(SpectralModel::init(cfg, seed))
     }
@@ -663,6 +583,41 @@ mod tests {
             }
             assert!(max_diff < 1e-4, "position {i}: max logit diff {max_diff}");
         }
+    }
+
+    #[test]
+    fn untied_head_decodes_and_roundtrips() {
+        let cfg = EngineConfig {
+            vocab: 40,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            d_ffn: 48,
+            rank: 4,
+            max_seq: 32,
+            tied: false,
+        };
+        let e = Engine::new(SpectralModel::init(cfg, 5));
+        assert!(e.model.head.is_some());
+        let opts = SampleOpts { temperature: 0.0, top_k: 0, seed: 0 };
+        let prompt = [2i32, 7, 11];
+        // KV and re-encode agree with an untied head too
+        let baseline = e.generate_reencode(&prompt, 8, &opts);
+        let mut kv = e.new_kv(1);
+        let slot = kv.alloc().unwrap();
+        assert_eq!(baseline, e.generate_kv(&prompt, 8, &opts, &mut kv, slot));
+        // and the head survives a checkpoint roundtrip
+        let dir = std::env::temp_dir().join(format!("sct_untied_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("untied.sct");
+        e.model.save(&path).unwrap();
+        let restored = SpectralModel::load(&path).unwrap();
+        assert!(!restored.cfg.tied && restored.head.is_some());
+        assert_eq!(
+            baseline,
+            Engine::new(restored).generate_reencode(&prompt, 8, &opts)
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

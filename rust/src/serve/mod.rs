@@ -13,10 +13,15 @@
 //! any machine the crate builds on.
 //!
 //! Pieces:
-//! * [`engine`] — the factored decoder forward (RMSNorm, RoPE attention,
-//!   spectral SwiGLU), incremental + full-re-encode paths, cross-sequence
-//!   batched prefill, model checkpointing, and the sampler shared with
-//!   `coordinator::generate`.
+//! * [`engine`] — the factored decoder: incremental KV path + the
+//!   full-re-encode baseline, cross-sequence batched prefill, model
+//!   checkpointing, and the sampler shared with `coordinator::generate`.
+//!   The decoder math itself (RMSNorm, RoPE attention, spectral SwiGLU)
+//!   lives in the **shared decoder blocks** of [`crate::train::blocks`],
+//!   and `Engine::forward_full` *is* the training forward
+//!   (`crate::train::decoder::decoder_fwd`) — one implementation, so the
+//!   serving and training paths cannot drift and the KV-equivalence tests
+//!   transitively pin training numerics.
 //! * [`kv`] — fixed-capacity KV cache arena with slot reuse; no allocation
 //!   on the decode path.
 //! * [`batcher`] — continuous batching: bounded admission queue
@@ -24,11 +29,22 @@
 //!   admission, **chunked prefill** (a long prompt is absorbed
 //!   `prefill_chunk` tokens per step, interleaved with decode steps, so it
 //!   cannot stall active sequences), one batched decode step per token
-//!   across all active sequences, per-token streaming channels, eviction of
-//!   finished or cancelled ones.
+//!   across all active sequences, per-token streaming channels, EOS /
+//!   stop-sequence termination (matched stops are trimmed; possible stop
+//!   prefixes are held back from streams until decided), eviction of
+//!   finished, stopped or cancelled sequences with a [`FinishReason`].
 //! * [`server`] — `std::net` HTTP front-end (`POST /v1/generate`,
 //!   `GET /healthz`, `GET /v1/stats`) using `util::json`, with HTTP/1.1
 //!   keep-alive, a connection read deadline, and SSE streaming.
+//!
+//! # Checkpoints
+//!
+//! [`SpectralModel`] saves/loads the `.sct` container in the
+//! `params/layers/...` layout shared with the native trainer (the full
+//! contract is documented in [`crate::train`]): a checkpoint written by
+//! `sct train --backend native` — or mid-run by its checkpoint manager —
+//! loads directly via `SpectralModel::load` / `sct serve --ckpt`, closing
+//! the train → checkpoint → serve loop.
 //!
 //! # Streaming wire format (SSE)
 //!
@@ -43,8 +59,8 @@
 //! data: {"token": 105, "index": 1, "text": "i"}
 //!
 //! data: {"done": true, "completion": "hi", "prompt_tokens": 8,
-//!        "queue_ms": 0.1, "ttft_ms": 1.9, "decode_ms": 14.2,
-//!        "tok_per_s": 140.8}
+//!        "finish_reason": "length", "queue_ms": 0.1, "ttft_ms": 1.9,
+//!        "decode_ms": 14.2, "tok_per_s": 140.8}
 //! ```
 //!
 //! The final frame carries `"done": true` plus the same usage stats a
@@ -54,6 +70,14 @@
 //! tests); per-frame `text` is a lossy single-token decode, the final
 //! `completion` is the authoritative text. Without `"stream": true` the
 //! response is a single JSON document with the same usage fields.
+//!
+//! Requests may carry `"stop": [...]` — strings (tokenized stop sequences)
+//! or integer token ids (EOS). A match ends generation, the matched tokens
+//! are trimmed and never emitted as `data:` frames (tokens that could still
+//! begin a match are held back until decided), and `finish_reason` is
+//! `"stop"` instead of `"length"`. At most 8 stop sequences are honored per
+//! request ([`batcher::MAX_STOP_SEQUENCES`]; extras are ignored), and an
+//! out-of-vocab token id can never match, so it is dropped.
 //!
 //! # Streaming/serving config keys
 //!
@@ -76,7 +100,7 @@ pub mod engine;
 pub mod kv;
 pub mod server;
 
-pub use batcher::{BatchConfig, Batcher, Completion, Request, StreamEvent};
+pub use batcher::{BatchConfig, Batcher, Completion, FinishReason, Request, StreamEvent};
 pub use engine::{sample_logits, Engine, EngineConfig, SampleOpts, SpectralModel};
 pub use kv::KvCache;
 pub use server::{

@@ -13,12 +13,17 @@
 //!
 //! Routes:
 //! * `POST /v1/generate` — body `{"prompt": "...", "tokens": N,
-//!   "temperature": T, "top_k": K, "seed": S, "stream": false}` (all but
-//!   `prompt` optional; `prompt_ids` may replace `prompt`). Without
-//!   `stream`, responds with one JSON document: the completion text, token
-//!   ids, and queue/TTFT/decode latency. With `"stream": true`, responds
-//!   with Server-Sent Events over chunked transfer encoding — see
-//!   [`crate::serve`] module docs for the exact wire format.
+//!   "temperature": T, "top_k": K, "seed": S, "stop": [...],
+//!   "stream": false}` (all but `prompt` optional; `prompt_ids` may replace
+//!   `prompt`). `stop` entries are strings (tokenized stop sequences) or
+//!   raw token ids (EOS); generation ends when the output ends with any of
+//!   them, the match is trimmed, and `finish_reason` reports `"stop"` vs
+//!   `"length"`. At most 8 stop sequences are honored (extras ignored);
+//!   out-of-vocab ids can never match and are dropped. Without `stream`, responds with one JSON document: the
+//!   completion text, token ids, finish reason, and queue/TTFT/decode
+//!   latency. With `"stream": true`, responds with Server-Sent Events over
+//!   chunked transfer encoding — see [`crate::serve`] module docs for the
+//!   exact wire format.
 //! * `GET /healthz` — liveness + uptime + scheduler sizing.
 //! * `GET /v1/stats` — scheduler counters (admitted/completed/tokens/peak/
 //!   prefill/cancelled).
@@ -535,6 +540,7 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState) -> Result<()> {
                     ("peak_active", peak_active as i64),
                     ("prefill_tokens", state.batcher.stats().prefill_tokens() as i64),
                     ("cancelled", state.batcher.stats().cancelled() as i64),
+                    ("stopped", state.batcher.stats().stopped() as i64),
                 ];
                 write_response(&mut stream, 200, "OK", &body, keep)?;
             }
@@ -596,8 +602,33 @@ fn parse_generate(body: &[u8], state: &ServerState) -> Result<GenRequest> {
         top_k: j.get("top_k").map(|v| v.as_usize()).transpose()?.unwrap_or(40),
         seed: j.get("seed").map(|v| v.as_i64()).transpose()?.unwrap_or(0) as u64,
     };
+    // "stop": [...] — each entry is either a string (tokenized here, the
+    // OpenAI-style stop sequence) or an integer token id (raw EOS id). An
+    // out-of-vocab id can never be sampled, so it is dropped (never-match)
+    // rather than wrapped into the vocab — wrapping would silently turn a
+    // foreign tokenizer's EOS into a real, spuriously-matching token.
+    let mut stop: Vec<Vec<i32>> = Vec::new();
+    if let Some(list) = j.get("stop") {
+        for entry in list.as_arr().context("\"stop\" must be an array")? {
+            let ids: Vec<i32> = match entry.as_str() {
+                Ok(text) => state.tokenizer.encode(text),
+                Err(_) => {
+                    let id =
+                        entry.as_i64().context("stop entries are strings or token ids")? as i32;
+                    if (0..cap).contains(&id) {
+                        vec![id]
+                    } else {
+                        vec![]
+                    }
+                }
+            };
+            if !ids.is_empty() {
+                stop.push(ids);
+            }
+        }
+    }
     let stream = j.get("stream").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
-    Ok(GenRequest { req: Request { prompt: prompt_ids, max_new, opts }, stream })
+    Ok(GenRequest { req: Request { prompt: prompt_ids, max_new, opts, stop }, stream })
 }
 
 fn completion_json(c: &Completion, state: &ServerState) -> Json {
@@ -608,6 +639,7 @@ fn completion_json(c: &Completion, state: &ServerState) -> Json {
         ("completion", text),
         ("tokens", c.tokens.iter().map(|&t| Json::from(t as i64)).collect::<Vec<_>>()),
         ("prompt_tokens", c.prompt_len),
+        ("finish_reason", c.finish_reason.as_str()),
         ("queue_ms", c.queue_ms),
         ("ttft_ms", c.ttft_ms),
         ("decode_ms", c.decode_ms),
@@ -697,6 +729,7 @@ fn stream_sse(
                     ("done", true),
                     ("completion", state.tokenizer.decode(&c.tokens)),
                     ("prompt_tokens", c.prompt_len),
+                    ("finish_reason", c.finish_reason.as_str()),
                     ("queue_ms", c.queue_ms),
                     ("ttft_ms", c.ttft_ms),
                     ("decode_ms", c.decode_ms),
@@ -771,6 +804,40 @@ mod tests {
             b.get("tokens").unwrap(),
             "greedy decode must be reproducible across requests"
         );
+        srv.stop();
+    }
+
+    #[test]
+    fn stop_sequence_ends_generation_early() {
+        let srv = test_server(2, 4);
+        let base = r#"{"prompt": "spectral", "tokens": 10, "temperature": 0}"#;
+        let (code, full) = http_post_json(srv.addr, "/v1/generate", base).unwrap();
+        assert_eq!(code, 200, "body: {full:?}");
+        assert_eq!(full.get("finish_reason").unwrap().as_str().unwrap(), "length");
+        let toks = full.get("tokens").unwrap().as_arr().unwrap();
+        let eos = toks[3].as_i64().unwrap();
+        let first = toks.iter().position(|t| t.as_i64().unwrap() == eos).unwrap();
+
+        // raw token-id stop (EOS semantics)
+        let req = format!(
+            r#"{{"prompt": "spectral", "tokens": 10, "temperature": 0, "stop": [{eos}]}}"#
+        );
+        let (code, body) = http_post_json(srv.addr, "/v1/generate", &req).unwrap();
+        assert_eq!(code, 200, "body: {body:?}");
+        assert_eq!(body.get("finish_reason").unwrap().as_str().unwrap(), "stop");
+        assert_eq!(body.get("tokens").unwrap().as_arr().unwrap().len(), first);
+
+        // string stop: the byte-level decode of that token must cut the same
+        let text = String::from_utf8_lossy(&[eos as u8]).to_string();
+        if !text.contains('"') && !text.contains('\\') && eos >= 0x20 && eos < 0x7f {
+            let req = format!(
+                r#"{{"prompt": "spectral", "tokens": 10, "temperature": 0, "stop": ["{text}"]}}"#
+            );
+            let (code, body) = http_post_json(srv.addr, "/v1/generate", &req).unwrap();
+            assert_eq!(code, 200);
+            assert_eq!(body.get("finish_reason").unwrap().as_str().unwrap(), "stop");
+            assert_eq!(body.get("tokens").unwrap().as_arr().unwrap().len(), first);
+        }
         srv.stop();
     }
 

@@ -56,6 +56,21 @@ impl AdamW {
     pub fn state_bytes(&self) -> usize {
         (self.m.len() + self.v.len()) * std::mem::size_of::<f32>()
     }
+
+    /// The first/second moments — checkpoint serialization.
+    pub fn moments(&self) -> (&[f32], &[f32]) {
+        (&self.m, &self.v)
+    }
+
+    /// Restore serialized state (checkpoint resume). Lengths must match the
+    /// optimizer's tensor.
+    pub fn restore(&mut self, m: Vec<f32>, v: Vec<f32>, t: u64) {
+        assert_eq!(m.len(), self.m.len(), "moment length mismatch");
+        assert_eq!(v.len(), self.v.len(), "moment length mismatch");
+        self.m = m;
+        self.v = v;
+        self.t = t;
+    }
 }
 
 #[cfg(test)]
@@ -93,6 +108,24 @@ mod tests {
         opt.step(&mut p, &[0.0]);
         // zero grad: only decay acts -> p -= lr*wd*p
         assert!((p[0] - (2.0 - 0.01 * 0.5 * 2.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn restore_resumes_identically() {
+        let mut a = AdamW::new(3, 0.05);
+        let mut pa = vec![1.0f32, -1.0, 0.5];
+        for i in 0..7 {
+            let g: Vec<f32> = (0..3).map(|j| ((i * 3 + j) as f32).cos()).collect();
+            a.step(&mut pa, &g);
+        }
+        let (m, v) = a.moments();
+        let mut b = AdamW::new(3, 0.05);
+        b.restore(m.to_vec(), v.to_vec(), a.t);
+        let mut pb = pa.clone();
+        let g = [0.3f32, -0.2, 0.9];
+        a.step(&mut pa, &g);
+        b.step(&mut pb, &g);
+        assert_eq!(pa, pb, "restored optimizer must continue bit-for-bit");
     }
 
     #[test]

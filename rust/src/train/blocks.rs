@@ -1,0 +1,522 @@
+//! Shared decoder blocks: the forward primitives the serving engine and the
+//! native trainer both execute, plus their reverse-mode adjoints.
+//!
+//! Every op the decoder is made of lives here exactly once — RMSNorm, the
+//! RoPE rotation tables, SiLU, causal softmax attention, cross-entropy —
+//! so the training forward and the serving forward cannot drift: `serve`
+//! calls the forward halves on its KV-cached hot path, `train::decoder`
+//! calls the same functions plus the `*_bwd` adjoints defined next to them.
+//! Each adjoint is finite-difference checked in the tests below.
+//!
+//! Numerics note: [`causal_attention_fwd`] mirrors [`attend_row`]'s exact
+//! arithmetic (same `dot`, same running max, same `w * inv` weights, same
+//! accumulation order), so a full-sequence training forward is bit-identical
+//! to the incremental KV decode the serve tests pin against it.
+
+use crate::spectral::matrix::{axpy, dot, Matrix};
+
+pub const RMS_EPS: f32 = 1e-6;
+
+// ---------------------------------------------------------------------------
+// RMSNorm
+// ---------------------------------------------------------------------------
+
+/// Per-row `1/sqrt(mean(x^2) + eps)` factors cached by [`rmsnorm_fwd`] for
+/// the backward pass.
+pub struct RmsCache {
+    pub inv: Vec<f32>,
+}
+
+/// Row-wise RMSNorm with gain: `y = x * inv_rms(x) * gain`, plus the cache
+/// the adjoint needs.
+pub fn rmsnorm_fwd(x: &Matrix, gain: &[f32]) -> (Matrix, RmsCache) {
+    debug_assert_eq!(x.cols, gain.len());
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    let mut invs = Vec::with_capacity(x.rows);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / row.len() as f32;
+        let inv = 1.0 / (ms + RMS_EPS).sqrt();
+        invs.push(inv);
+        for (o, (&v, &g)) in out.row_mut(r).iter_mut().zip(row.iter().zip(gain)) {
+            *o = v * inv * g;
+        }
+    }
+    (out, RmsCache { inv: invs })
+}
+
+/// Forward-only RMSNorm — the serving path (cache discarded).
+pub fn rmsnorm(x: &Matrix, gain: &[f32]) -> Matrix {
+    rmsnorm_fwd(x, gain).0
+}
+
+/// Adjoint of [`rmsnorm_fwd`]: given dL/dy, produce (dL/dx, dL/dgain).
+///
+/// With `inv = (mean(x^2) + eps)^(-1/2)`:
+/// `dx_j = dy_j g_j inv - x_j inv^3 / d * sum_i(dy_i g_i x_i)`,
+/// `dg_i = sum_rows dy_i x_i inv`.
+pub fn rmsnorm_bwd(x: &Matrix, gain: &[f32], cache: &RmsCache, dy: &Matrix) -> (Matrix, Vec<f32>) {
+    debug_assert_eq!((x.rows, x.cols), (dy.rows, dy.cols));
+    let d = x.cols as f32;
+    let mut dx = Matrix::zeros(x.rows, x.cols);
+    let mut dgain = vec![0.0f32; gain.len()];
+    for r in 0..x.rows {
+        let inv = cache.inv[r];
+        let xr = x.row(r);
+        let dyr = dy.row(r);
+        let mut s = 0.0f32;
+        for ((&dyi, &gi), &xi) in dyr.iter().zip(gain).zip(xr) {
+            s += dyi * gi * xi;
+        }
+        let coef = inv * inv * inv * s / d;
+        for (j, dxj) in dx.row_mut(r).iter_mut().enumerate() {
+            *dxj = dyr[j] * gain[j] * inv - xr[j] * coef;
+            dgain[j] += dyr[j] * xr[j] * inv;
+        }
+    }
+    (dx, dgain)
+}
+
+// ---------------------------------------------------------------------------
+// SiLU
+// ---------------------------------------------------------------------------
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// d silu / dx = sigma(x) * (1 + x * (1 - sigma(x))).
+#[inline]
+pub fn dsilu(x: f32) -> f32 {
+    let sig = 1.0 / (1.0 + (-x).exp());
+    sig * (1.0 + x * (1.0 - sig))
+}
+
+// ---------------------------------------------------------------------------
+// RoPE
+// ---------------------------------------------------------------------------
+
+/// Precomputed rotary-position tables, applied head-major: within each head
+/// the pair `(row[j], row[j + head_dim/2])` rotates by the position's angle.
+pub struct Rope {
+    cos: Matrix,
+    sin: Matrix,
+    head_dim: usize,
+}
+
+impl Rope {
+    pub fn new(max_seq: usize, head_dim: usize) -> Rope {
+        assert!(head_dim % 2 == 0, "RoPE needs an even head_dim");
+        let half = head_dim / 2;
+        let mut cos = Matrix::zeros(max_seq, half);
+        let mut sin = Matrix::zeros(max_seq, half);
+        for pos in 0..max_seq {
+            for j in 0..half {
+                let inv = 1.0f64 / 10000f64.powf(j as f64 / half as f64);
+                let ang = pos as f64 * inv;
+                cos[(pos, j)] = ang.cos() as f32;
+                sin[(pos, j)] = ang.sin() as f32;
+            }
+        }
+        Rope { cos, sin, head_dim }
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.cos.rows
+    }
+
+    /// Rotate a (head-major) Q/K row in place with the tables at `pos`.
+    pub fn apply_row(&self, row: &mut [f32], pos: usize) {
+        let hd = self.head_dim;
+        let half = hd / 2;
+        debug_assert_eq!(row.len() % hd, 0);
+        let cos = self.cos.row(pos);
+        let sin = self.sin.row(pos);
+        for h in 0..row.len() / hd {
+            let base = h * hd;
+            for j in 0..half {
+                let a = row[base + j];
+                let b = row[base + half + j];
+                row[base + j] = a * cos[j] - b * sin[j];
+                row[base + half + j] = a * sin[j] + b * cos[j];
+            }
+        }
+    }
+
+    /// Inverse rotation (angle negated). The rotation is orthogonal, so this
+    /// is also its transpose — i.e. the adjoint the backward pass applies to
+    /// gradients flowing through [`Rope::apply_row`].
+    pub fn apply_row_inv(&self, row: &mut [f32], pos: usize) {
+        let hd = self.head_dim;
+        let half = hd / 2;
+        debug_assert_eq!(row.len() % hd, 0);
+        let cos = self.cos.row(pos);
+        let sin = self.sin.row(pos);
+        for h in 0..row.len() / hd {
+            let base = h * hd;
+            for j in 0..half {
+                let a = row[base + j];
+                let b = row[base + half + j];
+                row[base + j] = a * cos[j] + b * sin[j];
+                row[base + half + j] = b * cos[j] - a * sin[j];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// causal softmax attention
+// ---------------------------------------------------------------------------
+
+/// Causal softmax attention for one query row over `n_ctx` cached K/V rows
+/// (contiguous `[pos][d_model]` layout), writing the concatenated head
+/// outputs into `out` (d_model). The serving engine's incremental decode
+/// step — one query against the KV cache.
+pub fn attend_row(
+    qrow: &[f32],
+    krows: &[f32],
+    vrows: &[f32],
+    n_ctx: usize,
+    n_heads: usize,
+    d_model: usize,
+    out: &mut [f32],
+) {
+    let hd = d_model / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut scores = vec![0.0f32; n_ctx];
+    for h in 0..n_heads {
+        let hb = h * hd;
+        let qh = &qrow[hb..hb + hd];
+        let mut mx = f32::NEG_INFINITY;
+        for (t, sc) in scores.iter_mut().enumerate() {
+            *sc = dot(qh, &krows[t * d_model + hb..t * d_model + hb + hd]) * scale;
+            mx = mx.max(*sc);
+        }
+        let mut denom = 0.0f32;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - mx).exp();
+            denom += *sc;
+        }
+        let inv = 1.0 / denom;
+        let oh = &mut out[hb..hb + hd];
+        for (t, &w) in scores.iter().enumerate() {
+            axpy(w * inv, &vrows[t * d_model + hb..t * d_model + hb + hd], oh);
+        }
+    }
+}
+
+/// Full-sequence causal attention for one sequence: `q`, `k`, `v` are
+/// `t_len * d_model` slices of post-RoPE projections; row `i` attends over
+/// rows `0..=i`. `out` (same size, zero-initialized) receives the head
+/// outputs; `probs` (`n_heads * t_len * t_len`, `[h][i][j]`) caches the
+/// softmax weights for [`causal_attention_bwd`].
+///
+/// The per-row arithmetic is exactly [`attend_row`]'s (scores via the same
+/// `dot`, running max, `exp`, `w * (1/denom)` accumulation in the same
+/// order), so the training forward matches the KV decode bit-for-bit.
+pub fn causal_attention_fwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    t_len: usize,
+    n_heads: usize,
+    d_model: usize,
+    out: &mut [f32],
+    probs: &mut [f32],
+) {
+    debug_assert_eq!(probs.len(), n_heads * t_len * t_len);
+    let hd = d_model / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    for h in 0..n_heads {
+        let hb = h * hd;
+        for i in 0..t_len {
+            let n_ctx = i + 1;
+            let qh = &q[i * d_model + hb..i * d_model + hb + hd];
+            let prow = &mut probs[h * t_len * t_len + i * t_len..][..n_ctx];
+            let mut mx = f32::NEG_INFINITY;
+            for (t, sc) in prow.iter_mut().enumerate() {
+                *sc = dot(qh, &k[t * d_model + hb..t * d_model + hb + hd]) * scale;
+                mx = mx.max(*sc);
+            }
+            let mut denom = 0.0f32;
+            for sc in prow.iter_mut() {
+                *sc = (*sc - mx).exp();
+                denom += *sc;
+            }
+            let inv = 1.0 / denom;
+            let oh = &mut out[i * d_model + hb..i * d_model + hb + hd];
+            for (t, sc) in prow.iter_mut().enumerate() {
+                *sc *= inv;
+                axpy(*sc, &v[t * d_model + hb..t * d_model + hb + hd], oh);
+            }
+        }
+    }
+}
+
+/// Adjoint of [`causal_attention_fwd`]: accumulates into `dq`, `dk`, `dv`
+/// (each `t_len * d_model`, zero-initialized by the caller) from the cached
+/// softmax `probs` and the output gradient `dout`.
+#[allow(clippy::too_many_arguments)]
+pub fn causal_attention_bwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &[f32],
+    dout: &[f32],
+    t_len: usize,
+    n_heads: usize,
+    d_model: usize,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    let hd = d_model / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut dp = vec![0.0f32; t_len];
+    for h in 0..n_heads {
+        let hb = h * hd;
+        for i in 0..t_len {
+            let n_ctx = i + 1;
+            let prow = &probs[h * t_len * t_len + i * t_len..][..n_ctx];
+            let doh = &dout[i * d_model + hb..i * d_model + hb + hd];
+            // dp_j = dout_i . v_j ; softmax adjoint needs sum_j p_j dp_j.
+            let mut pdp = 0.0f32;
+            for (j, dpj) in dp[..n_ctx].iter_mut().enumerate() {
+                *dpj = dot(doh, &v[j * d_model + hb..j * d_model + hb + hd]);
+                pdp += *dpj * prow[j];
+            }
+            for (j, &pj) in prow.iter().enumerate() {
+                let ds = pj * (dp[j] - pdp) * scale;
+                axpy(ds, &k[j * d_model + hb..j * d_model + hb + hd], &mut dq[i * d_model + hb..i * d_model + hb + hd]);
+                axpy(ds, &q[i * d_model + hb..i * d_model + hb + hd], &mut dk[j * d_model + hb..j * d_model + hb + hd]);
+                axpy(pj, doh, &mut dv[j * d_model + hb..j * d_model + hb + hd]);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// cross-entropy
+// ---------------------------------------------------------------------------
+
+/// Mean token-level cross-entropy over a `(N, vocab)` logits matrix, plus
+/// its gradient `dlogits = (softmax - onehot) / N`. Target ids are clamped
+/// into the vocab the same way the embedding lookup clamps them.
+pub fn cross_entropy(logits: &Matrix, targets: &[i32]) -> (f32, Matrix) {
+    assert_eq!(logits.rows, targets.len(), "one target per logits row");
+    let n = logits.rows;
+    let vocab = logits.cols;
+    let mut dlogits = Matrix::zeros(n, vocab);
+    let mut loss = 0.0f64;
+    let inv_n = 1.0 / n as f32;
+    for r in 0..n {
+        let row = logits.row(r);
+        let t = (targets[r].max(0) as usize) % vocab;
+        let mut mx = f32::NEG_INFINITY;
+        for &l in row {
+            mx = mx.max(l);
+        }
+        let mut z = 0.0f64;
+        for &l in row {
+            z += ((l - mx) as f64).exp();
+        }
+        loss -= (row[t] - mx) as f64 - z.ln();
+        let drow = dlogits.row_mut(r);
+        for (j, (&l, dj)) in row.iter().zip(drow.iter_mut()).enumerate() {
+            let p = (((l - mx) as f64).exp() / z) as f32;
+            *dj = (p - if j == t { 1.0 } else { 0.0 }) * inv_n;
+        }
+    }
+    ((loss / n as f64) as f32, dlogits)
+}
+
+// ---------------------------------------------------------------------------
+// small helpers
+// ---------------------------------------------------------------------------
+
+/// `x += delta`, elementwise (the residual-stream add).
+pub fn add_into(x: &mut Matrix, delta: &Matrix) {
+    debug_assert_eq!((x.rows, x.cols), (delta.rows, delta.cols));
+    for (a, &b) in x.data.iter_mut().zip(&delta.data) {
+        *a += b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rmsnorm_bwd_matches_finite_differences() {
+        let mut rng = Rng::new(0);
+        let x = Matrix::randn(&mut rng, 3, 8, 1.0);
+        let gain: Vec<f32> = (0..8).map(|i| 1.0 + 0.1 * i as f32).collect();
+        let r = Matrix::randn(&mut rng, 3, 8, 1.0); // linear functional weights
+        // f64 accumulation + a fat eps keep the FD quotient well above f32
+        // rounding noise.
+        let eval = |x: &Matrix, gain: &[f32]| -> f32 {
+            let (y, _) = rmsnorm_fwd(x, gain);
+            y.data.iter().zip(&r.data).map(|(a, b)| (a * b) as f64).sum::<f64>() as f32
+        };
+        let (_, cache) = rmsnorm_fwd(&x, &gain);
+        let (dx, dgain) = rmsnorm_bwd(&x, &gain, &cache, &r);
+        let eps = 1e-2f32;
+        for &(rr, cc) in &[(0usize, 0usize), (1, 3), (2, 7)] {
+            let mut xp = x.clone();
+            xp[(rr, cc)] += eps;
+            let mut xm = x.clone();
+            xm[(rr, cc)] -= eps;
+            let fd = (eval(&xp, &gain) - eval(&xm, &gain)) / (2.0 * eps);
+            let an = dx[(rr, cc)];
+            assert!(
+                (fd - an).abs() / an.abs().max(1e-2) < 2e-2,
+                "dx[{rr},{cc}]: fd {fd} vs an {an}"
+            );
+        }
+        for &j in &[0usize, 4] {
+            let mut gp = gain.clone();
+            gp[j] += eps;
+            let mut gm = gain.clone();
+            gm[j] -= eps;
+            let fd = (eval(&x, &gp) - eval(&x, &gm)) / (2.0 * eps);
+            assert!(
+                (fd - dgain[j]).abs() / dgain[j].abs().max(1e-2) < 2e-2,
+                "dgain[{j}]: fd {fd} vs an {}",
+                dgain[j]
+            );
+        }
+    }
+
+    #[test]
+    fn rope_inverse_undoes_forward_and_is_the_transpose() {
+        let rope = Rope::new(16, 8);
+        let mut rng = Rng::new(1);
+        for pos in [0usize, 3, 15] {
+            let orig: Vec<f32> = (0..24).map(|_| rng.normal() as f32).collect();
+            let mut row = orig.clone();
+            rope.apply_row(&mut row, pos);
+            rope.apply_row_inv(&mut row, pos);
+            for (a, b) in row.iter().zip(&orig) {
+                assert!((a - b).abs() < 1e-5, "inverse must undo the rotation");
+            }
+            // <R x, y> == <x, R^T y>: the inverse is the adjoint.
+            let x: Vec<f32> = (0..24).map(|_| rng.normal() as f32).collect();
+            let y: Vec<f32> = (0..24).map(|_| rng.normal() as f32).collect();
+            let mut rx = x.clone();
+            rope.apply_row(&mut rx, pos);
+            let mut rty = y.clone();
+            rope.apply_row_inv(&mut rty, pos);
+            let lhs: f32 = rx.iter().zip(&y).map(|(a, b)| a * b).sum();
+            let rhs: f32 = x.iter().zip(&rty).map(|(a, b)| a * b).sum();
+            assert!((lhs - rhs).abs() < 1e-4, "pos {pos}: {lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn causal_attention_fwd_matches_attend_row() {
+        // The training forward and the serving decode step must agree
+        // bit-for-bit on the same context.
+        let (t_len, heads, d) = (6usize, 2usize, 8usize);
+        let mut rng = Rng::new(2);
+        let q: Vec<f32> = (0..t_len * d).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..t_len * d).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..t_len * d).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0.0f32; t_len * d];
+        let mut probs = vec![0.0f32; heads * t_len * t_len];
+        causal_attention_fwd(&q, &k, &v, t_len, heads, d, &mut out, &mut probs);
+        for i in 0..t_len {
+            let mut row = vec![0.0f32; d];
+            attend_row(&q[i * d..(i + 1) * d], &k[..(i + 1) * d], &v[..(i + 1) * d], i + 1, heads, d, &mut row);
+            for (a, b) in row.iter().zip(&out[i * d..(i + 1) * d]) {
+                assert_eq!(a, b, "row {i} must be bit-identical to attend_row");
+            }
+        }
+    }
+
+    #[test]
+    fn causal_attention_bwd_matches_finite_differences() {
+        let (t_len, heads, d) = (5usize, 2usize, 8usize);
+        let mut rng = Rng::new(3);
+        let q: Vec<f32> = (0..t_len * d).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..t_len * d).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..t_len * d).map(|_| rng.normal() as f32).collect();
+        let r: Vec<f32> = (0..t_len * d).map(|_| rng.normal() as f32).collect();
+        let eval = |q: &[f32], k: &[f32], v: &[f32]| -> f32 {
+            let mut out = vec![0.0f32; t_len * d];
+            let mut probs = vec![0.0f32; heads * t_len * t_len];
+            causal_attention_fwd(q, k, v, t_len, heads, d, &mut out, &mut probs);
+            out.iter().zip(&r).map(|(a, b)| (a * b) as f64).sum::<f64>() as f32
+        };
+        let mut out = vec![0.0f32; t_len * d];
+        let mut probs = vec![0.0f32; heads * t_len * t_len];
+        causal_attention_fwd(&q, &k, &v, t_len, heads, d, &mut out, &mut probs);
+        let (mut dq, mut dk, mut dv) = (vec![0.0f32; t_len * d], vec![0.0f32; t_len * d], vec![0.0f32; t_len * d]);
+        causal_attention_bwd(&q, &k, &v, &probs, &r, t_len, heads, d, &mut dq, &mut dk, &mut dv);
+        let eps = 1e-2f32;
+        let probes = [3usize, 11, 27, 38];
+        for &i in &probes {
+            for (xs, grads, name) in [(&q, &dq, "dq"), (&k, &dk, "dk"), (&v, &dv, "dv")] {
+                let mut p = xs.clone();
+                p[i] += eps;
+                let mut m = xs.clone();
+                m[i] -= eps;
+                let (fp, fm) = match name {
+                    "dq" => (eval(&p, &k, &v), eval(&m, &k, &v)),
+                    "dk" => (eval(&q, &p, &v), eval(&q, &m, &v)),
+                    _ => (eval(&q, &k, &p), eval(&q, &k, &m)),
+                };
+                let fd = (fp - fm) / (2.0 * eps);
+                let an = grads[i];
+                assert!(
+                    (fd - an).abs() / an.abs().max(1e-2) < 3e-2,
+                    "{name}[{i}]: fd {fd} vs an {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cross_entropy_grad_matches_finite_differences() {
+        let mut rng = Rng::new(4);
+        let logits = Matrix::randn(&mut rng, 4, 9, 1.5);
+        let targets = [2i32, 0, 8, 5];
+        let (loss, dlogits) = cross_entropy(&logits, &targets);
+        assert!(loss > 0.0);
+        let eps = 1e-2f32;
+        for &(r, c) in &[(0usize, 2usize), (0, 4), (2, 8), (3, 0)] {
+            let mut lp = logits.clone();
+            lp[(r, c)] += eps;
+            let mut lm = logits.clone();
+            lm[(r, c)] -= eps;
+            let fd = (cross_entropy(&lp, &targets).0 - cross_entropy(&lm, &targets).0) / (2.0 * eps);
+            let an = dlogits[(r, c)];
+            assert!(
+                (fd - an).abs() / an.abs().max(1e-2) < 2e-2,
+                "dlogits[{r},{c}]: fd {fd} vs an {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn cross_entropy_of_uniform_logits_is_log_vocab() {
+        let logits = Matrix::zeros(3, 32);
+        let (loss, d) = cross_entropy(&logits, &[0, 1, 2]);
+        assert!((loss - (32.0f32).ln()).abs() < 1e-5);
+        // gradient rows sum to zero (softmax minus onehot)
+        for r in 0..3 {
+            let s: f32 = d.row(r).iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn silu_derivative_matches_finite_differences() {
+        for &x in &[-3.0f32, -0.5, 0.0, 0.7, 4.0] {
+            let eps = 1e-3;
+            let fd = (silu(x + eps) - silu(x - eps)) / (2.0 * eps);
+            assert!((fd - dsilu(x)).abs() < 1e-3, "x={x}: fd {fd} vs {}", dsilu(x));
+        }
+    }
+}

@@ -1,0 +1,537 @@
+//! The shared full-sequence decoder: ONE implementation of the transformer
+//! forward (embedding → [RMSNorm → RoPE attention → spectral SwiGLU] × L →
+//! final norm → tied/untied LM head) used by BOTH `serve::Engine::forward_full`
+//! (the correctness baseline every KV-cache test pins against) and the
+//! native trainer — plus its full reverse-mode backward.
+//!
+//! Because serving and training literally execute this function, the two
+//! paths cannot drift: the serve tests that assert KV decode ≡ full forward
+//! transitively assert KV decode ≡ training forward.
+//!
+//! The backward produces [`ModelGrads`] — compact factor gradients
+//! `(m,k)/(k)/(n,k)` for every spectral triple (paper §3: no `(m, n)`
+//! gradient ever exists) and dense gradients for embeddings, attention and
+//! norms. Gradients are finite-difference checked in the tests below.
+
+use crate::serve::engine::SpectralModel;
+use crate::spectral::layer::SpectralCache;
+use crate::spectral::matrix::axpy;
+use crate::spectral::{Matrix, SpectralGrads};
+
+use super::blocks::{
+    add_into, causal_attention_bwd, causal_attention_fwd, dsilu, rmsnorm_bwd, rmsnorm_fwd, silu,
+    RmsCache, Rope,
+};
+
+// ---------------------------------------------------------------------------
+// caches
+// ---------------------------------------------------------------------------
+
+/// Per-layer activations the backward pass needs (all `(B*T, ·)` matrices;
+/// `probs` is `B * n_heads * T * T` softmax weights).
+pub struct LayerFwdCache {
+    x_in: Matrix,
+    h1: Matrix,
+    r1: RmsCache,
+    q: Matrix,
+    k: Matrix,
+    v: Matrix,
+    probs: Vec<f32>,
+    att: Matrix,
+    x_mid: Matrix,
+    h2: Matrix,
+    r2: RmsCache,
+    g: Matrix,
+    u: Matrix,
+    a: Matrix,
+    gate_c: SpectralCache,
+    up_c: SpectralCache,
+    down_c: SpectralCache,
+}
+
+/// Everything [`decoder_bwd`] needs from a [`decoder_fwd`] call.
+pub struct FwdCache {
+    layers: Vec<LayerFwdCache>,
+    x_f: Matrix,
+    hf: Matrix,
+    rf: RmsCache,
+}
+
+// ---------------------------------------------------------------------------
+// gradients
+// ---------------------------------------------------------------------------
+
+/// Gradients for one decoder block — dense attention matrices, norm gains,
+/// and the three compact spectral triples.
+pub struct LayerGrads {
+    pub wq: Matrix,
+    pub wk: Matrix,
+    pub wv: Matrix,
+    pub wo: Matrix,
+    pub ln1: Vec<f32>,
+    pub ln2: Vec<f32>,
+    pub gate: SpectralGrads,
+    pub up: SpectralGrads,
+    pub down: SpectralGrads,
+}
+
+/// Full-model gradients, shaped exactly like the parameters.
+pub struct ModelGrads {
+    pub embed: Matrix,
+    pub layers: Vec<LayerGrads>,
+    pub ln_f: Vec<f32>,
+    pub head: Option<Matrix>,
+}
+
+impl ModelGrads {
+    /// Flat gradient slices in the canonical parameter order (see
+    /// `train::trainer::param_kinds` — embed, then per layer
+    /// wq/wk/wv/wo/ln1/ln2/gate(u,s,v)/up(…)/down(…), then ln_f, then head).
+    pub fn slices(&self) -> Vec<&[f32]> {
+        let mut out: Vec<&[f32]> = vec![&self.embed.data];
+        for l in &self.layers {
+            out.push(&l.wq.data);
+            out.push(&l.wk.data);
+            out.push(&l.wv.data);
+            out.push(&l.wo.data);
+            out.push(&l.ln1);
+            out.push(&l.ln2);
+            for g in [&l.gate, &l.up, &l.down] {
+                out.push(&g.du.data);
+                out.push(&g.ds);
+                out.push(&g.dv.data);
+            }
+        }
+        out.push(&self.ln_f);
+        if let Some(h) = &self.head {
+            out.push(&h.data);
+        }
+        out
+    }
+
+    fn slices_mut(&mut self) -> Vec<&mut [f32]> {
+        let mut out: Vec<&mut [f32]> = vec![&mut self.embed.data];
+        for l in &mut self.layers {
+            out.push(&mut l.wq.data);
+            out.push(&mut l.wk.data);
+            out.push(&mut l.wv.data);
+            out.push(&mut l.wo.data);
+            out.push(&mut l.ln1);
+            out.push(&mut l.ln2);
+            for g in [&mut l.gate, &mut l.up, &mut l.down] {
+                out.push(&mut g.du.data);
+                out.push(&mut g.ds);
+                out.push(&mut g.dv.data);
+            }
+        }
+        out.push(&mut self.ln_f);
+        if let Some(h) = &mut self.head {
+            out.push(&mut h.data);
+        }
+        out
+    }
+
+    /// Global L2 norm over every gradient entry (f64 accumulation).
+    pub fn global_norm(&self) -> f32 {
+        let mut acc = 0.0f64;
+        for s in self.slices() {
+            for &v in s {
+                acc += v as f64 * v as f64;
+            }
+        }
+        acc.sqrt() as f32
+    }
+
+    /// Scale every gradient by `f` (gradient clipping).
+    pub fn scale(&mut self, f: f32) {
+        for s in self.slices_mut() {
+            for v in s.iter_mut() {
+                *v *= f;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// forward
+// ---------------------------------------------------------------------------
+
+/// Full-sequence forward over `bsz` packed sequences of `t_len` tokens
+/// (`tokens.len() == bsz * t_len`, row-major). Returns `(B*T, vocab)`
+/// logits (position `b*T + i` holds the next-token logits after token `i`
+/// of sequence `b`) and the activation cache for [`decoder_bwd`].
+///
+/// Rows of different sequences never attend to each other; within a
+/// sequence, position `i` attends causally over `0..=i`.
+pub fn decoder_fwd(
+    model: &SpectralModel,
+    rope: &Rope,
+    tokens: &[i32],
+    bsz: usize,
+    t_len: usize,
+) -> (Matrix, FwdCache) {
+    let c = &model.cfg;
+    assert_eq!(tokens.len(), bsz * t_len, "tokens must be bsz x t_len");
+    assert!(t_len >= 1 && t_len <= rope.max_seq(), "sequence length {t_len} out of range");
+    let d = c.d_model;
+    let n = bsz * t_len;
+
+    let mut x = Matrix::zeros(n, d);
+    for (i, &t) in tokens.iter().enumerate() {
+        let t = (t.max(0) as usize) % c.vocab;
+        x.row_mut(i).copy_from_slice(model.embed.row(t));
+    }
+
+    let mut layers = Vec::with_capacity(c.n_layers);
+    for layer in &model.layers {
+        let x_in = x.clone();
+        // attention
+        let (h1, r1) = rmsnorm_fwd(&x, &layer.ln1);
+        let mut q = h1.matmul(&layer.wq);
+        let mut k = h1.matmul(&layer.wk);
+        let v = h1.matmul(&layer.wv);
+        for i in 0..n {
+            let pos = i % t_len;
+            rope.apply_row(q.row_mut(i), pos);
+            rope.apply_row(k.row_mut(i), pos);
+        }
+        let mut att = Matrix::zeros(n, d);
+        let mut probs = vec![0.0f32; bsz * c.n_heads * t_len * t_len];
+        for b in 0..bsz {
+            let rows = b * t_len * d..(b + 1) * t_len * d;
+            causal_attention_fwd(
+                &q.data[rows.clone()],
+                &k.data[rows.clone()],
+                &v.data[rows.clone()],
+                t_len,
+                c.n_heads,
+                d,
+                &mut att.data[rows],
+                &mut probs[b * c.n_heads * t_len * t_len..(b + 1) * c.n_heads * t_len * t_len],
+            );
+        }
+        add_into(&mut x, &att.matmul(&layer.wo));
+        let x_mid = x.clone();
+
+        // spectral SwiGLU MLP
+        let (h2, r2) = rmsnorm_fwd(&x, &layer.ln2);
+        let (g, gate_c) = layer.gate.forward(&h2);
+        let (u, up_c) = layer.up.forward(&h2);
+        let mut a = g.clone();
+        for (ai, &ui) in a.data.iter_mut().zip(&u.data) {
+            *ai = silu(*ai) * ui;
+        }
+        let (m, down_c) = layer.down.forward(&a);
+        add_into(&mut x, &m);
+
+        layers.push(LayerFwdCache {
+            x_in,
+            h1,
+            r1,
+            q,
+            k,
+            v,
+            probs,
+            att,
+            x_mid,
+            h2,
+            r2,
+            g,
+            u,
+            a,
+            gate_c,
+            up_c,
+            down_c,
+        });
+    }
+
+    let x_f = x;
+    let (hf, rf) = rmsnorm_fwd(&x_f, &model.ln_f);
+    let logits = model.logits(&hf);
+    (logits, FwdCache { layers, x_f, hf, rf })
+}
+
+// ---------------------------------------------------------------------------
+// backward
+// ---------------------------------------------------------------------------
+
+/// Reverse-mode backward through the whole decoder: given `dL/dlogits`,
+/// produce gradients for every parameter. `tokens`, `bsz`, `t_len` and
+/// `cache` must come from the matching [`decoder_fwd`] call.
+pub fn decoder_bwd(
+    model: &SpectralModel,
+    rope: &Rope,
+    tokens: &[i32],
+    bsz: usize,
+    t_len: usize,
+    cache: &FwdCache,
+    dlogits: &Matrix,
+) -> ModelGrads {
+    let c = &model.cfg;
+    let d = c.d_model;
+    let n = bsz * t_len;
+    assert_eq!((dlogits.rows, dlogits.cols), (n, c.vocab));
+
+    let mut embed_grad = Matrix::zeros(c.vocab, d);
+    // LM head: tied shares the embedding matrix, untied has its own.
+    let (dhf, head_grad) = match &model.head {
+        Some(head) => {
+            // logits = hf @ head ; head is (d, vocab).
+            let dh = cache.hf.t_matmul(dlogits); // (d, vocab)
+            (dlogits.matmul_t(head), Some(dh)) // (N, d)
+        }
+        None => {
+            // logits = hf @ embed^T.
+            add_into(&mut embed_grad, &dlogits.t_matmul(&cache.hf)); // (vocab, d)
+            (dlogits.matmul(&model.embed), None) // (N, d)
+        }
+    };
+    let (dx_f, ln_f_grad) = rmsnorm_bwd(&cache.x_f, &model.ln_f, &cache.rf, &dhf);
+    let mut dres = dx_f;
+
+    let mut layer_grads_rev: Vec<LayerGrads> = Vec::with_capacity(c.n_layers);
+    for (layer, lc) in model.layers.iter().zip(&cache.layers).rev() {
+        // -- MLP branch (its output was added onto x_mid) --------------------
+        let (da, down_g) = layer.down.backward(&lc.a, &dres, &lc.down_c);
+        // a = silu(g) ⊙ u
+        let mut du = da.clone();
+        let mut dg = da;
+        for i in 0..du.data.len() {
+            let gi = lc.g.data[i];
+            du.data[i] *= silu(gi);
+            dg.data[i] *= lc.u.data[i] * dsilu(gi);
+        }
+        let (dh2_u, up_g) = layer.up.backward(&lc.h2, &du, &lc.up_c);
+        let (mut dh2, gate_g) = layer.gate.backward(&lc.h2, &dg, &lc.gate_c);
+        add_into(&mut dh2, &dh2_u);
+        let (dx_mid, ln2_grad) = rmsnorm_bwd(&lc.x_mid, &layer.ln2, &lc.r2, &dh2);
+        add_into(&mut dres, &dx_mid);
+
+        // -- attention branch (its output was added onto x_in) ---------------
+        let datt = dres.matmul_t(&layer.wo); // (N, d)
+        let wo_grad = lc.att.t_matmul(&dres); // (d, d)
+        let mut dq = Matrix::zeros(n, d);
+        let mut dk = Matrix::zeros(n, d);
+        let mut dv = Matrix::zeros(n, d);
+        for b in 0..bsz {
+            let rows = b * t_len * d..(b + 1) * t_len * d;
+            causal_attention_bwd(
+                &lc.q.data[rows.clone()],
+                &lc.k.data[rows.clone()],
+                &lc.v.data[rows.clone()],
+                &lc.probs[b * c.n_heads * t_len * t_len..(b + 1) * c.n_heads * t_len * t_len],
+                &datt.data[rows.clone()],
+                t_len,
+                c.n_heads,
+                d,
+                &mut dq.data[rows.clone()],
+                &mut dk.data[rows.clone()],
+                &mut dv.data[rows],
+            );
+        }
+        // RoPE adjoint: rotate the q/k gradients back.
+        for i in 0..n {
+            let pos = i % t_len;
+            rope.apply_row_inv(dq.row_mut(i), pos);
+            rope.apply_row_inv(dk.row_mut(i), pos);
+        }
+        let wq_grad = lc.h1.t_matmul(&dq);
+        let wk_grad = lc.h1.t_matmul(&dk);
+        let wv_grad = lc.h1.t_matmul(&dv);
+        let mut dh1 = dq.matmul_t(&layer.wq);
+        add_into(&mut dh1, &dk.matmul_t(&layer.wk));
+        add_into(&mut dh1, &dv.matmul_t(&layer.wv));
+        let (dx_in, ln1_grad) = rmsnorm_bwd(&lc.x_in, &layer.ln1, &lc.r1, &dh1);
+        add_into(&mut dres, &dx_in);
+
+        layer_grads_rev.push(LayerGrads {
+            wq: wq_grad,
+            wk: wk_grad,
+            wv: wv_grad,
+            wo: wo_grad,
+            ln1: ln1_grad,
+            ln2: ln2_grad,
+            gate: gate_g,
+            up: up_g,
+            down: down_g,
+        });
+    }
+    layer_grads_rev.reverse();
+
+    // embedding gather adjoint: scatter-add the residual gradient rows.
+    for (i, &t) in tokens.iter().enumerate() {
+        let t = (t.max(0) as usize) % c.vocab;
+        axpy(1.0, dres.row(i), embed_grad.row_mut(t));
+    }
+
+    ModelGrads {
+        embed: embed_grad,
+        layers: layer_grads_rev,
+        ln_f: ln_f_grad,
+        head: head_grad,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::EngineConfig;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg(tied: bool) -> EngineConfig {
+        EngineConfig {
+            vocab: 24,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ffn: 20,
+            rank: 3,
+            max_seq: 16,
+            tied,
+        }
+    }
+
+    fn tiny_inputs(rng: &mut Rng, vocab: usize, n: usize) -> Vec<i32> {
+        (0..n).map(|_| (rng.next_u64() % vocab as u64) as i32).collect()
+    }
+
+    /// L(theta) = sum(logits ⊙ R) — a linear functional of the forward, so
+    /// dL/dlogits = R exactly and finite differences probe only the network.
+    /// f64 accumulation keeps the FD quotient above f32 rounding noise.
+    fn eval(model: &SpectralModel, rope: &Rope, tokens: &[i32], b: usize, t: usize, r: &Matrix) -> f32 {
+        let (logits, _) = decoder_fwd(model, rope, tokens, b, t);
+        logits.data.iter().zip(&r.data).map(|(a, w)| (a * w) as f64).sum::<f64>() as f32
+    }
+
+    fn check_probe(
+        model: &SpectralModel,
+        rope: &Rope,
+        tokens: &[i32],
+        b: usize,
+        t: usize,
+        r: &Matrix,
+        analytic: f32,
+        name: &str,
+        perturb: impl Fn(&mut SpectralModel, f32),
+    ) {
+        let eps = 1e-2f32;
+        let mut mp = clone_model(model);
+        perturb(&mut mp, eps);
+        let mut mm = clone_model(model);
+        perturb(&mut mm, -eps);
+        let fd = (eval(&mp, rope, tokens, b, t, r) - eval(&mm, rope, tokens, b, t, r)) / (2.0 * eps);
+        // the 0.05 floor keeps near-zero-gradient probes from comparing FD
+        // noise against itself; real backward bugs show up as O(|grad|)
+        // mismatches on the well-conditioned probes
+        let denom = analytic.abs().max(fd.abs()).max(0.05);
+        assert!(
+            (fd - analytic).abs() / denom < 5e-2,
+            "{name}: fd {fd} vs analytic {analytic}"
+        );
+    }
+
+    fn clone_model(m: &SpectralModel) -> SpectralModel {
+        SpectralModel::from_tensors(&m.to_tensors()).unwrap()
+    }
+
+    #[test]
+    fn model_gradients_match_finite_differences_tied() {
+        let mut rng = Rng::new(7);
+        let model = SpectralModel::init(tiny_cfg(true), 7);
+        let rope = Rope::new(model.cfg.max_seq, model.cfg.head_dim());
+        let (b, t) = (2usize, 6usize);
+        let tokens = tiny_inputs(&mut rng, model.cfg.vocab, b * t);
+        let r = Matrix::randn(&mut rng, b * t, model.cfg.vocab, 1.0);
+
+        let (_, cache) = decoder_fwd(&model, &rope, &tokens, b, t);
+        let grads = decoder_bwd(&model, &rope, &tokens, b, t, &cache, &r);
+
+        let used_tok = (tokens[0].max(0) as usize) % model.cfg.vocab;
+        let probes: Vec<(&str, f32, Box<dyn Fn(&mut SpectralModel, f32)>)> = vec![
+            ("embed", grads.embed[(used_tok, 1)], Box::new(move |m, e| m.embed[(used_tok, 1)] += e)),
+            ("wq", grads.layers[0].wq[(0, 1)], Box::new(|m, e| m.layers[0].wq[(0, 1)] += e)),
+            ("wk", grads.layers[1].wk[(1, 0)], Box::new(|m, e| m.layers[1].wk[(1, 0)] += e)),
+            ("wv", grads.layers[0].wv[(2, 2)], Box::new(|m, e| m.layers[0].wv[(2, 2)] += e)),
+            ("wo", grads.layers[1].wo[(3, 0)], Box::new(|m, e| m.layers[1].wo[(3, 0)] += e)),
+            ("ln1", grads.layers[0].ln1[0], Box::new(|m, e| m.layers[0].ln1[0] += e)),
+            ("ln2", grads.layers[1].ln2[2], Box::new(|m, e| m.layers[1].ln2[2] += e)),
+            ("gate.u", grads.layers[0].gate.du[(0, 0)], Box::new(|m, e| m.layers[0].gate.u[(0, 0)] += e)),
+            ("gate.s", grads.layers[0].gate.ds[0], Box::new(|m, e| m.layers[0].gate.s[0] += e)),
+            ("up.v", grads.layers[1].up.dv[(1, 1)], Box::new(|m, e| m.layers[1].up.v[(1, 1)] += e)),
+            ("down.u", grads.layers[0].down.du[(2, 1)], Box::new(|m, e| m.layers[0].down.u[(2, 1)] += e)),
+            ("ln_f", grads.ln_f[3], Box::new(|m, e| m.ln_f[3] += e)),
+        ];
+        for (name, analytic, perturb) in probes {
+            check_probe(&model, &rope, &tokens, b, t, &r, analytic, name, perturb);
+        }
+    }
+
+    #[test]
+    fn model_gradients_match_finite_differences_untied() {
+        let mut rng = Rng::new(9);
+        let model = SpectralModel::init(tiny_cfg(false), 9);
+        assert!(model.head.is_some(), "untied config must materialize a head");
+        let rope = Rope::new(model.cfg.max_seq, model.cfg.head_dim());
+        let (b, t) = (1usize, 5usize);
+        let tokens = tiny_inputs(&mut rng, model.cfg.vocab, b * t);
+        let r = Matrix::randn(&mut rng, b * t, model.cfg.vocab, 1.0);
+        let (_, cache) = decoder_fwd(&model, &rope, &tokens, b, t);
+        let grads = decoder_bwd(&model, &rope, &tokens, b, t, &cache, &r);
+        let head_grad = grads.head.as_ref().expect("untied backward must emit a head gradient");
+        let used_tok = (tokens[2].max(0) as usize) % model.cfg.vocab;
+        let probes: Vec<(&str, f32, Box<dyn Fn(&mut SpectralModel, f32)>)> = vec![
+            ("head", head_grad[(0, 1)], Box::new(|m, e| {
+                if let Some(h) = &mut m.head {
+                    h[(0, 1)] += e;
+                }
+            })),
+            ("embed", grads.embed[(used_tok, 0)], Box::new(move |m, e| m.embed[(used_tok, 0)] += e)),
+        ];
+        for (name, analytic, perturb) in probes {
+            check_probe(&model, &rope, &tokens, b, t, &r, analytic, name, perturb);
+        }
+    }
+
+    #[test]
+    fn batched_forward_equals_per_sequence_forward() {
+        // Sequences in one packed batch must not see each other.
+        let mut rng = Rng::new(11);
+        let model = SpectralModel::init(tiny_cfg(true), 3);
+        let rope = Rope::new(model.cfg.max_seq, model.cfg.head_dim());
+        let t = 7usize;
+        let ta = tiny_inputs(&mut rng, model.cfg.vocab, t);
+        let tb = tiny_inputs(&mut rng, model.cfg.vocab, t);
+        let mut packed = ta.clone();
+        packed.extend_from_slice(&tb);
+        let (batched, _) = decoder_fwd(&model, &rope, &packed, 2, t);
+        let (la, _) = decoder_fwd(&model, &rope, &ta, 1, t);
+        let (lb, _) = decoder_fwd(&model, &rope, &tb, 1, t);
+        for i in 0..t {
+            for j in 0..model.cfg.vocab {
+                assert_eq!(batched[(i, j)], la[(i, j)], "row {i} of sequence a diverged");
+                assert_eq!(batched[(t + i, j)], lb[(i, j)], "row {i} of sequence b diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn grad_shapes_are_compact_and_clip_scales_the_norm() {
+        let mut rng = Rng::new(13);
+        let model = SpectralModel::init(tiny_cfg(true), 1);
+        let rope = Rope::new(model.cfg.max_seq, model.cfg.head_dim());
+        let (b, t) = (2usize, 4usize);
+        let tokens = tiny_inputs(&mut rng, model.cfg.vocab, b * t);
+        let r = Matrix::randn(&mut rng, b * t, model.cfg.vocab, 1.0);
+        let (_, cache) = decoder_fwd(&model, &rope, &tokens, b, t);
+        let mut grads = decoder_bwd(&model, &rope, &tokens, b, t, &cache, &r);
+        // spectral grads are (m,k)/(k)/(n,k) — never (d_model, d_ffn)
+        let g = &grads.layers[0].gate;
+        assert_eq!((g.du.rows, g.du.cols), (16, 3));
+        assert_eq!(g.ds.len(), 3);
+        assert_eq!((g.dv.rows, g.dv.cols), (20, 3));
+        let norm = grads.global_norm();
+        assert!(norm > 0.0);
+        grads.scale(0.5 / norm);
+        assert!((grads.global_norm() - 0.5).abs() < 1e-3);
+    }
+}

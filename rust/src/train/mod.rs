@@ -1,0 +1,56 @@
+//! `train` — the pure-Rust end-to-end training engine: paper Algorithm 1
+//! (forward through compact factors, backprop into (U, s, V), AdamW, Stiefel
+//! QR retraction) with no PJRT, no artifacts, nothing beyond the standard
+//! library — the training half of the `serve` story. A model trained here
+//! checkpoints to `.sct` and serves directly through [`crate::serve`].
+//!
+//! Pieces:
+//! * [`blocks`] — the **shared decoder blocks**: RMSNorm, RoPE, SiLU,
+//!   causal softmax attention and cross-entropy, each forward next to its
+//!   reverse-mode adjoint. The serving engine executes the same forward
+//!   functions on its KV-cached hot path, so train and serve cannot drift;
+//!   every adjoint is finite-difference checked.
+//! * [`decoder`] — ONE full-sequence decoder forward (used verbatim by
+//!   `serve::Engine::forward_full`, the baseline all KV tests pin against)
+//!   plus the whole-model backward producing compact [`decoder::ModelGrads`]
+//!   — gradient shapes `(m,k)/(k)/(n,k)`; no `(m, n)` tensor exists
+//!   anywhere in training, the paper's core storage claim.
+//! * [`trainer`] — [`NativeTrainer`]: per-tensor AdamW with the dense /
+//!   spectral LR split, global gradient-norm clipping, QR retraction every
+//!   `retract_every` steps, per-phase step timing (Table 2's
+//!   fwd/bwd/opt/retract decomposition), and checkpoint save/restore with
+//!   optimizer moments.
+//!
+//! # The `.sct` params layout contract
+//!
+//! Training checkpoints and serve checkpoints share one tensor namespace
+//! (mirroring the AOT session state layout the JAX side exports):
+//!
+//! ```text
+//! model/meta                        i32[8]: vocab, d_model, n_layers,
+//!                                   n_heads, d_ffn, rank, max_seq, tied
+//! params/embed                      f32[vocab, d_model]
+//! params/layers/{i}/attn/wq|wk|wv|wo f32[d_model, d_model]
+//! params/layers/{i}/ln1|ln2         f32[d_model]
+//! params/layers/{i}/mlp/{p}/u       f32[m, k]   p in {gate, up, down}
+//! params/layers/{i}/mlp/{p}/s       f32[k]
+//! params/layers/{i}/mlp/{p}/v       f32[n, k]
+//! params/ln_f                       f32[d_model]
+//! params/head                       f32[d_model, vocab]  (untied only)
+//! opt/t                             i32[1]              (trainer only)
+//! opt/{m,v}/params/...              f32[flat]           (trainer only)
+//! ```
+//!
+//! `serve::SpectralModel::load` reads `model/meta` + `params/...` and
+//! ignores `opt/...`, so a mid-training checkpoint serves as-is; the
+//! trainer additionally restores the AdamW moments so a resumed run
+//! continues bit-for-bit. The canonical tensor order (and the optimizer
+//! slot order) is defined once, in [`trainer::param_kinds`].
+
+pub mod blocks;
+pub mod decoder;
+pub mod trainer;
+
+pub use blocks::Rope;
+pub use decoder::{decoder_bwd, decoder_fwd, ModelGrads};
+pub use trainer::{mlp_compression, NativeTrainConfig, NativeTrainer, ParamKind};

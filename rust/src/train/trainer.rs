@@ -1,0 +1,496 @@
+//! The native training engine: paper Algorithm 1 end-to-end in pure Rust.
+//!
+//! One [`NativeTrainer::train_step`] is: shared-decoder forward
+//! ([`decoder_fwd`]), cross-entropy, full reverse-mode backward
+//! ([`decoder_bwd`]) into compact [`super::decoder::ModelGrads`], global-norm gradient
+//! clipping, one [`AdamW`] update per parameter tensor with the dense /
+//! spectral LR split (driven by `coordinator::schedule::LrPlan`), then
+//! Stiefel QR retraction of every U/V factor (paper Eq. 5) every
+//! `retract_every` steps. Per-phase wall times are returned so
+//! `benches/train_step.rs` can reproduce the paper's Table 2 decomposition
+//! at real ranks.
+//!
+//! Checkpoints use the `.sct` container with the `params/layers/...` layout
+//! (see the module docs in [`crate::train`]): the model tensors are exactly
+//! what [`crate::serve::SpectralModel::load`] reads, so a trained model
+//! serves directly; `opt/{m,v}/...` moments and `opt/t` ride along so a
+//! resumed run continues bit-for-bit.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::format::{read_checkpoint, write_checkpoint, NamedTensor};
+use crate::serve::engine::{EngineConfig, SpectralModel};
+use crate::spectral::AdamW;
+
+use super::blocks::{cross_entropy, Rope};
+use super::decoder::{decoder_bwd, decoder_fwd};
+
+/// Which LR group a parameter tensor belongs to (mirrors
+/// `python/compile/optim.py::is_spectral_leaf`: the u/s/v leaves under an
+/// mlp block are spectral, everything else is dense).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    Dense,
+    Spectral,
+}
+
+/// Canonical parameter enumeration: `(name, kind, weight-decay eligible)`
+/// in the exact order [`params_mut`] and [`ModelGrads::slices`] yield
+/// slices. The names double as the `.sct` tensor names, so this list IS the
+/// checkpoint layout contract.
+pub fn param_kinds(cfg: &EngineConfig) -> Vec<(String, ParamKind, bool)> {
+    use ParamKind::*;
+    let mut out = vec![("params/embed".to_string(), Dense, false)];
+    for i in 0..cfg.n_layers {
+        for w in ["wq", "wk", "wv", "wo"] {
+            out.push((format!("params/layers/{i}/attn/{w}"), Dense, true));
+        }
+        out.push((format!("params/layers/{i}/ln1"), Dense, false));
+        out.push((format!("params/layers/{i}/ln2"), Dense, false));
+        for nm in ["gate", "up", "down"] {
+            for f in ["u", "s", "v"] {
+                // s gets no decay (it scales the operator norm); u/v decay is
+                // meaningless under retraction — same policy as the JAX side.
+                out.push((format!("params/layers/{i}/mlp/{nm}/{f}"), Spectral, false));
+            }
+        }
+    }
+    out.push(("params/ln_f".to_string(), Dense, false));
+    if !cfg.tied {
+        out.push(("params/head".to_string(), Dense, true));
+    }
+    out
+}
+
+/// Mutable flat views of every parameter tensor, in [`param_kinds`] order.
+fn params_mut(model: &mut SpectralModel) -> Vec<&mut [f32]> {
+    let mut out: Vec<&mut [f32]> = vec![&mut model.embed.data];
+    for l in &mut model.layers {
+        out.push(&mut l.wq.data);
+        out.push(&mut l.wk.data);
+        out.push(&mut l.wv.data);
+        out.push(&mut l.wo.data);
+        out.push(&mut l.ln1);
+        out.push(&mut l.ln2);
+        for sl in [&mut l.gate, &mut l.up, &mut l.down] {
+            out.push(&mut sl.u.data);
+            out.push(&mut sl.s);
+            out.push(&mut sl.v.data);
+        }
+    }
+    out.push(&mut model.ln_f);
+    if let Some(h) = &mut model.head {
+        out.push(&mut h.data);
+    }
+    out
+}
+
+/// Training-run hyperparameters (the model geometry rides in `model`).
+#[derive(Debug, Clone, Copy)]
+pub struct NativeTrainConfig {
+    pub model: EngineConfig,
+    pub batch: usize,
+    /// Input sequence length T; one packed window is T+1 tokens.
+    pub seq_len: usize,
+    /// Global gradient-norm clip (0 disables).
+    pub grad_clip: f32,
+    /// QR-retract every N optimizer steps (paper default: every step).
+    pub retract_every: usize,
+    pub weight_decay: f32,
+}
+
+impl Default for NativeTrainConfig {
+    fn default() -> NativeTrainConfig {
+        NativeTrainConfig {
+            model: EngineConfig::default(),
+            batch: 8,
+            seq_len: 64,
+            grad_clip: 1.0,
+            retract_every: 1,
+            weight_decay: 0.0,
+        }
+    }
+}
+
+/// Model + optimizer state + RoPE tables: everything one training run owns.
+pub struct NativeTrainer {
+    pub cfg: NativeTrainConfig,
+    pub model: SpectralModel,
+    rope: Rope,
+    opts: Vec<AdamW>,
+    kinds: Vec<(String, ParamKind, bool)>,
+    /// Optimizer steps taken (also the checkpoint step).
+    pub step: u64,
+}
+
+impl NativeTrainer {
+    pub fn new(cfg: NativeTrainConfig, seed: u64) -> NativeTrainer {
+        let model = SpectralModel::init(cfg.model, seed);
+        NativeTrainer::from_model(cfg, model)
+    }
+
+    /// Wrap an existing model (checkpoint restore) with fresh optimizer state.
+    pub fn from_model(mut cfg: NativeTrainConfig, model: SpectralModel) -> NativeTrainer {
+        cfg.model = model.cfg;
+        cfg.retract_every = cfg.retract_every.max(1);
+        assert!(
+            cfg.seq_len >= 1 && cfg.seq_len <= cfg.model.max_seq,
+            "seq_len {} must fit the RoPE table (max_seq {})",
+            cfg.seq_len,
+            cfg.model.max_seq
+        );
+        assert!(cfg.batch >= 1, "need at least one sequence per batch");
+        let rope = Rope::new(cfg.model.max_seq, cfg.model.head_dim());
+        let kinds = param_kinds(&cfg.model);
+        let mut model = model;
+        let lens: Vec<usize> = params_mut(&mut model).iter().map(|s| s.len()).collect();
+        assert_eq!(lens.len(), kinds.len(), "param enumeration out of sync");
+        let opts = lens.into_iter().map(|n| AdamW::new(n, 0.0)).collect();
+        NativeTrainer { cfg, model, rope, opts, kinds, step: 0 }
+    }
+
+    /// Unpack a packed `batch x (seq_len + 1)` window (the
+    /// `Dataset::next_batch` wire format: inputs and shifted targets share
+    /// one buffer) into `(inputs, targets)` of `batch * seq_len` each.
+    fn split_window(&self, tokens: &[i32]) -> (Vec<i32>, Vec<i32>) {
+        let (b, t) = (self.cfg.batch, self.cfg.seq_len);
+        assert_eq!(tokens.len(), b * (t + 1), "tokens must be batch x (seq_len + 1)");
+        let mut inputs = Vec::with_capacity(b * t);
+        let mut targets = Vec::with_capacity(b * t);
+        for r in 0..b {
+            let w = &tokens[r * (t + 1)..(r + 1) * (t + 1)];
+            inputs.extend_from_slice(&w[..t]);
+            targets.extend_from_slice(&w[1..]);
+        }
+        (inputs, targets)
+    }
+
+    /// One full training step on a packed `batch x (seq_len + 1)` window.
+    /// Returns the loss and the per-phase seconds
+    /// `[forward, backward, optimizer, retraction]` — Table 2's split.
+    pub fn train_step(
+        &mut self,
+        tokens: &[i32],
+        lr_dense: f32,
+        lr_spectral: f32,
+    ) -> (f32, [f64; 4]) {
+        let (b, t) = (self.cfg.batch, self.cfg.seq_len);
+        let (inputs, targets) = self.split_window(tokens);
+
+        let t0 = Instant::now();
+        let (logits, cache) = decoder_fwd(&self.model, &self.rope, &inputs, b, t);
+        let (loss, dlogits) = cross_entropy(&logits, &targets);
+        let t_fwd = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let mut grads = decoder_bwd(&self.model, &self.rope, &inputs, b, t, &cache, &dlogits);
+        let t_bwd = t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        if self.cfg.grad_clip > 0.0 {
+            let norm = grads.global_norm();
+            if norm > self.cfg.grad_clip {
+                grads.scale(self.cfg.grad_clip / norm);
+            }
+        }
+        {
+            let params = params_mut(&mut self.model);
+            let gs = grads.slices();
+            debug_assert_eq!(params.len(), gs.len());
+            for (i, (p, g)) in params.into_iter().zip(gs).enumerate() {
+                let (_, kind, decays) = &self.kinds[i];
+                let opt = &mut self.opts[i];
+                opt.lr = match kind {
+                    ParamKind::Spectral => lr_spectral,
+                    ParamKind::Dense => lr_dense,
+                };
+                opt.weight_decay = if *decays { self.cfg.weight_decay } else { 0.0 };
+                opt.step(p, g);
+            }
+        }
+        let t_opt = t2.elapsed().as_secs_f64();
+
+        let t3 = Instant::now();
+        self.step += 1;
+        if self.step % self.cfg.retract_every as u64 == 0 {
+            for l in &mut self.model.layers {
+                l.gate.retract();
+                l.up.retract();
+                l.down.retract();
+            }
+        }
+        let t_retract = t3.elapsed().as_secs_f64();
+
+        (loss, [t_fwd, t_bwd, t_opt, t_retract])
+    }
+
+    /// Cross-entropy on a held-out packed window, no state change.
+    pub fn eval_loss(&self, tokens: &[i32]) -> f32 {
+        let (b, t) = (self.cfg.batch, self.cfg.seq_len);
+        let (inputs, targets) = self.split_window(tokens);
+        let (logits, _) = decoder_fwd(&self.model, &self.rope, &inputs, b, t);
+        cross_entropy(&logits, &targets).0
+    }
+
+    /// Worst factor orthonormality error across every spectral triple —
+    /// the paper's `max |U^T U - I|` budget of 2e-6.
+    pub fn ortho_error(&self) -> f32 {
+        self.model
+            .layers
+            .iter()
+            .flat_map(|l| [&l.gate, &l.up, &l.down])
+            .map(|sl| sl.ortho_error())
+            .fold(0.0, f32::max)
+    }
+
+    // -- checkpointing ------------------------------------------------------
+
+    /// Model tensors (the `params/layers/...` layout `serve` loads directly)
+    /// plus the AdamW moments and step so training resumes exactly.
+    pub fn checkpoint_tensors(&self) -> Vec<NamedTensor> {
+        let mut tensors = self.model.to_tensors();
+        for ((name, _, _), opt) in self.kinds.iter().zip(&self.opts) {
+            let (m, v) = opt.moments();
+            tensors.push(NamedTensor::f32(&format!("opt/m/{name}"), vec![m.len()], m));
+            tensors.push(NamedTensor::f32(&format!("opt/v/{name}"), vec![v.len()], v));
+        }
+        tensors.push(NamedTensor::i32("opt/t", vec![1], &[self.step as i32]));
+        tensors
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_checkpoint(path, self.step, &self.checkpoint_tensors())
+    }
+
+    /// Restore a training run. Model geometry comes from the checkpoint (it
+    /// overrides `cfg.model`); optimizer moments are restored when present
+    /// (a serve-only checkpoint trains on with fresh moments).
+    pub fn load(path: &Path, cfg: NativeTrainConfig) -> Result<NativeTrainer> {
+        let (step, tensors) = read_checkpoint(path)?;
+        let model = SpectralModel::from_tensors(&tensors)
+            .with_context(|| format!("loading model from {}", path.display()))?;
+        let mut trainer = NativeTrainer::from_model(cfg, model);
+        trainer.step = step;
+        if tensors.iter().any(|t| t.name == "opt/t") {
+            let find = |name: &str| -> Result<Vec<f32>> {
+                tensors
+                    .iter()
+                    .find(|t| t.name == name)
+                    .with_context(|| format!("checkpoint missing optimizer tensor {name:?}"))?
+                    .as_f32()
+            };
+            let t_opt = tensors
+                .iter()
+                .find(|t| t.name == "opt/t")
+                .expect("checked above")
+                .as_i32()?[0] as u64;
+            for ((name, _, _), opt) in trainer.kinds.iter().zip(trainer.opts.iter_mut()) {
+                let m = find(&format!("opt/m/{name}"))?;
+                let v = find(&format!("opt/v/{name}"))?;
+                opt.restore(m, v, t_opt);
+            }
+        }
+        Ok(trainer)
+    }
+}
+
+/// Analytic MLP compression factor vs a dense model of the same geometry
+/// (the Table 3 column) — native twin of `Trainer::mlp_compression`.
+pub fn mlp_compression(cfg: &EngineConfig) -> f64 {
+    let dense = (3 * cfg.d_model * cfg.d_ffn) as f64;
+    let spectral = (3 * cfg.rank * (cfg.d_model + cfg.d_ffn + 1)) as f64;
+    dense / spectral
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> NativeTrainConfig {
+        NativeTrainConfig {
+            model: EngineConfig {
+                vocab: 32,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                d_ffn: 24,
+                rank: 3,
+                max_seq: 16,
+                tied: true,
+            },
+            batch: 2,
+            seq_len: 8,
+            grad_clip: 1.0,
+            retract_every: 1,
+            weight_decay: 0.0,
+        }
+    }
+
+    /// A learnable stream: tokens cycle 0..8, so next-token prediction is
+    /// fully determined and the loss floor is ~0.
+    fn cyclic_batch(cfg: &NativeTrainConfig, offset: usize) -> Vec<i32> {
+        let w = cfg.seq_len + 1;
+        (0..cfg.batch * w)
+            .map(|i| {
+                let (row, col) = (i / w, i % w);
+                ((offset + row * 3 + col) % 8) as i32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn param_enumeration_matches_grad_slices() {
+        let cfg = tiny_cfg();
+        let mut trainer = NativeTrainer::new(cfg, 0);
+        let batch = cyclic_batch(&cfg, 0);
+        // grads via one real backward
+        let (b, t) = (cfg.batch, cfg.seq_len);
+        let mut inputs = Vec::new();
+        for r in 0..b {
+            inputs.extend_from_slice(&batch[r * (t + 1)..r * (t + 1) + t]);
+        }
+        let (logits, cache) = decoder_fwd(&trainer.model, &trainer.rope, &inputs, b, t);
+        let targets: Vec<i32> = inputs.clone();
+        let (_, dl) = cross_entropy(&logits, &targets);
+        let grads = decoder_bwd(&trainer.model, &trainer.rope, &inputs, b, t, &cache, &dl);
+        let gs = grads.slices();
+        let names = param_kinds(&trainer.model.cfg);
+        let ps = params_mut(&mut trainer.model);
+        assert_eq!(ps.len(), gs.len());
+        assert_eq!(ps.len(), names.len());
+        for (i, (p, g)) in ps.iter().zip(&gs).enumerate() {
+            assert_eq!(p.len(), g.len(), "length mismatch at {:?}", names[i].0);
+        }
+        // untied adds exactly one more tensor
+        let untied = EngineConfig { tied: false, ..trainer.model.cfg };
+        assert_eq!(param_kinds(&untied).len(), names.len() + 1);
+    }
+
+    #[test]
+    fn loss_decreases_on_learnable_stream() {
+        let cfg = tiny_cfg();
+        let mut trainer = NativeTrainer::new(cfg, 1);
+        let mut first = None;
+        let mut last = 0.0f32;
+        for step in 0..40 {
+            let (loss, _) = trainer.train_step(&cyclic_batch(&cfg, step), 5e-3, 5e-3);
+            if first.is_none() {
+                first = Some(loss);
+            }
+            last = loss;
+        }
+        let first = first.unwrap();
+        assert!(
+            last < first * 0.7,
+            "loss must fall on a deterministic stream: {first} -> {last}"
+        );
+        assert!(last.is_finite());
+    }
+
+    #[test]
+    fn factors_stay_on_the_stiefel_manifold_after_50_steps() {
+        // The paper's acceptance budget: max |U^T U - I| <= 2e-6 with
+        // retraction every step.
+        let cfg = tiny_cfg();
+        let mut trainer = NativeTrainer::new(cfg, 2);
+        for step in 0..50 {
+            trainer.train_step(&cyclic_batch(&cfg, step), 3e-3, 3e-3);
+        }
+        let err = trainer.ortho_error();
+        assert!(err <= 2e-6, "orthonormality drift {err} exceeds the 2e-6 budget");
+        assert_eq!(trainer.step, 50);
+    }
+
+    #[test]
+    fn retract_every_defers_retraction() {
+        let mut cfg = tiny_cfg();
+        cfg.retract_every = 1000; // never, within this test
+        let mut trainer = NativeTrainer::new(cfg, 3);
+        for step in 0..10 {
+            trainer.train_step(&cyclic_batch(&cfg, step), 5e-3, 5e-3);
+        }
+        let drifted = trainer.ortho_error();
+        assert!(drifted > 2e-6, "without retraction the factors must drift (got {drifted})");
+        // a manual retraction brings them back
+        for l in &mut trainer.model.layers {
+            l.gate.retract();
+            l.up.retract();
+            l.down.retract();
+        }
+        assert!(trainer.ortho_error() <= 2e-6);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_resumes_identically() {
+        let cfg = tiny_cfg();
+        let dir = std::env::temp_dir().join(format!("sct_native_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("train.sct");
+
+        let mut a = NativeTrainer::new(cfg, 4);
+        for step in 0..5 {
+            a.train_step(&cyclic_batch(&cfg, step), 2e-3, 2e-3);
+        }
+        a.save(&path).unwrap();
+        let mut b = NativeTrainer::load(&path, cfg).unwrap();
+        assert_eq!(b.step, 5);
+        // identical next step: same loss, same params after the update
+        let batch = cyclic_batch(&cfg, 99);
+        let (la, _) = a.train_step(&batch, 2e-3, 2e-3);
+        let (lb, _) = b.train_step(&batch, 2e-3, 2e-3);
+        assert_eq!(la, lb, "restored run must continue bit-for-bit");
+        assert_eq!(a.model.embed.data, b.model.embed.data);
+        assert_eq!(a.model.layers[0].gate.u.data, b.model.layers[0].gate.u.data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn eval_loss_is_pure() {
+        let cfg = tiny_cfg();
+        let trainer = NativeTrainer::new(cfg, 5);
+        let batch = cyclic_batch(&cfg, 0);
+        let a = trainer.eval_loss(&batch);
+        let b = trainer.eval_loss(&batch);
+        assert_eq!(a, b);
+        assert!(a > 0.0 && a.is_finite());
+    }
+
+    #[test]
+    fn grad_clip_bounds_the_update() {
+        // With an absurdly small clip the first update must be tiny even
+        // though AdamW normalizes: the clip acts on the raw gradient, the
+        // optimizer still moves ~lr per coordinate — so instead check the
+        // clip math directly through ModelGrads in decoder tests, and here
+        // only that training with clip stays finite at a hot LR.
+        let mut cfg = tiny_cfg();
+        cfg.grad_clip = 0.5;
+        let mut trainer = NativeTrainer::new(cfg, 6);
+        for step in 0..10 {
+            let (loss, _) = trainer.train_step(&cyclic_batch(&cfg, step), 5e-2, 5e-2);
+            assert!(loss.is_finite(), "clipped training must not diverge to NaN");
+        }
+    }
+
+    #[test]
+    fn mlp_compression_matches_table_formula() {
+        let cfg = EngineConfig { d_model: 8192, d_ffn: 28672, rank: 32, ..EngineConfig::default() };
+        let c = mlp_compression(&cfg);
+        // 3*8192*28672 / (3*32*(8192+28672+1)) ~ 199x
+        assert!((c - 199.0).abs() < 1.0, "compression {c}");
+    }
+
+    #[test]
+    fn spectral_lr_group_is_honored() {
+        // With lr_dense = 0 only the spectral factors may move.
+        let cfg = tiny_cfg();
+        let mut trainer = NativeTrainer::new(cfg, 7);
+        let wq_before = trainer.model.layers[0].wq.data.clone();
+        let s_before = trainer.model.layers[0].gate.s.clone();
+        trainer.train_step(&cyclic_batch(&cfg, 0), 0.0, 1e-2);
+        assert_eq!(trainer.model.layers[0].wq.data, wq_before, "dense params frozen at lr 0");
+        assert_ne!(trainer.model.layers[0].gate.s, s_before, "spectral params must move");
+    }
+}

@@ -23,6 +23,7 @@ fn tiny_engine(seed: u64) -> Engine {
         d_ffn: 96,
         rank: 6,
         max_seq: 64,
+        tied: true,
     };
     Engine::new(SpectralModel::init(cfg, seed))
 }
@@ -265,6 +266,7 @@ fn chunked_prefill_keeps_active_decodes_responsive() {
         d_ffn: 48,
         rank: 4,
         max_seq: 640,
+        tied: true,
     };
     let b = Batcher::spawn_with(
         Engine::new(SpectralModel::init(cfg, 0)),
@@ -274,7 +276,12 @@ fn chunked_prefill_keeps_active_decodes_responsive() {
 
     // A: short prompt, long generation — the active decode.
     let rxa = b
-        .submit_streaming(Request { prompt: vec![1, 2, 3], max_new: 200, opts: greedy.clone() })
+        .submit_streaming(Request {
+            prompt: vec![1, 2, 3],
+            max_new: 200,
+            opts: greedy.clone(),
+            stop: vec![],
+        })
         .unwrap();
     match rxa.recv_timeout(Duration::from_secs(30)) {
         Ok(StreamEvent::Token(_)) => {} // A is admitted and decoding
@@ -284,7 +291,7 @@ fn chunked_prefill_keeps_active_decodes_responsive() {
     // B: 512-token prompt.
     let long_prompt: Vec<i32> = (0..512).map(|i| i % 50).collect();
     let rxb = b
-        .submit_streaming(Request { prompt: long_prompt, max_new: 4, opts: greedy })
+        .submit_streaming(Request { prompt: long_prompt, max_new: 4, opts: greedy, stop: vec![] })
         .unwrap();
 
     let mut a_tokens_during_admission = 0usize;

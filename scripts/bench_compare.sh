@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Compare the PR's bench JSONs against the base branch, in CI.
+#
+# Builds the base ref in a temporary git worktree (sharing the PR's cargo
+# target dir so only changed crates rebuild), runs the same smoke benches
+# there, and prints a field-by-field diff via scripts/bench_diff.py. The
+# PR-side JSONs must already exist at the repo root (scripts/tier1.sh
+# bench). Advisory: a bench missing on the base branch is reported and
+# skipped, not an error — CI runs this step with continue-on-error anyway.
+#
+# Usage: scripts/bench_compare.sh [base-ref]   (default: origin/main)
+
+set -euo pipefail
+repo_root="$(cd "$(dirname "$0")/.." && pwd)"
+base_ref="${1:-origin/main}"
+cd "$repo_root"
+
+git fetch origin "${base_ref#origin/}" --depth 1 2>/dev/null || true
+if ! git rev-parse --verify --quiet "$base_ref" >/dev/null; then
+    echo "bench_compare: base ref '$base_ref' not found; skipping comparison"
+    exit 0
+fi
+
+worktree="$(mktemp -d)/base"
+git worktree add --detach "$worktree" "$base_ref"
+trap 'git worktree remove --force "$worktree" 2>/dev/null || true' EXIT
+
+export CARGO_TARGET_DIR="$repo_root/rust/target"
+for bench in serve_throughput train_step; do
+    name="${bench%%_*}"   # serve_throughput -> serve, train_step -> train
+    if (cd "$worktree/rust" && cargo bench --bench "$bench" -- --smoke \
+            --json "$worktree/BENCH_$name.json"); then
+        :
+    else
+        echo "bench_compare: bench '$bench' absent or failing on $base_ref; skipping"
+    fi
+done
+
+for name in serve train; do
+    base_json="$worktree/BENCH_$name.json"
+    pr_json="$repo_root/BENCH_$name.json"
+    if [[ -f "$base_json" && -f "$pr_json" ]]; then
+        echo
+        echo "== BENCH_$name.json: $base_ref vs PR =="
+        python3 "$repo_root/scripts/bench_diff.py" "$base_json" "$pr_json"
+    else
+        echo "bench_compare: BENCH_$name.json missing on one side; skipping"
+    fi
+done

@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Compare two bench JSON documents (base vs PR) field by field.
+
+Usage: bench_diff.py BASE.json PR.json
+
+Flattens every numeric leaf to a dotted path (array entries keyed by their
+"rank"/"mode" fields when present, else by index) and prints a base/PR/delta
+table. Advisory output only — it never fails the build; the point is a
+readable perf trajectory in the CI log instead of archive-only artifacts.
+"""
+
+import json
+import sys
+
+
+def key_for(item, idx):
+    if isinstance(item, dict):
+        parts = [str(item[k]) for k in ("rank", "mode") if k in item]
+        if parts:
+            return "/".join(parts)
+    return str(idx)
+
+
+def flatten(node, prefix=""):
+    out = {}
+    if isinstance(node, bool):
+        return out
+    if isinstance(node, (int, float)):
+        out[prefix.rstrip(".")] = float(node)
+    elif isinstance(node, dict):
+        for k, v in node.items():
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            out.update(flatten(v, f"{prefix}[{key_for(v, i)}]."))
+    return out
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    with open(sys.argv[1]) as f:
+        base = flatten(json.load(f))
+    with open(sys.argv[2]) as f:
+        pr = flatten(json.load(f))
+
+    keys = sorted(set(base) | set(pr))
+    width = max((len(k) for k in keys), default=10)
+    print(f"{'metric':<{width}}  {'base':>12}  {'pr':>12}  {'delta':>8}")
+    for k in keys:
+        b, p = base.get(k), pr.get(k)
+        if b is None or p is None:
+            print(f"{k:<{width}}  {b if b is not None else '-':>12}  "
+                  f"{p if p is not None else '-':>12}  {'new' if b is None else 'gone':>8}")
+            continue
+        delta = f"{(p - b) / b * 100.0:+7.1f}%" if b else "    n/a"
+        print(f"{k:<{width}}  {b:>12.3f}  {p:>12.3f}  {delta:>8}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

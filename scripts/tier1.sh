@@ -14,8 +14,10 @@
 #   lint   rustfmt --check, clippy (default features), clippy (pjrt feature)
 #   build  cargo build --release, cargo check --features pjrt
 #   test   cargo test -q
-#   bench  serve_throughput in smoke mode, writing BENCH_serve.json at the
-#          repo root (the artifact CI uploads to track the perf trajectory)
+#   bench  serve_throughput + train_step in smoke mode, writing
+#          BENCH_serve.json and BENCH_train.json at the repo root (CI
+#          uploads them and diffs them against the base branch via
+#          scripts/bench_compare.sh)
 
 set -euo pipefail
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
@@ -63,6 +65,10 @@ run_bench() {
     echo "== tier1: serve bench smoke (BENCH_serve.json) =="
     cargo bench --bench serve_throughput -- --smoke --json "$repo_root/BENCH_serve.json"
     echo "tier1: wrote $repo_root/BENCH_serve.json"
+
+    echo "== tier1: train bench smoke (BENCH_train.json) =="
+    cargo bench --bench train_step -- --smoke --json "$repo_root/BENCH_train.json"
+    echo "tier1: wrote $repo_root/BENCH_train.json"
 }
 
 case "$stage" in
