@@ -1,0 +1,214 @@
+//! Rank-transition benchmark: what a live grow/shrink costs, and how fast
+//! training recovers after one.
+//!
+//! Two measurements per schedule milestone (the paper-sweep-inspired
+//! 32 → 64 → 128 ladder in full mode):
+//! * **resize latency** — wall time of `NativeTrainer::set_layer_rank` for
+//!   a grow (orthonormal-complement column append + Adam moment resize)
+//!   and for the matching shrink back, per layer;
+//! * **steps-to-recover** — grow is an exact continuation (the loss at the
+//!   transition step is unchanged — asserted here, not assumed), so
+//!   "recovery" is measured as the number of steps until the training loss
+//!   drops below the best loss seen before the transition, i.e. until the
+//!   new capacity starts paying for itself.
+//!
+//! Run: `cargo bench --bench rank_transition`
+//! Flags: `--smoke` (tiny shape — the CI mode; also via `SCT_BENCH_SMOKE`)
+//! and `--json PATH` (write `BENCH_rank.json` for the CI trajectory diff).
+
+use std::time::Instant;
+
+use sct::json_obj;
+use sct::serve::EngineConfig;
+use sct::train::{NativeTrainConfig, NativeTrainer};
+use sct::util::bench::{table_header, table_row};
+use sct::util::json::Json;
+use sct::util::rng::Rng;
+
+#[derive(Clone, Copy)]
+struct Workload {
+    /// Rank ladder: train at ranks[0], grow to ranks[1], ... each for
+    /// `steps_per_stage` steps.
+    ranks: &'static [usize],
+    d_model: usize,
+    d_ffn: usize,
+    n_heads: usize,
+    batch: usize,
+    seq_len: usize,
+    steps_per_stage: usize,
+    /// Timed resize repetitions per milestone.
+    resize_reps: usize,
+}
+
+const FULL: Workload = Workload {
+    ranks: &[32, 64, 128],
+    d_model: 256,
+    d_ffn: 512,
+    n_heads: 8,
+    batch: 4,
+    seq_len: 32,
+    steps_per_stage: 12,
+    resize_reps: 8,
+};
+
+const SMOKE: Workload = Workload {
+    ranks: &[4, 8, 12],
+    d_model: 64,
+    d_ffn: 128,
+    n_heads: 4,
+    batch: 2,
+    seq_len: 16,
+    steps_per_stage: 4,
+    resize_reps: 3,
+};
+
+fn median_ms(samples: &mut [f64]) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = argv.iter().any(|a| a == "--smoke") || std::env::var("SCT_BENCH_SMOKE").is_ok();
+    let json_path =
+        argv.iter().position(|a| a == "--json").and_then(|i| argv.get(i + 1).cloned());
+    let w = if smoke { SMOKE } else { FULL };
+
+    println!(
+        "rank transitions{}: d_model={}, d_ffn={}, 2 layers, ladder {:?}, {} steps/stage",
+        if smoke { " [smoke]" } else { "" },
+        w.d_model,
+        w.d_ffn,
+        w.ranks,
+        w.steps_per_stage,
+    );
+
+    let cfg = NativeTrainConfig {
+        model: EngineConfig {
+            vocab: 256,
+            d_model: w.d_model,
+            n_layers: 2,
+            n_heads: w.n_heads,
+            d_ffn: w.d_ffn,
+            rank: w.ranks[0],
+            max_seq: w.seq_len.max(2),
+            tied: true,
+        },
+        batch: w.batch,
+        seq_len: w.seq_len,
+        grad_clip: 1.0,
+        retract_every: 1,
+        weight_decay: 0.0,
+    };
+
+    // -- resize latency: repeated grow/shrink on a throwaway trainer --------
+    table_header(
+        "Resize latency (per layer, gate+up+down + Adam moments)",
+        &["transition", "grow ms", "shrink ms"],
+    );
+    let mut latency_rows: Vec<Json> = Vec::new();
+    for pair in w.ranks.windows(2) {
+        let (from, to) = (pair[0], pair[1]);
+        let mut trainer = NativeTrainer::new(cfg, 0);
+        let mut rng = Rng::new(42);
+        trainer.set_layer_rank(0, from, &mut rng).expect("seed rank");
+        let (mut grow_ms, mut shrink_ms) = (Vec::new(), Vec::new());
+        for _ in 0..w.resize_reps {
+            let t0 = Instant::now();
+            trainer.set_layer_rank(0, to, &mut rng).expect("grow");
+            grow_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            let t1 = Instant::now();
+            trainer.set_layer_rank(0, from, &mut rng).expect("shrink");
+            shrink_ms.push(t1.elapsed().as_secs_f64() * 1e3);
+        }
+        let (g, s) = (median_ms(&mut grow_ms), median_ms(&mut shrink_ms));
+        table_row(&[format!("{from}->{to}"), format!("{g:.3}"), format!("{s:.3}")]);
+        latency_rows.push(json_obj![
+            ("from", from),
+            ("to", to),
+            ("grow_ms", g),
+            ("shrink_ms", s),
+        ]);
+    }
+
+    // -- steps-to-recover across the ladder ---------------------------------
+    table_header(
+        "Grow continuity + recovery across the ladder",
+        &["transition", "loss before", "|delta| at transition", "steps to recover"],
+    );
+    let mut trainer = NativeTrainer::new(cfg, 1);
+    let mut rng = Rng::new(7);
+    let window = w.batch * (w.seq_len + 1);
+    // deterministic learnable stream: token = (step + row*3 + col) % 16
+    let mut step_no = 0usize;
+    let mut batch = move || -> Vec<i32> {
+        step_no += 1;
+        (0..window)
+            .map(|i| {
+                let (row, col) = (i / (w.seq_len + 1), i % (w.seq_len + 1));
+                ((step_no + row * 3 + col) % 16) as i32
+            })
+            .collect()
+    };
+    let mut recovery_rows: Vec<Json> = Vec::new();
+    let mut best = f32::INFINITY;
+    for _ in 0..w.steps_per_stage {
+        let (l, _) = trainer.train_step(&batch(), 3e-3, 3e-3);
+        best = best.min(l);
+    }
+    for &to in &w.ranks[1..] {
+        let from = trainer.layer_ranks()[0];
+        let probe = batch();
+        let before = trainer.eval_loss(&probe);
+        for layer in 0..2 {
+            trainer.set_layer_rank(layer, to, &mut rng).expect("ladder grow");
+        }
+        let after = trainer.eval_loss(&probe);
+        let delta = (after - before).abs();
+        assert!(delta <= 1e-5, "grow must be loss-continuous (delta {delta})");
+        let mut recover_steps = 0usize;
+        let mut recovered = false;
+        for s in 0..w.steps_per_stage {
+            let (l, _) = trainer.train_step(&batch(), 3e-3, 3e-3);
+            if !recovered && l < best {
+                recover_steps = s + 1;
+                recovered = true;
+            }
+            best = best.min(l);
+        }
+        let recover_str = if recovered {
+            format!("{recover_steps}")
+        } else {
+            format!(">{}", w.steps_per_stage)
+        };
+        table_row(&[
+            format!("{from}->{to}"),
+            format!("{before:.4}"),
+            format!("{delta:.1e}"),
+            recover_str,
+        ]);
+        recovery_rows.push(json_obj![
+            ("from", from),
+            ("to", to),
+            ("loss_before", before as f64),
+            ("transition_delta", delta as f64),
+            ("recovered", recovered),
+            ("steps_to_recover", recover_steps),
+        ]);
+    }
+
+    if let Some(path) = json_path {
+        let doc = json_obj![
+            ("bench", "rank_transition"),
+            ("smoke", smoke),
+            ("d_model", w.d_model),
+            ("d_ffn", w.d_ffn),
+            ("ladder", w.ranks.to_vec()),
+            ("steps_per_stage", w.steps_per_stage),
+            ("resize_latency", latency_rows),
+            ("recovery", recovery_rows),
+        ];
+        std::fs::write(&path, doc.to_string()).expect("writing bench JSON");
+        println!("\nwrote {path}");
+    }
+}

@@ -2,34 +2,41 @@
 //!
 //! Subcommands map onto the paper's experiments (DESIGN.md §3):
 //! * `train`        — one training run (any preset, any LR plan; the
-//!   `--backend native` pure-Rust engine needs no PJRT and its checkpoints
-//!   serve directly via `sct serve --ckpt`)
-//! * `sweep`        — Table 3 + Figures 2/3 (rank sweep, dense baseline)
+//!   `--backend native` pure-Rust engine needs no PJRT, supports live rank
+//!   transitions via `--rank-schedule` / the `[rank]` TOML section, and its
+//!   checkpoints serve directly via `sct serve --ckpt`)
+//! * `sweep`        — Table 3 + Figures 2/3 (rank sweep, dense baseline;
+//!   `--backend native` reruns the rank sweep through the pure-Rust engine)
 //! * `validate-70b` — Table 2 + Figure 1 (70B step, true factor shapes)
 //! * `finetune`     — Table 4 (dense -> 95%-energy spectral conversion)
+//! * `generate`     — sample text (`--backend native` decodes a trained
+//!   `.sct` checkpoint through the serving engine, no PJRT)
 //! * `mem-report`   — Table 1 / Figure 1 analytic memory model
+//!   (`--rank-schedule` reports peak memory across milestone ranks)
 //! * `serve`        — pure-Rust spectral inference server (KV cache +
 //!   continuous batching + chunked prefill + SSE streaming; no PJRT needed)
 //! * `info`         — list presets in the artifact manifest
 //!
-//! PJRT-backed subcommands (sweep, finetune, generate, and `train` with the
-//! default pjrt backend) need the `pjrt` feature; without it they exit with
-//! a pointer to the feature flag and to `sct train --backend native`, which
-//! runs entirely in Rust.
+//! PJRT-backed paths (finetune, and train/sweep/generate with the default
+//! pjrt backend) need the `pjrt` feature; without it they exit with a
+//! pointer to the feature flag and to the `--backend native` twins, which
+//! run entirely in Rust.
 
 use anyhow::{bail, Result};
 
 use super::config::RunConfig;
 use super::schedule::LrPlan;
+use super::sweep;
 use super::trainer::RunSummary;
 use super::validate70b;
 #[cfg(feature = "pjrt")]
-use super::{finetune, sweep};
+use super::finetune;
 use crate::memmodel::report;
 use crate::metrics::{export, Tracker};
+use crate::rank::RankPolicyConfig;
 use crate::runtime::Manifest;
 use crate::serve;
-use crate::util::args::Command;
+use crate::util::args::{Args, Command};
 
 pub fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -59,13 +66,14 @@ fn print_usage() {
     println!(
         "sct — Spectral Compact Training (paper reproduction)\n\n\
          subcommands:\n\
-         \x20 train         one training run (PJRT artifacts, or --backend native: pure Rust)\n\
-         \x20 sweep         rank sweep: Table 3 + Figures 2/3\n\
+         \x20 train         one training run (PJRT artifacts, or --backend native: pure Rust,\n\
+         \x20               with live rank transitions via --rank-schedule / [rank] TOML)\n\
+         \x20 sweep         rank sweep: Table 3 + Figures 2/3 (--backend native: no PJRT)\n\
          \x20 validate-70b  70B-step validation: Table 2 + Figure 1\n\
          \x20 finetune      gradient-integrity fine-tune: Table 4\n\
-         \x20 generate      sample text from a (trained) spectral model\n\
+         \x20 generate      sample text from a (trained) spectral model (--backend native)\n\
          \x20 serve         spectral inference server (batching + chunked prefill + SSE streaming)\n\
-         \x20 mem-report    analytic memory model: Table 1 / Figure 1\n\
+         \x20 mem-report    analytic memory model: Table 1 / Figure 1 (--rank-schedule: peak)\n\
          \x20 info          list presets in the manifest\n\n\
          `sct <subcommand> --help` for options"
     );
@@ -76,12 +84,12 @@ fn needs_pjrt(cmd: &str) -> Result<()> {
     bail!(
         "`sct {cmd}` executes AOT artifacts through PJRT, which this binary \
          was built without; rebuild with `cargo build --features pjrt`, or \
-         use the pure-Rust training engine: `sct train --backend native` \
+         use the pure-Rust twins: `sct train|sweep|generate --backend native` \
          (other pure-Rust subcommands: serve, validate-70b, mem-report, info)"
     )
 }
 
-fn base_config(args: &crate::util::args::Args) -> Result<RunConfig> {
+fn base_config(args: &Args) -> Result<RunConfig> {
     let mut cfg = RunConfig::default();
     if let Some(path) = args.get("config") {
         cfg.load_file(std::path::Path::new(path))?;
@@ -130,6 +138,11 @@ fn base_config(args: &crate::util::args::Args) -> Result<RunConfig> {
     if args.flag("untied") {
         nm.tied = false;
     }
+    // rank-transition policy (native backend): the flag declares scheduled
+    // milestones; the [rank] TOML section configures any policy.
+    if let Some(s) = args.get("rank-schedule") {
+        cfg.rank_policy = RankPolicyConfig::Schedule(RankPolicyConfig::parse_schedule(s)?);
+    }
     Ok(cfg)
 }
 
@@ -161,6 +174,12 @@ fn train_cmd_spec() -> Command {
         .opt("ffn", "FFN width, native backend [default: 192]")
         .opt("rank", "spectral rank k, native backend [default: 8]")
         .opt("max-seq", "max sequence length / RoPE table, native backend [default: 128]")
+        .opt(
+            "rank-schedule",
+            "\"step:rank,step:rank\" milestones — grow/shrink the spectral \
+             factors live at those steps, native backend (TOML: [[rank.schedule]]; \
+             adaptive tail-energy policy via the [rank] section)",
+        )
         .flag("untied", "untied LM head, native backend (default tied)")
         .flag("no-chunk", "dispatch per-step instead of fused K-step chunks (pjrt)")
         .flag("resume", "resume from newest checkpoint if present")
@@ -197,6 +216,20 @@ fn report_run(
     );
     export::append_jsonl(&out_dir.join("runs.jsonl"), &row)?;
     println!("wrote {}", csv.display());
+    // rank transitions applied by the adaptive-rank policy, one JSON row
+    // per event — the metrics surface of the `rank` subsystem
+    if !summary.rank_events.is_empty() {
+        let path = out_dir.join("rank_events.jsonl");
+        for ev in &summary.rank_events {
+            export::append_jsonl(&path, &ev.to_json())?;
+        }
+        println!(
+            "{} rank transitions (final per-layer ranks {:?}) -> {}",
+            summary.rank_events.len(),
+            summary.layer_ranks,
+            path.display()
+        );
+    }
     Ok(())
 }
 
@@ -246,23 +279,50 @@ fn cmd_train_pjrt(_cfg: RunConfig, _resume: bool) -> Result<()> {
     needs_pjrt("train")
 }
 
-#[cfg(feature = "pjrt")]
 fn cmd_sweep(argv: &[String]) -> Result<()> {
-    let spec = Command::new("sct sweep", "rank sweep (Table 3, Figures 2-3)")
+    let spec = Command::new(
+        "sct sweep",
+        "rank sweep (Table 3, Figures 2-3); --backend native reruns it \
+         through the pure-Rust engine with no PJRT",
+    )
         .opt("config", "TOML config file")
+        .opt("backend", "sweep backend: pjrt | native [default: pjrt]")
         .opt_default("steps", "steps per run", "200")
         .opt("seed", "RNG seed")
-        .opt("artifacts", "artifact root")
+        .opt("artifacts", "artifact root, pjrt backend")
         .opt("out", "output dir")
-        .flag("split-lr", "per-component LRs (the paper's §5 proposal)")
+        .opt_default("ranks", "comma-separated spectral ranks, native backend", "4,8,16,32")
+        .flag("split-lr", "per-component LRs, pjrt backend (the paper's §5 proposal)")
         .flag("quick", "small steps count for smoke runs");
     let args = spec.parse(argv)?;
     let mut cfg = base_config(&args)?;
     if args.flag("quick") {
         cfg.steps = 40;
     }
-    let presets = sweep::paper_presets(args.flag("split-lr"));
-    let result = sweep::run_sweep(&cfg, &presets)?;
+    match cfg.backend.as_str() {
+        "native" => {
+            // opt_default guarantees the value exists; req avoids a second
+            // copy of the default literal drifting from the help text
+            let ranks = args
+                .req("ranks")?
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<usize>()
+                        .map_err(|e| anyhow::anyhow!("--ranks entry {s:?}: {e}"))
+                })
+                .collect::<Result<Vec<usize>>>()?;
+            let result = sweep::run_sweep_native(&cfg, &ranks)?;
+            report_sweep(&result, &cfg)
+        }
+        "pjrt" => cmd_sweep_pjrt(cfg, args.flag("split-lr")),
+        other => bail!("unknown sweep backend {other:?} (expected \"pjrt\" or \"native\")"),
+    }
+}
+
+/// Shared tail of both sweep backends: tables, figures, observation
+/// checks, and one CSV per curve.
+fn report_sweep(result: &sweep::SweepResult, cfg: &RunConfig) -> Result<()> {
     println!("{}", sweep::render_table3(&result.rows));
     println!("{}", sweep::render_fig2(&result.curves));
     println!("{}", sweep::render_fig3(&result.rows));
@@ -283,8 +343,15 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
+fn cmd_sweep_pjrt(cfg: RunConfig, split_lr: bool) -> Result<()> {
+    let presets = sweep::paper_presets(split_lr);
+    let result = sweep::run_sweep(&cfg, &presets)?;
+    report_sweep(&result, &cfg)
+}
+
 #[cfg(not(feature = "pjrt"))]
-fn cmd_sweep(_argv: &[String]) -> Result<()> {
+fn cmd_sweep_pjrt(_cfg: RunConfig, _split_lr: bool) -> Result<()> {
     needs_pjrt("sweep")
 }
 
@@ -329,31 +396,84 @@ fn cmd_finetune(_argv: &[String]) -> Result<()> {
     needs_pjrt("finetune")
 }
 
-#[cfg(feature = "pjrt")]
 fn cmd_generate(argv: &[String]) -> Result<()> {
-    let spec = Command::new("sct generate", "sample text from a spectral model")
-        .opt_default("preset", "artifact preset", "tiny_r8")
+    let spec = Command::new(
+        "sct generate",
+        "sample text from a spectral model; --backend native decodes a \
+         `.sct` checkpoint through the serving engine with no PJRT",
+    )
+        .opt("backend", "generation backend: pjrt | native [default: pjrt]")
+        .opt_default("preset", "artifact preset, pjrt backend", "tiny_r8")
         .opt_default("prompt", "prompt text", "### Instruction: describe the rank of matrices")
         .opt_default("tokens", "tokens to generate", "48")
         .opt_default("temperature", "sampling temperature (0 = greedy)", "0.8")
         .opt_default("train-steps", "steps to train before sampling", "100")
         .opt_default("seed", "seed", "0")
-        .opt("artifacts", "artifact root")
-        .opt("ckpt", "checkpoint file to restore instead of training");
+        .opt("artifacts", "artifact root, pjrt backend")
+        .opt("ckpt", "checkpoint file to restore instead of training (.sct)");
     let args = spec.parse(argv)?;
+    match args.get_or("backend", "pjrt") {
+        "native" => cmd_generate_native(&args),
+        "pjrt" => cmd_generate_pjrt(&args),
+        other => bail!("unknown generate backend {other:?} (expected \"pjrt\" or \"native\")"),
+    }
+}
+
+/// `sct generate --backend native` — closes the ROADMAP "generate without
+/// PJRT" item: a checkpoint trained by the native engine (any per-layer
+/// rank mix) samples text straight from the CLI through `serve::Engine`'s
+/// KV-cached decode and the shared sampler.
+fn cmd_generate_native(args: &Args) -> Result<()> {
+    let seed: u64 = args.parse_num("seed", 0)?;
+    let model = if let Some(ckpt) = args.get("ckpt") {
+        let m = serve::SpectralModel::load(std::path::Path::new(ckpt))?;
+        println!("restored {ckpt} (per-layer ranks {:?})", m.layer_ranks());
+        m
+    } else {
+        let steps: usize = args.parse_num("train-steps", 100)?;
+        let tcfg = crate::train::NativeTrainConfig::default();
+        let mut trainer = crate::train::NativeTrainer::new(tcfg, seed);
+        if steps > 0 {
+            println!("training {steps} native steps so samples aren't pure noise...");
+            let (_tok, mut ds) = crate::data::build_dataset(
+                tcfg.model.vocab,
+                tcfg.batch,
+                tcfg.seq_len + 1,
+                1 << 20,
+                seed,
+            );
+            for _ in 0..steps {
+                trainer.train_step(&ds.next_batch(), 1e-3, 3e-3);
+            }
+        }
+        trainer.model
+    };
+    let tokenizer = crate::data::tokenizer_for(model.cfg.vocab, seed);
+    let engine = serve::Engine::new(model);
+    let opts = serve::SampleOpts {
+        temperature: args.parse_num("temperature", 0.8)?,
+        top_k: 40,
+        seed,
+    };
+    let prompt = args.get_or("prompt", "### Instruction:");
+    let n: usize = args.parse_num("tokens", 48)?;
+    let out = super::generate::generate_text_native(&engine, &tokenizer, prompt, n, opts)?;
+    println!("\nprompt: {prompt}\ncompletion: {out}");
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_generate_pjrt(args: &Args) -> Result<()> {
     let root = args.get_or("artifacts", "artifacts").to_string();
     let preset = args.get_or("preset", "tiny_r8");
     let seed: u64 = args.parse_num("seed", 0)?;
     let mut session = crate::runtime::Session::open(&root, preset)?;
     session.init(seed as i32)?;
 
-    // tokenizer must match the training corpus
+    // tokenizer must match the training corpus: tokenizer_for trains on the
+    // same deterministic CorpusGen(seed) stream `text` regenerates below
     let text = crate::data::CorpusGen::new(seed).generate(1 << 20);
-    let tokenizer = if session.preset.model.vocab <= 256 {
-        crate::data::Tokenizer::byte_level()
-    } else {
-        crate::data::Tokenizer::train_bpe(&text, session.preset.model.vocab)
-    };
+    let tokenizer = crate::data::tokenizer_for(session.preset.model.vocab, seed);
 
     if let Some(ckpt) = args.get("ckpt") {
         let mgr = crate::checkpoint::CheckpointManager::new(
@@ -409,7 +529,7 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn cmd_generate(_argv: &[String]) -> Result<()> {
+fn cmd_generate_pjrt(_args: &Args) -> Result<()> {
     needs_pjrt("generate")
 }
 
@@ -496,12 +616,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         model.param_count(),
     );
 
-    let tokenizer = if m.vocab <= 256 {
-        crate::data::Tokenizer::byte_level()
-    } else {
-        let text = crate::data::CorpusGen::new(seed).generate(1 << 20);
-        crate::data::Tokenizer::train_bpe(&text, m.vocab)
-    };
+    let tokenizer = crate::data::tokenizer_for(m.vocab, seed);
 
     let server = serve::Server::start(&serve_cfg, serve::Engine::new(model), tokenizer)?;
     println!(
@@ -521,10 +636,29 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 fn cmd_mem_report(argv: &[String]) -> Result<()> {
     let spec = Command::new("sct mem-report", "analytic memory model (Table 1, Figure 1)")
         .opt_default("rank", "spectral rank k", "32")
+        .opt(
+            "rank-schedule",
+            "\"step:rank,...\" milestones — report the training-memory \
+             footprint per milestone and the peak across the schedule \
+             (what a rank-scheduled run must provision for)",
+        )
         .flag("table1", "print Table 1 only")
         .flag("fig1", "print Figure 1 only")
         .flag("baselines", "include GaLore/LoRA accounting rows");
     let args = spec.parse(argv)?;
+    if let Some(sched) = args.get("rank-schedule") {
+        let milestones = RankPolicyConfig::parse_schedule(sched)?;
+        // The run spends steps at --rank before the first milestone fires,
+        // so the starting rank is part of the peak — unless a step-0
+        // milestone overrides it.
+        let mut ranks: Vec<usize> = Vec::with_capacity(milestones.len() + 1);
+        if !matches!(milestones.first(), Some(&(0, _))) {
+            ranks.push(args.parse_num("rank", 32)?);
+        }
+        ranks.extend(milestones.iter().map(|&(_, r)| r));
+        println!("{}", report::render_schedule(&ranks));
+        return Ok(());
+    }
     let k: usize = args.parse_num("rank", 32)?;
     let all = !args.flag("table1") && !args.flag("fig1");
     if args.flag("table1") || all {

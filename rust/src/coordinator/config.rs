@@ -12,6 +12,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use super::schedule::{LrPlan, Schedule};
+use crate::rank::RankPolicyConfig;
 use crate::serve::EngineConfig;
 
 /// A parsed TOML-subset document: section -> key -> raw value.
@@ -58,13 +59,28 @@ impl TomlValue {
 }
 
 /// Parse the TOML subset. Unknown syntax is an error, not a silent skip.
+///
+/// Array-of-tables headers (`[[name]]`) are supported by storing each
+/// occurrence as a section keyed `name#<index>`; read them back with
+/// [`array_sections`].
 pub fn parse_toml(text: &str) -> Result<TomlDoc> {
     let mut doc = TomlDoc::new();
     let mut section = String::new();
     doc.insert(String::new(), BTreeMap::new());
+    let mut array_counts: BTreeMap<String, usize> = BTreeMap::new();
     for (lineno, raw) in text.lines().enumerate() {
         let line = strip_comment(raw).trim().to_string();
         if line.is_empty() {
+            continue;
+        }
+        // `[[name]]` must be checked before `[name]` (the single-bracket
+        // pattern would otherwise swallow one bracket pair).
+        if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let name = name.trim();
+            let idx = array_counts.entry(name.to_string()).or_insert(0);
+            section = format!("{name}#{idx}");
+            *idx += 1;
+            doc.entry(section.clone()).or_default();
             continue;
         }
         if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
@@ -80,6 +96,21 @@ pub fn parse_toml(text: &str) -> Result<TomlDoc> {
         doc.get_mut(&section).unwrap().insert(key.trim().to_string(), value);
     }
     Ok(doc)
+}
+
+/// The tables of a `[[name]]` array, in declaration order.
+pub fn array_sections<'a>(doc: &'a TomlDoc, name: &str) -> Vec<&'a BTreeMap<String, TomlValue>> {
+    let prefix = format!("{name}#");
+    let mut found: Vec<(usize, &BTreeMap<String, TomlValue>)> = doc
+        .iter()
+        .filter_map(|(k, table)| {
+            k.strip_prefix(&prefix)
+                .and_then(|i| i.parse::<usize>().ok())
+                .map(|i| (i, table))
+        })
+        .collect();
+    found.sort_by_key(|&(i, _)| i);
+    found.into_iter().map(|(_, t)| t).collect()
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -159,6 +190,9 @@ pub struct RunConfig {
     /// Model geometry for the native backend (`[model]` TOML section /
     /// `sct train` shape flags; the pjrt path gets geometry from its preset).
     pub native_model: EngineConfig,
+    /// Rank-transition policy for the native backend (`[rank]` TOML section
+    /// + `[[rank.schedule]]` milestones, or `sct train --rank-schedule`).
+    pub rank_policy: RankPolicyConfig,
 }
 
 impl Default for RunConfig {
@@ -183,6 +217,7 @@ impl Default for RunConfig {
             batch: 8,
             seq_len: 64,
             native_model: EngineConfig::default(),
+            rank_policy: RankPolicyConfig::Fixed,
         }
     }
 }
@@ -259,6 +294,116 @@ impl RunConfig {
             if let Some(v) = m.get("tied") {
                 mm.tied = v.as_bool()?;
             }
+        }
+        // [rank] section + [[rank.schedule]] milestones: the adaptive-rank
+        // policy for the native backend.
+        //
+        // ```toml
+        // [rank]
+        // policy = "tail-energy"   # or "fixed" / "schedule"
+        // tail_frac = 0.25         # tail = ceil(tail_frac * k) smallest |s|
+        // grow_above = 0.12        # grow when tail share exceeds this
+        // shrink_below = 0.01      # shrink when tail share is below this
+        // min_rank = 2
+        // max_rank = 64
+        // check_every = 50         # decision cadence in steps
+        // step_frac = 0.25         # resize by ceil(step_frac * k) columns
+        //
+        // [[rank.schedule]]        # policy = "schedule" milestones
+        // step = 200
+        // rank = 16
+        // [[rank.schedule]]
+        // step = 800
+        // rank = 32
+        // ```
+        let milestones = {
+            let tables = array_sections(doc, "rank.schedule");
+            let mut ms = Vec::with_capacity(tables.len());
+            for t in tables {
+                let step = t
+                    .get("step")
+                    .with_context(|| "[[rank.schedule]] entry missing `step`")?
+                    .as_usize()? as u64;
+                let rank = t
+                    .get("rank")
+                    .with_context(|| "[[rank.schedule]] entry missing `rank`")?
+                    .as_usize()?;
+                if rank == 0 {
+                    bail!("[[rank.schedule]] rank must be >= 1");
+                }
+                ms.push((step, rank));
+            }
+            ms.sort_by_key(|&(s, _)| s);
+            ms
+        };
+        if let Some(r) = doc.get("rank") {
+            let policy = r.get("policy").map(|v| v.as_str()).transpose()?.unwrap_or(
+                if milestones.is_empty() { "fixed" } else { "schedule" },
+            );
+            // Declared milestones under a non-schedule policy would be
+            // silently dead config — same philosophy as the parser itself:
+            // an error, not a silent skip.
+            if !milestones.is_empty() && !matches!(policy, "schedule") {
+                bail!(
+                    "[[rank.schedule]] milestones conflict with [rank] policy = {policy:?}; \
+                     use policy = \"schedule\" or remove the milestones"
+                );
+            }
+            self.rank_policy = match policy {
+                "fixed" => RankPolicyConfig::Fixed,
+                "schedule" => {
+                    if milestones.is_empty() {
+                        bail!("[rank] policy = \"schedule\" needs [[rank.schedule]] milestones");
+                    }
+                    RankPolicyConfig::Schedule(milestones.clone())
+                }
+                "tail-energy" | "tail_energy" => {
+                    // max_rank default = usize::MAX sentinel, resolved to
+                    // the REAL min(d_model, d_ffn) by validated() at run
+                    // time — geometry here may still change under CLI
+                    // shape flags applied after this TOML pass.
+                    let mut cfg = RankPolicyConfig::tail_energy_defaults(1, usize::MAX);
+                    if let RankPolicyConfig::TailEnergy {
+                        tail_frac,
+                        grow_above,
+                        shrink_below,
+                        min_rank,
+                        max_rank,
+                        check_every,
+                        step_frac,
+                    } = &mut cfg
+                    {
+                        if let Some(v) = r.get("tail_frac") {
+                            *tail_frac = v.as_f32()?;
+                        }
+                        if let Some(v) = r.get("grow_above") {
+                            *grow_above = v.as_f32()?;
+                        }
+                        if let Some(v) = r.get("shrink_below") {
+                            *shrink_below = v.as_f32()?;
+                        }
+                        if let Some(v) = r.get("min_rank") {
+                            *min_rank = v.as_usize()?;
+                        }
+                        if let Some(v) = r.get("max_rank") {
+                            *max_rank = v.as_usize()?;
+                        }
+                        if let Some(v) = r.get("check_every") {
+                            *check_every = v.as_usize()? as u64;
+                        }
+                        if let Some(v) = r.get("step_frac") {
+                            *step_frac = v.as_f32()?;
+                        }
+                    }
+                    cfg
+                }
+                other => bail!(
+                    "[rank] policy {other:?} unknown (expected \"fixed\", \"schedule\" \
+                     or \"tail-energy\")"
+                ),
+            };
+        } else if !milestones.is_empty() {
+            self.rank_policy = RankPolicyConfig::Schedule(milestones);
         }
         // [lr] section: dense / spectral constants or cosine fields.
         if let Some(lr) = doc.get("lr") {
@@ -355,6 +500,93 @@ tied = false
         assert!(!cfg.native_model.tied);
         // untouched geometry keeps its default
         assert_eq!(cfg.native_model.vocab, 256);
+    }
+
+    #[test]
+    fn array_of_tables_parses_in_order() {
+        let text = r#"
+[[rank.schedule]]
+step = 200
+rank = 16
+[[rank.schedule]]
+step = 800
+rank = 32
+"#;
+        let doc = parse_toml(text).unwrap();
+        let tables = array_sections(&doc, "rank.schedule");
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0]["step"], TomlValue::Int(200));
+        assert_eq!(tables[1]["rank"], TomlValue::Int(32));
+        assert!(array_sections(&doc, "nope").is_empty());
+    }
+
+    #[test]
+    fn rank_schedule_section_applies() {
+        let text = r#"
+[train]
+backend = "native"
+
+[[rank.schedule]]
+step = 800
+rank = 32
+[[rank.schedule]]
+step = 200
+rank = 16
+"#;
+        let mut cfg = RunConfig::default();
+        cfg.apply_toml(&parse_toml(text).unwrap()).unwrap();
+        // milestones sorted by step regardless of declaration order
+        assert_eq!(cfg.rank_policy, RankPolicyConfig::Schedule(vec![(200, 16), (800, 32)]));
+    }
+
+    #[test]
+    fn rank_tail_energy_section_applies() {
+        let text = r#"
+[rank]
+policy = "tail-energy"
+grow_above = 0.2
+min_rank = 4
+max_rank = 48
+check_every = 25
+"#;
+        let mut cfg = RunConfig::default();
+        cfg.apply_toml(&parse_toml(text).unwrap()).unwrap();
+        match &cfg.rank_policy {
+            RankPolicyConfig::TailEnergy { grow_above, min_rank, max_rank, check_every, tail_frac, .. } => {
+                assert!((grow_above - 0.2).abs() < 1e-6);
+                assert_eq!((*min_rank, *max_rank), (4, 48));
+                assert_eq!(*check_every, 25);
+                assert!((tail_frac - 0.25).abs() < 1e-6, "untouched knob keeps its default");
+            }
+            other => panic!("expected TailEnergy, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rank_section_rejects_bad_input() {
+        let mut cfg = RunConfig::default();
+        // schedule policy without milestones
+        let doc = parse_toml("[rank]\npolicy = \"schedule\"\n").unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
+        // unknown policy name
+        let doc = parse_toml("[rank]\npolicy = \"magic\"\n").unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
+        // milestone missing a key
+        let doc = parse_toml("[[rank.schedule]]\nstep = 5\n").unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
+        // milestones under a non-schedule policy are dead config -> error
+        let doc = parse_toml(
+            "[rank]\npolicy = \"tail-energy\"\n\n[[rank.schedule]]\nstep = 5\nrank = 8\n",
+        )
+        .unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
+        // rank 0 milestone
+        let doc = parse_toml("[[rank.schedule]]\nstep = 5\nrank = 0\n").unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
+        // defaults stay Fixed when no [rank] config is present
+        let mut fresh = RunConfig::default();
+        fresh.apply_toml(&parse_toml(SAMPLE).unwrap()).unwrap();
+        assert_eq!(fresh.rank_policy, RankPolicyConfig::Fixed);
     }
 
     #[test]

@@ -7,19 +7,21 @@
 //! Table 4, [`validate70b`] = Table 2 / Fig 1). The [`cli`] exposes each as
 //! a subcommand of the `sct` launcher.
 //!
-//! Drivers that execute AOT artifacts (the pjrt `Trainer`, [`sweep`],
-//! [`finetune`], [`generate`]) require the `pjrt` feature; [`config`],
-//! [`schedule`], [`validate70b`], the native-backend
-//! [`trainer::run_native`] loop and the CLI shell are always built.
+//! Drivers that execute AOT artifacts (the pjrt `Trainer`,
+//! [`sweep::run_sweep`], [`finetune`], the AOT [`generate::Generator`])
+//! require the `pjrt` feature; [`config`], [`schedule`], [`validate70b`],
+//! the native-backend [`trainer::run_native`] loop with its adaptive-rank
+//! policies ([`crate::rank`]), the native sweep
+//! ([`sweep::run_sweep_native`]), native generation
+//! ([`generate::generate_text_native`]) and the CLI shell are always
+//! built.
 
 pub mod cli;
 pub mod config;
 #[cfg(feature = "pjrt")]
 pub mod finetune;
-#[cfg(feature = "pjrt")]
 pub mod generate;
 pub mod schedule;
-#[cfg(feature = "pjrt")]
 pub mod sweep;
 pub mod trainer;
 pub mod validate70b;

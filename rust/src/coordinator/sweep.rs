@@ -12,7 +12,9 @@ use anyhow::Result;
 
 use super::config::RunConfig;
 use super::schedule::LrPlan;
-use super::trainer::{RunSummary, Trainer};
+use super::trainer::RunSummary;
+#[cfg(feature = "pjrt")]
+use super::trainer::Trainer;
 use crate::metrics::plot;
 
 /// One Table 3 row.
@@ -34,6 +36,7 @@ pub struct SweepResult {
 }
 
 /// Run the full sweep. `presets` are (label, preset, lr_plan) triples.
+#[cfg(feature = "pjrt")]
 pub fn run_sweep(
     base: &RunConfig,
     presets: &[(String, String, LrPlan)],
@@ -52,6 +55,41 @@ pub fn run_sweep(
         let mut t = crate::metrics::Tracker::paper();
         t.record_losses(&summary.losses, 0.0);
         curves.push((label.clone(), t.smoothed_series()));
+    }
+    Ok(SweepResult { rows, curves })
+}
+
+/// The native twin of [`run_sweep`]: rerun the paper's rank-sweep protocol
+/// through the pure-Rust training engine — one `run_native` per rank, same
+/// steps, same data stream — with no PJRT and no AOT artifacts anywhere.
+/// On this path a different rank is just a different matrix width, so the
+/// sweep needs no per-rank compiled preset.
+pub fn run_sweep_native(base: &RunConfig, ranks: &[usize]) -> Result<SweepResult> {
+    let mut rows = Vec::new();
+    let mut curves = Vec::new();
+    for &k in ranks {
+        let mut cfg = base.clone();
+        cfg.backend = "native".into();
+        cfg.native_model.rank = k;
+        cfg.ckpt_dir = None; // sweep runs are throwaway measurements
+        // A [rank] policy inherited from a shared config would mutate ranks
+        // mid-run and silently falsify the per-rank rows — the sweep's whole
+        // point is holding k fixed per run.
+        cfg.rank_policy = crate::rank::RankPolicyConfig::Fixed;
+        let cap = cfg.native_model.d_model.min(cfg.native_model.d_ffn);
+        anyhow::ensure!(
+            k >= 1 && k <= cap,
+            "sweep rank {k} out of range for ({}, {})",
+            cfg.native_model.d_model,
+            cfg.native_model.d_ffn
+        );
+        let label = format!("SCT r={k}");
+        eprintln!("[sweep] {label}: native backend, steps={}", cfg.steps);
+        let (summary, _tracker) = super::trainer::run_native(&cfg, false)?;
+        rows.push(to_row(&label, crate::train::mlp_compression(&cfg.native_model), &summary));
+        let mut t = crate::metrics::Tracker::paper();
+        t.record_losses(&summary.losses, 0.0);
+        curves.push((label, t.smoothed_series()));
     }
     Ok(SweepResult { rows, curves })
 }
@@ -186,4 +224,47 @@ pub fn check_observations(rows: &[SweepRow]) -> Vec<(String, bool)> {
         ));
     }
     checks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::EngineConfig;
+
+    #[test]
+    fn native_sweep_produces_rows_curves_and_checks() {
+        let base = RunConfig {
+            steps: 4,
+            eval_every: 0,
+            ortho_every: 2,
+            corpus_bytes: 60_000,
+            batch: 2,
+            seq_len: 12,
+            native_model: EngineConfig {
+                vocab: 256,
+                d_model: 16,
+                n_layers: 1,
+                n_heads: 2,
+                d_ffn: 24,
+                rank: 3,
+                max_seq: 16,
+                tied: true,
+            },
+            ..RunConfig::default()
+        };
+        let res = run_sweep_native(&base, &[2, 4]).unwrap();
+        assert_eq!(res.rows.len(), 2);
+        assert!(res.rows[0].label.contains("r=2"));
+        assert!(res.rows.iter().all(|r| r.loss.is_finite() && r.step_ms >= 0.0));
+        // rank 4 triples hold more parameters than rank 2
+        assert!(res.rows[1].params_m > res.rows[0].params_m);
+        assert_eq!(res.curves.len(), 2);
+        assert_eq!(res.curves[0].1.len(), 4);
+        let table = render_table3(&res.rows);
+        assert!(table.contains("SCT r=4"), "{table}");
+        let checks = check_observations(&res.rows);
+        assert!(!checks.is_empty(), "same-floor observation must be computed");
+        // out-of-range rank is a clean error, not a panic
+        assert!(run_sweep_native(&base, &[17]).is_err());
+    }
 }

@@ -23,7 +23,9 @@ use super::config::RunConfig;
 use crate::checkpoint::CheckpointManager;
 use crate::data::build_dataset;
 use crate::metrics::Tracker;
+use crate::rank::{model_energy, RankEvent};
 use crate::train::{NativeTrainConfig, NativeTrainer};
+use crate::util::rng::Rng;
 
 #[cfg(feature = "pjrt")]
 use crate::data::Prefetcher;
@@ -43,6 +45,11 @@ pub struct RunSummary {
     pub eval_loss: Option<f32>,
     pub ortho_error: Option<f32>,
     pub losses: Vec<f32>,
+    /// Rank transitions applied by the configured policy (native backend;
+    /// empty under `Fixed` or on the pjrt path).
+    pub rank_events: Vec<RankEvent>,
+    /// Final per-layer MLP ranks (native backend; empty on the pjrt path).
+    pub layer_ranks: Vec<usize>,
 }
 
 // ---------------------------------------------------------------------------
@@ -98,7 +105,63 @@ pub fn run_native(cfg: &RunConfig, resume: bool) -> Result<(RunSummary, Tracker)
     let mut last_eval = None;
     let mut last_ortho = None;
 
+    // Rank-transition policy: consulted at every step boundary BEFORE the
+    // step runs. Deterministic in (seed, step), and schedule targets are a
+    // pure function of the step, so a checkpoint-resumed run applies the
+    // same transitions an uninterrupted run would. Validated against the
+    // restored model's real capacity up front — an impossible milestone
+    // fails here, not thousands of steps in.
+    let rank_cap = m.d_model.min(m.d_ffn);
+    let rank_policy_cfg = cfg.rank_policy.validated(rank_cap)?;
+    let mut rank_policy = rank_policy_cfg.build();
+    let tail_frac = rank_policy_cfg.tail_frac();
+    let mut rank_rng = Rng::new(cfg.seed ^ 0x72616e6b); // "rank"
+    let mut rank_events: Vec<RankEvent> = Vec::new();
+
     while step < cfg.steps {
+        if rank_policy.wants_stats(step as u64) {
+            // Schedule-style policies decide on (step, rank) alone — give
+            // them rank-only stats and keep the per-step boundary free of
+            // the singular-value sort the energy policy needs.
+            let stats = if rank_policy.needs_energy() {
+                model_energy(&trainer.model, tail_frac)
+            } else {
+                trainer
+                    .layer_ranks()
+                    .into_iter()
+                    .enumerate()
+                    .map(|(layer, rank)| crate::rank::LayerEnergy {
+                        layer,
+                        rank,
+                        energy: 0.0,
+                        tail_share: 0.0,
+                    })
+                    .collect()
+            };
+            for st in stats {
+                if let Some(target) = rank_policy.target(step as u64, &st) {
+                    if target != st.rank {
+                        trainer.set_layer_rank(st.layer, target, &mut rank_rng)?;
+                        eprintln!(
+                            "[rank] step {step}: layer {} {} -> {} ({}, tail {:.3})",
+                            st.layer,
+                            st.rank,
+                            target,
+                            rank_policy.name(),
+                            st.tail_share,
+                        );
+                        rank_events.push(RankEvent {
+                            step: step as u64,
+                            layer: st.layer,
+                            from: st.rank,
+                            to: target,
+                            tail_share: st.tail_share,
+                            policy: rank_policy.name(),
+                        });
+                    }
+                }
+            }
+        }
         let (ld, ls) = cfg.lr_plan.at(step);
         let tokens = dataset.next_batch();
         let t0 = Instant::now();
@@ -127,7 +190,9 @@ pub fn run_native(cfg: &RunConfig, resume: bool) -> Result<(RunSummary, Tracker)
 
     let params = trainer.model.param_count();
     let summary = RunSummary {
-        label: format!("native_d{}_r{}", m.d_model, m.rank),
+        // trainer.cfg.model.rank tracks the max layer rank through live
+        // transitions — label the run by where it ENDED, not where it began
+        label: format!("native_d{}_r{}", m.d_model, trainer.cfg.model.rank),
         params,
         steps: step,
         final_loss_smoothed: tracker.smoothed_loss(),
@@ -139,6 +204,8 @@ pub fn run_native(cfg: &RunConfig, resume: bool) -> Result<(RunSummary, Tracker)
         eval_loss: last_eval,
         ortho_error: last_ortho,
         losses: tracker.losses.clone(),
+        rank_events,
+        layer_ranks: trainer.layer_ranks(),
     };
     Ok((summary, tracker))
 }
@@ -263,6 +330,8 @@ impl Trainer {
             eval_loss: last_eval,
             ortho_error: last_ortho,
             losses: self.tracker.losses.clone(),
+            rank_events: Vec::new(),
+            layer_ranks: Vec::new(),
         })
     }
 
@@ -284,7 +353,42 @@ impl Trainer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rank::RankPolicyConfig;
     use crate::serve::EngineConfig;
+
+    #[test]
+    fn run_native_applies_a_rank_schedule() {
+        let cfg = RunConfig {
+            backend: "native".into(),
+            steps: 6,
+            eval_every: 0,
+            ortho_every: 0,
+            corpus_bytes: 60_000,
+            batch: 2,
+            seq_len: 12,
+            native_model: EngineConfig {
+                vocab: 256,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                d_ffn: 24,
+                rank: 3,
+                max_seq: 16,
+                tied: true,
+            },
+            rank_policy: RankPolicyConfig::Schedule(vec![(2, 5)]),
+            ..RunConfig::default()
+        };
+        let (summary, _) = run_native(&cfg, false).unwrap();
+        assert_eq!(summary.steps, 6);
+        assert_eq!(summary.layer_ranks, vec![5, 5], "milestone must have applied to every layer");
+        assert_eq!(summary.rank_events.len(), 2, "one event per layer");
+        for (i, ev) in summary.rank_events.iter().enumerate() {
+            assert_eq!((ev.step, ev.layer, ev.from, ev.to), (2, i, 3, 5));
+            assert_eq!(ev.policy, "schedule");
+        }
+        assert!(summary.final_loss_smoothed.is_finite());
+    }
 
     #[test]
     fn run_native_trains_and_checkpoints() {

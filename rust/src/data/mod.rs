@@ -12,6 +12,22 @@ pub use dataset::Dataset;
 pub use loader::Prefetcher;
 pub use tokenizer::Tokenizer;
 
+/// The standard tokenizer for a model vocab: byte-level when the vocab
+/// covers raw bytes, otherwise BPE trained on the deterministic synthetic
+/// corpus for `seed` — ONE definition of the `vocab <= 256` cutoff and the
+/// 1 MiB training-text budget, shared by `sct serve` and both
+/// `sct generate` backends so the selection rule cannot drift.
+/// ([`build_dataset`] keeps its own caller-sized text budget: its
+/// tokenizer must be trained on exactly the text it then encodes.)
+pub fn tokenizer_for(vocab: usize, seed: u64) -> Tokenizer {
+    if vocab <= 256 {
+        Tokenizer::byte_level()
+    } else {
+        let text = CorpusGen::new(seed).generate(1 << 20);
+        Tokenizer::train_bpe(&text, vocab)
+    }
+}
+
 /// Convenience: build a tokenized dataset for a model preset.
 ///
 /// Generates `min_bytes` of synthetic instruction text, trains a BPE

@@ -27,6 +27,12 @@
 //!   with the dense/spectral LR split, gradient clipping, and Stiefel QR
 //!   retraction every step — paper Algorithm 1 end-to-end with no PJRT,
 //!   checkpointing to the same `.sct` layout `serve` loads.
+//! * [`rank`] — the adaptive-rank subsystem: loss-continuous grow/shrink of
+//!   spectral factors during native training (orthonormal-complement column
+//!   appends with zero singular values; smallest-|s| drops), scheduled and
+//!   tail-energy-driven policies, and per-layer spectral-energy monitoring
+//!   surfaced through `metrics` — live rank transitions with no recompiled
+//!   artifact, heterogeneous per-layer ranks end to end.
 //! * [`spectral`] — pure-Rust spectral linear algebra substrate (matrix ops,
 //!   Householder QR, Jacobi SVD, AdamW, a native SpectralLinear layer) used
 //!   for baselines, property tests, true-shape 70B phase benchmarks, and
@@ -45,6 +51,7 @@ pub mod coordinator;
 pub mod data;
 pub mod memmodel;
 pub mod metrics;
+pub mod rank;
 pub mod runtime;
 pub mod serve;
 pub mod spectral;

@@ -72,6 +72,51 @@ pub fn table2_memory(k: usize) -> ModelMemory {
     ModelMemory::sct(&shape, k, SpectralScope::AllLinear, TrainRegime::AdamW)
 }
 
+/// Training memory per milestone of a rank schedule, at the 70B validation
+/// geometry: one `(rank, memory)` row per milestone rank, in schedule
+/// order. With the `rank` subsystem a run no longer has ONE footprint — it
+/// has one per milestone, and provisioning must cover the max.
+pub fn schedule_memory(ranks: &[usize]) -> Vec<(usize, ModelMemory)> {
+    let shape = validation_70b();
+    ranks
+        .iter()
+        .map(|&k| (k, ModelMemory::sct(&shape, k, SpectralScope::AllLinear, TrainRegime::AdamW)))
+        .collect()
+}
+
+/// Render the rank-schedule-aware memory report: per-milestone footprints
+/// and the peak (the provisioning number), vs the dense bar.
+pub fn render_schedule(ranks: &[usize]) -> String {
+    let rows = schedule_memory(ranks);
+    let shape = validation_70b();
+    let dense = ModelMemory::dense(&shape, TrainRegime::AdamW);
+    let mut out = String::new();
+    out.push_str("Rank-schedule training memory at the 70B validation geometry\n");
+    out.push_str("| Milestone | Rank | Spectral params | Train state |\n");
+    out.push_str("|---|---|---|---|\n");
+    for (i, (k, m)) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "| {} | {} | {:.0}M | {:.2} GB |\n",
+            i,
+            k,
+            m.trainable_params as f64 / 1e6,
+            m.gb()
+        ));
+    }
+    let (peak_k, peak) = rows
+        .iter()
+        .max_by(|a, b| a.1.total_bytes.cmp(&b.1.total_bytes))
+        .map(|(k, m)| (*k, m.gb()))
+        .unwrap_or((0, 0.0));
+    out.push_str(&format!(
+        "peak over the schedule: {peak:.2} GB at rank {peak_k} \
+         ({:.0}x below dense {:.0} GB) — provision for the peak, not the start\n",
+        dense.gb() / peak.max(1e-9),
+        dense.gb(),
+    ));
+    out
+}
+
 /// Baseline comparison rows used by the extended figure (not in the paper's
 /// tables but cited in its Related Work): GaLore- and LoRA-style accounting
 /// on the 70B MLP stack.
@@ -115,6 +160,21 @@ mod tests {
         assert!((ratio - 172.0).abs() < 2.0, "paper: 172x, got {ratio:.1}");
         let s = render_fig1(32);
         assert!(s.contains("less memory than dense training"), "{s}");
+    }
+
+    #[test]
+    fn schedule_peak_is_the_max_milestone() {
+        let rows = schedule_memory(&[32, 64, 128]);
+        assert_eq!(rows.len(), 3);
+        // memory grows monotonically with rank, so the peak is the last row
+        assert!(rows[0].1.total_bytes < rows[1].1.total_bytes);
+        assert!(rows[1].1.total_bytes < rows[2].1.total_bytes);
+        let s = render_schedule(&[32, 64, 128]);
+        assert!(s.contains("at rank 128"), "{s}");
+        assert!(s.contains("provision for the peak"), "{s}");
+        // rank 32 milestone matches the static Table 2 number
+        let static32 = table2_memory(32);
+        assert_eq!(rows[0].1.total_bytes, static32.total_bytes);
     }
 
     #[test]

@@ -1,0 +1,44 @@
+//! `rank` — the adaptive-rank subsystem: live grow/shrink of spectral
+//! factors during native training, under scheduled or energy-driven
+//! policies.
+//!
+//! The paper's rank sweep (§4.2: ranks 32–256 all reaching the same loss
+//! floor) makes static rank choice look uninteresting — the useful axis is
+//! *changing* rank during training. On the native Rust path a rank change
+//! is a plain matrix resize (no recompiled PJRT artifact), so transitions
+//! are cheap enough to apply at step boundaries.
+//!
+//! Pieces:
+//! * [`resize`] — the mechanics: loss-continuous **grow** (append
+//!   orthonormal-complement columns to U/V — the CGS2 construction of the
+//!   QR retraction, restricted to new columns — with zero-initialized
+//!   singular values, so the forward is bit-identical across the
+//!   transition) and **shrink** (drop the smallest-|s| columns, truncated-
+//!   SVD semantics). [`resize::RankResize`] reports the kept-column set so
+//!   `AdamW::{grow_cols, select_cols}` can resize the optimizer moments in
+//!   lockstep.
+//! * [`policy`] — the [`policy::RankPolicy`] trait and its three
+//!   implementations: [`policy::Fixed`] (static), [`policy::StepSchedule`]
+//!   (`[[rank.schedule]]` TOML milestones / `--rank-schedule`), and
+//!   [`policy::TailEnergy`] (per-layer adaptive: grow when the smallest
+//!   singular values carry more than a threshold share of spectral energy,
+//!   shrink when they are dead weight).
+//! * [`monitor`] — per-layer spectral/tail-energy stats
+//!   ([`monitor::LayerEnergy`]) that feed the adaptive policy, and
+//!   [`monitor::RankEvent`] records surfaced through the metrics layer
+//!   (`rank_events.jsonl` next to the loss CSVs).
+//!
+//! Wiring: `train::NativeTrainer::set_layer_rank` applies a transition to
+//! one layer (all three MLP triples + Adam moments); the
+//! `coordinator::trainer::run_native` loop consults the configured policy
+//! at every step boundary; heterogeneous per-layer ranks round-trip
+//! through the `.sct` `model/meta` tensor so checkpoints written
+//! mid-schedule train on, and serve, unchanged.
+
+pub mod monitor;
+pub mod policy;
+pub mod resize;
+
+pub use monitor::{layer_energy, model_energy, LayerEnergy, RankEvent};
+pub use policy::{Fixed, RankPolicy, RankPolicyConfig, StepSchedule, TailEnergy};
+pub use resize::{grow_triple, resize_triple, shrink_triple, RankResize};

@@ -1,0 +1,173 @@
+//! Per-layer spectral-energy monitoring — the measurement side of adaptive
+//! rank. The energy-driven policy ([`super::policy::TailEnergy`]) and the
+//! metrics surface both read [`LayerEnergy`] rows produced here.
+//!
+//! For a triple `W = U diag(s) Vᵀ` with orthonormal factors, `sum(s_i^2)`
+//! is exactly `||W||_F^2` — the spectral energy — and the share carried by
+//! the smallest entries (the *tail*) tells whether the layer is using its
+//! full rank budget: a heavy tail means every direction carries signal
+//! (the layer is rank-starved, grow), a near-zero tail means the last
+//! directions are dead weight (shrink). This is the same energy criterion
+//! the paper uses for its 95%-retention dense→spectral conversion, turned
+//! into a live training signal.
+
+use crate::json_obj;
+use crate::serve::engine::{LayerWeights, SpectralModel};
+use crate::util::json::Json;
+
+/// Spectral-energy snapshot of one decoder layer (its gate/up/down triples
+/// share one rank by construction).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerEnergy {
+    pub layer: usize,
+    /// Current rank k of the layer's MLP triples.
+    pub rank: usize,
+    /// Total spectral energy `sum s_i^2` across the three triples.
+    pub energy: f32,
+    /// Fraction of energy carried by the tail (the `ceil(tail_frac * k)`
+    /// smallest-|s| entries), maximized over the three triples — the
+    /// grow/shrink signal. In `[0, 1]`.
+    pub tail_share: f32,
+}
+
+/// Tail share of one triple: energy fraction of the `tail_count`
+/// smallest-|s| entries.
+fn triple_tail_share(s: &[f32], tail_frac: f32) -> (f32, f32) {
+    let k = s.len();
+    let mut e: Vec<f64> = s.iter().map(|&x| (x as f64) * (x as f64)).collect();
+    let total: f64 = e.iter().sum();
+    if total <= 0.0 {
+        return (0.0, 0.0);
+    }
+    e.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let tail_count = ((tail_frac as f64 * k as f64).ceil() as usize).clamp(1, k);
+    let tail: f64 = e[..tail_count].iter().sum();
+    (total as f32, (tail / total) as f32)
+}
+
+/// Energy stats for one layer at the given tail fraction.
+pub fn layer_energy(idx: usize, layer: &LayerWeights, tail_frac: f32) -> LayerEnergy {
+    let mut energy = 0.0f32;
+    let mut tail_share = 0.0f32;
+    for sl in [&layer.gate, &layer.up, &layer.down] {
+        let (e, t) = triple_tail_share(&sl.s, tail_frac);
+        energy += e;
+        tail_share = tail_share.max(t);
+    }
+    LayerEnergy { layer: idx, rank: layer.gate.k(), energy, tail_share }
+}
+
+/// Energy stats for every layer of the model.
+pub fn model_energy(model: &SpectralModel, tail_frac: f32) -> Vec<LayerEnergy> {
+    model
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| layer_energy(i, l, tail_frac))
+        .collect()
+}
+
+/// One applied rank transition — what the training loop records every time
+/// a policy changes a layer's rank.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankEvent {
+    /// Optimizer step at whose boundary the transition was applied.
+    pub step: u64,
+    pub layer: usize,
+    pub from: usize,
+    pub to: usize,
+    /// The layer's tail share when the decision was made.
+    pub tail_share: f32,
+    /// Name of the policy that requested the change.
+    pub policy: &'static str,
+}
+
+impl RankEvent {
+    /// JSON row for `rank_events.jsonl` (written next to the loss CSVs by
+    /// the CLI, one object per transition — the metrics surface).
+    pub fn to_json(&self) -> Json {
+        json_obj![
+            ("step", self.step as usize),
+            ("layer", self.layer),
+            ("from", self.from),
+            ("to", self.to),
+            ("tail_share", self.tail_share as f64),
+            ("policy", self.policy),
+        ]
+    }
+}
+
+/// One energy snapshot as a JSON row (step + per-layer rank/energy/tail).
+pub fn energy_json(step: u64, stats: &[LayerEnergy]) -> Json {
+    let layers: Vec<Json> = stats
+        .iter()
+        .map(|e| {
+            json_obj![
+                ("layer", e.layer),
+                ("rank", e.rank),
+                ("energy", e.energy as f64),
+                ("tail_share", e.tail_share as f64),
+            ]
+        })
+        .collect();
+    json_obj![("step", step as usize), ("layers", layers)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::EngineConfig;
+
+    #[test]
+    fn tail_share_math() {
+        // 4 entries, energies 100, 1, 1, 1 -> tail_frac 0.25 keeps 1 entry
+        let s = [10.0f32, 1.0, 1.0, 1.0];
+        let (e, t) = triple_tail_share(&s, 0.25);
+        assert!((e - 103.0).abs() < 1e-4);
+        assert!((t - 1.0 / 103.0).abs() < 1e-6);
+        // tail_frac 0.5 -> 2 entries
+        let (_, t2) = triple_tail_share(&s, 0.5);
+        assert!((t2 - 2.0 / 103.0).abs() < 1e-6);
+        // all-zero spectrum is defined as zero share
+        assert_eq!(triple_tail_share(&[0.0, 0.0], 0.5), (0.0, 0.0));
+        // rank 1: the tail is the whole spectrum
+        let (_, t3) = triple_tail_share(&[2.0], 0.25);
+        assert!((t3 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn model_energy_covers_every_layer() {
+        let cfg = EngineConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 3,
+            n_heads: 2,
+            d_ffn: 24,
+            rank: 4,
+            max_seq: 16,
+            tied: true,
+        };
+        let model = SpectralModel::init(cfg, 0);
+        let stats = model_energy(&model, 0.25);
+        assert_eq!(stats.len(), 3);
+        for (i, e) in stats.iter().enumerate() {
+            assert_eq!(e.layer, i);
+            assert_eq!(e.rank, 4);
+            assert!(e.energy > 0.0);
+            // flat init spectrum: tail of 1-of-4 equal entries carries 1/4
+            // of one triple's energy
+            assert!((e.tail_share - 0.25).abs() < 1e-3, "flat spectrum share {}", e.tail_share);
+        }
+    }
+
+    #[test]
+    fn event_json_round_trips() {
+        let ev = RankEvent { step: 40, layer: 1, from: 8, to: 16, tail_share: 0.2, policy: "tail-energy" };
+        let j = ev.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("from").unwrap(), &Json::Num(8.0));
+        assert_eq!(parsed.get("policy").unwrap(), &Json::Str("tail-energy".into()));
+        let snap = energy_json(3, &[LayerEnergy { layer: 0, rank: 4, energy: 1.0, tail_share: 0.5 }]);
+        assert!(snap.to_string().contains("tail_share"));
+    }
+}

@@ -1,0 +1,409 @@
+//! Rank-transition policies: who decides a layer's rank, and when.
+//!
+//! A [`RankPolicy`] is consulted by the native training loop at every step
+//! boundary with the layer's current [`LayerEnergy`] stats; returning
+//! `Some(k)` asks the trainer to resize that layer to rank `k` before the
+//! step runs. Three implementations:
+//!
+//! * [`Fixed`] — never changes anything (the paper's static-rank protocol).
+//! * [`StepSchedule`] — TOML-declared milestones (`[[rank.schedule]]` with
+//!   `step`/`rank` keys, or `--rank-schedule "100:16,400:32"`). The target
+//!   at step `t` is the latest milestone with `step <= t`, which makes the
+//!   policy a pure function of the step — a resumed run lands on the same
+//!   rank an uninterrupted run would have.
+//! * [`TailEnergy`] — per-layer adaptive (the Swift-SVD / AdaSVD
+//!   direction): every `check_every` steps, grow a layer whose smallest
+//!   singular values still carry more than `grow_above` of its spectral
+//!   energy (every direction is loaded — the layer is rank-starved), and
+//!   shrink one whose tail carries less than `shrink_below` (capacity is
+//!   sitting idle). Targets are clamped to `[min_rank, max_rank]` and move
+//!   by `ceil(step_frac * k)` columns at a time so one noisy snapshot
+//!   cannot whiplash the factor sizes.
+//!
+//! [`RankPolicyConfig`] is the serializable description the config layer
+//! produces (TOML / CLI) and [`RankPolicyConfig::build`] turns into a live
+//! policy for the run.
+
+use anyhow::{bail, Context, Result};
+
+use super::monitor::LayerEnergy;
+
+/// A rank-transition decision maker. Implementations must be deterministic
+/// in `(step, stats)` so checkpoint-resumed runs behave identically.
+pub trait RankPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Target rank for the layer described by `stats` at the boundary
+    /// before `step` executes; `None` means keep the current rank.
+    fn target(&mut self, step: u64, stats: &LayerEnergy) -> Option<usize>;
+
+    /// Whether this policy needs energy stats at `step` — lets the trainer
+    /// skip the per-layer spectrum scan on steps with no decision.
+    fn wants_stats(&self, step: u64) -> bool {
+        let _ = step;
+        true
+    }
+
+    /// Whether decisions read `energy`/`tail_share` at all. Schedule-style
+    /// policies only compare ranks, so the trainer can hand them cheap
+    /// rank-only stats instead of sorting every singular-value vector at
+    /// every post-milestone step boundary.
+    fn needs_energy(&self) -> bool {
+        true
+    }
+}
+
+/// Static rank — the identity policy.
+#[derive(Debug, Clone, Default)]
+pub struct Fixed;
+
+impl RankPolicy for Fixed {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn target(&mut self, _step: u64, _stats: &LayerEnergy) -> Option<usize> {
+        None
+    }
+
+    fn wants_stats(&self, _step: u64) -> bool {
+        false
+    }
+
+    fn needs_energy(&self) -> bool {
+        false
+    }
+}
+
+/// Scheduled transitions: `(step, rank)` milestones, sorted by step.
+#[derive(Debug, Clone)]
+pub struct StepSchedule {
+    milestones: Vec<(u64, usize)>,
+}
+
+impl StepSchedule {
+    pub fn new(mut milestones: Vec<(u64, usize)>) -> StepSchedule {
+        milestones.sort_by_key(|&(s, _)| s);
+        StepSchedule { milestones }
+    }
+}
+
+impl RankPolicy for StepSchedule {
+    fn name(&self) -> &'static str {
+        "schedule"
+    }
+
+    fn target(&mut self, step: u64, stats: &LayerEnergy) -> Option<usize> {
+        self.milestones
+            .iter()
+            .rev()
+            .find(|&&(s, _)| s <= step)
+            .map(|&(_, k)| k)
+            .filter(|&k| k != stats.rank)
+    }
+
+    fn wants_stats(&self, step: u64) -> bool {
+        // stats are only needed to compare against the current rank; the
+        // trainer's scan is cheap but skippable before the first milestone
+        self.milestones.first().is_some_and(|&(s, _)| step >= s)
+    }
+
+    /// Schedule targets depend only on the step and current rank — no
+    /// spectrum scan needed.
+    fn needs_energy(&self) -> bool {
+        false
+    }
+}
+
+/// Per-layer adaptive policy driven by tail spectral energy.
+#[derive(Debug, Clone)]
+pub struct TailEnergy {
+    pub tail_frac: f32,
+    pub grow_above: f32,
+    pub shrink_below: f32,
+    pub min_rank: usize,
+    pub max_rank: usize,
+    pub check_every: u64,
+    pub step_frac: f32,
+}
+
+impl TailEnergy {
+    fn delta(&self, k: usize) -> usize {
+        ((self.step_frac * k as f32).ceil() as usize).max(1)
+    }
+}
+
+impl RankPolicy for TailEnergy {
+    fn name(&self) -> &'static str {
+        "tail-energy"
+    }
+
+    fn target(&mut self, step: u64, stats: &LayerEnergy) -> Option<usize> {
+        if !self.wants_stats(step) {
+            return None;
+        }
+        let k = stats.rank;
+        if stats.tail_share > self.grow_above && k < self.max_rank {
+            return Some((k + self.delta(k)).min(self.max_rank));
+        }
+        if stats.tail_share < self.shrink_below && k > self.min_rank {
+            return Some(k.saturating_sub(self.delta(k)).max(self.min_rank));
+        }
+        None
+    }
+
+    fn wants_stats(&self, step: u64) -> bool {
+        // step 0 is the random init (its spectrum is flat by construction,
+        // not informative); decide only on trained spectra.
+        step > 0 && step % self.check_every == 0
+    }
+}
+
+/// Serializable policy description — what `[rank]` TOML / CLI flags parse
+/// into and `RunConfig` carries.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum RankPolicyConfig {
+    #[default]
+    Fixed,
+    Schedule(Vec<(u64, usize)>),
+    TailEnergy {
+        tail_frac: f32,
+        grow_above: f32,
+        shrink_below: f32,
+        min_rank: usize,
+        max_rank: usize,
+        check_every: u64,
+        step_frac: f32,
+    },
+}
+
+impl RankPolicyConfig {
+    /// The default adaptive knobs (`[rank] policy = "tail-energy"` with no
+    /// overrides): check every 50 steps, quarter-spectrum tail, grow above
+    /// 12% tail share, shrink below 1%, quarter-rank increments. Pass
+    /// `usize::MAX` as `max_rank` to mean "up to the model's capacity" —
+    /// [`RankPolicyConfig::validated`] clamps it to the real
+    /// `min(d_model, d_ffn)` at run time, AFTER every geometry flag has
+    /// been applied.
+    pub fn tail_energy_defaults(min_rank: usize, max_rank: usize) -> RankPolicyConfig {
+        RankPolicyConfig::TailEnergy {
+            tail_frac: 0.25,
+            grow_above: 0.12,
+            shrink_below: 0.01,
+            min_rank,
+            max_rank,
+            check_every: 50,
+            step_frac: 0.25,
+        }
+    }
+
+    /// Parse a `"step:rank,step:rank"` schedule string (the
+    /// `--rank-schedule` flag wire format).
+    pub fn parse_schedule(text: &str) -> Result<Vec<(u64, usize)>> {
+        let mut out = Vec::new();
+        for part in text.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (step, rank) = part
+                .split_once(':')
+                .with_context(|| format!("milestone {part:?}: expected \"step:rank\""))?;
+            let step: u64 = step.trim().parse().with_context(|| format!("bad step in {part:?}"))?;
+            let rank: usize =
+                rank.trim().parse().with_context(|| format!("bad rank in {part:?}"))?;
+            if rank == 0 {
+                bail!("milestone {part:?}: rank must be >= 1");
+            }
+            out.push((step, rank));
+        }
+        if out.is_empty() {
+            bail!("empty rank schedule");
+        }
+        out.sort_by_key(|&(s, _)| s);
+        Ok(out)
+    }
+
+    /// Check this policy against the model's rank capacity
+    /// `cap = min(d_model, d_ffn)` and return the run-ready config —
+    /// called by the training loop BEFORE the first step, so a milestone
+    /// that could never apply fails fast instead of aborting the run
+    /// thousands of steps in at the milestone boundary.
+    ///
+    /// Schedule milestones out of `1..=cap` are an error. A `TailEnergy`
+    /// `max_rank` above `cap` is clamped rather than rejected: the default
+    /// knobs bake in the geometry known at config-parse time, which CLI
+    /// shape flags may later shrink.
+    pub fn validated(&self, cap: usize) -> Result<RankPolicyConfig> {
+        match self {
+            RankPolicyConfig::Fixed => Ok(RankPolicyConfig::Fixed),
+            RankPolicyConfig::Schedule(ms) => {
+                for &(step, rank) in ms {
+                    if !(1..=cap).contains(&rank) {
+                        bail!(
+                            "rank schedule milestone {step}:{rank} out of range for this \
+                             model (min(d_model, d_ffn) = {cap})"
+                        );
+                    }
+                }
+                Ok(RankPolicyConfig::Schedule(ms.clone()))
+            }
+            RankPolicyConfig::TailEnergy {
+                tail_frac,
+                grow_above,
+                shrink_below,
+                min_rank,
+                max_rank,
+                check_every,
+                step_frac,
+            } => {
+                let min_rank = (*min_rank).max(1);
+                let max_rank = (*max_rank).min(cap);
+                if min_rank > max_rank {
+                    bail!(
+                        "[rank] min_rank {min_rank} exceeds max_rank {max_rank} \
+                         (capacity min(d_model, d_ffn) = {cap})"
+                    );
+                }
+                Ok(RankPolicyConfig::TailEnergy {
+                    tail_frac: *tail_frac,
+                    grow_above: *grow_above,
+                    shrink_below: *shrink_below,
+                    min_rank,
+                    max_rank,
+                    check_every: *check_every,
+                    step_frac: *step_frac,
+                })
+            }
+        }
+    }
+
+    /// The tail fraction the monitor should use when computing stats for
+    /// this policy (policies without an energy criterion use the default).
+    pub fn tail_frac(&self) -> f32 {
+        match self {
+            RankPolicyConfig::TailEnergy { tail_frac, .. } => *tail_frac,
+            _ => 0.25,
+        }
+    }
+
+    /// Instantiate the live policy.
+    pub fn build(&self) -> Box<dyn RankPolicy> {
+        match self {
+            RankPolicyConfig::Fixed => Box::new(Fixed),
+            RankPolicyConfig::Schedule(m) => Box::new(StepSchedule::new(m.clone())),
+            RankPolicyConfig::TailEnergy {
+                tail_frac,
+                grow_above,
+                shrink_below,
+                min_rank,
+                max_rank,
+                check_every,
+                step_frac,
+            } => Box::new(TailEnergy {
+                tail_frac: *tail_frac,
+                grow_above: *grow_above,
+                shrink_below: *shrink_below,
+                min_rank: (*min_rank).max(1),
+                max_rank: *max_rank,
+                check_every: (*check_every).max(1),
+                step_frac: *step_frac,
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(rank: usize, tail_share: f32) -> LayerEnergy {
+        LayerEnergy { layer: 0, rank, energy: 1.0, tail_share }
+    }
+
+    #[test]
+    fn fixed_never_moves() {
+        let mut p = Fixed;
+        assert_eq!(p.target(100, &stats(8, 0.9)), None);
+        assert!(!p.wants_stats(100));
+    }
+
+    #[test]
+    fn schedule_applies_latest_milestone_at_or_before_step() {
+        let mut p = StepSchedule::new(vec![(200, 32), (50, 16)]);
+        assert_eq!(p.target(0, &stats(8, 0.0)), None, "before the first milestone");
+        assert!(!p.wants_stats(0));
+        assert_eq!(p.target(50, &stats(8, 0.0)), Some(16));
+        assert_eq!(p.target(120, &stats(16, 0.0)), None, "already at target");
+        assert_eq!(p.target(200, &stats(16, 0.0)), Some(32));
+        // resume semantics: a run restarted at step 500 jumps straight to 32
+        assert_eq!(p.target(500, &stats(8, 0.0)), Some(32));
+    }
+
+    #[test]
+    fn tail_energy_grows_and_shrinks_with_clamps() {
+        let mut p = TailEnergy {
+            tail_frac: 0.25,
+            grow_above: 0.12,
+            shrink_below: 0.01,
+            min_rank: 4,
+            max_rank: 32,
+            check_every: 10,
+            step_frac: 0.25,
+        };
+        // off-cadence steps decide nothing
+        assert_eq!(p.target(7, &stats(8, 0.9)), None);
+        assert_eq!(p.target(0, &stats(8, 0.9)), None, "step 0 is the flat init");
+        // heavy tail -> grow by ceil(0.25 * 8) = 2
+        assert_eq!(p.target(10, &stats(8, 0.5)), Some(10));
+        // dead tail -> shrink by 2
+        assert_eq!(p.target(10, &stats(8, 0.001)), Some(6));
+        // in the comfort band -> keep
+        assert_eq!(p.target(10, &stats(8, 0.05)), None);
+        // clamped at both ends
+        assert_eq!(p.target(10, &stats(31, 0.5)), Some(32));
+        assert_eq!(p.target(10, &stats(32, 0.5)), None);
+        assert_eq!(p.target(10, &stats(5, 0.001)), Some(4));
+        assert_eq!(p.target(10, &stats(4, 0.001)), None);
+    }
+
+    #[test]
+    fn parse_schedule_forms() {
+        assert_eq!(
+            RankPolicyConfig::parse_schedule("100:16, 400:32").unwrap(),
+            vec![(100, 16), (400, 32)]
+        );
+        // unsorted input is sorted
+        assert_eq!(
+            RankPolicyConfig::parse_schedule("400:32,100:16").unwrap(),
+            vec![(100, 16), (400, 32)]
+        );
+        assert!(RankPolicyConfig::parse_schedule("").is_err());
+        assert!(RankPolicyConfig::parse_schedule("100").is_err());
+        assert!(RankPolicyConfig::parse_schedule("100:0").is_err());
+        assert!(RankPolicyConfig::parse_schedule("x:8").is_err());
+    }
+
+    #[test]
+    fn validated_rejects_impossible_schedules_and_clamps_tail_energy() {
+        // fail-fast: a milestone above min(d_model, d_ffn) errors before
+        // the run starts, not at the milestone step
+        let sched = RankPolicyConfig::Schedule(vec![(10, 8), (5000, 64)]);
+        assert!(sched.validated(16).is_err());
+        assert!(sched.validated(64).is_ok());
+        assert_eq!(RankPolicyConfig::Fixed.validated(1).unwrap(), RankPolicyConfig::Fixed);
+        // tail-energy defaults bake in parse-time geometry; validated()
+        // clamps max_rank to the real capacity instead of erroring
+        match RankPolicyConfig::tail_energy_defaults(2, 64).validated(16).unwrap() {
+            RankPolicyConfig::TailEnergy { min_rank, max_rank, .. } => {
+                assert_eq!((min_rank, max_rank), (2, 16));
+            }
+            other => panic!("expected TailEnergy, got {other:?}"),
+        }
+        // but an explicit min above the capacity is a real error
+        assert!(RankPolicyConfig::tail_energy_defaults(32, 64).validated(16).is_err());
+    }
+
+    #[test]
+    fn config_builds_the_right_policy() {
+        assert_eq!(RankPolicyConfig::Fixed.build().name(), "fixed");
+        assert_eq!(RankPolicyConfig::Schedule(vec![(1, 2)]).build().name(), "schedule");
+        assert_eq!(RankPolicyConfig::tail_energy_defaults(2, 64).build().name(), "tail-energy");
+    }
+}

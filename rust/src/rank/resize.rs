@@ -1,0 +1,337 @@
+//! Loss-continuous resizing of a spectral factor triple `W = U diag(s) Vᵀ`.
+//!
+//! On the native path a rank change is a plain matrix resize — no recompiled
+//! artifact, no new graph — which is what makes live rank adaptation cheap
+//! enough to run at step boundaries:
+//!
+//! * **Grow** `k → k'`: append `k' - k` orthonormal-complement columns to
+//!   `U` and `V` (random draws, CGS2-projected against the existing basis —
+//!   the same classical-Gram-Schmidt-twice construction as the Stiefel QR
+//!   retraction in [`crate::spectral::qr`], restricted to the new columns)
+//!   and append **zero** singular values. Because every new `s` entry is
+//!   exactly `0.0`, the new columns contribute exactly-zero terms to
+//!   `x → (xU) ⊙ s → (·)Vᵀ`: the forward pass, and therefore the loss, is
+//!   bit-identical to the pre-grow factor (the *exact-continuation*
+//!   property, asserted in the tests and in `tests/rank_integration.rs`).
+//! * **Shrink** `k → k'`: keep the `k'` columns with the largest `|s|`
+//!   (truncated-SVD semantics: drop the least-energetic directions first),
+//!   preserving their original order so the surviving Adam moments stay
+//!   aligned with their parameters. Dropping columns of an orthonormal
+//!   matrix leaves the rest orthonormal, so no re-retraction is needed in
+//!   exact arithmetic; callers still verify the 2e-6 budget and retract if
+//!   a degenerate draw ever exceeds it.
+//!
+//! The returned [`RankResize`] records what happened — in particular the
+//! kept-column set of a shrink — so the optimizer can resize its moment
+//! tensors in lockstep (see `AdamW::{grow_cols, select_cols}`).
+
+use crate::spectral::{Matrix, SpectralLinear};
+use crate::util::rng::Rng;
+
+/// Outcome of a [`resize_triple`] call, carrying what the optimizer needs
+/// to resize its per-tensor state the same way.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RankResize {
+    /// Nothing to do — the triple already has the requested rank.
+    Unchanged,
+    /// Columns appended; moments for the new columns start at zero.
+    Grown { from: usize, to: usize },
+    /// Columns dropped; `kept` holds the surviving column indices of the
+    /// OLD factor, ascending — the moment tensors keep exactly these.
+    Shrunk { from: usize, to: usize, kept: Vec<usize> },
+}
+
+/// f64-accumulated dot product (accuracy over speed — resize happens at
+/// step boundaries, not on the hot path).
+fn dot64(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// Append `extra` orthonormal-complement columns to `mat` (m x k, columns
+/// assumed orthonormal to the 2e-6 budget). Each new column is a Gaussian
+/// draw CGS2-projected against every earlier column (existing + already
+/// appended), so the result satisfies the same orthonormality budget as a
+/// full QR retraction without perturbing the existing columns at all.
+pub fn append_orthonormal_cols(mat: &mut Matrix, extra: usize, rng: &mut Rng) {
+    if extra == 0 {
+        return;
+    }
+    let (m, k) = (mat.rows, mat.cols);
+    assert!(
+        m >= k + extra,
+        "cannot extend a {m} x {k} factor by {extra} orthonormal columns"
+    );
+    let mut cols: Vec<Vec<f32>> = (0..k).map(|j| mat.col(j)).collect();
+    for _ in 0..extra {
+        // Resample on degenerate draws (norm collapses under projection);
+        // with Gaussian draws and m > k this is astronomically rare.
+        let mut accepted = None;
+        for _attempt in 0..8 {
+            let mut v: Vec<f32> = (0..m).map(|_| rng.normal() as f32).collect();
+            for _pass in 0..2 {
+                for q in &cols {
+                    let c = dot64(q, &v) as f32;
+                    for (vi, qi) in v.iter_mut().zip(q) {
+                        *vi -= c * qi;
+                    }
+                }
+            }
+            let norm = dot64(&v, &v).sqrt();
+            if norm > 1e-6 {
+                let inv = (1.0 / norm) as f32;
+                for vi in v.iter_mut() {
+                    *vi *= inv;
+                }
+                accepted = Some(v);
+                break;
+            }
+        }
+        cols.push(accepted.expect("orthonormal-complement draw degenerate 8 times"));
+    }
+    let mut out = Matrix::zeros(m, k + extra);
+    for (j, col) in cols.iter().enumerate() {
+        for (r, &val) in col.iter().enumerate() {
+            out[(r, j)] = val;
+        }
+    }
+    *mat = out;
+}
+
+/// Keep only the columns in `kept` (ascending indices into the old factor).
+fn select_matrix_cols(mat: &Matrix, kept: &[usize]) -> Matrix {
+    let mut out = Matrix::zeros(mat.rows, kept.len());
+    for r in 0..mat.rows {
+        let row = mat.row(r);
+        for (jo, &ji) in kept.iter().enumerate() {
+            out[(r, jo)] = row[ji];
+        }
+    }
+    out
+}
+
+/// Grow the triple to `new_k` (exact continuation: forward is unchanged).
+pub fn grow_triple(sl: &mut SpectralLinear, new_k: usize, rng: &mut Rng) {
+    let k = sl.k();
+    assert!(new_k >= k, "grow_triple called with new_k {new_k} < k {k}");
+    let extra = new_k - k;
+    append_orthonormal_cols(&mut sl.u, extra, rng);
+    append_orthonormal_cols(&mut sl.v, extra, rng);
+    sl.s.resize(new_k, 0.0);
+}
+
+/// Shrink the triple to `new_k`, dropping the smallest-|s| columns.
+/// Returns the kept column indices (ascending).
+pub fn shrink_triple(sl: &mut SpectralLinear, new_k: usize) -> Vec<usize> {
+    let k = sl.k();
+    assert!(new_k <= k, "shrink_triple called with new_k {new_k} > k {k}");
+    assert!(new_k >= 1, "cannot shrink a spectral triple below rank 1");
+    let mut order: Vec<usize> = (0..k).collect();
+    // Largest |s| first; ties broken by index so the selection (and thus a
+    // resumed run) is deterministic.
+    order.sort_by(|&a, &b| {
+        sl.s[b]
+            .abs()
+            .partial_cmp(&sl.s[a].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut kept = order[..new_k].to_vec();
+    kept.sort_unstable();
+    sl.u = select_matrix_cols(&sl.u, &kept);
+    sl.v = select_matrix_cols(&sl.v, &kept);
+    sl.s = kept.iter().map(|&j| sl.s[j]).collect();
+    kept
+}
+
+/// Resize the triple to `new_k` in whichever direction is needed. The
+/// target must satisfy `1 <= new_k <= min(m, n)`.
+pub fn resize_triple(sl: &mut SpectralLinear, new_k: usize, rng: &mut Rng) -> RankResize {
+    let k = sl.k();
+    assert!(
+        (1..=sl.m().min(sl.n())).contains(&new_k),
+        "rank {new_k} out of range for a {} x {} factor",
+        sl.m(),
+        sl.n()
+    );
+    match new_k.cmp(&k) {
+        std::cmp::Ordering::Equal => RankResize::Unchanged,
+        std::cmp::Ordering::Greater => {
+            grow_triple(sl, new_k, rng);
+            RankResize::Grown { from: k, to: new_k }
+        }
+        std::cmp::Ordering::Less => {
+            let kept = shrink_triple(sl, new_k);
+            RankResize::Shrunk { from: k, to: new_k, kept }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triple(m: usize, n: usize, k: usize, seed: u64) -> SpectralLinear {
+        let mut rng = Rng::new(seed);
+        let mut sl = SpectralLinear::init(&mut rng, m, n, k);
+        // de-degenerate the spectrum so shrink has a real ordering to find
+        for (i, s) in sl.s.iter_mut().enumerate() {
+            *s *= 1.0 + 0.3 * i as f32;
+        }
+        sl
+    }
+
+    #[test]
+    fn grow_is_an_exact_continuation() {
+        let mut rng = Rng::new(1);
+        let sl0 = triple(24, 18, 4, 7);
+        let x = Matrix::randn(&mut rng, 5, 24, 1.0);
+        let (y0, _) = sl0.forward(&x);
+        let mut sl = sl0.clone();
+        grow_triple(&mut sl, 9, &mut rng);
+        assert_eq!(sl.k(), 9);
+        assert_eq!((sl.u.rows, sl.u.cols), (24, 9));
+        assert_eq!((sl.v.rows, sl.v.cols), (18, 9));
+        let (y1, _) = sl.forward(&x);
+        // zero singular values on the new columns => bit-identical output
+        assert_eq!(y0.data, y1.data, "grow must not change the forward at all");
+    }
+
+    #[test]
+    fn grow_keeps_the_orthonormality_budget() {
+        let mut rng = Rng::new(2);
+        for &(m, n, k, k2) in &[(16usize, 12usize, 2usize, 8usize), (64, 48, 8, 32), (33, 20, 1, 19)] {
+            let mut sl = triple(m, n, k, 3);
+            grow_triple(&mut sl, k2, &mut rng);
+            assert!(
+                sl.ortho_error() <= 2e-6,
+                "({m},{n}) {k}->{k2}: ortho {}",
+                sl.ortho_error()
+            );
+        }
+    }
+
+    #[test]
+    fn shrink_drops_the_smallest_singular_values() {
+        let mut sl = triple(20, 14, 6, 11);
+        sl.s = vec![0.9, 0.1, 0.5, 0.05, 0.7, 0.3];
+        let u0 = sl.u.clone();
+        let kept = shrink_triple(&mut sl, 3);
+        assert_eq!(kept, vec![0, 2, 4], "largest |s| at 0/2/4, original order kept");
+        assert_eq!(sl.s, vec![0.9, 0.5, 0.7]);
+        assert_eq!(sl.k(), 3);
+        assert!(sl.ortho_error() <= 2e-6, "subset of an orthonormal basis stays orthonormal");
+        for (jo, &ji) in kept.iter().enumerate() {
+            for r in 0..sl.u.rows {
+                assert_eq!(sl.u[(r, jo)], u0[(r, ji)]);
+            }
+        }
+    }
+
+    #[test]
+    fn shrink_matches_best_rank_k_of_the_factored_operator() {
+        // Keeping the top-|s| columns IS the truncated SVD of W when the
+        // factors are orthonormal: check the dense reconstruction agrees.
+        let mut sl = triple(16, 10, 5, 13);
+        sl.s = vec![1.0, 0.01, 0.6, 0.02, 0.3];
+        let dense_before = sl.to_dense();
+        let mut truncated = sl.clone();
+        // zero out the dropped directions in the full factor (oracle)
+        truncated.s[1] = 0.0;
+        truncated.s[3] = 0.0;
+        let oracle = truncated.to_dense();
+        shrink_triple(&mut sl, 3);
+        let dense_after = sl.to_dense();
+        assert!(dense_after.max_abs_diff(&oracle) < 1e-6);
+        // and the dropped energy is exactly the small tail
+        let mut diff2 = 0.0f64;
+        for (a, b) in dense_before.data.iter().zip(&dense_after.data) {
+            diff2 += ((a - b) as f64).powi(2);
+        }
+        let tail2 = (0.01f64).powi(2) + (0.02f64).powi(2);
+        assert!((diff2 - tail2).abs() < 1e-5, "dropped energy {diff2} vs tail {tail2}");
+    }
+
+    #[test]
+    fn resized_gradients_match_finite_differences() {
+        // After a grow AND after a shrink the backward through the resized
+        // triple must still match central differences — including the s
+        // entries of freshly appended (zero-s) columns, which is where the
+        // optimizer first puts the new capacity to work.
+        let mut rng = Rng::new(5);
+        let mut grown = triple(12, 10, 3, 17);
+        grow_triple(&mut grown, 6, &mut rng);
+        let mut shrunk = triple(12, 10, 6, 19);
+        shrink_triple(&mut shrunk, 3);
+
+        for (tag, layer) in [("grown", &grown), ("shrunk", &shrunk)] {
+            let x = Matrix::randn(&mut rng, 4, 12, 1.0);
+            let dy = Matrix::randn(&mut rng, 4, 10, 1.0);
+            let (_, cache) = layer.forward(&x);
+            let (_dx, grads) = layer.backward(&x, &dy, &cache);
+            let eval = |l: &SpectralLinear| -> f32 {
+                let (y, _) = l.forward(&x);
+                y.data.iter().zip(&dy.data).map(|(a, b)| a * b).sum()
+            };
+            // y is LINEAR in each factor separately, so the central
+            // difference is exact for any eps — a large eps just lifts the
+            // difference above f32 rounding noise.
+            let eps = 1e-2f32;
+            // probe every s entry plus a U and a V entry in old + new columns
+            for j in 0..layer.k() {
+                let mut lp = layer.clone();
+                lp.s[j] += eps;
+                let mut lm = layer.clone();
+                lm.s[j] -= eps;
+                let fd = (eval(&lp) - eval(&lm)) / (2.0 * eps);
+                let denom = grads.ds[j].abs().max(fd.abs()).max(1e-2);
+                assert!(
+                    (fd - grads.ds[j]).abs() / denom < 3e-2,
+                    "{tag} ds[{j}]: fd {fd} vs analytic {}",
+                    grads.ds[j]
+                );
+            }
+            for &(r, c) in &[(0usize, 0usize), (1, layer.k() - 1)] {
+                let mut lp = layer.clone();
+                lp.u[(r, c)] += eps;
+                let mut lm = layer.clone();
+                lm.u[(r, c)] -= eps;
+                let fd = (eval(&lp) - eval(&lm)) / (2.0 * eps);
+                let an = grads.du[(r, c)];
+                let denom = an.abs().max(fd.abs()).max(1e-2);
+                assert!((fd - an).abs() / denom < 3e-2, "{tag} du[{r},{c}]: fd {fd} vs {an}");
+                let mut lp = layer.clone();
+                lp.v[(r, c)] += eps;
+                let mut lm = layer.clone();
+                lm.v[(r, c)] -= eps;
+                let fd = (eval(&lp) - eval(&lm)) / (2.0 * eps);
+                let an = grads.dv[(r, c)];
+                let denom = an.abs().max(fd.abs()).max(1e-2);
+                assert!((fd - an).abs() / denom < 3e-2, "{tag} dv[{r},{c}]: fd {fd} vs {an}");
+            }
+        }
+    }
+
+    #[test]
+    fn resize_triple_dispatches_and_reports() {
+        let mut rng = Rng::new(6);
+        let mut sl = triple(10, 8, 4, 23);
+        assert_eq!(resize_triple(&mut sl, 4, &mut rng), RankResize::Unchanged);
+        assert_eq!(resize_triple(&mut sl, 7, &mut rng), RankResize::Grown { from: 4, to: 7 });
+        match resize_triple(&mut sl, 2, &mut rng) {
+            RankResize::Shrunk { from: 7, to: 2, kept } => {
+                assert_eq!(kept.len(), 2);
+                assert!(kept.windows(2).all(|w| w[0] < w[1]), "kept must be ascending");
+            }
+            other => panic!("expected Shrunk, got {other:?}"),
+        }
+        assert_eq!(sl.k(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn resize_rejects_rank_above_min_dim() {
+        let mut rng = Rng::new(7);
+        let mut sl = triple(10, 8, 4, 29);
+        resize_triple(&mut sl, 9, &mut rng);
+    }
+}

@@ -203,18 +203,28 @@ impl SpectralModel {
         SpectralModel { cfg, embed, layers, ln_f: vec![1.0; d], head }
     }
 
-    /// Parameter count — compact factors only, k(m+n+1) per projection.
+    /// Parameter count — compact factors only, k(m+n+1) per projection,
+    /// summed per layer (layers may carry different ranks after a
+    /// `rank`-subsystem transition).
     pub fn param_count(&self) -> usize {
         let d = self.cfg.d_model;
-        let per_layer = 4 * d * d
-            + 2 * d
-            + self.layers.first().map_or(0, |l| {
-                l.gate.param_count() + l.up.param_count() + l.down.param_count()
-            });
+        let spectral: usize = self
+            .layers
+            .iter()
+            .map(|l| l.gate.param_count() + l.up.param_count() + l.down.param_count())
+            .sum();
         self.cfg.vocab * d
-            + self.cfg.n_layers * per_layer
+            + self.cfg.n_layers * (4 * d * d + 2 * d)
+            + spectral
             + d
             + self.head.as_ref().map_or(0, |h| h.rows * h.cols)
+    }
+
+    /// Rank of each layer's MLP triples. Uniform after [`SpectralModel::init`];
+    /// heterogeneous after per-layer transitions by the `rank` subsystem
+    /// (the gate/up/down triples of one layer always share a rank).
+    pub fn layer_ranks(&self) -> Vec<usize> {
+        self.layers.iter().map(|l| l.gate.k()).collect()
     }
 
     /// Project final hidden states to logits through the tied or untied head.
@@ -233,7 +243,10 @@ impl SpectralModel {
     /// same list — a serve checkpoint is a strict subset of a training one.
     pub fn to_tensors(&self) -> Vec<NamedTensor> {
         let c = &self.cfg;
-        let meta: Vec<i32> = vec![
+        // 8 header entries + one rank per layer: heterogeneous per-layer
+        // ranks are part of the checkpoint contract (see `crate::train`
+        // module docs). Readers accept the legacy 8-entry form too.
+        let mut meta: Vec<i32> = vec![
             c.vocab as i32,
             c.d_model as i32,
             c.n_layers as i32,
@@ -243,8 +256,9 @@ impl SpectralModel {
             c.max_seq as i32,
             c.tied as i32,
         ];
+        meta.extend(self.layer_ranks().iter().map(|&k| k as i32));
         let mut tensors = vec![
-            NamedTensor::i32("model/meta", vec![8], &meta),
+            NamedTensor::i32("model/meta", vec![meta.len()], &meta),
             NamedTensor::f32("params/embed", vec![c.vocab, c.d_model], &self.embed.data),
         ];
         for (i, l) in self.layers.iter().enumerate() {
@@ -297,8 +311,8 @@ impl SpectralModel {
         let vector = |name: String| -> Result<Vec<f32>> { find(tensors, &name)?.as_f32() };
 
         let meta = find(tensors, "model/meta")?.as_i32()?;
-        if meta.len() != 8 {
-            bail!("model/meta has {} entries, expected 8", meta.len());
+        if meta.len() < 8 {
+            bail!("model/meta has {} entries, expected at least 8", meta.len());
         }
         let cfg = EngineConfig {
             vocab: meta[0] as usize,
@@ -311,8 +325,22 @@ impl SpectralModel {
             tied: meta[7] != 0,
         };
         cfg.validate();
+        // Per-layer ranks: present in checkpoints written since the rank
+        // subsystem landed; a legacy 8-entry meta means the uniform
+        // `cfg.rank` applies everywhere.
+        let meta_ranks: Vec<usize> = if meta.len() == 8 {
+            vec![cfg.rank; cfg.n_layers]
+        } else if meta.len() == 8 + cfg.n_layers {
+            meta[8..].iter().map(|&r| r as usize).collect()
+        } else {
+            bail!(
+                "model/meta has {} entries, expected 8 or 8 + n_layers ({})",
+                meta.len(),
+                8 + cfg.n_layers
+            );
+        };
         let mut layers = Vec::with_capacity(cfg.n_layers);
-        for i in 0..cfg.n_layers {
+        for (i, &want_k) in meta_ranks.iter().enumerate() {
             let triple = |nm: &str| -> Result<SpectralLinear> {
                 Ok(SpectralLinear {
                     u: matrix(format!("params/layers/{i}/mlp/{nm}/u"))?,
@@ -320,7 +348,7 @@ impl SpectralModel {
                     v: matrix(format!("params/layers/{i}/mlp/{nm}/v"))?,
                 })
             };
-            layers.push(LayerWeights {
+            let layer = LayerWeights {
                 wq: matrix(format!("params/layers/{i}/attn/wq"))?,
                 wk: matrix(format!("params/layers/{i}/attn/wk"))?,
                 wv: matrix(format!("params/layers/{i}/attn/wv"))?,
@@ -330,7 +358,35 @@ impl SpectralModel {
                 gate: triple("gate")?,
                 up: triple("up")?,
                 down: triple("down")?,
-            });
+            };
+            // Shape consistency: a mismatched factor would fail silently
+            // deep in a matmul, so check here with names attached.
+            if !(1..=cfg.d_model.min(cfg.d_ffn)).contains(&want_k) {
+                bail!("layer {i}: rank {want_k} out of range for ({}, {})", cfg.d_model, cfg.d_ffn);
+            }
+            for (nm, sl, m_rows, n_rows) in [
+                ("gate", &layer.gate, cfg.d_model, cfg.d_ffn),
+                ("up", &layer.up, cfg.d_model, cfg.d_ffn),
+                ("down", &layer.down, cfg.d_ffn, cfg.d_model),
+            ] {
+                if sl.u.rows != m_rows
+                    || sl.v.rows != n_rows
+                    || sl.u.cols != want_k
+                    || sl.v.cols != want_k
+                    || sl.s.len() != want_k
+                {
+                    bail!(
+                        "layer {i} mlp/{nm}: factor shapes u {}x{}, s {}, v {}x{} \
+                         inconsistent with rank {want_k} for a ({m_rows}, {n_rows}) projection",
+                        sl.u.rows,
+                        sl.u.cols,
+                        sl.s.len(),
+                        sl.v.rows,
+                        sl.v.cols,
+                    );
+                }
+            }
+            layers.push(layer);
         }
         let head = if cfg.tied { None } else { Some(matrix("params/head".into())?) };
         Ok(SpectralModel {
@@ -686,6 +742,56 @@ mod tests {
         for (x, y) in l.row(1).iter().zip(lb.row(0)) {
             assert!((x - y).abs() < 1e-5, "row b diverged: {x} vs {y}");
         }
+    }
+
+    #[test]
+    fn heterogeneous_rank_checkpoint_roundtrips_and_decodes() {
+        // Grow one layer's triples so the model carries per-layer ranks,
+        // save, reload, and decode — the rank subsystem's checkpoint
+        // contract (`model/meta` records one rank per layer).
+        let mut rng = crate::util::rng::Rng::new(99);
+        let mut model = SpectralModel::init(
+            EngineConfig {
+                vocab: 50,
+                d_model: 32,
+                n_layers: 2,
+                n_heads: 4,
+                d_ffn: 48,
+                rank: 4,
+                max_seq: 32,
+                tied: true,
+            },
+            8,
+        );
+        let l0 = &mut model.layers[0];
+        for sl in [&mut l0.gate, &mut l0.up, &mut l0.down] {
+            crate::rank::resize::grow_triple(sl, 10, &mut rng);
+        }
+        model.cfg.rank = 10; // cfg.rank tracks the max layer rank
+        assert_eq!(model.layer_ranks(), vec![10, 4]);
+
+        let e = Engine::new(model);
+        let opts = SampleOpts { temperature: 0.0, top_k: 0, seed: 0 };
+        let prompt = [5i32, 9, 13];
+        let baseline = e.generate_reencode(&prompt, 8, &opts);
+        // KV path handles per-layer ranks identically
+        let mut kv = e.new_kv(1);
+        let slot = kv.alloc().unwrap();
+        assert_eq!(baseline, e.generate_kv(&prompt, 8, &opts, &mut kv, slot));
+
+        let dir = std::env::temp_dir().join(format!("sct_hetero_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hetero.sct");
+        e.model.save(&path).unwrap();
+        let restored = SpectralModel::load(&path).unwrap();
+        assert_eq!(restored.layer_ranks(), vec![10, 4]);
+        assert_eq!(restored.param_count(), e.model.param_count());
+        assert_eq!(
+            baseline,
+            Engine::new(restored).generate_reencode(&prompt, 8, &opts),
+            "heterogeneous-rank checkpoint must serve token-identically"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -71,6 +71,53 @@ impl AdamW {
         self.v = v;
         self.t = t;
     }
+
+    // -- rank-transition support (the `rank` subsystem) ---------------------
+    //
+    // A spectral factor is a row-major (rows x cols) tensor whose column
+    // count is the rank k; when the rank changes mid-run the moment tensors
+    // must be resized the same way the parameter was, or every subsequent
+    // update would be misaligned. The singular-value vector s is the
+    // (1 x k) case of the same layout. `t` is deliberately kept: bias
+    // correction stays shared per-tensor, so fresh columns (zero moments)
+    // get full-strength first updates — exactly what new capacity wants.
+
+    /// Grow the moments of a row-major `(rows x old_cols)` tensor to
+    /// `new_cols` columns: surviving entries keep their position within
+    /// each row, appended columns start with zero moments.
+    pub fn grow_cols(&mut self, rows: usize, old_cols: usize, new_cols: usize) {
+        assert_eq!(self.m.len(), rows * old_cols, "moment shape mismatch");
+        assert!(new_cols >= old_cols, "grow_cols cannot shrink ({old_cols} -> {new_cols})");
+        let resize = |buf: &[f32]| -> Vec<f32> {
+            let mut out = vec![0.0f32; rows * new_cols];
+            for r in 0..rows {
+                out[r * new_cols..r * new_cols + old_cols]
+                    .copy_from_slice(&buf[r * old_cols..(r + 1) * old_cols]);
+            }
+            out
+        };
+        self.m = resize(&self.m);
+        self.v = resize(&self.v);
+    }
+
+    /// Keep only the columns in `keep` (ascending indices into the old
+    /// layout) of a row-major `(rows x old_cols)` tensor's moments — the
+    /// shrink twin of [`AdamW::grow_cols`], matching
+    /// `rank::resize::RankResize::Shrunk`'s kept-column set.
+    pub fn select_cols(&mut self, rows: usize, old_cols: usize, keep: &[usize]) {
+        assert_eq!(self.m.len(), rows * old_cols, "moment shape mismatch");
+        assert!(keep.iter().all(|&j| j < old_cols), "kept column out of range");
+        let resize = |buf: &[f32]| -> Vec<f32> {
+            let mut out = Vec::with_capacity(rows * keep.len());
+            for r in 0..rows {
+                let row = &buf[r * old_cols..(r + 1) * old_cols];
+                out.extend(keep.iter().map(|&j| row[j]));
+            }
+            out
+        };
+        self.m = resize(&self.m);
+        self.v = resize(&self.v);
+    }
 }
 
 #[cfg(test)]
@@ -126,6 +173,65 @@ mod tests {
         a.step(&mut pa, &g);
         b.step(&mut pb, &g);
         assert_eq!(pa, pb, "restored optimizer must continue bit-for-bit");
+    }
+
+    #[test]
+    fn grow_cols_keeps_old_moments_in_place() {
+        // 2 x 2 tensor -> 2 x 4: each row's moments stay aligned with its
+        // surviving entries; new columns start cold.
+        let mut opt = AdamW::new(4, 0.1);
+        let mut p = vec![1.0f32, 2.0, 3.0, 4.0];
+        opt.step(&mut p, &[0.1, 0.2, 0.3, 0.4]);
+        let (m0, v0) = (opt.moments().0.to_vec(), opt.moments().1.to_vec());
+        opt.grow_cols(2, 2, 4);
+        let (m, v) = opt.moments();
+        assert_eq!(m.len(), 8);
+        assert_eq!(&[m[0], m[1]], &[m0[0], m0[1]]);
+        assert_eq!(&[m[4], m[5]], &[m0[2], m0[3]]);
+        assert_eq!(&[m[2], m[3], m[6], m[7]], &[0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(&[v[0], v[1], v[4], v[5]], &[v0[0], v0[1], v0[2], v0[3]]);
+        // the grown optimizer steps a matching parameter tensor
+        let mut p2 = vec![1.0f32; 8];
+        opt.step(&mut p2, &[0.0; 8]);
+    }
+
+    #[test]
+    fn select_cols_matches_a_shrunk_tensor() {
+        // 3 x 4 tensor, keep columns 0 and 2 of every row.
+        let mut opt = AdamW::new(12, 0.1);
+        let g: Vec<f32> = (0..12).map(|i| i as f32 * 0.1).collect();
+        let mut p = vec![0.0f32; 12];
+        opt.step(&mut p, &g);
+        let m0 = opt.moments().0.to_vec();
+        opt.select_cols(3, 4, &[0, 2]);
+        let (m, v) = opt.moments();
+        assert_eq!(m.len(), 6);
+        for r in 0..3 {
+            assert_eq!(m[r * 2], m0[r * 4]);
+            assert_eq!(m[r * 2 + 1], m0[r * 4 + 2]);
+        }
+        assert_eq!(v.len(), 6);
+    }
+
+    #[test]
+    fn grown_column_update_matches_a_fresh_tensor_at_same_t() {
+        // After growing, an update on a new column must equal what a fresh
+        // optimizer fast-forwarded to the same t would do: zero moments +
+        // shared bias correction.
+        let mut grown = AdamW::new(2, 0.05);
+        let mut pg = vec![1.0f32, -1.0];
+        for i in 0..5 {
+            grown.step(&mut pg, &[0.3 * i as f32, -0.1]);
+        }
+        grown.grow_cols(1, 2, 3);
+        let mut fresh = AdamW::new(3, 0.05);
+        fresh.restore(vec![0.0; 3], vec![0.0; 3], grown.t);
+        let mut pf = vec![9.0f32, 9.0, 5.0];
+        let mut pg2 = vec![9.0f32, 9.0, 5.0];
+        let g = [0.0f32, 0.0, 0.7];
+        grown.step(&mut pg2, &g);
+        fresh.step(&mut pf, &g);
+        assert_eq!(pg2[2], pf[2], "new-column update must match a cold tensor at the same t");
     }
 
     #[test]

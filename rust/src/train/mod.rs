@@ -27,14 +27,20 @@
 //! (mirroring the AOT session state layout the JAX side exports):
 //!
 //! ```text
-//! model/meta                        i32[8]: vocab, d_model, n_layers,
-//!                                   n_heads, d_ffn, rank, max_seq, tied
+//! model/meta                        i32[8 + n_layers]: vocab, d_model,
+//!                                   n_layers, n_heads, d_ffn, rank,
+//!                                   max_seq, tied, then one rank per
+//!                                   layer (heterogeneous after `rank`-
+//!                                   subsystem transitions; the header
+//!                                   `rank` field records the max).
+//!                                   Legacy i32[8] checkpoints load with
+//!                                   the uniform header rank.
 //! params/embed                      f32[vocab, d_model]
 //! params/layers/{i}/attn/wq|wk|wv|wo f32[d_model, d_model]
 //! params/layers/{i}/ln1|ln2         f32[d_model]
-//! params/layers/{i}/mlp/{p}/u       f32[m, k]   p in {gate, up, down}
-//! params/layers/{i}/mlp/{p}/s       f32[k]
-//! params/layers/{i}/mlp/{p}/v       f32[n, k]
+//! params/layers/{i}/mlp/{p}/u       f32[m, k_i]   p in {gate, up, down}
+//! params/layers/{i}/mlp/{p}/s       f32[k_i]
+//! params/layers/{i}/mlp/{p}/v       f32[n, k_i]
 //! params/ln_f                       f32[d_model]
 //! params/head                       f32[d_model, vocab]  (untied only)
 //! opt/t                             i32[1]              (trainer only)
@@ -44,8 +50,12 @@
 //! `serve::SpectralModel::load` reads `model/meta` + `params/...` and
 //! ignores `opt/...`, so a mid-training checkpoint serves as-is; the
 //! trainer additionally restores the AdamW moments so a resumed run
-//! continues bit-for-bit. The canonical tensor order (and the optimizer
-//! slot order) is defined once, in [`trainer::param_kinds`].
+//! continues bit-for-bit — including runs whose layers carry different
+//! ranks (`k_i` above): the optimizer slots derive their lengths from the
+//! model tensors, and [`NativeTrainer::set_layer_rank`] keeps moments and
+//! parameters aligned through every live transition. The canonical tensor
+//! order (and the optimizer slot order) is defined once, in
+//! [`trainer::param_kinds`].
 
 pub mod blocks;
 pub mod decoder;

@@ -24,6 +24,7 @@ use anyhow::{Context, Result};
 use crate::checkpoint::format::{read_checkpoint, write_checkpoint, NamedTensor};
 use crate::serve::engine::{EngineConfig, SpectralModel};
 use crate::spectral::AdamW;
+use crate::util::rng::Rng;
 
 use super::blocks::{cross_entropy, Rope};
 use super::decoder::{decoder_bwd, decoder_fwd};
@@ -233,6 +234,75 @@ impl NativeTrainer {
         let (inputs, targets) = self.split_window(tokens);
         let (logits, _) = decoder_fwd(&self.model, &self.rope, &inputs, b, t);
         cross_entropy(&logits, &targets).0
+    }
+
+    // -- rank transitions (the `rank` subsystem) ----------------------------
+
+    /// Current rank of every layer's MLP triples.
+    pub fn layer_ranks(&self) -> Vec<usize> {
+        self.model.layer_ranks()
+    }
+
+    /// Resize one layer's MLP triples (gate/up/down share a rank) to
+    /// `new_k`, resizing the matching AdamW moment tensors in lockstep.
+    ///
+    /// Grow appends orthonormal-complement columns with **zero** singular
+    /// values, so the forward — and therefore the loss — is unchanged
+    /// across the transition (exact continuation; the new capacity is
+    /// picked up by the optimizer through the `s` gradients). Shrink drops
+    /// the smallest-|s| directions, truncated-SVD style, keeping the
+    /// surviving moments aligned with their parameters. The appended
+    /// columns are built by the same CGS2 construction as the QR
+    /// retraction, so the 2e-6 orthonormality budget holds without a full
+    /// re-retraction; a degenerate draw falls back to retracting the
+    /// triple (which perturbs the forward within float noise).
+    pub fn set_layer_rank(&mut self, layer: usize, new_k: usize, rng: &mut Rng) -> Result<()> {
+        use crate::rank::resize::{resize_triple, RankResize};
+        anyhow::ensure!(
+            layer < self.model.layers.len(),
+            "layer {layer} out of range (model has {})",
+            self.model.layers.len()
+        );
+        let c = self.cfg.model;
+        anyhow::ensure!(
+            new_k >= 1 && new_k <= c.d_model.min(c.d_ffn),
+            "rank {new_k} out of range for ({}, {})",
+            c.d_model,
+            c.d_ffn
+        );
+        let lw = &mut self.model.layers[layer];
+        for (nm, sl) in [("gate", &mut lw.gate), ("up", &mut lw.up), ("down", &mut lw.down)] {
+            let old_k = sl.k();
+            let (rows_u, rows_v) = (sl.m(), sl.n());
+            let change = resize_triple(sl, new_k, rng);
+            if matches!(change, RankResize::Unchanged) {
+                continue;
+            }
+            if sl.ortho_error() > 2e-6 {
+                sl.retract(); // safety net; unreachable for Gaussian draws
+            }
+            for (f, rows) in [("u", rows_u), ("s", 1usize), ("v", rows_v)] {
+                let name = format!("params/layers/{layer}/mlp/{nm}/{f}");
+                let idx = self
+                    .kinds
+                    .iter()
+                    .position(|(n, _, _)| *n == name)
+                    .expect("param enumeration must contain every spectral tensor");
+                match &change {
+                    RankResize::Grown { .. } => self.opts[idx].grow_cols(rows, old_k, new_k),
+                    RankResize::Shrunk { kept, .. } => {
+                        self.opts[idx].select_cols(rows, old_k, kept)
+                    }
+                    RankResize::Unchanged => unreachable!("filtered above"),
+                }
+            }
+        }
+        // cfg.rank records the max layer rank so the checkpoint header (and
+        // EngineConfig::validate) stay coherent under heterogeneous ranks.
+        let max_k = self.model.layer_ranks().into_iter().max().unwrap_or(new_k);
+        self.model.cfg.rank = max_k;
+        self.cfg.model.rank = max_k;
+        Ok(())
     }
 
     /// Worst factor orthonormality error across every spectral triple —
@@ -472,6 +542,102 @@ mod tests {
             let (loss, _) = trainer.train_step(&cyclic_batch(&cfg, step), 5e-2, 5e-2);
             assert!(loss.is_finite(), "clipped training must not diverge to NaN");
         }
+    }
+
+    #[test]
+    fn grow_is_loss_continuous_and_training_resumes() {
+        let cfg = tiny_cfg();
+        let mut trainer = NativeTrainer::new(cfg, 8);
+        let mut rng = Rng::new(123);
+        for step in 0..12 {
+            trainer.train_step(&cyclic_batch(&cfg, step), 3e-3, 3e-3);
+        }
+        let probe = cyclic_batch(&cfg, 1000);
+        let before = trainer.eval_loss(&probe);
+        trainer.set_layer_rank(0, 6, &mut rng).unwrap();
+        trainer.set_layer_rank(1, 5, &mut rng).unwrap();
+        assert_eq!(trainer.layer_ranks(), vec![6, 5]);
+        assert_eq!(trainer.cfg.model.rank, 6, "cfg.rank tracks the max layer rank");
+        let after = trainer.eval_loss(&probe);
+        assert!(
+            (before - after).abs() <= 1e-5,
+            "grow must be loss-continuous: {before} vs {after}"
+        );
+        assert!(trainer.ortho_error() <= 2e-6, "ortho {}", trainer.ortho_error());
+        // training continues through the grown factors and keeps improving
+        let mut last = f32::INFINITY;
+        for step in 0..40 {
+            let (l, _) = trainer.train_step(&cyclic_batch(&cfg, step), 3e-3, 3e-3);
+            assert!(l.is_finite());
+            last = l;
+        }
+        assert!(last < before, "loss must keep falling after the grow: {before} -> {last}");
+    }
+
+    #[test]
+    fn shrink_keeps_training_aligned_and_on_manifold() {
+        let cfg = tiny_cfg();
+        let mut trainer = NativeTrainer::new(cfg, 9);
+        let mut rng = Rng::new(5);
+        trainer.set_layer_rank(0, 8, &mut rng).unwrap();
+        for step in 0..10 {
+            trainer.train_step(&cyclic_batch(&cfg, step), 3e-3, 3e-3);
+        }
+        trainer.set_layer_rank(0, 2, &mut rng).unwrap();
+        trainer.set_layer_rank(1, 2, &mut rng).unwrap();
+        assert_eq!(trainer.layer_ranks(), vec![2, 2]);
+        assert!(trainer.ortho_error() <= 2e-6);
+        // every subsequent step exercises the param/grad/moment alignment
+        // asserts inside AdamW::step
+        for step in 0..10 {
+            let (l, _) = trainer.train_step(&cyclic_batch(&cfg, step), 3e-3, 3e-3);
+            assert!(l.is_finite(), "training after a shrink must stay finite");
+        }
+    }
+
+    #[test]
+    fn heterogeneous_checkpoint_resumes_bit_for_bit() {
+        let cfg = tiny_cfg();
+        let dir = std::env::temp_dir().join(format!("sct_rank_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hetero_train.sct");
+
+        let mut a = NativeTrainer::new(cfg, 10);
+        let mut rng = Rng::new(77);
+        for step in 0..4 {
+            a.train_step(&cyclic_batch(&cfg, step), 2e-3, 2e-3);
+        }
+        a.set_layer_rank(0, 7, &mut rng).unwrap();
+        for step in 4..8 {
+            a.train_step(&cyclic_batch(&cfg, step), 2e-3, 2e-3);
+        }
+        a.save(&path).unwrap();
+        // `cfg` still describes the pre-grow geometry; the checkpoint's
+        // model/meta (incl. per-layer ranks) must win on restore.
+        let mut b = NativeTrainer::load(&path, cfg).unwrap();
+        assert_eq!(b.layer_ranks(), vec![7, 3]);
+        assert_eq!(b.step, 8);
+        let batch = cyclic_batch(&cfg, 99);
+        let (la, _) = a.train_step(&batch, 2e-3, 2e-3);
+        let (lb, _) = b.train_step(&batch, 2e-3, 2e-3);
+        assert_eq!(la, lb, "heterogeneous-rank resume must continue bit-for-bit");
+        assert_eq!(a.model.layers[0].gate.u.data, b.model.layers[0].gate.u.data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn set_layer_rank_rejects_out_of_range() {
+        let cfg = tiny_cfg();
+        let mut trainer = NativeTrainer::new(cfg, 11);
+        let mut rng = Rng::new(1);
+        assert!(trainer.set_layer_rank(5, 4, &mut rng).is_err(), "bad layer index");
+        // min(d_model=16, d_ffn=24) = 16 caps the rank
+        assert!(trainer.set_layer_rank(0, 17, &mut rng).is_err(), "rank above min dim");
+        assert!(trainer.set_layer_rank(0, 0, &mut rng).is_err(), "rank zero");
+        // no-op resize leaves everything untouched
+        let before = trainer.model.layers[0].gate.u.data.clone();
+        trainer.set_layer_rank(0, 3, &mut rng).unwrap();
+        assert_eq!(trainer.model.layers[0].gate.u.data, before);
     }
 
     #[test]

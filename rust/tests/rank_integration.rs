@@ -1,0 +1,174 @@
+//! End-to-end tests of the adaptive-rank subsystem: grow rank mid-training
+//! with NO loss discontinuity, keep training through the grown factors,
+//! checkpoint a model whose layers carry different ranks, and serve that
+//! heterogeneous checkpoint deterministically over HTTP — the full
+//! train → transition → checkpoint → serve loop the subsystem exists for.
+
+use sct::coordinator::{run_native, RunConfig};
+use sct::data::build_dataset;
+use sct::rank::RankPolicyConfig;
+use sct::serve::{
+    http_post_json, Engine, EngineConfig, SampleOpts, ServeConfig, Server, SpectralModel,
+};
+use sct::train::{NativeTrainConfig, NativeTrainer};
+use sct::util::rng::Rng;
+
+fn train_cfg() -> NativeTrainConfig {
+    NativeTrainConfig {
+        model: EngineConfig {
+            vocab: 256, // byte-level tokenizer
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            d_ffn: 48,
+            rank: 4,
+            max_seq: 64,
+            tied: true,
+        },
+        batch: 4,
+        seq_len: 24,
+        grad_clip: 1.0,
+        retract_every: 1,
+        weight_decay: 0.0,
+    }
+}
+
+#[test]
+fn grow_mid_training_is_loss_continuous_then_improves() {
+    let cfg = train_cfg();
+    let (_tok, mut dataset) =
+        build_dataset(cfg.model.vocab, cfg.batch, cfg.seq_len + 1, 200_000, 0);
+    let mut trainer = NativeTrainer::new(cfg, 0);
+    let mut rng = Rng::new(11);
+
+    for _ in 0..25 {
+        let (loss, _) = trainer.train_step(&dataset.next_batch(), 2e-3, 2e-3);
+        assert!(loss.is_finite());
+    }
+    let eval_batch = dataset.eval_batch();
+    let before = trainer.eval_loss(&eval_batch);
+
+    // the transition: every layer 4 -> 10, at a step boundary
+    for layer in 0..2 {
+        trainer.set_layer_rank(layer, 10, &mut rng).unwrap();
+    }
+    assert_eq!(trainer.layer_ranks(), vec![10, 10]);
+
+    // acceptance: eval loss at the transition step matches the
+    // pre-transition loss to <= 1e-5 (grow is an exact continuation)
+    let at_transition = trainer.eval_loss(&eval_batch);
+    assert!(
+        (before - at_transition).abs() <= 1e-5,
+        "grow must be loss-continuous: {before} vs {at_transition}"
+    );
+    assert!(trainer.ortho_error() <= 2e-6, "ortho {}", trainer.ortho_error());
+
+    // ...then continues to decrease through the grown factors
+    for _ in 0..35 {
+        let (loss, _) = trainer.train_step(&dataset.next_batch(), 2e-3, 2e-3);
+        assert!(loss.is_finite());
+    }
+    let post = trainer.eval_loss(&eval_batch);
+    assert!(
+        post < at_transition,
+        "eval loss must keep falling after the grow: {at_transition} -> {post}"
+    );
+}
+
+#[test]
+fn heterogeneous_checkpoint_trains_saves_and_serves_over_http() {
+    let cfg = train_cfg();
+    let (_tok, mut dataset) =
+        build_dataset(cfg.model.vocab, cfg.batch, cfg.seq_len + 1, 120_000, 1);
+    let mut trainer = NativeTrainer::new(cfg, 1);
+    let mut rng = Rng::new(3);
+
+    // train a few steps, then give each layer a different rank and train on
+    for _ in 0..8 {
+        trainer.train_step(&dataset.next_batch(), 1e-3, 1e-3);
+    }
+    trainer.set_layer_rank(0, 9, &mut rng).unwrap();
+    trainer.set_layer_rank(1, 2, &mut rng).unwrap(); // grow AND shrink
+    assert_eq!(trainer.layer_ranks(), vec![9, 2]);
+    for _ in 0..8 {
+        let (loss, _) = trainer.train_step(&dataset.next_batch(), 1e-3, 1e-3);
+        assert!(loss.is_finite(), "heterogeneous-rank training must stay finite");
+    }
+    assert!(trainer.ortho_error() <= 2e-6);
+
+    // checkpoint, reload: per-layer ranks survive the .sct roundtrip
+    let dir = std::env::temp_dir().join(format!("sct_rank_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("hetero.sct");
+    trainer.save(&ckpt).unwrap();
+    let model = SpectralModel::load(&ckpt).unwrap();
+    assert_eq!(model.layer_ranks(), vec![9, 2]);
+
+    // engine-level determinism at T=0
+    let engine = Engine::new(model);
+    let opts = SampleOpts { temperature: 0.0, top_k: 0, seed: 0 };
+    let prompt: Vec<i32> = "### Instruction".bytes().map(|b| b as i32).collect();
+    let baseline = engine.generate_reencode(&prompt, 12, &opts);
+    let mut kv = engine.new_kv(1);
+    let slot = kv.alloc().unwrap();
+    assert_eq!(
+        baseline,
+        engine.generate_kv(&prompt, 12, &opts, &mut kv, slot),
+        "KV decode must match re-encode on a heterogeneous-rank model"
+    );
+
+    // ...and over HTTP through the full server stack
+    let serve_cfg = ServeConfig { addr: "127.0.0.1:0".into(), ..ServeConfig::default() };
+    let server = Server::start(
+        &serve_cfg,
+        Engine::new(SpectralModel::load(&ckpt).unwrap()),
+        sct::data::Tokenizer::byte_level(),
+    )
+    .unwrap();
+    let req = r#"{"prompt": "adaptive rank", "tokens": 8, "temperature": 0}"#;
+    let (code, a) = http_post_json(server.addr, "/v1/generate", req).unwrap();
+    assert_eq!(code, 200, "body: {a:?}");
+    assert_eq!(a.get("tokens").unwrap().as_arr().unwrap().len(), 8);
+    let (_, b) = http_post_json(server.addr, "/v1/generate", req).unwrap();
+    assert_eq!(
+        a.get("tokens").unwrap(),
+        b.get("tokens").unwrap(),
+        "heterogeneous-rank checkpoint must serve deterministically at T=0"
+    );
+    server.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_native_with_schedule_emits_events_and_serveable_ranks() {
+    // The coordinator path: a [rank] schedule declared in config applies
+    // mid-run, shows up in the summary, and the final model reports the
+    // scheduled rank everywhere.
+    let cfg = RunConfig {
+        backend: "native".into(),
+        steps: 8,
+        eval_every: 4,
+        ortho_every: 4,
+        corpus_bytes: 60_000,
+        batch: 2,
+        seq_len: 12,
+        native_model: EngineConfig {
+            vocab: 256,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ffn: 24,
+            rank: 3,
+            max_seq: 16,
+            tied: true,
+        },
+        rank_policy: RankPolicyConfig::Schedule(vec![(3, 6)]),
+        ..RunConfig::default()
+    };
+    let (summary, _tracker) = run_native(&cfg, false).unwrap();
+    assert_eq!(summary.layer_ranks, vec![6, 6]);
+    assert_eq!(summary.rank_events.len(), 2);
+    assert!(summary.rank_events.iter().all(|e| e.step == 3 && e.from == 3 && e.to == 6));
+    assert!(summary.ortho_error.unwrap() <= 2e-6);
+    assert!(summary.final_loss_smoothed.is_finite());
+}

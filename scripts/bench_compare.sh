@@ -26,8 +26,8 @@ git worktree add --detach "$worktree" "$base_ref"
 trap 'git worktree remove --force "$worktree" 2>/dev/null || true' EXIT
 
 export CARGO_TARGET_DIR="$repo_root/rust/target"
-for bench in serve_throughput train_step; do
-    name="${bench%%_*}"   # serve_throughput -> serve, train_step -> train
+for bench in serve_throughput train_step rank_transition; do
+    name="${bench%%_*}"   # serve_throughput -> serve, train_step -> train, rank_transition -> rank
     if (cd "$worktree/rust" && cargo bench --bench "$bench" -- --smoke \
             --json "$worktree/BENCH_$name.json"); then
         :
@@ -36,7 +36,7 @@ for bench in serve_throughput train_step; do
     fi
 done
 
-for name in serve train; do
+for name in serve train rank; do
     base_json="$worktree/BENCH_$name.json"
     pr_json="$repo_root/BENCH_$name.json"
     if [[ -f "$base_json" && -f "$pr_json" ]]; then

@@ -14,10 +14,10 @@
 #   lint   rustfmt --check, clippy (default features), clippy (pjrt feature)
 #   build  cargo build --release, cargo check --features pjrt
 #   test   cargo test -q
-#   bench  serve_throughput + train_step in smoke mode, writing
-#          BENCH_serve.json and BENCH_train.json at the repo root (CI
-#          uploads them and diffs them against the base branch via
-#          scripts/bench_compare.sh)
+#   bench  serve_throughput + train_step + rank_transition in smoke mode,
+#          writing BENCH_serve.json, BENCH_train.json and BENCH_rank.json
+#          at the repo root (CI uploads them and diffs them against the
+#          base branch via scripts/bench_compare.sh)
 
 set -euo pipefail
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
@@ -69,6 +69,10 @@ run_bench() {
     echo "== tier1: train bench smoke (BENCH_train.json) =="
     cargo bench --bench train_step -- --smoke --json "$repo_root/BENCH_train.json"
     echo "tier1: wrote $repo_root/BENCH_train.json"
+
+    echo "== tier1: rank-transition bench smoke (BENCH_rank.json) =="
+    cargo bench --bench rank_transition -- --smoke --json "$repo_root/BENCH_rank.json"
+    echo "tier1: wrote $repo_root/BENCH_rank.json"
 }
 
 case "$stage" in
