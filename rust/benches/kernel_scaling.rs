@@ -1,0 +1,261 @@
+//! Parallel-kernel scaling benchmark: matmul, attention, full native
+//! training step, and serve decode throughput vs worker-pool thread count,
+//! at spectral ranks 32 and 128 — the wall-clock evidence that the
+//! compact-factor math saturates the cores (`util::pool` layer).
+//!
+//! Each section re-runs the identical workload at 1/2/4 pool threads
+//! (`pool::set_threads`; results are bit-identical across settings, only
+//! the wall time moves) and reports the speedup over the single-thread
+//! baseline.
+//!
+//! Run: `cargo bench --bench kernel_scaling`
+//! Flags: `--smoke` (small shapes, CI mode; also via `SCT_BENCH_SMOKE`) and
+//! `--json PATH` (write `BENCH_kernels.json` for the CI base-branch diff).
+
+use std::time::Instant;
+
+use sct::json_obj;
+use sct::serve::{Engine, EngineConfig, SampleOpts, SpectralModel};
+use sct::spectral::{Matrix, SpectralLinear};
+use sct::train::blocks::causal_attention_fwd_batched;
+use sct::train::{NativeTrainConfig, NativeTrainer};
+use sct::util::json::Json;
+use sct::util::pool;
+use sct::util::rng::Rng;
+
+#[derive(Clone, Copy)]
+struct Workload {
+    ranks: &'static [usize],
+    threads: &'static [usize],
+    d_model: usize,
+    d_ffn: usize,
+    n_heads: usize,
+    /// batch rows through the matmul section
+    mm_rows: usize,
+    /// attention section geometry
+    attn_bsz: usize,
+    attn_t: usize,
+    /// native train-step section
+    batch: usize,
+    seq_len: usize,
+    steps: usize,
+    /// serve decode section
+    decode_tokens: usize,
+}
+
+const FULL: Workload = Workload {
+    ranks: &[32, 128],
+    threads: &[1, 2, 4],
+    d_model: 256,
+    d_ffn: 512,
+    n_heads: 8,
+    mm_rows: 512,
+    attn_bsz: 4,
+    attn_t: 128,
+    batch: 4,
+    seq_len: 32,
+    steps: 4,
+    decode_tokens: 48,
+};
+
+const SMOKE: Workload = Workload {
+    ranks: &[32],
+    threads: &[1, 2],
+    d_model: 128,
+    d_ffn: 256,
+    n_heads: 4,
+    mm_rows: 256,
+    attn_bsz: 2,
+    attn_t: 64,
+    batch: 2,
+    seq_len: 24,
+    steps: 2,
+    decode_tokens: 24,
+};
+
+/// Median-free simple timer: warmup once, then average `iters` runs.
+fn time_ms<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e3 / iters as f64
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = argv.iter().any(|a| a == "--smoke") || std::env::var("SCT_BENCH_SMOKE").is_ok();
+    let json_path =
+        argv.iter().position(|a| a == "--json").and_then(|i| argv.get(i + 1).cloned());
+    let w = if smoke { SMOKE } else { FULL };
+
+    println!(
+        "kernel scaling{}: d_model={}, d_ffn={}, heads={}, threads {:?}",
+        if smoke { " [smoke]" } else { "" },
+        w.d_model,
+        w.d_ffn,
+        w.n_heads,
+        w.threads,
+    );
+    println!("| section | rank | threads | ms | speedup | tok/s |");
+    println!("|---|---|---|---|---|---|");
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut emit = |section: &str, rank: usize, threads: usize, ms: f64, base_ms: f64, tps: f64| {
+        let speedup = if ms > 0.0 { base_ms / ms } else { 0.0 };
+        println!(
+            "| {section} | {rank} | {threads} | {ms:.2} | {speedup:.2}x | {} |",
+            if tps > 0.0 { format!("{tps:.0}") } else { "-".to_string() },
+        );
+        rows.push(json_obj![
+            ("section", section),
+            // "mode" keys the row in scripts/bench_diff.py's flattened diff
+            ("mode", format!("{section}@t{threads}")),
+            ("rank", rank),
+            ("threads", threads),
+            ("ms", ms),
+            ("speedup_vs_1", speedup),
+            ("tok_per_s", tps),
+        ]);
+    };
+
+    // -- spectral projection matmuls (x U diag(s) V^T) -----------------------
+    for &rank in w.ranks {
+        let mut rng = Rng::new(1);
+        let layer = SpectralLinear::init(&mut rng, w.d_model, w.d_ffn, rank);
+        let x = Matrix::randn(&mut rng, w.mm_rows, w.d_model, 1.0);
+        let mut base = 0.0f64;
+        for &t in w.threads {
+            pool::set_threads(t);
+            let ms = time_ms(2, 8, || {
+                let (y, _) = layer.forward(&x);
+                std::hint::black_box(&y);
+            });
+            if t == 1 {
+                base = ms;
+            }
+            emit("spectral_matmul", rank, t, ms, base, 0.0);
+        }
+    }
+
+    // -- head-parallel causal attention forward ------------------------------
+    {
+        let n = w.attn_bsz * w.attn_t * w.d_model;
+        let mut rng = Rng::new(2);
+        let q: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0.0f32; n];
+        let mut probs = vec![0.0f32; w.attn_bsz * w.n_heads * w.attn_t * w.attn_t];
+        let mut base = 0.0f64;
+        for &t in w.threads {
+            pool::set_threads(t);
+            let ms = time_ms(1, 6, || {
+                out.fill(0.0);
+                causal_attention_fwd_batched(
+                    &q,
+                    &k,
+                    &v,
+                    w.attn_bsz,
+                    w.attn_t,
+                    w.n_heads,
+                    w.d_model,
+                    &mut out,
+                    &mut probs,
+                );
+            });
+            if t == 1 {
+                base = ms;
+            }
+            emit("attention_fwd", 0, t, ms, base, 0.0);
+        }
+    }
+
+    // -- full native training step (fwd+bwd+opt+retract) ---------------------
+    for &rank in w.ranks {
+        let cfg = NativeTrainConfig {
+            model: EngineConfig {
+                vocab: 256,
+                d_model: w.d_model,
+                n_layers: 2,
+                n_heads: w.n_heads,
+                d_ffn: w.d_ffn,
+                rank,
+                max_seq: w.seq_len.max(2),
+                tied: true,
+            },
+            batch: w.batch,
+            seq_len: w.seq_len,
+            grad_clip: 1.0,
+            retract_every: 1,
+            weight_decay: 0.0,
+        };
+        let window = w.batch * (w.seq_len + 1);
+        let mut base = 0.0f64;
+        for &t in w.threads {
+            pool::set_threads(t);
+            let mut trainer = NativeTrainer::new(cfg, 0);
+            let mut rng = Rng::new(42);
+            let tokens = w.batch * w.seq_len;
+            let ms = time_ms(1, w.steps, || {
+                let b: Vec<i32> = (0..window).map(|_| rng.below(256) as i32).collect();
+                trainer.train_step(&b, 5e-4, 5e-4);
+            });
+            if t == 1 {
+                base = ms;
+            }
+            let tps = tokens as f64 / (ms / 1e3);
+            emit("train_step", rank, t, ms, base, tps);
+        }
+    }
+
+    // -- serve decode (KV incremental, fused prefill + decode loop) ----------
+    {
+        let cfg = EngineConfig {
+            vocab: 256,
+            d_model: w.d_model,
+            n_layers: 2,
+            n_heads: w.n_heads,
+            d_ffn: w.d_ffn,
+            rank: w.ranks[0],
+            max_seq: w.decode_tokens + 16,
+            tied: true,
+        };
+        let engine = Engine::new(SpectralModel::init(cfg, 0));
+        let opts = SampleOpts { temperature: 0.0, top_k: 0, seed: 0 };
+        let prompt: Vec<i32> = (0..8).map(|i| (i * 31 + 5) % 256).collect();
+        let mut base = 0.0f64;
+        for &t in w.threads {
+            pool::set_threads(t);
+            let ms = time_ms(1, 3, || {
+                let mut kv = engine.new_kv(1);
+                let slot = kv.alloc().unwrap();
+                let out = engine.generate_kv(&prompt, w.decode_tokens, &opts, &mut kv, slot);
+                std::hint::black_box(&out);
+            });
+            if t == 1 {
+                base = ms;
+            }
+            let tps = w.decode_tokens as f64 / (ms / 1e3);
+            emit("serve_decode", cfg.rank, t, ms, base, tps);
+        }
+    }
+
+    pool::set_threads(1);
+
+    if let Some(path) = json_path {
+        let doc = json_obj![
+            ("bench", "kernel_scaling"),
+            ("smoke", smoke),
+            ("d_model", w.d_model),
+            ("d_ffn", w.d_ffn),
+            ("n_heads", w.n_heads),
+            ("rows", rows),
+        ];
+        std::fs::write(&path, doc.to_string()).expect("writing bench JSON");
+        println!("\nwrote {path}");
+    }
+}

@@ -143,6 +143,12 @@ fn base_config(args: &Args) -> Result<RunConfig> {
     if let Some(s) = args.get("rank-schedule") {
         cfg.rank_policy = RankPolicyConfig::Schedule(RankPolicyConfig::parse_schedule(s)?);
     }
+    // worker-pool size for the parallel kernels: flag > [runtime] TOML >
+    // SCT_THREADS env > all cores (the pool resolves the last two itself)
+    cfg.threads = args.parse_num("threads", cfg.threads)?;
+    if cfg.threads > 0 {
+        crate::util::pool::set_threads(cfg.threads);
+    }
     Ok(cfg)
 }
 
@@ -179,6 +185,12 @@ fn train_cmd_spec() -> Command {
             "\"step:rank,step:rank\" milestones — grow/shrink the spectral \
              factors live at those steps, native backend (TOML: [[rank.schedule]]; \
              adaptive tail-energy policy via the [rank] section)",
+        )
+        .opt(
+            "threads",
+            "worker-pool threads for the parallel kernels (0 = auto; also \
+             [runtime] threads in TOML or the SCT_THREADS env var; results \
+             are bit-identical at any setting)",
         )
         .flag("untied", "untied LM head, native backend (default tied)")
         .flag("no-chunk", "dispatch per-step instead of fused K-step chunks (pjrt)")
@@ -292,6 +304,7 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         .opt("artifacts", "artifact root, pjrt backend")
         .opt("out", "output dir")
         .opt_default("ranks", "comma-separated spectral ranks, native backend", "4,8,16,32")
+        .opt("threads", "worker-pool threads for the parallel kernels (0 = auto)")
         .flag("split-lr", "per-component LRs, pjrt backend (the paper's §5 proposal)")
         .flag("quick", "small steps count for smoke runs");
     let args = spec.parse(argv)?;
@@ -563,6 +576,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
              (0 = no deadline) [default: 15000]",
         )
         .opt(
+            "threads",
+            "worker-pool threads for the parallel decode kernels (0 = auto; \
+             also [runtime] threads in TOML or SCT_THREADS)",
+        )
+        .opt(
             "ckpt",
             ".sct checkpoint (SpectralModel::save or `sct train --backend native`)",
         )
@@ -577,9 +595,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let args = spec.parse(argv)?;
 
     let mut serve_cfg = serve::ServeConfig::default();
+    let mut threads = 0usize;
     if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path)?;
-        serve_cfg.apply_toml(&super::config::parse_toml(&text)?)?;
+        let doc = super::config::parse_toml(&text)?;
+        serve_cfg.apply_toml(&doc)?;
+        threads = super::config::runtime_threads(&doc)?;
+    }
+    threads = args.parse_num("threads", threads)?;
+    if threads > 0 {
+        crate::util::pool::set_threads(threads);
     }
     if let Some(a) = args.get("addr") {
         serve_cfg.addr = a.to_string();

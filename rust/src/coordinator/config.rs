@@ -5,6 +5,13 @@
 //! offline image has no `toml` crate, so [`parse_toml`] implements the
 //! subset the configs use: `[section]` tables, `key = value` with strings,
 //! integers, floats, booleans and flat arrays, plus `#` comments.
+//!
+//! The `[runtime]` section holds execution knobs shared by every
+//! subcommand; today that is `threads` — the worker-pool size for the
+//! parallel kernels (`util::pool`), resolved as `--threads` flag >
+//! `[runtime] threads` > `SCT_THREADS` env > all cores. Results are
+//! bit-identical at any setting (the pool's determinism contract), so the
+//! knob only moves throughput.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -96,6 +103,16 @@ pub fn parse_toml(text: &str) -> Result<TomlDoc> {
         doc.get_mut(&section).unwrap().insert(key.trim().to_string(), value);
     }
     Ok(doc)
+}
+
+/// Read `[runtime] threads` from a parsed document (0 = absent/auto) — the
+/// single home of that key, shared by [`RunConfig::apply_toml`] and the
+/// serve CLI path (which carries no `RunConfig`).
+pub fn runtime_threads(doc: &TomlDoc) -> Result<usize> {
+    match doc.get("runtime").and_then(|r| r.get("threads")) {
+        Some(v) => v.as_usize(),
+        None => Ok(0),
+    }
 }
 
 /// The tables of a `[[name]]` array, in declaration order.
@@ -193,6 +210,10 @@ pub struct RunConfig {
     /// Rank-transition policy for the native backend (`[rank]` TOML section
     /// + `[[rank.schedule]]` milestones, or `sct train --rank-schedule`).
     pub rank_policy: RankPolicyConfig,
+    /// Worker-pool threads for the parallel kernels (`[runtime] threads` /
+    /// `--threads`; 0 = auto: `SCT_THREADS` env, else all cores). Purely a
+    /// throughput knob — results are bit-identical at any setting.
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -218,6 +239,7 @@ impl Default for RunConfig {
             seq_len: 64,
             native_model: EngineConfig::default(),
             rank_policy: RankPolicyConfig::Fixed,
+            threads: 0,
         }
     }
 }
@@ -274,6 +296,11 @@ impl RunConfig {
         }
         if let Some(v) = t.get("out_dir") {
             self.out_dir = v.as_str()?.to_string();
+        }
+        // [runtime] section: execution knobs shared by every subcommand.
+        let rt_threads = runtime_threads(doc)?;
+        if rt_threads > 0 {
+            self.threads = rt_threads;
         }
         // [model] section: native-backend model geometry.
         if let Some(m) = doc.get("model") {
@@ -587,6 +614,17 @@ check_every = 25
         let mut fresh = RunConfig::default();
         fresh.apply_toml(&parse_toml(SAMPLE).unwrap()).unwrap();
         assert_eq!(fresh.rank_policy, RankPolicyConfig::Fixed);
+    }
+
+    #[test]
+    fn runtime_threads_section_applies() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.threads, 0, "default is auto");
+        cfg.apply_toml(&parse_toml("[runtime]\nthreads = 3\n").unwrap()).unwrap();
+        assert_eq!(cfg.threads, 3);
+        // bad value is an error, not a silent skip
+        let doc = parse_toml("[runtime]\nthreads = \"many\"\n").unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
     }
 
     #[test]

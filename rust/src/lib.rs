@@ -45,6 +45,13 @@
 //!   CSV/JSON export and ASCII plots for the figures.
 //! * [`checkpoint`] — binary checkpoint format for spectral factors (shared
 //!   by training sessions and serve models).
+//! * [`util`] — in-tree substrates that would normally be crates (args,
+//!   json, rng, bench) plus [`util::pool`], the scoped worker pool behind
+//!   the parallel kernel layer: every hot matmul, the head-parallel
+//!   attention kernels, the AdamW update and the per-factor QR retraction
+//!   fan out through it (`--threads` / `[runtime] threads` / `SCT_THREADS`
+//!   sized), sharded by disjoint output rows so results are bit-identical
+//!   at any thread count.
 
 pub mod checkpoint;
 pub mod coordinator;

@@ -61,7 +61,14 @@ pub fn append_orthonormal_cols(mat: &mut Matrix, extra: usize, rng: &mut Rng) {
         m >= k + extra,
         "cannot extend a {m} x {k} factor by {extra} orthonormal columns"
     );
-    let mut cols: Vec<Vec<f32>> = (0..k).map(|j| mat.col(j)).collect();
+    // col_into: one fill per existing column, capacity reserved up front
+    // (no per-call Vec churn inside the CGS2 loop below).
+    let mut cols: Vec<Vec<f32>> = Vec::with_capacity(k + extra);
+    for j in 0..k {
+        let mut c = Vec::with_capacity(m);
+        mat.col_into(j, &mut c);
+        cols.push(c);
+    }
     for _ in 0..extra {
         // Resample on degenerate draws (norm collapses under projection);
         // with Gaussian draws and m > k this is astronomically rare.

@@ -12,12 +12,14 @@
 //!    Admission is O(1): the prompt is *not* prefilled inline — the sequence
 //!    enters the batch in the `Prefilling` state;
 //! 2. **prefill** — spend at most `prefill_chunk` prompt tokens advancing
-//!    `Prefilling` sequences (round-robin across them, one position each,
-//!    batched through [`Engine::prefill_batch`] so they share the projection
-//!    weight traffic). This is the fairness budget: a 512-token prompt costs
-//!    many scheduler steps instead of stalling one, so active decodes keep
-//!    making progress while it is absorbed. A sequence whose prompt is fully
-//!    cached transitions to `Decoding`;
+//!    `Prefilling` sequences (budget dealt round-robin across them, then all
+//!    granted tokens absorbed as **fused multi-token runs** through ONE
+//!    [`Engine::prefill_batch`] call: each projection is a single batched
+//!    matmul over every granted position, not one matmul per position).
+//!    This is the fairness budget: a 512-token prompt costs many scheduler
+//!    steps instead of stalling one, so active decodes keep making progress
+//!    while it is absorbed. A sequence whose prompt is fully cached
+//!    transitions to `Decoding`;
 //! 3. **decode** — ONE token for every `Decoding` sequence in a single
 //!    [`Engine::step_batch`] call, so all sequences share the weight-matrix
 //!    traffic of the projections and the logits head. Each sampled token is
@@ -472,43 +474,64 @@ fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: A
         }
         step = step.wrapping_add(1);
 
-        // -- chunked prefill: spend the fairness budget ----------------------
-        let mut budget = if bcfg.prefill_chunk == 0 { usize::MAX } else { bcfg.prefill_chunk };
-        loop {
-            // one prompt token from each Prefilling sequence, round-robin
-            // start so a small budget cannot starve later slots
-            let n = active.len();
-            let mut toks: Vec<i32> = Vec::new();
-            let mut seq_slots: Vec<SlotId> = Vec::new();
-            let mut idxs: Vec<usize> = Vec::new();
-            for j in 0..n {
-                let i = (step + j) % n;
-                if let SeqState::Prefilling { done, .. } = active[i].state {
-                    toks.push(active[i].prompt[done]);
-                    seq_slots.push(active[i].slot);
-                    idxs.push(i);
-                    if toks.len() >= budget {
-                        break;
+        // -- chunked prefill: spend the fairness budget in one fused batch ---
+        // The budget is dealt round-robin (one token per Prefilling sequence
+        // per pass, start rotated by `step`) so a small budget cannot starve
+        // later slots — the same fairness as the old one-token-per-call loop
+        // — but every granted token is absorbed through a SINGLE
+        // Engine::prefill_batch call: multi-token runs per sequence (slots
+        // repeated, tokens in order), so each projection runs once as a
+        // batched matmul over all granted positions instead of once per
+        // position. Token-identical to per-position prefill (engine tests).
+        let n = active.len();
+        let mut order: Vec<usize> = Vec::new(); // Prefilling seqs, rotated
+        let mut remaining: Vec<usize> = Vec::new();
+        for j in 0..n {
+            let i = (step + j) % n;
+            if let SeqState::Prefilling { done, total } = active[i].state {
+                order.push(i);
+                remaining.push(total - done);
+            }
+        }
+        if !order.is_empty() {
+            let budget = if bcfg.prefill_chunk == 0 { usize::MAX } else { bcfg.prefill_chunk };
+            let mut takes = vec![0usize; order.len()];
+            let mut granted = 0usize;
+            'grant: loop {
+                let mut progressed = false;
+                for (take, &rem) in takes.iter_mut().zip(&remaining) {
+                    if granted >= budget {
+                        break 'grant;
+                    }
+                    if *take < rem {
+                        *take += 1;
+                        granted += 1;
+                        progressed = true;
                     }
                 }
+                if !progressed {
+                    break;
+                }
             }
-            if toks.is_empty() {
-                break;
-            }
-            engine.prefill_batch(&toks, &seq_slots, &mut kv);
-            stats.prefill_tokens.fetch_add(toks.len() as u64, Ordering::Relaxed);
-            budget -= toks.len();
-            for &i in &idxs {
+            let mut toks: Vec<i32> = Vec::with_capacity(granted);
+            let mut seq_slots: Vec<SlotId> = Vec::with_capacity(granted);
+            for (&i, &take) in order.iter().zip(&takes) {
+                if take == 0 {
+                    continue;
+                }
                 if let SeqState::Prefilling { done, total } = active[i].state {
-                    active[i].state = if done + 1 == total {
+                    toks.extend_from_slice(&active[i].prompt[done..done + take]);
+                    seq_slots.resize(seq_slots.len() + take, active[i].slot);
+                    active[i].state = if done + take == total {
                         SeqState::Decoding
                     } else {
-                        SeqState::Prefilling { done: done + 1, total }
+                        SeqState::Prefilling { done: done + take, total }
                     };
                 }
             }
-            if budget == 0 {
-                break;
+            if !toks.is_empty() {
+                engine.prefill_batch(&toks, &seq_slots, &mut kv);
+                stats.prefill_tokens.fetch_add(toks.len() as u64, Ordering::Relaxed);
             }
         }
 

@@ -30,8 +30,11 @@ use anyhow::{bail, Context, Result};
 use super::kv::{KvCache, SlotId};
 use crate::checkpoint::format::{read_checkpoint, write_checkpoint, NamedTensor};
 use crate::spectral::{Matrix, SpectralLinear};
-use crate::train::blocks::{add_into, attend_row, rmsnorm, silu, Rope};
+use crate::train::blocks::{
+    add_into, attend_head_row, attend_row, rmsnorm, silu, Rope, ATTN_PAR_WORK,
+};
 use crate::train::decoder::decoder_fwd;
+use crate::util::pool;
 use crate::util::rng::Rng;
 
 // ---------------------------------------------------------------------------
@@ -452,10 +455,19 @@ impl Engine {
     /// Feed a prompt's tokens into `slot` without computing logits — the
     /// admission-path fast prefill (the logits head is the single largest
     /// matmul per step and its output would be discarded).
+    ///
+    /// **Fused**: the whole prompt advances in ONE batched pass — every
+    /// projection runs as a single `(T, d) @ (d, ·)` matmul over all
+    /// positions instead of one `(1, d)` matmul per position — and is
+    /// bit-identical to per-position prefill (rows are independent through
+    /// every op, and attention row `i` sees exactly the KV prefix
+    /// `0..=pos_i`; pinned by the determinism tests).
     pub fn prefill(&self, tokens: &[i32], slot: SlotId, kv: &mut KvCache) {
-        for &t in tokens {
-            self.prefill_batch(&[t], &[slot], kv);
+        if tokens.is_empty() {
+            return;
         }
+        let slots = vec![slot; tokens.len()];
+        self.prefill_batch(tokens, &slots, kv);
     }
 
     /// One chunked-prefill step: append `tokens[i]` (the next prompt token
@@ -463,20 +475,39 @@ impl Engine {
     /// head. Rows may come from *different* sequences at *different*
     /// positions — the batcher uses this to absorb several prompts at once
     /// while sharing the projection weight traffic, exactly like a decode
-    /// batch. Within one sequence, positions must still arrive in order
-    /// (pass its tokens across successive calls, one per call).
+    /// batch. A slot may appear on **multiple rows** with its prompt tokens
+    /// in order (a fused multi-token run): row `j` of a slot's run lands at
+    /// position `len + j`, and its attention sees the run's earlier rows
+    /// through the KV cache — so one call absorbs a whole chunk per
+    /// sequence with one batched matmul per projection.
     pub fn prefill_batch(&self, tokens: &[i32], slots: &[SlotId], kv: &mut KvCache) {
         self.advance_batch(tokens, slots, kv);
     }
 
     /// Shared body of [`Engine::step_batch`]/[`Engine::prefill`]: run the
     /// layer stack, populate the KV cache, return the final hidden states.
+    /// Attention runs head-parallel across the pool — task `(row, head)`
+    /// writes the disjoint stripe `y[row, hb..hb+hd]` with the same
+    /// [`attend_head_row`] kernel the serial path uses, so decode is
+    /// bit-identical at any thread count.
     fn advance_batch(&self, tokens: &[i32], slots: &[SlotId], kv: &mut KvCache) -> Matrix {
         let c = &self.model.cfg;
         let bsz = tokens.len();
         assert_eq!(bsz, slots.len(), "one slot per token");
         let d = c.d_model;
-        let positions: Vec<usize> = slots.iter().map(|&s| kv.len(s)).collect();
+        // A slot may appear several times with consecutive tokens (fused
+        // multi-token prefill): row j of its run lands at len + j. One
+        // O(B + slots) pass with a per-slot running counter — B can be a
+        // whole prompt (Engine::prefill fuses the full prompt in one call).
+        let mut seen = vec![0usize; kv.slots];
+        let positions: Vec<usize> = slots
+            .iter()
+            .map(|&s| {
+                let p = kv.len(s) + seen[s];
+                seen[s] += 1;
+                p
+            })
+            .collect();
         for &p in &positions {
             assert!(p < c.max_seq, "KV cache full (max_seq {})", c.max_seq);
         }
@@ -487,6 +518,12 @@ impl Engine {
             let t = (t.max(0) as usize) % c.vocab;
             x.row_mut(i).copy_from_slice(self.model.embed.row(t));
         }
+
+        let n_heads = c.n_heads;
+        let hd = d / n_heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        // score+value multiply-accumulates this step — gates the fan-out
+        let attn_work: usize = positions.iter().map(|&p| (p + 1) * d).sum();
 
         for (l, layer) in self.model.layers.iter().enumerate() {
             // attention
@@ -499,12 +536,41 @@ impl Engine {
                 self.rope.apply_row(k.row_mut(i), positions[i]);
                 kv.write(slots[i], l, positions[i], k.row(i), v.row(i));
             }
+            // All K/V rows of this layer (including this call's own rows)
+            // are written; attend each (row, head) over its causal prefix.
             let mut y = Matrix::zeros(bsz, d);
-            for i in 0..bsz {
-                let n_ctx = positions[i] + 1;
-                let krows = kv.k_rows(slots[i], l, n_ctx);
-                let vrows = kv.v_rows(slots[i], l, n_ctx);
-                attend_row(q.row(i), krows, vrows, n_ctx, c.n_heads, d, y.row_mut(i));
+            let tasks = bsz * n_heads;
+            if tasks > 1 && pool::parallel_worthwhile(attn_work, ATTN_PAR_WORK) {
+                // head-parallel: task (row, head) writes its disjoint stripe
+                // (per-task scores scratch is noise at shapes above the
+                // work threshold)
+                let kvr: &KvCache = kv;
+                let y_ptr = pool::SendPtr::new(&mut y.data);
+                pool::par_tasks(tasks, |task| {
+                    let (i, hh) = (task / n_heads, task % n_heads);
+                    let hb = hh * hd;
+                    let n_ctx = positions[i] + 1;
+                    let krows = kvr.k_rows(slots[i], l, n_ctx);
+                    let vrows = kvr.v_rows(slots[i], l, n_ctx);
+                    let qh = &q.row(i)[hb..hb + hd];
+                    let mut scores = vec![0.0f32; n_ctx];
+                    // SAFETY: stripe (row i, cols hb..hb+hd) of y belongs to
+                    // this (row, head) task alone.
+                    let oh = unsafe {
+                        std::slice::from_raw_parts_mut(y_ptr.0.add(i * d + hb), hd)
+                    };
+                    attend_head_row(qh, krows, vrows, hb, hd, d, n_ctx, scale, &mut scores, oh);
+                });
+            } else {
+                // serial: one scores buffer reused across all heads of a row
+                // (attend_row == per-head attend_head_row calls, so this arm
+                // is bit-identical to the parallel one)
+                for i in 0..bsz {
+                    let n_ctx = positions[i] + 1;
+                    let krows = kv.k_rows(slots[i], l, n_ctx);
+                    let vrows = kv.v_rows(slots[i], l, n_ctx);
+                    attend_row(q.row(i), krows, vrows, n_ctx, n_heads, d, y.row_mut(i));
+                }
             }
             add_into(&mut x, &y.matmul(&layer.wo));
 
@@ -742,6 +808,49 @@ mod tests {
         for (x, y) in l.row(1).iter().zip(lb.row(0)) {
             assert!((x - y).abs() < 1e-5, "row b diverged: {x} vs {y}");
         }
+    }
+
+    #[test]
+    fn fused_multi_token_prefill_is_bit_identical_to_per_position() {
+        // One prefill_batch call carrying multi-token runs for two sequences
+        // (slots repeated, tokens in order) must leave the KV caches — and
+        // therefore the next-step logits — bit-identical to one-token-per-
+        // call prefill. This is the fused-prefill contract the batcher
+        // relies on.
+        let e = tiny_engine(7);
+        let pa = [3i32, 1, 4, 1, 5];
+        let pb = [2i32, 7, 1, 8];
+
+        let mut kv_ref = e.new_kv(2);
+        let (ra, rb) = (kv_ref.alloc().unwrap(), kv_ref.alloc().unwrap());
+        for &t in &pa {
+            e.prefill_batch(&[t], &[ra], &mut kv_ref);
+        }
+        for &t in &pb {
+            e.prefill_batch(&[t], &[rb], &mut kv_ref);
+        }
+        let l_ref = e.step_batch(&[9, 9], &[ra, rb], &mut kv_ref);
+
+        let mut kv = e.new_kv(2);
+        let (fa, fb) = (kv.alloc().unwrap(), kv.alloc().unwrap());
+        // both runs in ONE fused call: [a0 a1 a2 | b0 b1], then the tails
+        e.prefill_batch(&[pa[0], pa[1], pa[2], pb[0], pb[1]], &[fa, fa, fa, fb, fb], &mut kv);
+        assert_eq!(kv.len(fa), 3);
+        assert_eq!(kv.len(fb), 2);
+        e.prefill_batch(&[pa[3], pa[4], pb[2], pb[3]], &[fa, fa, fb, fb], &mut kv);
+        let l_fused = e.step_batch(&[9, 9], &[fa, fb], &mut kv);
+        assert_eq!(
+            l_fused.data, l_ref.data,
+            "fused runs must be bit-identical to per-position prefill"
+        );
+
+        // Engine::prefill itself is the whole-prompt fused pass
+        let mut kv2 = e.new_kv(1);
+        let s = kv2.alloc().unwrap();
+        e.prefill(&pa, s, &mut kv2);
+        assert_eq!(kv2.len(s), pa.len());
+        let l_one = e.step_batch(&[9], &[s], &mut kv2);
+        assert_eq!(l_one.row(0), l_ref.row(0));
     }
 
     #[test]

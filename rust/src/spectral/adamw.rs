@@ -1,6 +1,46 @@
 //! Native AdamW — used by the true-shape 70B phase benchmark (Table 2's
 //! "Optimizer Step" row runs the real update at the real factor shapes) and
 //! as an independent oracle for the exported optimizer graph.
+//!
+//! The update is elementwise, so large tensors shard across the
+//! `util::pool` workers in aligned chunks — every element is updated by
+//! the same scalar kernel, making the parallel step bit-identical to the
+//! serial one at any thread count.
+
+use crate::util::pool;
+
+/// Elements below which the update stays serial (the elementwise kernel is
+/// memory-bound; small tensors can't amortize the scoped spawn).
+const PAR_MIN_ELEMS: usize = 1 << 16;
+
+/// Per-step scalar coefficients, captured once so worker chunks share the
+/// exact values the serial loop would use.
+#[derive(Clone, Copy)]
+struct StepCoeffs {
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+    lr: f32,
+    wd: f32,
+}
+
+/// The serial update kernel over one aligned chunk of (params, grads, m, v).
+fn update_chunk(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], c: StepCoeffs) {
+    for i in 0..p.len() {
+        let gi = g[i];
+        m[i] = c.b1 * m[i] + (1.0 - c.b1) * gi;
+        v[i] = c.b2 * v[i] + (1.0 - c.b2) * gi * gi;
+        let m_hat = m[i] / c.bc1;
+        let v_hat = v[i] / c.bc2;
+        let mut upd = m_hat / (v_hat.sqrt() + c.eps);
+        if c.wd != 0.0 {
+            upd += c.wd * p[i];
+        }
+        p[i] -= c.lr * upd;
+    }
+}
 
 /// Decoupled-weight-decay Adam over a flat f32 tensor.
 #[derive(Debug, Clone)]
@@ -30,24 +70,37 @@ impl AdamW {
     }
 
     /// One update step: `params -= lr * (m_hat / (sqrt(v_hat) + eps) + wd*p)`.
+    /// Large tensors shard across the worker pool (elementwise update —
+    /// bit-identical to the serial loop at any thread count).
     pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
         assert_eq!(params.len(), grads.len());
         assert_eq!(params.len(), self.m.len());
         self.t += 1;
-        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
-        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
-        let (b1, b2) = (self.beta1, self.beta2);
-        for i in 0..params.len() {
-            let g = grads[i];
-            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
-            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
-            let m_hat = self.m[i] / bc1;
-            let v_hat = self.v[i] / bc2;
-            let mut upd = m_hat / (v_hat.sqrt() + self.eps);
-            if self.weight_decay != 0.0 {
-                upd += self.weight_decay * params[i];
-            }
-            params[i] -= self.lr * upd;
+        let c = StepCoeffs {
+            b1: self.beta1,
+            b2: self.beta2,
+            bc1: 1.0 - self.beta1.powi(self.t as i32),
+            bc2: 1.0 - self.beta2.powi(self.t as i32),
+            eps: self.eps,
+            lr: self.lr,
+            wd: self.weight_decay,
+        };
+        let n = params.len();
+        if n > 1 && pool::parallel_worthwhile(n, PAR_MIN_ELEMS) {
+            let chunk = pool::chunk_len(n);
+            let (m, v) = (&mut self.m, &mut self.v);
+            std::thread::scope(|s| {
+                for (((p, g), mm), vv) in params
+                    .chunks_mut(chunk)
+                    .zip(grads.chunks(chunk))
+                    .zip(m.chunks_mut(chunk))
+                    .zip(v.chunks_mut(chunk))
+                {
+                    s.spawn(move || update_chunk(p, g, mm, vv, c));
+                }
+            });
+        } else {
+            update_chunk(params, grads, &mut self.m, &mut self.v, c);
         }
     }
 

@@ -74,7 +74,15 @@ impl SpectralLinear {
         for j in 0..self.k() {
             hs.scale_col(j, self.s[j]);
         }
-        let y = hs.matmul_t(&self.v); // b x n
+        // Sparse-aware V projection: freshly grown columns carry exactly-zero
+        // singular values until the optimizer moves them (rank subsystem), so
+        // the trailing columns of hs are exactly zero — skip them instead of
+        // branching per FLOP in the dense kernel. This also makes the
+        // grow-is-exact-continuation property structural: the prefix product
+        // IS the pre-grow product. The cache keeps the full-width h/hs (the
+        // s-gradients of the new columns are how they come alive).
+        let k_eff = self.k() - self.s.iter().rev().take_while(|s| **s == 0.0).count();
+        let y = hs.matmul_t_prefix(&self.v, k_eff); // b x n
         (y, SpectralCache { h, hs })
     }
 
@@ -117,8 +125,17 @@ impl SpectralLinear {
     /// Retract both factors (paper Alg. 1 lines 5-7). U and V are
     /// independent, so they retract on two threads — the §Perf fix that
     /// moved the 70B retraction phase (see EXPERIMENTS.md §Perf; the paper's
-    /// sequential per-factor loop is 40-50% of its step time).
+    /// sequential per-factor loop is 40-50% of its step time). Respects a
+    /// `--threads 1` pool (runs serial); either way each factor's CGS2 is
+    /// the same serial kernel, so results never depend on the pool size.
+    /// `NativeTrainer` fans the same per-factor work across ALL layers'
+    /// triples at once instead of calling this per-triple.
     pub fn retract(&mut self) {
+        if crate::util::pool::threads() <= 1 {
+            self.u = qr_retract(&self.u);
+            self.v = qr_retract(&self.v);
+            return;
+        }
         let (u, v) = std::thread::scope(|s| {
             let hu = s.spawn(|| qr_retract(&self.u));
             let hv = s.spawn(|| qr_retract(&self.v));

@@ -4,8 +4,24 @@
 //! Deliberately not a general BLAS: only what the spectral math needs, with
 //! a cache-blocked `matmul` for the hot paths (the 70B-shape retraction
 //! benches run through this code).
+//!
+//! The three matmuls dispatch through `util::pool`: above a work threshold
+//! the **output rows** are sharded across the scoped worker pool, each row
+//! computed by the same serial kernel in the same accumulation order — so
+//! results are bit-identical at any thread count (see the pool module docs
+//! for the determinism contract). Small shapes take the serial kernel
+//! directly. The inner loops are branch-free on purpose: a zero test per
+//! FLOP costs more than it saves on dense data and makes timing
+//! data-dependent; the one place exact zeros systematically occur —
+//! trailing zero singular values after a rank-grow — goes through the
+//! dedicated [`Matrix::matmul_t_prefix`] path instead.
 
+use crate::util::pool;
 use crate::util::rng::Rng;
+
+/// Inner-loop multiply-accumulate count below which the matmuls stay
+/// serial (scoped-spawn overhead dominates under ~10^5 FLOPs).
+const PAR_FLOPS: usize = 1 << 17;
 
 /// Row-major matrix of f32.
 #[derive(Debug, Clone, PartialEq)]
@@ -51,7 +67,21 @@ impl Matrix {
 
     /// Column `c` as a fresh Vec (rows are contiguous, columns are not).
     pub fn col(&self, c: usize) -> Vec<f32> {
-        (0..self.rows).map(|r| self[(r, c)]).collect()
+        let mut buf = Vec::new();
+        self.col_into(c, &mut buf);
+        buf
+    }
+
+    /// Copy column `c` into `buf`, clearing it first and reusing its
+    /// capacity — the allocation-free twin of [`Matrix::col`] for hot loops
+    /// (the CGS2 retraction refills one column buffer per panel column).
+    pub fn col_into(&self, c: usize, buf: &mut Vec<f32>) {
+        debug_assert!(c < self.cols);
+        buf.clear();
+        buf.reserve(self.rows);
+        for r in 0..self.rows {
+            buf.push(self[(r, c)]);
+        }
     }
 
     pub fn transpose(&self) -> Matrix {
@@ -65,61 +95,112 @@ impl Matrix {
     }
 
     /// `self @ other`, cache-blocked (i,k,j loop order keeps the inner loop
-    /// streaming over contiguous rows of both output and `other`).
+    /// streaming over contiguous rows of both output and `other`). Output
+    /// rows are sharded across the worker pool above the work threshold;
+    /// each row runs the identical serial kernel, so results are
+    /// bit-identical at any thread count.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, kdim, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
-        for i in 0..m {
-            let a_row = self.row(i);
-            let out_row = out.row_mut(i);
-            for (k, &a_ik) in a_row.iter().enumerate().take(kdim) {
-                if a_ik == 0.0 {
-                    continue;
-                }
-                let b_row = other.row(k);
-                for j in 0..n {
-                    out_row[j] += a_ik * b_row[j];
-                }
-            }
+        if self.data.is_empty() || other.data.is_empty() {
+            return out;
+        }
+        if m > 1 && pool::parallel_worthwhile(m * kdim * n, PAR_FLOPS) {
+            pool::par_rows(&mut out.data, n, |r0, block| self.matmul_block(other, r0, block));
+        } else {
+            self.matmul_block(other, 0, &mut out.data);
         }
         out
     }
 
-    /// `self^T @ other` without materializing the transpose.
+    /// Rows `r0..r0 + block.len()/n` of `self @ other` into `block` — the
+    /// shared serial kernel of both matmul dispatch arms.
+    fn matmul_block(&self, other: &Matrix, r0: usize, block: &mut [f32]) {
+        let n = other.cols;
+        for (bi, out_row) in block.chunks_mut(n).enumerate() {
+            let a_row = self.row(r0 + bi);
+            for (k, &a_ik) in a_row.iter().enumerate() {
+                axpy(a_ik, other.row(k), out_row);
+            }
+        }
+    }
+
+    /// `self^T @ other` without materializing the transpose. Output rows
+    /// (columns of `self`) shard across the pool; within each output row
+    /// the accumulation order over the shared dimension is the serial
+    /// kernel's, so results are bit-identical at any thread count.
     pub fn t_matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
         let (m, n) = (self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
-        for r in 0..self.rows {
-            let a_row = self.row(r);
-            let b_row = other.row(r);
-            for (i, &a_ri) in a_row.iter().enumerate() {
-                if a_ri == 0.0 {
-                    continue;
-                }
-                let out_row = out.row_mut(i);
-                for (j, &b_rj) in b_row.iter().enumerate() {
-                    out_row[j] += a_ri * b_rj;
-                }
-            }
+        if self.data.is_empty() || other.data.is_empty() {
+            return out;
+        }
+        if m > 1 && pool::parallel_worthwhile(self.rows * m * n, PAR_FLOPS) {
+            pool::par_rows(&mut out.data, n, |i0, block| self.t_matmul_block(other, i0, block));
+        } else {
+            self.t_matmul_block(other, 0, &mut out.data);
         }
         out
     }
 
-    /// `self @ other^T` without materializing the transpose.
-    pub fn matmul_t(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
-        let (m, n) = (self.rows, other.rows);
-        let mut out = Matrix::zeros(m, n);
-        for i in 0..m {
-            let a_row = self.row(i);
-            let out_row = out.row_mut(i);
-            for j in 0..n {
-                out_row[j] = dot(a_row, other.row(j));
+    /// Output rows `i0..i0 + block.len()/n` of `self^T @ other` into
+    /// `block`, streaming over the shared `r` dimension in order.
+    fn t_matmul_block(&self, other: &Matrix, i0: usize, block: &mut [f32]) {
+        let n = other.cols;
+        for r in 0..self.rows {
+            let a_row = self.row(r);
+            let b_row = other.row(r);
+            for (bi, out_row) in block.chunks_mut(n).enumerate() {
+                axpy(a_row[i0 + bi], b_row, out_row);
             }
         }
+    }
+
+    /// `self @ other^T` without materializing the transpose.
+    pub fn matmul_t(&self, other: &Matrix) -> Matrix {
+        self.matmul_t_prefix(other, self.cols)
+    }
+
+    /// `self[:, ..k_eff] @ other[:, ..k_eff]^T` — the sparse-aware matmul_t.
+    ///
+    /// The rank subsystem's grow appends columns with **exactly zero**
+    /// singular values, which makes the trailing columns of `x U diag(s)`
+    /// exactly zero until the optimizer moves them; `SpectralLinear::forward`
+    /// skips that block here instead of burning FLOPs on it (and instead of
+    /// a per-element zero branch inside the dense kernels). With
+    /// `k_eff == cols` this IS `matmul_t`. The prefix dot uses the same
+    /// lane grouping as the pre-grow full dot, so a grown layer's forward
+    /// stays bit-identical to its pre-grow forward.
+    pub fn matmul_t_prefix(&self, other: &Matrix, k_eff: usize) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        assert!(k_eff <= self.cols, "prefix {k_eff} beyond inner dim {}", self.cols);
+        let (m, n) = (self.rows, other.rows);
+        let mut out = Matrix::zeros(m, n);
+        if m == 0 || n == 0 || k_eff == 0 {
+            return out;
+        }
+        if m > 1 && pool::parallel_worthwhile(m * k_eff * n, PAR_FLOPS) {
+            pool::par_rows(&mut out.data, n, |r0, block| {
+                self.matmul_t_block(other, k_eff, r0, block)
+            });
+        } else {
+            self.matmul_t_block(other, k_eff, 0, &mut out.data);
+        }
         out
+    }
+
+    /// Rows `r0..` of `self @ other^T` (inner dimension truncated to
+    /// `k_eff`) into `block`.
+    fn matmul_t_block(&self, other: &Matrix, k_eff: usize, r0: usize, block: &mut [f32]) {
+        let n = other.rows;
+        for (bi, out_row) in block.chunks_mut(n).enumerate() {
+            let a_row = &self.row(r0 + bi)[..k_eff];
+            for (j, o) in out_row.iter_mut().enumerate() {
+                *o = dot(a_row, &other.row(j)[..k_eff]);
+            }
+        }
     }
 
     /// Scale column `c` by `f` in place.
@@ -241,6 +322,44 @@ mod tests {
         let fast = a.matmul_t(&b);
         let slow = a.matmul(&b.transpose());
         assert!(fast.max_abs_diff(&slow) < 1e-5);
+    }
+
+    #[test]
+    fn matmul_t_prefix_skips_trailing_zero_columns_bit_exactly() {
+        // The rank-grow invariant: appending zero-s columns and dotting the
+        // prefix must reproduce the pre-grow product bit-for-bit.
+        let mut rng = Rng::new(7);
+        let a_small = Matrix::randn(&mut rng, 6, 4, 1.0);
+        let b_small = Matrix::randn(&mut rng, 5, 4, 1.0);
+        let full = a_small.matmul_t(&b_small);
+        // widen both with garbage columns, then ask for the 4-col prefix
+        let widen = |m: &Matrix, extra: usize| {
+            let mut w = Matrix::randn(&mut rng, m.rows, m.cols + extra, 1.0);
+            for r in 0..m.rows {
+                w.row_mut(r)[..m.cols].copy_from_slice(m.row(r));
+            }
+            w
+        };
+        let a_wide = widen(&a_small, 3);
+        let b_wide = widen(&b_small, 3);
+        let pref = a_wide.matmul_t_prefix(&b_wide, 4);
+        assert_eq!(pref.data, full.data, "prefix product must be bit-identical");
+        // k_eff == cols is plain matmul_t
+        assert_eq!(a_small.matmul_t_prefix(&b_small, 4).data, full.data);
+        // k_eff == 0 is the zero matrix
+        assert_eq!(a_small.matmul_t_prefix(&b_small, 0).data, vec![0.0; 6 * 5]);
+    }
+
+    #[test]
+    fn col_into_reuses_buffer_and_matches_col() {
+        let mut rng = Rng::new(8);
+        let a = Matrix::randn(&mut rng, 9, 4, 1.0);
+        let mut buf = vec![99.0f32; 3]; // stale contents + wrong length
+        a.col_into(2, &mut buf);
+        assert_eq!(buf, a.col(2));
+        assert_eq!(buf.len(), 9);
+        a.col_into(0, &mut buf); // reuse for another column
+        assert_eq!(buf, a.col(0));
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! is the unique positive-diagonal QR of the input.
 
 use super::matrix::{dot, Matrix};
+use crate::util::pool;
 
 /// Accuracy-preserving fast dot: plain f32 accumulation over m ~ 3e4 rows
 /// injects ~1e-5 of error (above the paper's 2e-6 orthonormality budget),
@@ -60,13 +61,12 @@ pub fn qr_retract(a: &Matrix) -> Matrix {
 pub fn qr_retract_serial(a: &Matrix) -> Matrix {
     let (m, k) = (a.rows, a.cols);
     assert!(m >= k, "retraction needs m >= k, got {m} x {k}");
-    // Column-major scratch: columns are the unit of work here.
+    // Column-major scratch: columns are the unit of work here. One working
+    // buffer refilled per column (col_into), not one allocation per column.
     let mut q_cols: Vec<Vec<f32>> = Vec::with_capacity(k);
-    let mut v = vec![0.0f32; m];
+    let mut v: Vec<f32> = Vec::with_capacity(m);
     for j in 0..k {
-        for (r, vr) in v.iter_mut().enumerate() {
-            *vr = a[(r, j)];
-        }
+        a.col_into(j, &mut v);
         // Two projection passes ("twice is enough"), f64 coefficients.
         for _pass in 0..2 {
             for q in &q_cols {
@@ -105,9 +105,15 @@ pub fn qr_retract_parallel(a: &Matrix) -> Matrix {
     const PANEL: usize = 8;
     let (m, k) = (a.rows, a.cols);
     assert!(m >= k, "retraction needs m >= k, got {m} x {k}");
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16);
-    // Column-major working set.
-    let mut cols: Vec<Vec<f32>> = (0..k).map(|j| a.col(j)).collect();
+    let threads = pool::threads().min(16);
+    // Column-major working set (col_into: one fill per column, capacity
+    // reserved up front).
+    let mut cols: Vec<Vec<f32>> = Vec::with_capacity(k);
+    for j in 0..k {
+        let mut c = Vec::with_capacity(m);
+        a.col_into(j, &mut c);
+        cols.push(c);
+    }
 
     let mut done = 0usize;
     while done < k {

@@ -14,8 +14,15 @@
 //! to the incremental KV decode the serve tests pin against it.
 
 use crate::spectral::matrix::{axpy, dot, Matrix};
+use crate::util::pool;
 
 pub const RMS_EPS: f32 = 1e-6;
+
+/// Attention work (score/value multiply-accumulates, roughly
+/// `bsz * n_heads * ctx * head_dim` summed over rows) below which the
+/// batched kernels stay serial. Shared with `serve::engine`'s incremental
+/// decode so train and serve cross over at the same shapes.
+pub(crate) const ATTN_PAR_WORK: usize = 1 << 15;
 
 // ---------------------------------------------------------------------------
 // RMSNorm
@@ -169,10 +176,52 @@ impl Rope {
 // causal softmax attention
 // ---------------------------------------------------------------------------
 
+/// One head's attention for ONE query row over `n_ctx` context rows stored
+/// `[pos][d_model]`-major: scores via [`dot`], running max, exp-normalize,
+/// then `w * (1/denom)`-weighted value accumulation — THE attention
+/// arithmetic, shared by [`attend_row`] (serving decode),
+/// [`causal_attention_fwd`] (training) and the head-parallel batched
+/// variants, so every path is bit-identical by construction. `scores`
+/// (length >= n_ctx) receives the normalized softmax weights; `oh`
+/// (head_dim, zero-initialized) accumulates the head's output.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn attend_head_row(
+    qh: &[f32],
+    krows: &[f32],
+    vrows: &[f32],
+    hb: usize,
+    hd: usize,
+    d_model: usize,
+    n_ctx: usize,
+    scale: f32,
+    scores: &mut [f32],
+    oh: &mut [f32],
+) {
+    let scores = &mut scores[..n_ctx];
+    let mut mx = f32::NEG_INFINITY;
+    for (t, sc) in scores.iter_mut().enumerate() {
+        *sc = dot(qh, &krows[t * d_model + hb..t * d_model + hb + hd]) * scale;
+        mx = mx.max(*sc);
+    }
+    let mut denom = 0.0f32;
+    for sc in scores.iter_mut() {
+        *sc = (*sc - mx).exp();
+        denom += *sc;
+    }
+    let inv = 1.0 / denom;
+    for (t, sc) in scores.iter_mut().enumerate() {
+        *sc *= inv;
+        axpy(*sc, &vrows[t * d_model + hb..t * d_model + hb + hd], oh);
+    }
+}
+
 /// Causal softmax attention for one query row over `n_ctx` cached K/V rows
 /// (contiguous `[pos][d_model]` layout), writing the concatenated head
-/// outputs into `out` (d_model). The serving engine's incremental decode
-/// step — one query against the KV cache.
+/// outputs into `out` (d_model, zero-initialized). The serving engine's
+/// incremental decode step — one query against the KV cache (which runs
+/// the heads through [`attend_head_row`] in parallel; this serial wrapper
+/// is the reference and the small-shape path).
 pub fn attend_row(
     qrow: &[f32],
     krows: &[f32],
@@ -187,22 +236,49 @@ pub fn attend_row(
     let mut scores = vec![0.0f32; n_ctx];
     for h in 0..n_heads {
         let hb = h * hd;
-        let qh = &qrow[hb..hb + hd];
-        let mut mx = f32::NEG_INFINITY;
-        for (t, sc) in scores.iter_mut().enumerate() {
-            *sc = dot(qh, &krows[t * d_model + hb..t * d_model + hb + hd]) * scale;
-            mx = mx.max(*sc);
-        }
-        let mut denom = 0.0f32;
-        for sc in scores.iter_mut() {
-            *sc = (*sc - mx).exp();
-            denom += *sc;
-        }
-        let inv = 1.0 / denom;
-        let oh = &mut out[hb..hb + hd];
-        for (t, &w) in scores.iter().enumerate() {
-            axpy(w * inv, &vrows[t * d_model + hb..t * d_model + hb + hd], oh);
-        }
+        attend_head_row(
+            &qrow[hb..hb + hd],
+            krows,
+            vrows,
+            hb,
+            hd,
+            d_model,
+            n_ctx,
+            scale,
+            &mut scores,
+            &mut out[hb..hb + hd],
+        );
+    }
+}
+
+/// One (sequence, head) pair of the full-sequence causal forward: row `i`
+/// attends over rows `0..=i` through [`attend_head_row`]; the normalized
+/// softmax weights land in `probs_head` (`t_len * t_len`, `[i][j]`).
+///
+/// `out` is the raw base pointer of this sequence's `t_len * d_model`
+/// output region: the head writes only its `hb..hb+hd` stripe of each row,
+/// so concurrent heads of the same sequence never touch the same memory.
+#[allow(clippy::too_many_arguments)]
+fn attention_head_seq_fwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    hb: usize,
+    hd: usize,
+    d_model: usize,
+    t_len: usize,
+    scale: f32,
+    probs_head: &mut [f32],
+    out: &pool::SendPtr,
+) {
+    for i in 0..t_len {
+        let n_ctx = i + 1;
+        let qh = &q[i * d_model + hb..i * d_model + hb + hd];
+        let prow = &mut probs_head[i * t_len..i * t_len + n_ctx];
+        // SAFETY: stripe (row i, cols hb..hb+hd) is written by exactly this
+        // (sequence, head) task — see causal_attention_fwd_batched.
+        let oh = unsafe { std::slice::from_raw_parts_mut(out.0.add(i * d_model + hb), hd) };
+        attend_head_row(qh, k, v, hb, hd, d_model, n_ctx, scale, prow, oh);
     }
 }
 
@@ -212,9 +288,10 @@ pub fn attend_row(
 /// outputs; `probs` (`n_heads * t_len * t_len`, `[h][i][j]`) caches the
 /// softmax weights for [`causal_attention_bwd`].
 ///
-/// The per-row arithmetic is exactly [`attend_row`]'s (scores via the same
-/// `dot`, running max, `exp`, `w * (1/denom)` accumulation in the same
-/// order), so the training forward matches the KV decode bit-for-bit.
+/// The per-row arithmetic is exactly [`attend_row`]'s (both call
+/// [`attend_head_row`]), so the training forward matches the KV decode
+/// bit-for-bit. This is the `bsz == 1` case of
+/// [`causal_attention_fwd_batched`], head-parallelism included.
 pub fn causal_attention_fwd(
     q: &[f32],
     k: &[f32],
@@ -225,38 +302,64 @@ pub fn causal_attention_fwd(
     out: &mut [f32],
     probs: &mut [f32],
 ) {
-    debug_assert_eq!(probs.len(), n_heads * t_len * t_len);
+    causal_attention_fwd_batched(q, k, v, 1, t_len, n_heads, d_model, out, probs);
+}
+
+/// Head-parallel causal attention over `bsz` packed sequences (`q`/`k`/`v`:
+/// `bsz * t_len * d_model`, sequences contiguous; `probs`:
+/// `bsz * n_heads * t_len * t_len`, `[b][h][i][j]`). One pool task per
+/// (sequence, head); a task owns the disjoint output stripes
+/// `out[b*t_len*d + i*d + hb .. +hd]` and its contiguous `probs` block, and
+/// runs the identical serial head kernel — so results are bit-identical at
+/// any thread count. Small shapes run the same tasks inline.
+#[allow(clippy::too_many_arguments)]
+pub fn causal_attention_fwd_batched(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    bsz: usize,
+    t_len: usize,
+    n_heads: usize,
+    d_model: usize,
+    out: &mut [f32],
+    probs: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), bsz * t_len * d_model);
+    debug_assert_eq!(probs.len(), bsz * n_heads * t_len * t_len);
     let hd = d_model / n_heads;
     let scale = 1.0 / (hd as f32).sqrt();
-    for h in 0..n_heads {
-        let hb = h * hd;
-        for i in 0..t_len {
-            let n_ctx = i + 1;
-            let qh = &q[i * d_model + hb..i * d_model + hb + hd];
-            let prow = &mut probs[h * t_len * t_len + i * t_len..][..n_ctx];
-            let mut mx = f32::NEG_INFINITY;
-            for (t, sc) in prow.iter_mut().enumerate() {
-                *sc = dot(qh, &k[t * d_model + hb..t * d_model + hb + hd]) * scale;
-                mx = mx.max(*sc);
-            }
-            let mut denom = 0.0f32;
-            for sc in prow.iter_mut() {
-                *sc = (*sc - mx).exp();
-                denom += *sc;
-            }
-            let inv = 1.0 / denom;
-            let oh = &mut out[i * d_model + hb..i * d_model + hb + hd];
-            for (t, sc) in prow.iter_mut().enumerate() {
-                *sc *= inv;
-                axpy(*sc, &v[t * d_model + hb..t * d_model + hb + hd], oh);
-            }
+    let tasks = bsz * n_heads;
+    let out_ptr = pool::SendPtr::new(out);
+    let probs_ptr = pool::SendPtr::new(probs);
+    let run = |task: usize| {
+        let (b, h) = (task / n_heads, task % n_heads);
+        let seq = b * t_len * d_model;
+        let qs = &q[seq..seq + t_len * d_model];
+        let ks = &k[seq..seq + t_len * d_model];
+        let vs = &v[seq..seq + t_len * d_model];
+        // SAFETY: the probs block of task (b, h) is contiguous and owned by
+        // this task alone; out stripes are disjoint per head (see
+        // attention_head_seq_fwd).
+        let probs_head = unsafe {
+            std::slice::from_raw_parts_mut(probs_ptr.0.add(task * t_len * t_len), t_len * t_len)
+        };
+        let out_seq = pool::SendPtr(unsafe { out_ptr.0.add(seq) });
+        attention_head_seq_fwd(qs, ks, vs, h * hd, hd, d_model, t_len, scale, probs_head, &out_seq);
+    };
+    let work = bsz * n_heads * t_len * t_len * hd;
+    if tasks > 1 && pool::parallel_worthwhile(work, ATTN_PAR_WORK) {
+        pool::par_tasks(tasks, run);
+    } else {
+        for task in 0..tasks {
+            run(task);
         }
     }
 }
 
 /// Adjoint of [`causal_attention_fwd`]: accumulates into `dq`, `dk`, `dv`
 /// (each `t_len * d_model`, zero-initialized by the caller) from the cached
-/// softmax `probs` and the output gradient `dout`.
+/// softmax `probs` and the output gradient `dout`. The `bsz == 1` case of
+/// [`causal_attention_bwd_batched`].
 #[allow(clippy::too_many_arguments)]
 pub fn causal_attention_bwd(
     q: &[f32],
@@ -271,27 +374,77 @@ pub fn causal_attention_bwd(
     dk: &mut [f32],
     dv: &mut [f32],
 ) {
+    causal_attention_bwd_batched(q, k, v, probs, dout, 1, t_len, n_heads, d_model, dq, dk, dv);
+}
+
+/// Head-parallel adjoint over `bsz` packed sequences (layouts as in
+/// [`causal_attention_fwd_batched`]). One pool task per (sequence, head):
+/// a task's writes into `dq`/`dk`/`dv` all land in its sequence's rows at
+/// its own `hb..hb+hd` stripe — disjoint across tasks, serial within —
+/// so gradients are bit-identical at any thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn causal_attention_bwd_batched(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &[f32],
+    dout: &[f32],
+    bsz: usize,
+    t_len: usize,
+    n_heads: usize,
+    d_model: usize,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    debug_assert_eq!(probs.len(), bsz * n_heads * t_len * t_len);
     let hd = d_model / n_heads;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut dp = vec![0.0f32; t_len];
-    for h in 0..n_heads {
+    let tasks = bsz * n_heads;
+    let dq_ptr = pool::SendPtr::new(dq);
+    let dk_ptr = pool::SendPtr::new(dk);
+    let dv_ptr = pool::SendPtr::new(dv);
+    let run = |task: usize| {
+        let (b, h) = (task / n_heads, task % n_heads);
         let hb = h * hd;
+        let seq = b * t_len * d_model;
+        let probs_head = &probs[task * t_len * t_len..(task + 1) * t_len * t_len];
+        let mut dp = vec![0.0f32; t_len];
         for i in 0..t_len {
             let n_ctx = i + 1;
-            let prow = &probs[h * t_len * t_len + i * t_len..][..n_ctx];
-            let doh = &dout[i * d_model + hb..i * d_model + hb + hd];
+            let prow = &probs_head[i * t_len..i * t_len + n_ctx];
+            let doh = &dout[seq + i * d_model + hb..seq + i * d_model + hb + hd];
             // dp_j = dout_i . v_j ; softmax adjoint needs sum_j p_j dp_j.
             let mut pdp = 0.0f32;
             for (j, dpj) in dp[..n_ctx].iter_mut().enumerate() {
-                *dpj = dot(doh, &v[j * d_model + hb..j * d_model + hb + hd]);
+                *dpj = dot(doh, &v[seq + j * d_model + hb..seq + j * d_model + hb + hd]);
                 pdp += *dpj * prow[j];
             }
+            // SAFETY: rows of sequence b at stripe hb..hb+hd are written by
+            // exactly this (sequence, head) task; dq/dk/dv are distinct
+            // buffers, so the three sub-slices never alias.
+            let dq_i =
+                unsafe { std::slice::from_raw_parts_mut(dq_ptr.0.add(seq + i * d_model + hb), hd) };
             for (j, &pj) in prow.iter().enumerate() {
                 let ds = pj * (dp[j] - pdp) * scale;
-                axpy(ds, &k[j * d_model + hb..j * d_model + hb + hd], &mut dq[i * d_model + hb..i * d_model + hb + hd]);
-                axpy(ds, &q[i * d_model + hb..i * d_model + hb + hd], &mut dk[j * d_model + hb..j * d_model + hb + hd]);
-                axpy(pj, doh, &mut dv[j * d_model + hb..j * d_model + hb + hd]);
+                axpy(ds, &k[seq + j * d_model + hb..seq + j * d_model + hb + hd], dq_i);
+                let dk_j = unsafe {
+                    std::slice::from_raw_parts_mut(dk_ptr.0.add(seq + j * d_model + hb), hd)
+                };
+                axpy(ds, &q[seq + i * d_model + hb..seq + i * d_model + hb + hd], dk_j);
+                let dv_j = unsafe {
+                    std::slice::from_raw_parts_mut(dv_ptr.0.add(seq + j * d_model + hb), hd)
+                };
+                axpy(pj, doh, dv_j);
             }
+        }
+    };
+    let work = bsz * n_heads * t_len * t_len * hd;
+    if tasks > 1 && pool::parallel_worthwhile(work, ATTN_PAR_WORK) {
+        pool::par_tasks(tasks, run);
+    } else {
+        for task in 0..tasks {
+            run(task);
         }
     }
 }
@@ -432,6 +585,65 @@ mod tests {
             for (a, b) in row.iter().zip(&out[i * d..(i + 1) * d]) {
                 assert_eq!(a, b, "row {i} must be bit-identical to attend_row");
             }
+        }
+    }
+
+    #[test]
+    fn batched_attention_matches_per_sequence_calls_bit_exactly() {
+        // The head-parallel batched kernels over packed sequences must be
+        // bit-identical to one serial call per sequence, forward AND
+        // backward (the determinism-by-disjoint-stripes invariant).
+        let (bsz, t_len, heads, d) = (3usize, 5usize, 2usize, 8usize);
+        let n = bsz * t_len * d;
+        let mut rng = Rng::new(9);
+        let q: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let r: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+
+        let mut out_b = vec![0.0f32; n];
+        let mut probs_b = vec![0.0f32; bsz * heads * t_len * t_len];
+        causal_attention_fwd_batched(&q, &k, &v, bsz, t_len, heads, d, &mut out_b, &mut probs_b);
+        let (mut dq_b, mut dk_b, mut dv_b) = (vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n]);
+        causal_attention_bwd_batched(
+            &q, &k, &v, &probs_b, &r, bsz, t_len, heads, d, &mut dq_b, &mut dk_b, &mut dv_b,
+        );
+
+        for b in 0..bsz {
+            let rows = b * t_len * d..(b + 1) * t_len * d;
+            let pb = b * heads * t_len * t_len..(b + 1) * heads * t_len * t_len;
+            let mut out_s = vec![0.0f32; t_len * d];
+            let mut probs_s = vec![0.0f32; heads * t_len * t_len];
+            causal_attention_fwd(
+                &q[rows.clone()],
+                &k[rows.clone()],
+                &v[rows.clone()],
+                t_len,
+                heads,
+                d,
+                &mut out_s,
+                &mut probs_s,
+            );
+            assert_eq!(out_s, out_b[rows.clone()], "sequence {b} forward diverged");
+            assert_eq!(probs_s, probs_b[pb], "sequence {b} probs diverged");
+            let (mut dq_s, mut dk_s, mut dv_s) =
+                (vec![0.0f32; t_len * d], vec![0.0f32; t_len * d], vec![0.0f32; t_len * d]);
+            causal_attention_bwd(
+                &q[rows.clone()],
+                &k[rows.clone()],
+                &v[rows.clone()],
+                &probs_s,
+                &r[rows.clone()],
+                t_len,
+                heads,
+                d,
+                &mut dq_s,
+                &mut dk_s,
+                &mut dv_s,
+            );
+            assert_eq!(dq_s, dq_b[rows.clone()], "sequence {b} dq diverged");
+            assert_eq!(dk_s, dk_b[rows.clone()], "sequence {b} dk diverged");
+            assert_eq!(dv_s, dv_b[rows.clone()], "sequence {b} dv diverged");
         }
     }
 

@@ -19,8 +19,8 @@ use crate::spectral::matrix::axpy;
 use crate::spectral::{Matrix, SpectralGrads};
 
 use super::blocks::{
-    add_into, causal_attention_bwd, causal_attention_fwd, dsilu, rmsnorm_bwd, rmsnorm_fwd, silu,
-    RmsCache, Rope,
+    add_into, causal_attention_bwd_batched, causal_attention_fwd_batched, dsilu, rmsnorm_bwd,
+    rmsnorm_fwd, silu, RmsCache, Rope,
 };
 
 // ---------------------------------------------------------------------------
@@ -195,21 +195,21 @@ pub fn decoder_fwd(
             rope.apply_row(q.row_mut(i), pos);
             rope.apply_row(k.row_mut(i), pos);
         }
+        // One head-parallel call over every (sequence, head) pair — the
+        // pool shards tasks, results bit-identical at any thread count.
         let mut att = Matrix::zeros(n, d);
         let mut probs = vec![0.0f32; bsz * c.n_heads * t_len * t_len];
-        for b in 0..bsz {
-            let rows = b * t_len * d..(b + 1) * t_len * d;
-            causal_attention_fwd(
-                &q.data[rows.clone()],
-                &k.data[rows.clone()],
-                &v.data[rows.clone()],
-                t_len,
-                c.n_heads,
-                d,
-                &mut att.data[rows],
-                &mut probs[b * c.n_heads * t_len * t_len..(b + 1) * c.n_heads * t_len * t_len],
-            );
-        }
+        causal_attention_fwd_batched(
+            &q.data,
+            &k.data,
+            &v.data,
+            bsz,
+            t_len,
+            c.n_heads,
+            d,
+            &mut att.data,
+            &mut probs,
+        );
         add_into(&mut x, &att.matmul(&layer.wo));
         let x_mid = x.clone();
 
@@ -313,22 +313,20 @@ pub fn decoder_bwd(
         let mut dq = Matrix::zeros(n, d);
         let mut dk = Matrix::zeros(n, d);
         let mut dv = Matrix::zeros(n, d);
-        for b in 0..bsz {
-            let rows = b * t_len * d..(b + 1) * t_len * d;
-            causal_attention_bwd(
-                &lc.q.data[rows.clone()],
-                &lc.k.data[rows.clone()],
-                &lc.v.data[rows.clone()],
-                &lc.probs[b * c.n_heads * t_len * t_len..(b + 1) * c.n_heads * t_len * t_len],
-                &datt.data[rows.clone()],
-                t_len,
-                c.n_heads,
-                d,
-                &mut dq.data[rows.clone()],
-                &mut dk.data[rows.clone()],
-                &mut dv.data[rows],
-            );
-        }
+        causal_attention_bwd_batched(
+            &lc.q.data,
+            &lc.k.data,
+            &lc.v.data,
+            &lc.probs,
+            &datt.data,
+            bsz,
+            t_len,
+            c.n_heads,
+            d,
+            &mut dq.data,
+            &mut dk.data,
+            &mut dv.data,
+        );
         // RoPE adjoint: rotate the q/k gradients back.
         for i in 0..n {
             let pos = i % t_len;

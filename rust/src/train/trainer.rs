@@ -23,7 +23,8 @@ use anyhow::{Context, Result};
 
 use crate::checkpoint::format::{read_checkpoint, write_checkpoint, NamedTensor};
 use crate::serve::engine::{EngineConfig, SpectralModel};
-use crate::spectral::AdamW;
+use crate::spectral::{qr_retract, AdamW, Matrix};
+use crate::util::pool;
 use crate::util::rng::Rng;
 
 use super::blocks::{cross_entropy, Rope};
@@ -217,11 +218,7 @@ impl NativeTrainer {
         let t3 = Instant::now();
         self.step += 1;
         if self.step % self.cfg.retract_every as u64 == 0 {
-            for l in &mut self.model.layers {
-                l.gate.retract();
-                l.up.retract();
-                l.down.retract();
-            }
+            retract_model(&mut self.model);
         }
         let t_retract = t3.elapsed().as_secs_f64();
 
@@ -365,6 +362,38 @@ impl NativeTrainer {
         }
         Ok(trainer)
     }
+}
+
+/// QR-retract every spectral factor of the model, fanned out across the
+/// worker pool: the 6 factors per layer (gate/up/down × U/V) are mutually
+/// independent, so each worker retracts a contiguous share of the flat
+/// factor list. Each factor runs the same serial CGS2 kernel
+/// ([`qr_retract`]) the single-threaded path runs, so the retracted model
+/// is bit-identical at any thread count.
+fn retract_model(model: &mut SpectralModel) {
+    let mut factors: Vec<&mut Matrix> = Vec::with_capacity(model.layers.len() * 6);
+    for l in &mut model.layers {
+        for sl in [&mut l.gate, &mut l.up, &mut l.down] {
+            factors.push(&mut sl.u);
+            factors.push(&mut sl.v);
+        }
+    }
+    if pool::threads() <= 1 {
+        for f in factors {
+            *f = qr_retract(f);
+        }
+        return;
+    }
+    let chunk = pool::chunk_len(factors.len());
+    std::thread::scope(|s| {
+        for group in factors.chunks_mut(chunk) {
+            s.spawn(move || {
+                for f in group.iter_mut() {
+                    **f = qr_retract(&**f);
+                }
+            });
+        }
+    });
 }
 
 /// Analytic MLP compression factor vs a dense model of the same geometry

@@ -5,4 +5,5 @@
 pub mod args;
 pub mod bench;
 pub mod json;
+pub mod pool;
 pub mod rng;

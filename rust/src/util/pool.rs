@@ -1,0 +1,226 @@
+//! Scoped worker pool for the parallel kernel layer.
+//!
+//! Every hot loop in the native stack — the `spectral::matrix` matmuls, the
+//! head-parallel attention kernels in `train::blocks`, the AdamW update, the
+//! per-factor QR retraction fan-out, and the serving engine's batched
+//! decode/prefill — parallelizes through the two primitives here. The pool
+//! is `std::thread::scope`-based: no persistent worker threads, no channels,
+//! no work stealing — a call sites fans out, joins, and returns, so the
+//! borrow checker sees every shard end before the caller continues.
+//!
+//! # Determinism contract
+//!
+//! Work is sharded by **disjoint output rows** ([`par_rows`]) or disjoint
+//! task indices ([`par_tasks`]): every output element is produced by exactly
+//! one worker running the *same serial kernel over the same inputs in the
+//! same order* as the single-threaded path. No partial sums are combined
+//! across workers, so results are **bit-identical at any thread count** —
+//! `--threads 1` vs `--threads 64` produce the same f32s, training runs
+//! resume bit-for-bit regardless of the machine, and the determinism tests
+//! in `tests/parallel_determinism.rs` pin this invariant.
+//!
+//! # Sizing
+//!
+//! Thread count resolves as: [`set_threads`] (the `--threads` flag /
+//! `[runtime] threads` TOML key) > the `SCT_THREADS` env var > all available
+//! cores. Callers gate fan-out on [`parallel_worthwhile`] with a
+//! per-kernel work threshold, falling back to the serial kernel for small
+//! shapes where scoped-spawn overhead (tens of µs) would dominate.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Upper bound on the pool size (fan-out beyond this stops paying on any
+/// hardware this targets).
+pub const MAX_THREADS: usize = 64;
+
+/// 0 = unresolved; first reader resolves env/cores and caches the result.
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Test hook: when set, [`parallel_worthwhile`] ignores work thresholds so
+/// determinism tests exercise the parallel kernels on tiny shapes.
+static FORCE_PARALLEL: AtomicBool = AtomicBool::new(false);
+
+fn resolve_default() -> usize {
+    if let Ok(s) = std::env::var("SCT_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n >= 1 {
+                return n.min(MAX_THREADS);
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(MAX_THREADS)
+}
+
+/// The pool's thread count. Resolution order: [`set_threads`] override >
+/// `SCT_THREADS` env var > available parallelism. Always >= 1.
+pub fn threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let n = resolve_default();
+    // Benign race: concurrent first readers resolve the same value.
+    let _ = THREADS.compare_exchange(0, n, Ordering::Relaxed, Ordering::Relaxed);
+    THREADS.load(Ordering::Relaxed)
+}
+
+/// Override the pool size (CLI `--threads` / `[runtime] threads`). Clamped
+/// to `1..=MAX_THREADS`. Safe to change at any time: results are
+/// bit-identical at every setting, so this is purely a throughput knob.
+pub fn set_threads(n: usize) {
+    THREADS.store(n.clamp(1, MAX_THREADS), Ordering::Relaxed);
+}
+
+/// Test hook (see `tests/parallel_determinism.rs`): bypass the work
+/// thresholds so tiny shapes take the parallel code paths.
+pub fn set_force_parallel(on: bool) {
+    FORCE_PARALLEL.store(on, Ordering::Relaxed);
+}
+
+/// Should a kernel with `work` inner-loop operations fan out? False when the
+/// pool has one thread or the shape is too small to amortize scoped-spawn
+/// overhead (unless the test hook forces it).
+pub fn parallel_worthwhile(work: usize, threshold: usize) -> bool {
+    threads() > 1 && (work >= threshold || FORCE_PARALLEL.load(Ordering::Relaxed))
+}
+
+/// Chunk length that deals `n` work items evenly across the pool — the
+/// shared sizing policy for kernels that shard their buffers themselves
+/// (the AdamW four-slice update, the trainer's per-factor retraction
+/// fan-out). Always >= 1 so `chunks_mut(chunk_len(n))` is well-formed.
+pub fn chunk_len(n: usize) -> usize {
+    n.div_ceil(threads().min(n).max(1)).max(1)
+}
+
+/// Shard a `(rows x row_len)` row-major buffer into contiguous row blocks,
+/// one per worker, and run `body(first_row, block)` on each. Each output row
+/// lives in exactly one block, and `body` is the same kernel the serial path
+/// runs, so results are bit-identical at any thread count.
+pub fn par_rows<F>(out: &mut [f32], row_len: usize, body: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(row_len > 0 && out.len() % row_len == 0, "out must be rows x row_len");
+    let rows = out.len() / row_len;
+    let t = threads().min(rows).max(1);
+    if t <= 1 {
+        body(0, out);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(t);
+    std::thread::scope(|s| {
+        for (ti, block) in out.chunks_mut(chunk_rows * row_len).enumerate() {
+            let body = &body;
+            s.spawn(move || body(ti * chunk_rows, block));
+        }
+    });
+}
+
+/// Run `body(i)` for every `i in 0..n_tasks`, tasks dealt to workers in
+/// contiguous index ranges. For kernels whose disjoint writes are strided
+/// rather than row-contiguous (per-head attention stripes), pair with
+/// [`SendPtr`]; the caller guarantees tasks write disjoint memory.
+pub fn par_tasks<F>(n_tasks: usize, body: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let t = threads().min(n_tasks).max(1);
+    if t <= 1 {
+        for i in 0..n_tasks {
+            body(i);
+        }
+        return;
+    }
+    let chunk = n_tasks.div_ceil(t);
+    std::thread::scope(|s| {
+        for ti in 0..t {
+            let (lo, hi) = (ti * chunk, ((ti + 1) * chunk).min(n_tasks));
+            if lo >= hi {
+                break;
+            }
+            let body = &body;
+            s.spawn(move || {
+                for i in lo..hi {
+                    body(i);
+                }
+            });
+        }
+    });
+}
+
+/// Raw-pointer Send/Sync shim for provably disjoint writes from
+/// [`par_tasks`] workers (the same idiom as `spectral::qr`'s row-sharded
+/// panels). Callers create short-lived `&mut` sub-slices with
+/// `std::slice::from_raw_parts_mut(ptr.0.add(offset), len)`; soundness rests
+/// on every concurrent task touching a distinct `offset..offset+len` range
+/// within the original borrow.
+pub struct SendPtr(pub *mut f32);
+
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    pub fn new(data: &mut [f32]) -> SendPtr {
+        SendPtr(data.as_mut_ptr())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threads_is_at_least_one() {
+        assert!(threads() >= 1);
+    }
+
+    #[test]
+    fn par_rows_covers_every_row_once() {
+        // 37 rows of length 5, written with the row index: every element
+        // must be visited exactly once regardless of sharding.
+        let mut out = vec![0.0f32; 37 * 5];
+        par_rows(&mut out, 5, |r0, block| {
+            for (bi, row) in block.chunks_mut(5).enumerate() {
+                for v in row.iter_mut() {
+                    *v += (r0 + bi) as f32 + 1.0;
+                }
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, (i / 5) as f32 + 1.0, "element {i}");
+        }
+    }
+
+    #[test]
+    fn par_tasks_runs_each_task_once() {
+        use std::sync::atomic::AtomicU32;
+        let counts: Vec<AtomicU32> = (0..23).map(|_| AtomicU32::new(0)).collect();
+        par_tasks(23, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn par_rows_handles_fewer_rows_than_threads() {
+        let mut out = vec![0.0f32; 2 * 3];
+        par_rows(&mut out, 3, |r0, block| {
+            for (bi, row) in block.chunks_mut(3).enumerate() {
+                row.fill((r0 + bi) as f32);
+            }
+        });
+        assert_eq!(out, vec![0.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn set_threads_clamps() {
+        let before = threads();
+        set_threads(0);
+        assert_eq!(threads(), 1);
+        set_threads(1_000_000);
+        assert_eq!(threads(), MAX_THREADS);
+        set_threads(before);
+    }
+}

@@ -1,0 +1,222 @@
+//! Determinism contract of the parallel kernel layer (`util::pool`):
+//! every parallel path — the matmuls, head-parallel attention, the AdamW
+//! update, the retraction fan-out, fused prefill — must be **bit-identical**
+//! at any thread count, because work is sharded by disjoint output rows /
+//! stripes with the serial kernel's accumulation order preserved.
+//!
+//! `pool::set_force_parallel(true)` bypasses the work thresholds so the
+//! parallel code paths run even at test-sized shapes. The pool size is a
+//! process-global, so every test in this file serializes on [`lock`]: a
+//! concurrent test changing the thread count mid-reference would not change
+//! any *result* (that IS the invariant), but it could silently compute the
+//! "1-thread" reference at 4 threads — and a comparison of 4-thread against
+//! 4-thread output would no longer detect a divergence regression.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use sct::serve::engine::{Engine, EngineConfig, SampleOpts, SpectralModel};
+use sct::spectral::{AdamW, Matrix};
+use sct::train::blocks::Rope;
+use sct::train::decoder::{decoder_bwd, decoder_fwd};
+use sct::train::{NativeTrainConfig, NativeTrainer};
+use sct::util::pool;
+use sct::util::rng::Rng;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// Serializes the tests in this binary (they all mutate the global pool
+/// size). Poison from an earlier panicking test is irrelevant — take the
+/// guard either way.
+fn lock() -> MutexGuard<'static, ()> {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    match GATE.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+fn tiny_model_cfg() -> EngineConfig {
+    EngineConfig {
+        vocab: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ffn: 24,
+        rank: 3,
+        max_seq: 32,
+        tied: true,
+    }
+}
+
+#[test]
+fn matmul_kernels_bit_identical_across_thread_counts() {
+    let _gate = lock();
+    pool::set_force_parallel(true);
+    let mut rng = Rng::new(1);
+    let a = Matrix::randn(&mut rng, 37, 19, 1.0);
+    let b = Matrix::randn(&mut rng, 19, 23, 1.0);
+    let c = Matrix::randn(&mut rng, 37, 23, 1.0);
+    let d = Matrix::randn(&mut rng, 11, 19, 1.0);
+
+    pool::set_threads(1);
+    let mm = a.matmul(&b);
+    let tm = a.t_matmul(&c);
+    let mt = a.matmul_t(&d);
+    let mtp = a.matmul_t_prefix(&d, 7);
+    for &t in &THREAD_COUNTS[1..] {
+        pool::set_threads(t);
+        assert_eq!(a.matmul(&b).data, mm.data, "matmul diverged at {t} threads");
+        assert_eq!(a.t_matmul(&c).data, tm.data, "t_matmul diverged at {t} threads");
+        assert_eq!(a.matmul_t(&d).data, mt.data, "matmul_t diverged at {t} threads");
+        assert_eq!(
+            a.matmul_t_prefix(&d, 7).data,
+            mtp.data,
+            "matmul_t_prefix diverged at {t} threads"
+        );
+    }
+}
+
+#[test]
+fn adamw_update_bit_identical_across_thread_counts() {
+    let _gate = lock();
+    pool::set_force_parallel(true);
+    let n = 10_007; // odd length: uneven worker chunks
+    let grads: Vec<f32> = (0..n).map(|i| ((i * 37) as f32 * 0.01).sin()).collect();
+    let mut reference = None;
+    for &t in &THREAD_COUNTS {
+        pool::set_threads(t);
+        let mut opt = AdamW::new(n, 0.01);
+        opt.weight_decay = 0.1;
+        let mut p: Vec<f32> = (0..n).map(|i| ((i * 13) as f32 * 0.02).cos()).collect();
+        for _ in 0..3 {
+            opt.step(&mut p, &grads);
+        }
+        match &reference {
+            None => reference = Some(p),
+            Some(r) => assert_eq!(&p, r, "AdamW diverged at {t} threads"),
+        }
+    }
+}
+
+#[test]
+fn decoder_forward_and_backward_bit_identical_across_thread_counts() {
+    let _gate = lock();
+    pool::set_force_parallel(true);
+    let model = SpectralModel::init(tiny_model_cfg(), 5);
+    let rope = Rope::new(model.cfg.max_seq, model.cfg.head_dim());
+    let (b, t_len) = (2usize, 8usize);
+    let mut rng = Rng::new(6);
+    let tokens: Vec<i32> =
+        (0..b * t_len).map(|_| (rng.next_u64() % model.cfg.vocab as u64) as i32).collect();
+    let dlogits = Matrix::randn(&mut rng, b * t_len, model.cfg.vocab, 1.0);
+
+    pool::set_threads(1);
+    let (logits_ref, cache) = decoder_fwd(&model, &rope, &tokens, b, t_len);
+    let grads_ref = decoder_bwd(&model, &rope, &tokens, b, t_len, &cache, &dlogits);
+
+    for &t in &THREAD_COUNTS[1..] {
+        pool::set_threads(t);
+        let (logits, cache) = decoder_fwd(&model, &rope, &tokens, b, t_len);
+        assert_eq!(logits.data, logits_ref.data, "forward logits diverged at {t} threads");
+        let grads = decoder_bwd(&model, &rope, &tokens, b, t_len, &cache, &dlogits);
+        assert_eq!(grads.embed.data, grads_ref.embed.data, "embed grad at {t} threads");
+        assert_eq!(grads.ln_f, grads_ref.ln_f, "ln_f grad at {t} threads");
+        for (l, (g, gr)) in grads.layers.iter().zip(&grads_ref.layers).enumerate() {
+            assert_eq!(g.wq.data, gr.wq.data, "layer {l} wq grad at {t} threads");
+            assert_eq!(g.wo.data, gr.wo.data, "layer {l} wo grad at {t} threads");
+            assert_eq!(g.ln1, gr.ln1, "layer {l} ln1 grad at {t} threads");
+            assert_eq!(g.gate.du.data, gr.gate.du.data, "layer {l} gate.du at {t} threads");
+            assert_eq!(g.gate.ds, gr.gate.ds, "layer {l} gate.ds at {t} threads");
+            assert_eq!(g.down.dv.data, gr.down.dv.data, "layer {l} down.dv at {t} threads");
+        }
+    }
+}
+
+#[test]
+fn native_training_run_bit_identical_across_thread_counts() {
+    let _gate = lock();
+    pool::set_force_parallel(true);
+    let cfg = NativeTrainConfig {
+        model: tiny_model_cfg(),
+        batch: 2,
+        seq_len: 8,
+        grad_clip: 1.0,
+        retract_every: 1,
+        weight_decay: 0.01,
+    };
+    let window = cfg.batch * (cfg.seq_len + 1);
+    let batch_at = |step: usize| -> Vec<i32> {
+        (0..window).map(|i| ((step * 5 + i * 3) % 8) as i32).collect()
+    };
+
+    let run = |threads: usize| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        pool::set_threads(threads);
+        let mut trainer = NativeTrainer::new(cfg, 9);
+        let mut losses = Vec::new();
+        for step in 0..20 {
+            let (l, _) = trainer.train_step(&batch_at(step), 3e-3, 3e-3);
+            losses.push(l);
+        }
+        (
+            losses,
+            trainer.model.embed.data.clone(),
+            trainer.model.layers[0].gate.u.data.clone(),
+        )
+    };
+
+    let (losses_ref, embed_ref, u_ref) = run(1);
+    assert!(losses_ref.iter().all(|l| l.is_finite()));
+    for &t in &THREAD_COUNTS[1..] {
+        let (losses, embed, u) = run(t);
+        assert_eq!(losses, losses_ref, "20-step loss trajectory diverged at {t} threads");
+        assert_eq!(embed, embed_ref, "embeddings diverged at {t} threads");
+        assert_eq!(u, u_ref, "retracted factor diverged at {t} threads");
+    }
+}
+
+#[test]
+fn serve_decode_token_identical_across_threads_and_prefill_modes() {
+    let _gate = lock();
+    pool::set_force_parallel(true);
+    let cfg = EngineConfig {
+        vocab: 50,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_ffn: 48,
+        rank: 4,
+        max_seq: 64,
+        tied: true,
+    };
+    let e = Engine::new(SpectralModel::init(cfg, 3));
+    let opts = SampleOpts { temperature: 0.0, top_k: 0, seed: 0 };
+    let prompt: Vec<i32> = (0..20).map(|i| (i * 7 + 1) % 50).collect();
+
+    // greedy decode across thread counts (fused prefill inside generate_kv)
+    let mut outs: Vec<Vec<i32>> = Vec::new();
+    for &t in &THREAD_COUNTS {
+        pool::set_threads(t);
+        let mut kv = e.new_kv(1);
+        let slot = kv.alloc().unwrap();
+        outs.push(e.generate_kv(&prompt, 10, &opts, &mut kv, slot));
+    }
+    assert_eq!(outs[0].len(), 10);
+    assert_eq!(outs[0], outs[1], "decode diverged between 1 and 2 threads");
+    assert_eq!(outs[0], outs[2], "decode diverged between 1 and 4 threads");
+
+    // fused whole-prompt prefill vs per-position prefill: logits bit-equal
+    pool::set_threads(4);
+    let mut kv = e.new_kv(2);
+    let fused = kv.alloc().unwrap();
+    e.prefill(&prompt[..19], fused, &mut kv);
+    let l_fused = e.step_batch(&[prompt[19]], &[fused], &mut kv);
+    let per_pos = kv.alloc().unwrap();
+    for &t in &prompt[..19] {
+        e.prefill_batch(&[t], &[per_pos], &mut kv);
+    }
+    let l_per_pos = e.step_batch(&[prompt[19]], &[per_pos], &mut kv);
+    assert_eq!(
+        l_fused.data, l_per_pos.data,
+        "fused prefill must be bit-identical to per-position prefill"
+    );
+}

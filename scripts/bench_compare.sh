@@ -26,8 +26,12 @@ git worktree add --detach "$worktree" "$base_ref"
 trap 'git worktree remove --force "$worktree" 2>/dev/null || true' EXIT
 
 export CARGO_TARGET_DIR="$repo_root/rust/target"
-for bench in serve_throughput train_step rank_transition; do
-    name="${bench%%_*}"   # serve_throughput -> serve, train_step -> train, rank_transition -> rank
+# Same thread count as the PR-side tier1.sh bench run so the diff compares
+# like with like (results are bit-identical; wall time is what's measured).
+export SCT_THREADS="${SCT_THREADS:-2}"
+for pair in serve_throughput:serve train_step:train rank_transition:rank kernel_scaling:kernels; do
+    bench="${pair%%:*}"
+    name="${pair##*:}"
     if (cd "$worktree/rust" && cargo bench --bench "$bench" -- --smoke \
             --json "$worktree/BENCH_$name.json"); then
         :
@@ -36,7 +40,7 @@ for bench in serve_throughput train_step rank_transition; do
     fi
 done
 
-for name in serve train rank; do
+for name in serve train rank kernels; do
     base_json="$worktree/BENCH_$name.json"
     pr_json="$repo_root/BENCH_$name.json"
     if [[ -f "$base_json" && -f "$pr_json" ]]; then

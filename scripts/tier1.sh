@@ -14,10 +14,13 @@
 #   lint   rustfmt --check, clippy (default features), clippy (pjrt feature)
 #   build  cargo build --release, cargo check --features pjrt
 #   test   cargo test -q
-#   bench  serve_throughput + train_step + rank_transition in smoke mode,
-#          writing BENCH_serve.json, BENCH_train.json and BENCH_rank.json
-#          at the repo root (CI uploads them and diffs them against the
-#          base branch via scripts/bench_compare.sh)
+#   bench  serve_throughput + train_step + rank_transition + kernel_scaling
+#          in smoke mode, writing BENCH_serve.json, BENCH_train.json,
+#          BENCH_rank.json and BENCH_kernels.json at the repo root (CI
+#          uploads them and diffs them against the base branch via
+#          scripts/bench_compare.sh). Runs with SCT_THREADS=2 unless the
+#          caller overrides it, so the parallel kernel paths are exercised
+#          in CI (results are bit-identical at any thread count).
 
 set -euo pipefail
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
@@ -62,6 +65,11 @@ run_test() {
 }
 
 run_bench() {
+    # Exercise the parallel kernel layer in CI (bit-identical results; only
+    # wall time depends on this). Callers may override.
+    export SCT_THREADS="${SCT_THREADS:-2}"
+    echo "== tier1: bench smoke with SCT_THREADS=$SCT_THREADS =="
+
     echo "== tier1: serve bench smoke (BENCH_serve.json) =="
     cargo bench --bench serve_throughput -- --smoke --json "$repo_root/BENCH_serve.json"
     echo "tier1: wrote $repo_root/BENCH_serve.json"
@@ -73,6 +81,10 @@ run_bench() {
     echo "== tier1: rank-transition bench smoke (BENCH_rank.json) =="
     cargo bench --bench rank_transition -- --smoke --json "$repo_root/BENCH_rank.json"
     echo "tier1: wrote $repo_root/BENCH_rank.json"
+
+    echo "== tier1: kernel-scaling bench smoke (BENCH_kernels.json) =="
+    cargo bench --bench kernel_scaling -- --smoke --json "$repo_root/BENCH_kernels.json"
+    echo "tier1: wrote $repo_root/BENCH_kernels.json"
 }
 
 case "$stage" in
