@@ -149,10 +149,16 @@ fn main() -> anyhow::Result<()> {
         usage.get("tok_per_s").unwrap().as_f64()?
     );
 
-    let (admitted, completed, _tokens, peak) = server.stats();
-    println!("scheduler: admitted={admitted} completed={completed} peak_active={peak}");
+    let stats = server.stats();
+    println!(
+        "scheduler: admitted={} completed={} peak_active={} queue_depth={} active_slots={}",
+        stats.admitted, stats.completed, stats.peak_active, stats.queue_depth, stats.active_slots
+    );
     // 12 one-shot clients + the SSE streaming request above
-    anyhow::ensure!(completed == CLIENTS as u64 + 1, "scheduler must complete every request");
+    anyhow::ensure!(
+        stats.completed == CLIENTS as u64 + 1,
+        "scheduler must complete every request"
+    );
     server.stop();
 
     // -- correctness anchor: KV decode == re-encode baseline ----------------

@@ -14,18 +14,23 @@
 //!
 //! Run: `cargo bench --bench serve_throughput`
 //! Flags: `--smoke` (tiny model, few requests — the CI mode; also enabled
-//! by the `SCT_BENCH_SMOKE` env var) and `--json PATH` (write the numbers
+//! by the `SCT_BENCH_SMOKE` env var), `--json PATH` (write the numbers
 //! as one JSON document, e.g. `BENCH_serve.json`, so CI can archive the
-//! perf trajectory per PR).
+//! perf trajectory per PR), `--trace-out PATH` (record one span per
+//! benchmark request, the `traces.jsonl` CI artifact), and
+//! `--metrics-dump PATH` (scrape `GET /metrics` from a live server after
+//! the workloads and save the exposition text, so CI can assert the
+//! mandatory series exist).
 
 use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use sct::json_obj;
+use sct::obs::trace;
 use sct::serve::{
-    BatchConfig, Batcher, Completion, Engine, EngineConfig, Request, SampleOpts, SpectralModel,
-    StreamEvent,
+    http_get_text, http_post_json, BatchConfig, Batcher, Completion, Engine, EngineConfig,
+    Request, SampleOpts, ServeConfig, Server, SpectralModel, StreamEvent,
 };
 use sct::util::bench::{table_header, table_row};
 use sct::util::json::Json;
@@ -263,6 +268,13 @@ fn main() {
     let smoke = argv.iter().any(|a| a == "--smoke") || std::env::var("SCT_BENCH_SMOKE").is_ok();
     let json_path =
         argv.iter().position(|a| a == "--json").and_then(|i| argv.get(i + 1).cloned());
+    let trace_path =
+        argv.iter().position(|a| a == "--trace-out").and_then(|i| argv.get(i + 1).cloned());
+    let metrics_path =
+        argv.iter().position(|a| a == "--metrics-dump").and_then(|i| argv.get(i + 1).cloned());
+    if let Some(p) = &trace_path {
+        trace::install_file(std::path::Path::new(p)).expect("installing trace sink");
+    }
     let w = if smoke { SMOKE } else { FULL };
     let total_tokens = (w.requests * w.tokens_per_request) as f64;
 
@@ -373,5 +385,32 @@ fn main() {
         ];
         std::fs::write(&path, doc.to_string()).expect("writing bench JSON");
         println!("\nwrote {path}");
+    }
+
+    if let Some(path) = metrics_path {
+        // Scrape a live server rather than rendering the registry directly:
+        // the dump then also covers the HTTP route counters and proves the
+        // /metrics endpoint works end to end. The registry is process-global,
+        // so every series the workloads above populated is in the scrape.
+        let cfg = bench_cfg(&w, w.ranks[0]);
+        let tokenizer = sct::data::tokenizer_for(cfg.vocab, 0);
+        let server = Server::start(
+            &ServeConfig { addr: "127.0.0.1:0".into(), ..ServeConfig::default() },
+            Engine::new(SpectralModel::init(cfg, 0)),
+            tokenizer,
+        )
+        .expect("starting scrape server");
+        let req = r#"{"prompt": "metrics scrape probe", "tokens": 4, "temperature": 0}"#;
+        let (code, _) = http_post_json(server.addr, "/v1/generate", req).expect("generate");
+        assert_eq!(code, 200, "scrape-probe generate must succeed");
+        let (code, text) = http_get_text(server.addr, "/metrics").expect("GET /metrics");
+        assert_eq!(code, 200, "/metrics must answer 200");
+        server.stop();
+        std::fs::write(&path, text).expect("writing metrics dump");
+        println!("wrote {path}");
+    }
+    if let Some(p) = &trace_path {
+        trace::uninstall();
+        println!("wrote {p}");
     }
 }

@@ -33,8 +33,10 @@ use super::validate70b;
 use super::finetune;
 use crate::memmodel::report;
 use crate::metrics::{export, Tracker};
+use crate::obs::{log as obs_log, trace};
 use crate::rank::RankPolicyConfig;
 use crate::runtime::Manifest;
+use crate::sct_info;
 use crate::serve;
 use crate::util::args::{Args, Command};
 
@@ -149,6 +151,19 @@ fn base_config(args: &Args) -> Result<RunConfig> {
     if cfg.threads > 0 {
         crate::util::pool::set_threads(cfg.threads);
     }
+    // observability knobs: flag > [obs] TOML > SCT_LOG env
+    if let Some(l) = args.get("log-level") {
+        anyhow::ensure!(
+            obs_log::parse_level(l).is_some(),
+            "--log-level {l:?} unknown (expected quiet|error|warn|info|debug)"
+        );
+        cfg.obs.log_level = Some(l.to_string());
+    }
+    if let Some(p) = args.get("metrics-out") {
+        cfg.obs.metrics_out = Some(p.to_string());
+    }
+    cfg.obs.metrics_every = args.parse_num("metrics-every", cfg.obs.metrics_every)?.max(1);
+    cfg.obs.apply_log_level();
     Ok(cfg)
 }
 
@@ -192,19 +207,36 @@ fn train_cmd_spec() -> Command {
              [runtime] threads in TOML or the SCT_THREADS env var; results \
              are bit-identical at any setting)",
         )
+        .opt(
+            "log-level",
+            "logger verbosity: quiet|error|warn|info|debug (also [obs] \
+             log_level in TOML or SCT_LOG; quiet leaves stdout machine-clean)",
+        )
+        .opt(
+            "metrics-out",
+            "append metric-registry JSONL snapshots to this path during the \
+             run (TOML: [obs] metrics_out)",
+        )
+        .opt(
+            "metrics-every",
+            "snapshot cadence in optimizer steps, with --metrics-out \
+             (TOML: [obs] metrics_every) [default: 10]",
+        )
         .flag("untied", "untied LM head, native backend (default tied)")
         .flag("no-chunk", "dispatch per-step instead of fused K-step chunks (pjrt)")
         .flag("resume", "resume from newest checkpoint if present")
 }
 
 /// Shared tail of both train backends: banner line, loss CSV, runs.jsonl.
+/// Progress lines go through the logger (stderr), so `--log-level quiet`
+/// leaves stdout machine-clean.
 fn report_run(
     summary: &RunSummary,
     tracker: &Tracker,
     mlp_compression: f64,
     out_dir: &std::path::Path,
 ) -> Result<()> {
-    println!(
+    sct_info!(
         "run {}: {} steps, loss {:.3} (ppl {:.1}), {:.0} ms/step, state {:.1} MB{}",
         summary.label,
         summary.steps,
@@ -227,7 +259,7 @@ fn report_run(
         summary.state_bytes,
     );
     export::append_jsonl(&out_dir.join("runs.jsonl"), &row)?;
-    println!("wrote {}", csv.display());
+    sct_info!("wrote {}", csv.display());
     // rank transitions applied by the adaptive-rank policy, one JSON row
     // per event — the metrics surface of the `rank` subsystem
     if !summary.rank_events.is_empty() {
@@ -235,7 +267,7 @@ fn report_run(
         for ev in &summary.rank_events {
             export::append_jsonl(&path, &ev.to_json())?;
         }
-        println!(
+        sct_info!(
             "{} rank transitions (final per-layer ranks {:?}) -> {}",
             summary.rank_events.len(),
             summary.layer_ranks,
@@ -278,7 +310,7 @@ fn cmd_train_pjrt(cfg: RunConfig, resume: bool) -> Result<()> {
     let mut trainer = super::Trainer::new(cfg)?;
     if resume {
         if let Some(step) = trainer.try_resume()? {
-            println!("resumed from step {step}");
+            sct_info!("resumed from step {step}");
         }
     }
     let summary = trainer.run()?;
@@ -423,8 +455,14 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         .opt_default("train-steps", "steps to train before sampling", "100")
         .opt_default("seed", "seed", "0")
         .opt("artifacts", "artifact root, pjrt backend")
-        .opt("ckpt", "checkpoint file to restore instead of training (.sct)");
+        .opt("ckpt", "checkpoint file to restore instead of training (.sct)")
+        .opt("log-level", "logger verbosity: quiet|error|warn|info|debug (also SCT_LOG)");
     let args = spec.parse(argv)?;
+    if let Some(l) = args.get("log-level") {
+        let level = obs_log::parse_level(l)
+            .ok_or_else(|| anyhow::anyhow!("--log-level {l:?} unknown"))?;
+        obs_log::set_level(level);
+    }
     match args.get_or("backend", "pjrt") {
         "native" => cmd_generate_native(&args),
         "pjrt" => cmd_generate_pjrt(&args),
@@ -440,14 +478,14 @@ fn cmd_generate_native(args: &Args) -> Result<()> {
     let seed: u64 = args.parse_num("seed", 0)?;
     let model = if let Some(ckpt) = args.get("ckpt") {
         let m = serve::SpectralModel::load(std::path::Path::new(ckpt))?;
-        println!("restored {ckpt} (per-layer ranks {:?})", m.layer_ranks());
+        sct_info!("restored {ckpt} (per-layer ranks {:?})", m.layer_ranks());
         m
     } else {
         let steps: usize = args.parse_num("train-steps", 100)?;
         let tcfg = crate::train::NativeTrainConfig::default();
         let mut trainer = crate::train::NativeTrainer::new(tcfg, seed);
         if steps > 0 {
-            println!("training {steps} native steps so samples aren't pure noise...");
+            sct_info!("training {steps} native steps so samples aren't pure noise...");
             let (_tok, mut ds) = crate::data::build_dataset(
                 tcfg.model.vocab,
                 tcfg.batch,
@@ -494,11 +532,11 @@ fn cmd_generate_pjrt(args: &Args) -> Result<()> {
             3,
         )?;
         mgr.restore(&mut session, std::path::Path::new(ckpt))?;
-        println!("restored {ckpt}");
+        sct_info!("restored {ckpt}");
     } else {
         let steps: usize = args.parse_num("train-steps", 100)?;
         if steps > 0 {
-            println!("training {steps} steps so samples aren't pure noise...");
+            sct_info!("training {steps} steps so samples aren't pure noise...");
             let ts = session.preset.tokens_spec()?.clone();
             let (_tok2, ds) = (
                 (),
@@ -584,6 +622,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "ckpt",
             ".sct checkpoint (SpectralModel::save or `sct train --backend native`)",
         )
+        .opt(
+            "log-level",
+            "logger verbosity: quiet|error|warn|info|debug (also [obs] \
+             log_level in TOML or SCT_LOG)",
+        )
+        .opt(
+            "trace-out",
+            "append one JSON span record per request to this path \
+             (TOML: [obs] trace_out)",
+        )
         .opt_default("seed", "weight-init / tokenizer seed", "0")
         .opt_default("vocab", "vocab size (random-init model)", "256")
         .opt_default("d-model", "model width (random-init model)", "64")
@@ -596,15 +644,33 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 
     let mut serve_cfg = serve::ServeConfig::default();
     let mut threads = 0usize;
+    let mut obs_cfg = super::config::ObsConfig::default();
     if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path)?;
         let doc = super::config::parse_toml(&text)?;
         serve_cfg.apply_toml(&doc)?;
         threads = super::config::runtime_threads(&doc)?;
+        obs_cfg.apply_toml(&doc)?;
     }
     threads = args.parse_num("threads", threads)?;
     if threads > 0 {
         crate::util::pool::set_threads(threads);
+    }
+    // observability: flags > [obs] TOML > SCT_LOG env
+    if let Some(l) = args.get("log-level") {
+        anyhow::ensure!(
+            obs_log::parse_level(l).is_some(),
+            "--log-level {l:?} unknown (expected quiet|error|warn|info|debug)"
+        );
+        obs_cfg.log_level = Some(l.to_string());
+    }
+    obs_cfg.apply_log_level();
+    if let Some(path) = args.get("trace-out") {
+        obs_cfg.trace_out = Some(path.to_string());
+    }
+    if let Some(path) = &obs_cfg.trace_out {
+        trace::install_file(std::path::Path::new(path))?;
+        sct_info!("tracing request spans to {path}");
     }
     if let Some(a) = args.get("addr") {
         serve_cfg.addr = a.to_string();
@@ -619,7 +685,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let seed: u64 = args.parse_num("seed", 0)?;
     let model = if let Some(ckpt) = args.get("ckpt") {
         let m = serve::SpectralModel::load(std::path::Path::new(ckpt))?;
-        println!("restored serve checkpoint {ckpt}");
+        sct_info!("restored serve checkpoint {ckpt}");
         m
     } else {
         let cfg = serve::EngineConfig {
@@ -635,7 +701,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         serve::SpectralModel::init(cfg, seed)
     };
     let m = &model.cfg;
-    println!(
+    sct_info!(
         "model: d={} layers={} heads={} ffn={} vocab={} rank={} max_seq={} ({} params, no dense W)",
         m.d_model, m.n_layers, m.n_heads, m.d_ffn, m.vocab, m.rank, m.max_seq,
         model.param_count(),
@@ -644,10 +710,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let tokenizer = crate::data::tokenizer_for(m.vocab, seed);
 
     let server = serve::Server::start(&serve_cfg, serve::Engine::new(model), tokenizer)?;
-    println!(
+    sct_info!(
         "serving on http://{}  (slots={}, queue={}, prefill_chunk={}, keep_alive_ms={})\n\
          routes: POST /v1/generate (\"stream\": true => SSE, one data: frame per \
-         token), GET /healthz, GET /v1/stats",
+         token), GET /healthz, GET /v1/stats, GET /metrics",
         server.addr,
         serve_cfg.slots,
         serve_cfg.queue_depth,

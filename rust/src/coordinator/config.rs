@@ -12,6 +12,14 @@
 //! `[runtime] threads` > `SCT_THREADS` env > all cores. Results are
 //! bit-identical at any setting (the pool's determinism contract), so the
 //! knob only moves throughput.
+//!
+//! The `[obs]` section configures the observability layer ([`crate::obs`]),
+//! shared by `sct train` and `sct serve` (flags win over the file):
+//! `log_level` — `quiet|error|warn|info|debug`, the `--log-level` default
+//! (overrides `SCT_LOG`); `metrics_out` — path for registry JSONL snapshots
+//! during training (`--metrics-out`); `metrics_every` — snapshot cadence in
+//! optimizer steps (`--metrics-every`, default 10); `trace_out` — path for
+//! per-request span records during serving (`--trace-out`).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -173,6 +181,63 @@ fn parse_value(v: &str) -> Result<TomlValue> {
     bail!("unparseable value")
 }
 
+/// Observability knobs — the `[obs]` TOML section (see the module docs),
+/// mirrored by CLI flags which take precedence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsConfig {
+    /// Log level name (`quiet|error|warn|info|debug`); `None` = leave the
+    /// `SCT_LOG` / default-`info` resolution alone.
+    pub log_level: Option<String>,
+    /// Path for metric-registry JSONL snapshots during training.
+    pub metrics_out: Option<String>,
+    /// Snapshot cadence in optimizer steps (with `metrics_out`).
+    pub metrics_every: usize,
+    /// Path for per-request span records (JSONL) during serving.
+    pub trace_out: Option<String>,
+}
+
+impl Default for ObsConfig {
+    fn default() -> ObsConfig {
+        ObsConfig { log_level: None, metrics_out: None, metrics_every: 10, trace_out: None }
+    }
+}
+
+impl ObsConfig {
+    /// Apply an `[obs]` section. Standalone (not only via
+    /// [`RunConfig::apply_toml`]) because `sct serve` reads config files
+    /// without carrying a `RunConfig`.
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
+        let Some(o) = doc.get("obs") else { return Ok(()) };
+        if let Some(v) = o.get("log_level") {
+            let name = v.as_str()?;
+            if crate::obs::log::parse_level(name).is_none() {
+                bail!("[obs] log_level {name:?} unknown (expected quiet|error|warn|info|debug)");
+            }
+            self.log_level = Some(name.to_string());
+        }
+        if let Some(v) = o.get("metrics_out") {
+            self.metrics_out = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = o.get("metrics_every") {
+            self.metrics_every = v.as_usize()?.max(1);
+        }
+        if let Some(v) = o.get("trace_out") {
+            self.trace_out = Some(v.as_str()?.to_string());
+        }
+        Ok(())
+    }
+
+    /// Apply the configured level to the global logger (call after flags
+    /// have overridden `log_level`).
+    pub fn apply_log_level(&self) {
+        if let Some(name) = &self.log_level {
+            if let Some(l) = crate::obs::log::parse_level(name) {
+                crate::obs::log::set_level(l);
+            }
+        }
+    }
+}
+
 /// Everything a training run needs.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -214,6 +279,9 @@ pub struct RunConfig {
     /// `--threads`; 0 = auto: `SCT_THREADS` env, else all cores). Purely a
     /// throughput knob — results are bit-identical at any setting.
     pub threads: usize,
+    /// Observability knobs (`[obs]` section / `--log-level`,
+    /// `--metrics-out`, `--metrics-every` flags).
+    pub obs: ObsConfig,
 }
 
 impl Default for RunConfig {
@@ -240,6 +308,7 @@ impl Default for RunConfig {
             native_model: EngineConfig::default(),
             rank_policy: RankPolicyConfig::Fixed,
             threads: 0,
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -302,6 +371,8 @@ impl RunConfig {
         if rt_threads > 0 {
             self.threads = rt_threads;
         }
+        // [obs] section: logging / metrics / tracing knobs.
+        self.obs.apply_toml(doc)?;
         // [model] section: native-backend model geometry.
         if let Some(m) = doc.get("model") {
             let mm = &mut self.native_model;
@@ -624,6 +695,28 @@ check_every = 25
         assert_eq!(cfg.threads, 3);
         // bad value is an error, not a silent skip
         let doc = parse_toml("[runtime]\nthreads = \"many\"\n").unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn obs_section_applies() {
+        let text = r#"
+[obs]
+log_level = "debug"
+metrics_out = "runs/metrics.jsonl"
+metrics_every = 5
+trace_out = "traces.jsonl"
+"#;
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.obs, ObsConfig::default());
+        assert_eq!(cfg.obs.metrics_every, 10, "default cadence");
+        cfg.apply_toml(&parse_toml(text).unwrap()).unwrap();
+        assert_eq!(cfg.obs.log_level.as_deref(), Some("debug"));
+        assert_eq!(cfg.obs.metrics_out.as_deref(), Some("runs/metrics.jsonl"));
+        assert_eq!(cfg.obs.metrics_every, 5);
+        assert_eq!(cfg.obs.trace_out.as_deref(), Some("traces.jsonl"));
+        // unknown level name is an error, not a silent skip
+        let doc = parse_toml("[obs]\nlog_level = \"loud\"\n").unwrap();
         assert!(cfg.apply_toml(&doc).is_err());
     }
 

@@ -22,10 +22,13 @@ use anyhow::Context;
 use super::config::RunConfig;
 use crate::checkpoint::CheckpointManager;
 use crate::data::build_dataset;
-use crate::metrics::Tracker;
-use crate::rank::{model_energy, RankEvent};
+use crate::metrics::{export, Tracker};
+use crate::obs;
+use crate::rank::{model_energy, publish_energy, publish_ortho_error, RankEvent};
 use crate::train::{NativeTrainConfig, NativeTrainer};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::{sct_info, sct_warn};
 
 #[cfg(feature = "pjrt")]
 use crate::data::Prefetcher;
@@ -80,7 +83,7 @@ pub fn run_native(cfg: &RunConfig, resume: bool) -> Result<(RunSummary, Tracker)
         Some(m) if resume => match m.latest()? {
             Some((step, path)) => {
                 let t = NativeTrainer::load(&path, tcfg)?;
-                println!("resumed native run from step {step} ({})", path.display());
+                sct_info!("resumed native run from step {step} ({})", path.display());
                 t
             }
             None => NativeTrainer::new(tcfg, cfg.seed),
@@ -118,6 +121,11 @@ pub fn run_native(cfg: &RunConfig, resume: bool) -> Result<(RunSummary, Tracker)
     let mut rank_rng = Rng::new(cfg.seed ^ 0x72616e6b); // "rank"
     let mut rank_events: Vec<RankEvent> = Vec::new();
 
+    // `--metrics-out`: append one flat registry snapshot per cadence step,
+    // keyed by the optimizer step — the offline twin of `GET /metrics`.
+    let metrics_out = cfg.obs.metrics_out.as_ref().map(std::path::PathBuf::from);
+    let metrics_every = cfg.obs.metrics_every.max(1);
+
     while step < cfg.steps {
         if rank_policy.wants_stats(step as u64) {
             // Schedule-style policies decide on (step, rank) alone — give
@@ -138,11 +146,12 @@ pub fn run_native(cfg: &RunConfig, resume: bool) -> Result<(RunSummary, Tracker)
                     })
                     .collect()
             };
+            publish_energy(&stats);
             for st in stats {
                 if let Some(target) = rank_policy.target(step as u64, &st) {
                     if target != st.rank {
                         trainer.set_layer_rank(st.layer, target, &mut rank_rng)?;
-                        eprintln!(
+                        sct_info!(
                             "[rank] step {step}: layer {} {} -> {} ({}, tail {:.3})",
                             st.layer,
                             st.rank,
@@ -150,14 +159,16 @@ pub fn run_native(cfg: &RunConfig, resume: bool) -> Result<(RunSummary, Tracker)
                             rank_policy.name(),
                             st.tail_share,
                         );
-                        rank_events.push(RankEvent {
+                        let ev = RankEvent {
                             step: step as u64,
                             layer: st.layer,
                             from: st.rank,
                             to: target,
                             tail_share: st.tail_share,
                             policy: rank_policy.name(),
-                        });
+                        };
+                        ev.publish();
+                        rank_events.push(ev);
                     }
                 }
             }
@@ -175,9 +186,10 @@ pub fn run_native(cfg: &RunConfig, resume: bool) -> Result<(RunSummary, Tracker)
         if cfg.ortho_every > 0 && step % cfg.ortho_every == 0 {
             let err = trainer.ortho_error();
             last_ortho = Some(err);
+            publish_ortho_error(err);
             // The paper's own acceptance threshold (Table 2).
             if err > 2e-6 {
-                eprintln!("[trainer] WARNING ortho error {err} > 2e-6 at step {step}");
+                sct_warn!("ortho error {err} > 2e-6 at step {step}");
             }
         }
         if let Some(mgr) = &mgr {
@@ -185,8 +197,19 @@ pub fn run_native(cfg: &RunConfig, resume: bool) -> Result<(RunSummary, Tracker)
                 mgr.save_tensors(trainer.step, &trainer.checkpoint_tensors())?;
             }
         }
+        if let Some(path) = &metrics_out {
+            if step % metrics_every == 0 || step == cfg.steps {
+                let row = Json::Obj(vec![
+                    ("step".to_string(), Json::Num(step as f64)),
+                    ("metrics".to_string(), obs::registry().render_json()),
+                ]);
+                export::append_jsonl(path, &row)?;
+            }
+        }
     }
-    last_ortho = Some(trainer.ortho_error());
+    let final_err = trainer.ortho_error();
+    publish_ortho_error(final_err);
+    last_ortho = Some(final_err);
 
     let params = trainer.model.param_count();
     let summary = RunSummary {
@@ -303,9 +326,10 @@ impl Trainer {
             {
                 let err = self.session.ortho_check()?;
                 last_ortho = Some(err);
+                publish_ortho_error(err);
                 // The paper's own acceptance threshold (Table 2).
                 if err > 2e-6 {
-                    eprintln!("[trainer] WARNING ortho error {err} > 2e-6 at step {step}");
+                    sct_warn!("ortho error {err} > 2e-6 at step {step}");
                 }
             }
             if let Some(mgr) = &self.ckpt {

@@ -43,6 +43,13 @@
 //!   packing, batching, async prefetch.
 //! * [`metrics`] — loss/PPL tracking with the paper's window-50 smoothing,
 //!   CSV/JSON export and ASCII plots for the figures.
+//! * [`obs`] — the runtime observability layer: a process-global registry of
+//!   lock-free counters/gauges/log-bucketed histograms with Prometheus text
+//!   exposition (`GET /metrics`, `sct train --metrics-out` JSONL), per-request
+//!   span tracing (`traces.jsonl`, request ids in SSE frames and
+//!   `/v1/generate` responses), and the leveled `SCT_LOG`/`--log-level`
+//!   logger behind `sct_info!`-family macros. Instruments serve, pool, train
+//!   and rank without touching the sequential hot paths.
 //! * [`checkpoint`] — binary checkpoint format for spectral factors (shared
 //!   by training sessions and serve models).
 //! * [`util`] — in-tree substrates that would normally be crates (args,
@@ -58,6 +65,7 @@ pub mod coordinator;
 pub mod data;
 pub mod memmodel;
 pub mod metrics;
+pub mod obs;
 pub mod rank;
 pub mod runtime;
 pub mod serve;

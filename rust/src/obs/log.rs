@@ -1,0 +1,156 @@
+//! Leveled structured logger.
+//!
+//! Levels: `quiet < error < warn < info < debug`. The active level resolves
+//! lazily as: [`set_level`] (the `--log-level` flag or `[obs] log_level`
+//! TOML key, applied by the coordinator CLI) > the `SCT_LOG` env var >
+//! `info`. Lines are written to **stderr** as
+//! `[LEVEL module::path] message`, so a `quiet` run leaves stdout clean for
+//! machine consumers (tables, generated text, JSON summaries stay on
+//! stdout by design).
+//!
+//! Use through the macros: `sct_error!`, `sct_warn!`, `sct_info!`,
+//! `sct_debug!` — each captures `module_path!()` as the target and is a
+//! single relaxed load when the level filters it out.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    Quiet = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Quiet => "quiet",
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Parse a level name (`quiet|error|warn|info|debug`, case-insensitive).
+pub fn parse_level(s: &str) -> Option<Level> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "quiet" | "off" | "none" => Some(Level::Quiet),
+        "error" => Some(Level::Error),
+        "warn" | "warning" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" | "trace" => Some(Level::Debug),
+        _ => None,
+    }
+}
+
+/// Sentinel meaning "not yet resolved from SCT_LOG".
+const UNRESOLVED: usize = usize::MAX;
+
+static LEVEL: AtomicUsize = AtomicUsize::new(UNRESOLVED);
+
+fn from_usize(n: usize) -> Level {
+    match n {
+        0 => Level::Quiet,
+        1 => Level::Error,
+        2 => Level::Warn,
+        4 => Level::Debug,
+        _ => Level::Info,
+    }
+}
+
+/// The active log level. First call resolves `SCT_LOG` (default `info`).
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        UNRESOLVED => {
+            let l = std::env::var("SCT_LOG")
+                .ok()
+                .and_then(|s| parse_level(&s))
+                .unwrap_or(Level::Info);
+            // Benign race: concurrent first readers resolve the same value
+            // unless set_level landed in between, which then wins.
+            let _ = LEVEL.compare_exchange(
+                UNRESOLVED,
+                l as usize,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+            from_usize(LEVEL.load(Ordering::Relaxed))
+        }
+        n => from_usize(n),
+    }
+}
+
+/// Override the level (CLI `--log-level` / `[obs] log_level`). Takes
+/// precedence over `SCT_LOG` from this point on.
+pub fn set_level(l: Level) {
+    LEVEL.store(l as usize, Ordering::Relaxed);
+}
+
+/// Would a message at `l` be emitted right now?
+pub fn enabled(l: Level) -> bool {
+    l <= level() && l != Level::Quiet
+}
+
+/// Emit one log line to stderr (no-op when filtered). Prefer the macros.
+pub fn log(l: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    // Short target: the crate prefix carries no information in a binary
+    // that only has one crate.
+    let target = target.strip_prefix("sct::").unwrap_or(target);
+    eprintln!("[{} {}] {}", l.as_str(), target, args);
+}
+
+#[macro_export]
+macro_rules! sct_error {
+    ($($a:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Error, module_path!(), format_args!($($a)*))
+    };
+}
+
+#[macro_export]
+macro_rules! sct_warn {
+    ($($a:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Warn, module_path!(), format_args!($($a)*))
+    };
+}
+
+#[macro_export]
+macro_rules! sct_info {
+    ($($a:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Info, module_path!(), format_args!($($a)*))
+    };
+}
+
+#[macro_export]
+macro_rules! sct_debug {
+    ($($a:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Debug, module_path!(), format_args!($($a)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_level_accepts_aliases() {
+        assert_eq!(parse_level("QUIET"), Some(Level::Quiet));
+        assert_eq!(parse_level("warning"), Some(Level::Warn));
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("bogus"), None);
+    }
+
+    #[test]
+    fn levels_order_as_expected() {
+        assert!(Level::Quiet < Level::Error);
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+}

@@ -1,0 +1,463 @@
+//! Lock-free metric handles and the process-global registry.
+//!
+//! Three instrument kinds, all backed by relaxed atomics so the record path
+//! never locks or allocates:
+//!
+//! * [`Counter`] — monotonically increasing `u64` (`fetch_add`).
+//! * [`Gauge`] — an `f64` stored as bits in an `AtomicU64` (`store`).
+//! * [`Histogram`] — a fixed array of [`HIST_BUCKETS`] log2-spaced bucket
+//!   counters plus a sample count and a sum held in integer microunits, so
+//!   `record` is three `fetch_add`s. Bucket upper bounds are
+//!   `HIST_BASE * 2^i`; the last bucket is `+Inf` (overflow). With
+//!   `HIST_BASE = 1e-3` a millisecond-valued histogram resolves 1 µs to
+//!   ~9 minutes, which covers every latency this runtime produces.
+//!
+//! Handles are cheap `Arc` clones. Instrumented code registers once through
+//! [`registry`] (the only mutex in the subsystem, taken at registration and
+//! render time) and caches the handle — typically in a per-subsystem
+//! `OnceLock` struct — so steady-state recording is wait-free.
+//!
+//! The registry renders two formats: [`Registry::render_prometheus`] (the
+//! text exposition behind `GET /metrics`, cumulative `_bucket{le=...}` /
+//! `_sum` / `_count` for histograms) and [`Registry::render_json`] (a flat
+//! object for `sct train --metrics-out` JSONL snapshots).
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Bucket count per histogram; index `HIST_BUCKETS - 1` is the `+Inf`
+/// overflow bucket.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Upper bound of the first histogram bucket; bucket `i` spans
+/// `(HIST_BASE * 2^(i-1), HIST_BASE * 2^i]`.
+pub const HIST_BASE: f64 = 1e-3;
+
+/// Monotonic event counter. `inc`/`add` are single relaxed `fetch_add`s.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (`f64` bits in an `AtomicU64`).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+struct HistogramInner {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    /// Sum of samples in 1e-6 units — an integer `fetch_add` keeps the
+    /// record path wait-free (no CAS loop on f64 bits).
+    sum_micros: AtomicU64,
+}
+
+/// Fixed log2-bucketed histogram. Recording a sample is three relaxed
+/// `fetch_add`s — no allocation, no lock, no resize.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramInner>);
+
+/// Upper bound of bucket `i` (`+Inf` for the last bucket).
+pub fn bucket_upper_bound(i: usize) -> f64 {
+    if i >= HIST_BUCKETS - 1 {
+        f64::INFINITY
+    } else {
+        HIST_BASE * (1u64 << i) as f64
+    }
+}
+
+fn bucket_index(v: f64) -> usize {
+    if !(v > HIST_BASE) {
+        // v <= HIST_BASE, or NaN: both land in the first bucket.
+        return 0;
+    }
+    let idx = (v / HIST_BASE).log2().ceil() as usize;
+    idx.min(HIST_BUCKETS - 1)
+}
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram(Arc::new(HistogramInner {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn record(&self, v: f64) {
+        self.0.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        self.0.sum_micros.fetch_add((v.max(0.0) * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.0.sum_micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Per-bucket (non-cumulative) counts, index-aligned with
+    /// [`bucket_upper_bound`].
+    pub fn bucket_counts(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| self.0.buckets[i].load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Clone)]
+enum Instrument {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+impl Instrument {
+    fn kind(&self) -> &'static str {
+        match self {
+            Instrument::Counter(_) => "counter",
+            Instrument::Gauge(_) => "gauge",
+            Instrument::Histogram(_) => "histogram",
+        }
+    }
+}
+
+struct Entry {
+    name: String,
+    labels: Vec<(String, String)>,
+    help: &'static str,
+    instrument: Instrument,
+}
+
+/// The process-global metric table. The mutex guards registration and
+/// rendering only — recording through a handle never touches it.
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+/// The global registry (`GET /metrics` and `--metrics-out` both render it).
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(|| Registry { entries: Mutex::new(Vec::new()) })
+}
+
+impl Registry {
+    /// Get-or-register: same `(name, labels)` returns a handle to the same
+    /// underlying instrument. Panics if the name is already registered with
+    /// a different instrument kind (a programming error, not a runtime
+    /// condition).
+    fn get_or_insert(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &'static str,
+        make: impl FnOnce() -> Instrument,
+    ) -> Instrument {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries
+            .iter()
+            .find(|e| e.name == name && labels_eq(&e.labels, labels))
+        {
+            return e.instrument.clone();
+        }
+        let instrument = make();
+        if let Some(e) = entries.iter().find(|e| e.name == name) {
+            assert_eq!(
+                e.instrument.kind(),
+                instrument.kind(),
+                "metric {name} re-registered with a different kind"
+            );
+        }
+        entries.push(Entry {
+            name: name.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            help,
+            instrument: instrument.clone(),
+        });
+        instrument
+    }
+
+    pub fn counter(&self, name: &str, help: &'static str) -> Counter {
+        self.counter_with(name, &[], help)
+    }
+
+    pub fn counter_with(&self, name: &str, labels: &[(&str, &str)], help: &'static str) -> Counter {
+        match self.get_or_insert(name, labels, help, || {
+            Instrument::Counter(Counter(Arc::new(AtomicU64::new(0))))
+        }) {
+            Instrument::Counter(c) => c,
+            _ => unreachable!("kind checked in get_or_insert"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &'static str) -> Gauge {
+        self.gauge_with(name, &[], help)
+    }
+
+    pub fn gauge_with(&self, name: &str, labels: &[(&str, &str)], help: &'static str) -> Gauge {
+        match self.get_or_insert(name, labels, help, || {
+            Instrument::Gauge(Gauge(Arc::new(AtomicU64::new(0.0f64.to_bits()))))
+        }) {
+            Instrument::Gauge(g) => g,
+            _ => unreachable!("kind checked in get_or_insert"),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, help: &'static str) -> Histogram {
+        self.histogram_with(name, &[], help)
+    }
+
+    pub fn histogram_with(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &'static str,
+    ) -> Histogram {
+        match self.get_or_insert(name, labels, help, || Instrument::Histogram(Histogram::new())) {
+            Instrument::Histogram(h) => h,
+            _ => unreachable!("kind checked in get_or_insert"),
+        }
+    }
+
+    /// Prometheus text exposition (format version 0.0.4). `# HELP` / `# TYPE`
+    /// are emitted once per metric name; histogram buckets are cumulative
+    /// with an explicit `+Inf` bound, followed by `_sum` and `_count`.
+    pub fn render_prometheus(&self) -> String {
+        let entries = self.entries.lock().unwrap();
+        let mut out = String::new();
+        let mut seen_header: Vec<&str> = Vec::new();
+        for e in entries.iter() {
+            if !seen_header.contains(&e.name.as_str()) {
+                seen_header.push(&e.name);
+                out.push_str(&format!("# HELP {} {}\n", e.name, e.help));
+                out.push_str(&format!("# TYPE {} {}\n", e.name, e.instrument.kind()));
+            }
+            match &e.instrument {
+                Instrument::Counter(c) => {
+                    out.push_str(&format!("{}{} {}\n", e.name, fmt_labels(&e.labels, None), c.get()));
+                }
+                Instrument::Gauge(g) => {
+                    out.push_str(&format!("{}{} {}\n", e.name, fmt_labels(&e.labels, None), fmt_f64(g.get())));
+                }
+                Instrument::Histogram(h) => {
+                    let counts = h.bucket_counts();
+                    let mut cum = 0u64;
+                    for (i, n) in counts.iter().enumerate() {
+                        cum += n;
+                        let le = if i == HIST_BUCKETS - 1 {
+                            "+Inf".to_string()
+                        } else {
+                            fmt_f64(bucket_upper_bound(i))
+                        };
+                        out.push_str(&format!(
+                            "{}_bucket{} {}\n",
+                            e.name,
+                            fmt_labels(&e.labels, Some(&le)),
+                            cum
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{}_sum{} {}\n",
+                        e.name,
+                        fmt_labels(&e.labels, None),
+                        fmt_f64(h.sum())
+                    ));
+                    out.push_str(&format!(
+                        "{}_count{} {}\n",
+                        e.name,
+                        fmt_labels(&e.labels, None),
+                        h.count()
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Flat JSON snapshot: counters and gauges as numbers, histograms as
+    /// `{count, sum, buckets}` objects. Keys carry labels inline
+    /// (`name{k=v}`), matching the exposition identity.
+    pub fn render_json(&self) -> Json {
+        let entries = self.entries.lock().unwrap();
+        let mut obj: Vec<(String, Json)> = Vec::with_capacity(entries.len());
+        for e in entries.iter() {
+            let key = format!("{}{}", e.name, fmt_labels(&e.labels, None));
+            let val = match &e.instrument {
+                Instrument::Counter(c) => Json::Num(c.get() as f64),
+                Instrument::Gauge(g) => Json::Num(g.get()),
+                Instrument::Histogram(h) => Json::Obj(vec![
+                    ("count".to_string(), Json::Num(h.count() as f64)),
+                    ("sum".to_string(), Json::Num(h.sum())),
+                    (
+                        "buckets".to_string(),
+                        Json::Arr(h.bucket_counts().iter().map(|&n| Json::Num(n as f64)).collect()),
+                    ),
+                ]),
+            };
+            obj.push((key, val));
+        }
+        Json::Obj(obj)
+    }
+}
+
+fn labels_eq(have: &[(String, String)], want: &[(&str, &str)]) -> bool {
+    have.len() == want.len()
+        && have.iter().zip(want).all(|((hk, hv), (wk, wv))| hk == wk && hv == wv)
+}
+
+fn fmt_labels(labels: &[(String, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_infinite() {
+        return if v > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() };
+    }
+    // Shortest clean form: integers without a trailing ".0", floats as-is.
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_empty_renders_zeroes() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0.0);
+        assert!(h.bucket_counts().iter().all(|&n| n == 0));
+    }
+
+    #[test]
+    fn histogram_single_sample_lands_in_one_bucket() {
+        let h = Histogram::new();
+        h.record(5.0); // 5 ms -> bound 8e-3*... in base units: bucket with bound >= 5.0
+        assert_eq!(h.count(), 1);
+        assert!((h.sum() - 5.0).abs() < 1e-6);
+        let counts = h.bucket_counts();
+        assert_eq!(counts.iter().sum::<u64>(), 1);
+        let idx = counts.iter().position(|&n| n == 1).unwrap();
+        assert!(bucket_upper_bound(idx) >= 5.0, "bound {} < sample", bucket_upper_bound(idx));
+        assert!(idx == 0 || bucket_upper_bound(idx - 1) < 5.0, "sample fits a tighter bucket");
+    }
+
+    #[test]
+    fn histogram_overflow_goes_to_inf_bucket() {
+        let h = Histogram::new();
+        h.record(1e12);
+        let counts = h.bucket_counts();
+        assert_eq!(counts[HIST_BUCKETS - 1], 1);
+        assert_eq!(counts[..HIST_BUCKETS - 1].iter().sum::<u64>(), 0);
+        assert!(bucket_upper_bound(HIST_BUCKETS - 1).is_infinite());
+    }
+
+    #[test]
+    fn histogram_tiny_and_negative_go_to_first_bucket() {
+        let h = Histogram::new();
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(HIST_BASE / 2.0);
+        assert_eq!(h.bucket_counts()[0], 3);
+        // Negative samples clamp to 0 in the sum.
+        assert!((h.sum() - HIST_BASE / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn registry_get_or_register_returns_same_instrument() {
+        let r = registry();
+        let a = r.counter("sct_test_dedup_total", "test");
+        let b = r.counter("sct_test_dedup_total", "test");
+        let before = a.get();
+        b.inc();
+        assert_eq!(a.get(), before + 1);
+    }
+
+    #[test]
+    fn labeled_series_are_distinct() {
+        let r = registry();
+        let a = r.counter_with("sct_test_labeled_total", &[("k", "a")], "test");
+        let b = r.counter_with("sct_test_labeled_total", &[("k", "b")], "test");
+        let (a0, b0) = (a.get(), b.get());
+        a.add(2);
+        b.add(5);
+        assert_eq!(a.get(), a0 + 2);
+        assert_eq!(b.get(), b0 + 5);
+        let text = r.render_prometheus();
+        assert!(text.contains("sct_test_labeled_total{k=\"a\"}"));
+        assert!(text.contains("sct_test_labeled_total{k=\"b\"}"));
+    }
+
+    #[test]
+    fn prometheus_histogram_buckets_are_cumulative_and_monotone() {
+        let r = registry();
+        let h = r.histogram("sct_test_expo_ms", "test");
+        for v in [0.5, 1.0, 2.0, 4.0, 1e9] {
+            h.record(v);
+        }
+        let text = r.render_prometheus();
+        let mut last = 0u64;
+        let mut bucket_lines = 0;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("sct_test_expo_ms_bucket{") {
+                let val: u64 = rest.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(val >= last, "bucket counts must be cumulative: {line}");
+                last = val;
+                bucket_lines += 1;
+            }
+        }
+        assert_eq!(bucket_lines, HIST_BUCKETS);
+        assert!(text.contains("le=\"+Inf\""));
+        assert!(text.contains("sct_test_expo_ms_count"));
+        assert!(text.contains("sct_test_expo_ms_sum"));
+        assert_eq!(last, h.count(), "+Inf bucket must equal total count");
+    }
+
+    #[test]
+    fn render_json_is_flat_and_parses_back() {
+        let r = registry();
+        let c = r.counter("sct_test_json_total", "test");
+        c.inc();
+        let g = r.gauge("sct_test_json_gauge", "test");
+        g.set(1.5);
+        let json = r.render_json();
+        let text = json.to_string();
+        let back = Json::parse(&text).expect("snapshot must round-trip");
+        assert!(back.get("sct_test_json_total").unwrap().as_f64().unwrap() >= 1.0);
+        assert_eq!(back.get("sct_test_json_gauge").unwrap().as_f64().unwrap(), 1.5);
+    }
+}

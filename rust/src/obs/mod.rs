@@ -1,0 +1,43 @@
+//! `obs` — the dependency-free observability layer: a process-global metrics
+//! registry, Prometheus-style text exposition, per-request span tracing, and
+//! a leveled structured logger. Everything here is std-only (the image is
+//! offline), and everything on a hot path is lock-free: counters and gauges
+//! are relaxed atomics, histograms are fixed log-bucketed atomic arrays, so
+//! recording a sample never allocates and never takes a lock.
+//!
+//! Pieces:
+//! * [`metrics`] — [`metrics::Counter`] / [`metrics::Gauge`] /
+//!   [`metrics::Histogram`] handles registered in the global
+//!   [`metrics::registry`]. Handles are `Clone` + `Send` + `Sync` and cache
+//!   the underlying atomics, so instrumented code registers once (a mutex
+//!   hit) and records forever after with one `fetch_add`. The registry
+//!   renders the Prometheus text format (`GET /metrics` in
+//!   `serve::server`) and a flat JSON snapshot (`sct train --metrics-out`
+//!   JSONL cadence).
+//! * [`trace`] — monotonically increasing request ids and a process-global
+//!   span sink. The batcher emits one span record per request
+//!   (queue → prefill chunks → decode steps → finish) as a JSON line; the
+//!   sink is a file (`traces.jsonl`, `sct serve --trace-out`) or an
+//!   in-memory buffer for tests. When no sink is installed, emission is a
+//!   single relaxed load — tracing costs nothing unless asked for.
+//! * [`log`] — the leveled logger behind the `sct_error!` / `sct_warn!` /
+//!   `sct_info!` / `sct_debug!` macros. Level resolves as `--log-level`
+//!   flag > `[obs] log_level` TOML > `SCT_LOG` env > `info`. Log lines go
+//!   to **stderr** so `--log-level quiet` leaves stdout machine-clean for
+//!   scripting (tables, generated text and JSON outputs stay on stdout).
+//!
+//! Instrumented layers (all registered under the `sct_` prefix):
+//! serve (`sct_serve_*`: queue depth, active slots, admission wait,
+//! TTFT/ITL histograms, request/token counters), the worker pool
+//! (`sct_pool_*`: parallel-vs-serial decisions, fan-outs, shard sizes,
+//! per-worker busy time), the native trainer (`sct_train_*`: per-phase
+//! step-time histograms, grad norm, clip events), and the rank subsystem
+//! (`sct_rank_*`: per-layer rank and tail-energy gauges, transition
+//! counters, ortho error).
+
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{registry, Counter, Gauge, Histogram, Registry};
+pub use trace::next_request_id;

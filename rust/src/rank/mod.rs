@@ -39,6 +39,8 @@ pub mod monitor;
 pub mod policy;
 pub mod resize;
 
-pub use monitor::{layer_energy, model_energy, LayerEnergy, RankEvent};
+pub use monitor::{
+    layer_energy, model_energy, publish_energy, publish_ortho_error, LayerEnergy, RankEvent,
+};
 pub use policy::{Fixed, RankPolicy, RankPolicyConfig, StepSchedule, TailEnergy};
 pub use resize::{grow_triple, resize_triple, shrink_triple, RankResize};

@@ -12,6 +12,7 @@
 //! into a live training signal.
 
 use crate::json_obj;
+use crate::obs;
 use crate::serve::engine::{LayerWeights, SpectralModel};
 use crate::util::json::Json;
 
@@ -83,6 +84,19 @@ pub struct RankEvent {
 }
 
 impl RankEvent {
+    /// Count this transition on the global registry as
+    /// `sct_rank_events_total{dir="grow"|"shrink"}`.
+    pub fn publish(&self) {
+        let dir = if self.to >= self.from { "grow" } else { "shrink" };
+        obs::registry()
+            .counter_with(
+                "sct_rank_events_total",
+                &[("dir", dir)],
+                "Applied rank transitions, by direction",
+            )
+            .inc();
+    }
+
     /// JSON row for `rank_events.jsonl` (written next to the loss CSVs by
     /// the CLI, one object per transition — the metrics surface).
     pub fn to_json(&self) -> Json {
@@ -95,6 +109,37 @@ impl RankEvent {
             ("policy", self.policy),
         ]
     }
+}
+
+/// Publish an energy snapshot as per-layer `sct_rank_layer_rank{layer=i}` /
+/// `sct_rank_tail_energy{layer=i}` gauges on the global [`crate::obs`]
+/// registry. Runs at the policy-check cadence (not per step), so the
+/// registration mutex here is off every hot path.
+pub fn publish_energy(stats: &[LayerEnergy]) {
+    let r = obs::registry();
+    for e in stats {
+        let layer = e.layer.to_string();
+        r.gauge_with(
+            "sct_rank_layer_rank",
+            &[("layer", &layer)],
+            "Current rank k of the layer's MLP triples",
+        )
+        .set(e.rank as f64);
+        r.gauge_with(
+            "sct_rank_tail_energy",
+            &[("layer", &layer)],
+            "Tail energy share of the layer's spectrum (the grow/shrink signal)",
+        )
+        .set(e.tail_share as f64);
+    }
+}
+
+/// Publish the model-wide factor orthonormality error gauge
+/// (`sct_rank_ortho_error`, the max `||QᵀQ - I||` across factors).
+pub fn publish_ortho_error(err: f32) {
+    obs::registry()
+        .gauge("sct_rank_ortho_error", "Max factor orthonormality error across the model")
+        .set(err as f64);
 }
 
 /// One energy snapshot as a JSON row (step + per-layer rank/energy/tail).
@@ -158,6 +203,18 @@ mod tests {
             // of one triple's energy
             assert!((e.tail_share - 0.25).abs() < 1e-3, "flat spectrum share {}", e.tail_share);
         }
+    }
+
+    #[test]
+    fn publish_surfaces_rank_series_on_the_registry() {
+        publish_energy(&[LayerEnergy { layer: 0, rank: 4, energy: 1.0, tail_share: 0.5 }]);
+        publish_ortho_error(1e-6);
+        RankEvent { step: 1, layer: 0, from: 4, to: 8, tail_share: 0.5, policy: "t" }.publish();
+        let text = obs::registry().render_prometheus();
+        assert!(text.contains("sct_rank_layer_rank{layer=\"0\"}"));
+        assert!(text.contains("sct_rank_tail_energy{layer=\"0\"}"));
+        assert!(text.contains("sct_rank_ortho_error"));
+        assert!(text.contains("sct_rank_events_total{dir=\"grow\"}"));
     }
 
     #[test]

@@ -43,7 +43,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -51,6 +51,8 @@ use anyhow::{anyhow, Result};
 
 use super::engine::{sample_logits, Engine, SampleOpts};
 use super::kv::SlotId;
+use crate::obs::{self, trace, Counter, Gauge, Histogram};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// One generation request (token ids in, token ids out).
@@ -95,12 +97,18 @@ pub const MAX_STOP_SEQUENCES: usize = 8;
 /// accounting the throughput bench reports.
 #[derive(Debug, Clone)]
 pub struct Completion {
+    /// Process-unique request id (see [`crate::obs::trace`]): the same id
+    /// appears in `/v1/generate` responses, SSE frames, and the request's
+    /// span record in `traces.jsonl`.
+    pub request_id: u64,
     pub tokens: Vec<i32>,
     pub prompt_len: usize,
     /// Time spent waiting for a slot (admission latency).
     pub queue_ms: f64,
     /// Enqueue → first generated token (the user-facing latency metric).
-    pub ttft_ms: f64,
+    /// `None` when the request finished without sampling a token, so
+    /// zero-token completions cannot poison latency percentiles.
+    pub ttft_ms: Option<f64>,
     /// Prefill + decode wall time.
     pub decode_ms: f64,
     pub finish_reason: FinishReason,
@@ -151,16 +159,44 @@ pub struct BatchStats {
     pub cancelled: AtomicU64,
     /// Sequences that terminated on a stop sequence / EOS match.
     pub stopped: AtomicU64,
+    /// Requests currently waiting in the admission queue (live gauge:
+    /// incremented on enqueue, decremented when the scheduler admits).
+    pub queue_depth: AtomicU64,
+    /// Sequences currently holding a KV slot (live gauge, written by the
+    /// scheduler after every admit/evict pass).
+    pub active_slots: AtomicU64,
+}
+
+/// Point-in-time copy of every [`BatchStats`] counter and gauge (the
+/// `/v1/stats` payload).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StatsSnapshot {
+    pub admitted: u64,
+    pub completed: u64,
+    pub tokens_out: u64,
+    pub peak_active: u64,
+    pub prefill_tokens: u64,
+    pub cancelled: u64,
+    pub stopped: u64,
+    /// Requests waiting in the admission queue right now.
+    pub queue_depth: u64,
+    /// Sequences holding a KV slot right now.
+    pub active_slots: u64,
 }
 
 impl BatchStats {
-    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
-        (
-            self.admitted.load(Ordering::Relaxed),
-            self.completed.load(Ordering::Relaxed),
-            self.tokens_out.load(Ordering::Relaxed),
-            self.peak_active.load(Ordering::Relaxed),
-        )
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            tokens_out: self.tokens_out.load(Ordering::Relaxed),
+            peak_active: self.peak_active.load(Ordering::Relaxed),
+            prefill_tokens: self.prefill_tokens.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            stopped: self.stopped.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            active_slots: self.active_slots.load(Ordering::Relaxed),
+        }
     }
 
     pub fn prefill_tokens(&self) -> u64 {
@@ -174,6 +210,52 @@ impl BatchStats {
     pub fn stopped(&self) -> u64 {
         self.stopped.load(Ordering::Relaxed)
     }
+}
+
+/// Registry handles for the serve-layer series, registered once and cached
+/// (recording is then wait-free — see [`crate::obs::metrics`]).
+struct ServeMetrics {
+    requests: Counter,
+    completions: Counter,
+    tokens_out: Counter,
+    prefill_tokens: Counter,
+    cancelled: Counter,
+    stopped: Counter,
+    queue_depth: Gauge,
+    active_slots: Gauge,
+    queue_wait_ms: Histogram,
+    ttft_ms: Histogram,
+    decode_step_ms: Histogram,
+    prefill_chunk_ms: Histogram,
+}
+
+fn serve_metrics() -> &'static ServeMetrics {
+    static M: OnceLock<ServeMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = obs::registry();
+        ServeMetrics {
+            requests: r.counter("sct_serve_requests_total", "Requests enqueued for admission"),
+            completions: r.counter("sct_serve_completions_total", "Requests finished (any reason)"),
+            tokens_out: r.counter("sct_serve_tokens_out_total", "Tokens sampled by batched decode"),
+            prefill_tokens: r
+                .counter("sct_serve_prefill_tokens_total", "Prompt tokens absorbed via prefill"),
+            cancelled: r.counter("sct_serve_cancelled_total", "Sequences cancelled by hung-up streams"),
+            stopped: r.counter("sct_serve_stopped_total", "Sequences ended by a stop-sequence match"),
+            queue_depth: r.gauge("sct_serve_queue_depth", "Requests waiting in the admission queue"),
+            active_slots: r.gauge("sct_serve_active_slots", "Sequences currently holding a KV slot"),
+            queue_wait_ms: r
+                .histogram("sct_serve_queue_wait_ms", "Enqueue-to-admission wait per request (ms)"),
+            ttft_ms: r.histogram("sct_serve_ttft_ms", "Enqueue to first sampled token (ms)"),
+            decode_step_ms: r.histogram(
+                "sct_serve_decode_step_ms",
+                "Wall time of one batched decode step (ms) — the inter-token latency floor",
+            ),
+            prefill_chunk_ms: r.histogram(
+                "sct_serve_prefill_chunk_ms",
+                "Wall time of one fused prefill batch (ms)",
+            ),
+        }
+    })
 }
 
 /// Where a sequence's output goes: a one-shot completion channel or a
@@ -212,6 +294,7 @@ impl Sink {
 
 struct Job {
     req: Request,
+    req_id: u64,
     sink: Sink,
     enqueued: Instant,
 }
@@ -228,6 +311,14 @@ enum SeqState {
 /// An admitted sequence holding a KV slot.
 struct ActiveSeq {
     slot: SlotId,
+    /// Request id (see [`crate::obs::trace`]); keys this request's span
+    /// record and appears in its completion.
+    req_id: u64,
+    /// Fused prefill batches this sequence took part in (span field).
+    prefill_chunks: u64,
+    /// Batched decode steps that sampled a token for this sequence — unlike
+    /// `produced.len()` this is not reduced by stop-sequence trimming.
+    decode_steps: u64,
     /// Context-trimmed prompt. `prompt[..prompt.len()-1]` is prefilled; the
     /// last token seeds decoding (its logits come from the first decode step).
     prompt: Vec<i32>,
@@ -327,25 +418,70 @@ impl Batcher {
             .ok_or_else(|| anyhow!("batcher is shut down"))
     }
 
+    /// Claim a queue-depth slot BEFORE the job can reach the scheduler, so
+    /// the scheduler's decrement at admission never observes a count the
+    /// enqueue hasn't added yet. Rolled back via [`Batcher::enqueue_failed`]
+    /// when the send errors.
+    fn enqueue_started(&self) {
+        self.stats.queue_depth.fetch_add(1, Ordering::Relaxed);
+        serve_metrics().queue_depth.set(self.stats.queue_depth.load(Ordering::Relaxed) as f64);
+    }
+
+    fn enqueue_failed(&self) {
+        self.stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        serve_metrics().queue_depth.set(self.stats.queue_depth.load(Ordering::Relaxed) as f64);
+    }
+
     /// Enqueue a request; blocks when the admission queue is full
     /// (backpressure). Returns the channel the completion arrives on.
     pub fn submit(&self, req: Request) -> Result<Receiver<Completion>> {
+        Ok(self.submit_with_id(req)?.1)
+    }
+
+    /// [`Batcher::submit`], also returning the request id assigned to the
+    /// job (the id the completion, span record, and HTTP responses carry).
+    pub fn submit_with_id(&self, req: Request) -> Result<(u64, Receiver<Completion>)> {
         let tx = self.sender()?;
+        let req_id = trace::next_request_id();
         let (done, done_rx) = mpsc::sync_channel(1);
-        tx.send(Job { req, sink: Sink::Oneshot(done), enqueued: Instant::now() })
-            .map_err(|_| anyhow!("batcher thread died"))?;
-        Ok(done_rx)
+        self.enqueue_started();
+        if tx
+            .send(Job { req, req_id, sink: Sink::Oneshot(done), enqueued: Instant::now() })
+            .is_err()
+        {
+            self.enqueue_failed();
+            return Err(anyhow!("batcher thread died"));
+        }
+        serve_metrics().requests.inc();
+        Ok((req_id, done_rx))
     }
 
     /// Non-blocking submit: errors immediately when the queue is full
     /// instead of applying backpressure (load-shedding for the server).
     pub fn try_submit(&self, req: Request) -> Result<Receiver<Completion>> {
+        Ok(self.try_submit_with_id(req)?.1)
+    }
+
+    /// Non-blocking [`Batcher::submit_with_id`] (load-shedding).
+    pub fn try_submit_with_id(&self, req: Request) -> Result<(u64, Receiver<Completion>)> {
         let tx = self.sender()?;
+        let req_id = trace::next_request_id();
         let (done, done_rx) = mpsc::sync_channel(1);
-        match tx.try_send(Job { req, sink: Sink::Oneshot(done), enqueued: Instant::now() }) {
-            Ok(()) => Ok(done_rx),
-            Err(TrySendError::Full(_)) => Err(anyhow!("admission queue full")),
-            Err(TrySendError::Disconnected(_)) => Err(anyhow!("batcher thread died")),
+        self.enqueue_started();
+        match tx.try_send(Job { req, req_id, sink: Sink::Oneshot(done), enqueued: Instant::now() })
+        {
+            Ok(()) => {
+                serve_metrics().requests.inc();
+                Ok((req_id, done_rx))
+            }
+            Err(TrySendError::Full(_)) => {
+                self.enqueue_failed();
+                Err(anyhow!("admission queue full"))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.enqueue_failed();
+                Err(anyhow!("batcher thread died"))
+            }
         }
     }
 
@@ -355,21 +491,55 @@ impl Batcher {
     /// Dropping the receiver cancels the sequence at its next token, freeing
     /// the slot.
     pub fn submit_streaming(&self, req: Request) -> Result<Receiver<StreamEvent>> {
+        Ok(self.submit_streaming_with_id(req)?.1)
+    }
+
+    /// [`Batcher::submit_streaming`], also returning the request id (stamped
+    /// on every SSE frame by the server).
+    pub fn submit_streaming_with_id(&self, req: Request) -> Result<(u64, Receiver<StreamEvent>)> {
         let tx = self.sender()?;
+        let req_id = trace::next_request_id();
         let (ev_tx, ev_rx) = mpsc::channel();
-        tx.send(Job { req, sink: Sink::Stream(ev_tx), enqueued: Instant::now() })
-            .map_err(|_| anyhow!("batcher thread died"))?;
-        Ok(ev_rx)
+        self.enqueue_started();
+        if tx
+            .send(Job { req, req_id, sink: Sink::Stream(ev_tx), enqueued: Instant::now() })
+            .is_err()
+        {
+            self.enqueue_failed();
+            return Err(anyhow!("batcher thread died"));
+        }
+        serve_metrics().requests.inc();
+        Ok((req_id, ev_rx))
     }
 
     /// Non-blocking [`Batcher::submit_streaming`] (load-shedding).
     pub fn try_submit_streaming(&self, req: Request) -> Result<Receiver<StreamEvent>> {
+        Ok(self.try_submit_streaming_with_id(req)?.1)
+    }
+
+    /// Non-blocking [`Batcher::submit_streaming_with_id`] (load-shedding).
+    pub fn try_submit_streaming_with_id(
+        &self,
+        req: Request,
+    ) -> Result<(u64, Receiver<StreamEvent>)> {
         let tx = self.sender()?;
+        let req_id = trace::next_request_id();
         let (ev_tx, ev_rx) = mpsc::channel();
-        match tx.try_send(Job { req, sink: Sink::Stream(ev_tx), enqueued: Instant::now() }) {
-            Ok(()) => Ok(ev_rx),
-            Err(TrySendError::Full(_)) => Err(anyhow!("admission queue full")),
-            Err(TrySendError::Disconnected(_)) => Err(anyhow!("batcher thread died")),
+        self.enqueue_started();
+        match tx.try_send(Job { req, req_id, sink: Sink::Stream(ev_tx), enqueued: Instant::now() })
+        {
+            Ok(()) => {
+                serve_metrics().requests.inc();
+                Ok((req_id, ev_rx))
+            }
+            Err(TrySendError::Full(_)) => {
+                self.enqueue_failed();
+                Err(anyhow!("admission queue full"))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.enqueue_failed();
+                Err(anyhow!("batcher thread died"))
+            }
         }
     }
 
@@ -396,6 +566,7 @@ impl Drop for Batcher {
 
 fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: Arc<BatchStats>) {
     let cfg = *engine.cfg();
+    let m = serve_metrics();
     let mut kv = engine.new_kv(bcfg.slots);
     let mut active: Vec<ActiveSeq> = Vec::with_capacity(bcfg.slots);
     let mut step: usize = 0; // rotates the prefill round-robin start
@@ -415,7 +586,10 @@ fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: A
                     Err(_) => break,
                 }
             };
+            stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            m.queue_depth.set(stats.queue_depth.load(Ordering::Relaxed) as f64);
             let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
+            m.queue_wait_ms.record(queue_ms);
             let slot = kv.alloc().expect("active < slots implies a free slot");
 
             // budget the context window: cap the generation length, keep the
@@ -448,6 +622,9 @@ fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: A
                 .collect();
             active.push(ActiveSeq {
                 slot,
+                req_id: job.req_id,
+                prefill_chunks: 0,
+                decode_steps: 0,
                 cur: prompt[total],
                 prompt,
                 state,
@@ -468,6 +645,8 @@ fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: A
             stats.admitted.fetch_add(1, Ordering::Relaxed);
             stats.peak_active.fetch_max(active.len() as u64, Ordering::Relaxed);
         }
+        stats.active_slots.store(active.len() as u64, Ordering::Relaxed);
+        m.active_slots.set(active.len() as f64);
         if active.is_empty() {
             // try_recv saw a closed, drained queue
             return;
@@ -522,6 +701,7 @@ fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: A
                 if let SeqState::Prefilling { done, total } = active[i].state {
                     toks.extend_from_slice(&active[i].prompt[done..done + take]);
                     seq_slots.resize(seq_slots.len() + take, active[i].slot);
+                    active[i].prefill_chunks += 1;
                     active[i].state = if done + take == total {
                         SeqState::Decoding
                     } else {
@@ -530,8 +710,11 @@ fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: A
                 }
             }
             if !toks.is_empty() {
+                let t0 = Instant::now();
                 engine.prefill_batch(&toks, &seq_slots, &mut kv);
+                m.prefill_chunk_ms.record(t0.elapsed().as_secs_f64() * 1e3);
                 stats.prefill_tokens.fetch_add(toks.len() as u64, Ordering::Relaxed);
+                m.prefill_tokens.add(toks.len() as u64);
             }
         }
 
@@ -543,6 +726,9 @@ fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: A
             .map(|(i, _)| i)
             .collect();
         if !decode_idx.is_empty() {
+            // ONE timestamp pair per batched step (not per token) keeps the
+            // ITL histogram off the per-token hot path.
+            let t_step = Instant::now();
             let tokens: Vec<i32> = decode_idx.iter().map(|&i| active[i].cur).collect();
             let seq_slots: Vec<SlotId> = decode_idx.iter().map(|&i| active[i].slot).collect();
             let logits = engine.step_batch(&tokens, &seq_slots, &mut kv);
@@ -552,8 +738,11 @@ fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: A
                 let next = sample_logits(logits.row(row), temp, top_k, &mut seq.rng);
                 seq.produced.push(next);
                 seq.cur = next;
+                seq.decode_steps += 1;
                 if seq.first_token_ms.is_none() {
-                    seq.first_token_ms = Some(seq.enqueued.elapsed().as_secs_f64() * 1e3);
+                    let ttft = seq.enqueued.elapsed().as_secs_f64() * 1e3;
+                    seq.first_token_ms = Some(ttft);
+                    m.ttft_ms.record(ttft);
                 }
                 // Stop sequences: a match ends the sequence and trims the
                 // matched tokens from the output. Tokens that might still
@@ -561,10 +750,11 @@ fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: A
                 // streamed tokens always concatenate to the final output.
                 let hold = if seq.stop.is_empty() {
                     0
-                } else if let Some(m) = stop_match(&seq.produced, &seq.stop) {
-                    seq.produced.truncate(seq.produced.len() - m);
+                } else if let Some(matched) = stop_match(&seq.produced, &seq.stop) {
+                    seq.produced.truncate(seq.produced.len() - matched);
                     seq.stopped = true;
                     stats.stopped.fetch_add(1, Ordering::Relaxed);
+                    m.stopped.inc();
                     0
                 } else {
                     stop_holdback(&seq.produced, &seq.stop)
@@ -576,12 +766,15 @@ fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: A
                         Some(sink) if !sink.push_token(t) => {
                             seq.cancelled = true;
                             stats.cancelled.fetch_add(1, Ordering::Relaxed);
+                            m.cancelled.inc();
                         }
                         _ => seq.streamed += 1,
                     }
                 }
             }
             stats.tokens_out.fetch_add(decode_idx.len() as u64, Ordering::Relaxed);
+            m.tokens_out.add(decode_idx.len() as u64);
+            m.decode_step_ms.record(t_step.elapsed().as_secs_f64() * 1e3);
         }
 
         // -- evict finished sequences ----------------------------------------
@@ -596,6 +789,7 @@ fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: A
                 let mut seq = active.swap_remove(i);
                 kv.release(seq.slot);
                 stats.completed.fetch_add(1, Ordering::Relaxed);
+                m.completions.inc();
                 // A length-finish may still hold tokens back (they were a
                 // possible stop prefix); the match is now decided, flush them.
                 if !seq.cancelled {
@@ -614,14 +808,35 @@ fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: A
                 } else {
                     FinishReason::Length
                 };
+                let decode_ms = seq.admitted_at.elapsed().as_secs_f64() * 1e3;
+                // One complete span per request, emitted exactly once, at
+                // eviction (no-op unless a trace sink is installed).
+                if trace::enabled() {
+                    let mut span = crate::json_obj![
+                        ("request_id", seq.req_id as i64),
+                        ("prompt_tokens", seq.prompt.len()),
+                        ("queue_ms", seq.queue_ms),
+                        ("prefill_chunks", seq.prefill_chunks as i64),
+                        ("prefill_tokens", seq.prompt.len() - 1),
+                        ("decode_steps", seq.decode_steps as i64),
+                        ("tokens_out", seq.produced.len()),
+                        ("decode_ms", decode_ms),
+                        ("finish_reason", finish_reason.as_str()),
+                    ];
+                    if let (Json::Obj(fields), Some(t)) = (&mut span, seq.first_token_ms) {
+                        fields.push(("ttft_ms".to_string(), t.into()));
+                    }
+                    trace::emit(&span);
+                }
                 // Receiver may have given up; completion is best-effort.
                 if let Some(sink) = seq.sink.take() {
                     sink.finish(Completion {
+                        request_id: seq.req_id,
                         tokens: seq.produced,
                         prompt_len: seq.prompt.len(),
                         queue_ms: seq.queue_ms,
-                        ttft_ms: seq.first_token_ms.unwrap_or(0.0),
-                        decode_ms: seq.admitted_at.elapsed().as_secs_f64() * 1e3,
+                        ttft_ms: seq.first_token_ms,
+                        decode_ms,
                         finish_reason,
                     });
                 }
@@ -629,6 +844,8 @@ fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: A
                 i += 1;
             }
         }
+        stats.active_slots.store(active.len() as u64, Ordering::Relaxed);
+        m.active_slots.set(active.len() as f64);
     }
 }
 
@@ -674,10 +891,14 @@ mod tests {
         assert_eq!(c.tokens.len(), 5);
         assert_eq!(c.prompt_len, 3);
         assert!(c.decode_ms >= 0.0 && c.queue_ms >= 0.0);
-        assert!(c.ttft_ms > 0.0 && c.ttft_ms <= c.queue_ms + c.decode_ms + 1.0);
-        let (adm, done, toks, _) = b.stats().snapshot();
-        assert_eq!((adm, done), (1, 1));
-        assert_eq!(toks, 5);
+        let ttft = c.ttft_ms.expect("a completion with tokens has a TTFT");
+        assert!(ttft > 0.0 && ttft <= c.queue_ms + c.decode_ms + 1.0);
+        assert!(c.request_id > 0);
+        let s = b.stats().snapshot();
+        assert_eq!((s.admitted, s.completed), (1, 1));
+        assert_eq!(s.tokens_out, 5);
+        assert_eq!(s.queue_depth, 0, "drained queue");
+        assert_eq!(s.active_slots, 0, "no sequence left in the batch");
         assert_eq!(b.stats().prefill_tokens(), 2, "prompt[..len-1] goes through prefill");
     }
 
@@ -699,10 +920,16 @@ mod tests {
         for (p, c) in prompts.iter().zip(&results) {
             assert_eq!(c.tokens, solo.generate_reencode(p, 6, &opts), "prompt {p:?}");
         }
-        let (adm, done, toks, peak) = b.stats().snapshot();
-        assert_eq!((adm, done), (8, 8));
-        assert_eq!(toks, 8 * 6);
+        let s = b.stats().snapshot();
+        assert_eq!((s.admitted, s.completed), (8, 8));
+        assert_eq!(s.tokens_out, 8 * 6);
+        let peak = s.peak_active;
         assert!(peak >= 2, "batched decode should overlap sequences (peak {peak})");
+        let ids: Vec<u64> = results.iter().map(|c| c.request_id).collect();
+        let mut dedup = ids.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len(), "request ids must be unique");
     }
 
     #[test]
@@ -770,7 +997,21 @@ mod tests {
         let done = done.expect("terminal Done event");
         assert_eq!(streamed, done.tokens, "Token frames must concatenate to the completion");
         assert_eq!(streamed, oneshot.tokens, "streaming must not change greedy decode");
-        assert!(done.ttft_ms > 0.0);
+        assert!(done.ttft_ms.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn stop_on_first_token_reports_ttft_of_the_trimmed_token() {
+        // A stop that matches the very first sampled token leaves zero output
+        // tokens; a token WAS sampled, so ttft_ms stays Some (the old
+        // unwrap_or(0.0) encoding reported a fake 0 ms here).
+        let b = tiny_batcher(1, 2);
+        let baseline = b.generate(greedy(vec![1, 2, 3], 4)).unwrap();
+        let first = baseline.tokens[0];
+        let c = b.generate(greedy_stop(vec![1, 2, 3], 4, vec![vec![first]])).unwrap();
+        assert!(c.tokens.is_empty());
+        assert_eq!(c.finish_reason, FinishReason::Stop);
+        assert!(c.ttft_ms.unwrap() > 0.0);
     }
 
     #[test]

@@ -34,8 +34,10 @@
 //!   prefixes are held back from streams until decided), eviction of
 //!   finished, stopped or cancelled sequences with a [`FinishReason`].
 //! * [`server`] — `std::net` HTTP front-end (`POST /v1/generate`,
-//!   `GET /healthz`, `GET /v1/stats`) using `util::json`, with HTTP/1.1
-//!   keep-alive, a connection read deadline, and SSE streaming.
+//!   `GET /healthz`, `GET /v1/stats`, `GET /metrics`) using `util::json`,
+//!   with HTTP/1.1 keep-alive, a connection read deadline, and SSE
+//!   streaming. `/metrics` renders the process-global [`crate::obs`]
+//!   registry in Prometheus text exposition format.
 //!
 //! # Checkpoints
 //!
@@ -54,22 +56,28 @@
 //! (one HTTP chunk per frame):
 //!
 //! ```text
-//! data: {"token": 104, "index": 0, "text": "h"}
+//! data: {"request_id": 7, "token": 104, "index": 0, "text": "h"}
 //!
-//! data: {"token": 105, "index": 1, "text": "i"}
+//! data: {"request_id": 7, "token": 105, "index": 1, "text": "i"}
 //!
-//! data: {"done": true, "completion": "hi", "prompt_tokens": 8,
-//!        "finish_reason": "length", "queue_ms": 0.1, "ttft_ms": 1.9,
-//!        "decode_ms": 14.2, "tok_per_s": 140.8}
+//! data: {"request_id": 7, "done": true, "completion": "hi",
+//!        "prompt_tokens": 8, "finish_reason": "length", "queue_ms": 0.1,
+//!        "decode_ms": 14.2, "tok_per_s": 140.8, "ttft_ms": 1.9}
 //! ```
 //!
 //! The final frame carries `"done": true` plus the same usage stats a
 //! non-streaming response returns, followed by the zero-length terminating
-//! chunk. Concatenating the `token` fields reproduces the non-streaming
-//! `tokens` array exactly (verified at temperature 0 in the integration
-//! tests); per-frame `text` is a lossy single-token decode, the final
-//! `completion` is the authoritative text. Without `"stream": true` the
-//! response is a single JSON document with the same usage fields.
+//! chunk. Every frame of a stream (and every non-streaming response) is
+//! stamped with the same `request_id` — the process-unique id assigned at
+//! admission, which also keys the request's span record in `traces.jsonl`
+//! when tracing is on (see [`crate::obs::trace`]). `ttft_ms` is **omitted**
+//! when the request produced no tokens (e.g. a stop sequence matched the
+//! first sampled token), never reported as `0`. Concatenating the `token`
+//! fields reproduces the non-streaming `tokens` array exactly (verified at
+//! temperature 0 in the integration tests); per-frame `text` is a lossy
+//! single-token decode, the final `completion` is the authoritative text.
+//! Without `"stream": true` the response is a single JSON document with the
+//! same usage fields.
 //!
 //! Requests may carry `"stop": [...]` — strings (tokenized stop sequences)
 //! or integer token ids (EOS). A match ends generation, the matched tokens
@@ -87,6 +95,18 @@
 //! chunked-prefill fairness budget; 0 = unchunked); `keep_alive_ms` — the
 //! connection read deadline / keep-alive idle window (0 = no deadline).
 //!
+//! # Observability
+//!
+//! `GET /v1/stats` reports lifetime counters (`admitted`, `completed`,
+//! `tokens_out`, `peak_active`, `prefill_tokens`, `cancelled`, `stopped`)
+//! plus the **live** gauges `queue_depth` (requests accepted but not yet
+//! admitted to a slot) and `active_slots` (sequences currently decoding) —
+//! a [`batcher::StatsSnapshot`]. `GET /metrics` exposes the same signals as
+//! Prometheus series (`sct_serve_*`, `sct_http_requests_total{route=...}`)
+//! with queue-wait / TTFT / decode-step / prefill-chunk latency histograms;
+//! `sct serve --trace-out traces.jsonl` additionally records one span per
+//! request. See [`crate::obs`] for the registry and exposition format.
+//!
 //! Correctness anchors: at temperature 0 the KV-cached path is
 //! token-identical to the full re-encode baseline (tested in [`engine`]),
 //! chunked prefill is token-identical to inline prefill (tested in
@@ -100,10 +120,12 @@ pub mod engine;
 pub mod kv;
 pub mod server;
 
-pub use batcher::{BatchConfig, Batcher, Completion, FinishReason, Request, StreamEvent};
+pub use batcher::{
+    BatchConfig, Batcher, Completion, FinishReason, Request, StatsSnapshot, StreamEvent,
+};
 pub use engine::{sample_logits, Engine, EngineConfig, SampleOpts, SpectralModel};
 pub use kv::KvCache;
 pub use server::{
-    http_exchange, http_get_json, http_post_json, http_post_sse, http_roundtrip, ServeConfig,
-    Server, SseFrame,
+    http_exchange, http_get_json, http_get_text, http_post_json, http_post_sse, http_roundtrip,
+    ServeConfig, Server, SseFrame,
 };

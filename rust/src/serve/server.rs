@@ -20,13 +20,18 @@
 //!   them, the match is trimmed, and `finish_reason` reports `"stop"` vs
 //!   `"length"`. At most 8 stop sequences are honored (extras ignored);
 //!   out-of-vocab ids can never match and are dropped. Without `stream`, responds with one JSON document: the
-//!   completion text, token ids, finish reason, and queue/TTFT/decode
-//!   latency. With `"stream": true`, responds with Server-Sent Events over
-//!   chunked transfer encoding — see [`crate::serve`] module docs for the
-//!   exact wire format.
+//!   completion text, token ids, finish reason, `request_id` (the same id
+//!   that keys the request's span record in `traces.jsonl`), and
+//!   queue/TTFT/decode latency (`ttft_ms` is omitted when no token was
+//!   sampled). With `"stream": true`, responds with Server-Sent Events over
+//!   chunked transfer encoding, every frame stamped with `request_id` — see
+//!   [`crate::serve`] module docs for the exact wire format.
 //! * `GET /healthz` — liveness + uptime + scheduler sizing.
 //! * `GET /v1/stats` — scheduler counters (admitted/completed/tokens/peak/
-//!   prefill/cancelled).
+//!   prefill/cancelled/stopped) plus the live `queue_depth` and
+//!   `active_slots` gauges.
+//! * `GET /metrics` — Prometheus text exposition of the process-global
+//!   [`crate::obs`] registry (serve, pool, train, and rank series).
 //!
 //! A full admission queue answers `503` (load shedding) rather than holding
 //! the connection on the backpressured submit path.
@@ -35,18 +40,43 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Receiver;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::batcher::{BatchConfig, Batcher, Completion, Request, StreamEvent};
+use super::batcher::{BatchConfig, Batcher, Completion, Request, StatsSnapshot, StreamEvent};
 use super::engine::{Engine, SampleOpts};
 use crate::coordinator::config::TomlDoc;
 use crate::data::Tokenizer;
 use crate::json_obj;
+use crate::obs::{self, Counter};
 use crate::util::json::Json;
+
+/// Per-route request counters (registered once, cached for the accept path).
+struct HttpMetrics {
+    generate: Counter,
+    healthz: Counter,
+    stats: Counter,
+    metrics: Counter,
+    other: Counter,
+}
+
+fn http_metrics() -> &'static HttpMetrics {
+    static M: OnceLock<HttpMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = obs::registry();
+        const HELP: &str = "HTTP requests served, by route";
+        HttpMetrics {
+            generate: r.counter_with("sct_http_requests_total", &[("route", "/v1/generate")], HELP),
+            healthz: r.counter_with("sct_http_requests_total", &[("route", "/healthz")], HELP),
+            stats: r.counter_with("sct_http_requests_total", &[("route", "/v1/stats")], HELP),
+            metrics: r.counter_with("sct_http_requests_total", &[("route", "/metrics")], HELP),
+            other: r.counter_with("sct_http_requests_total", &[("route", "other")], HELP),
+        }
+    })
+}
 
 /// Server + scheduler sizing. CLI flags and the `[serve]` TOML section both
 /// land here.
@@ -174,8 +204,8 @@ impl Server {
         Ok(Server { addr, shutdown, accept: Some(accept), state })
     }
 
-    /// Scheduler counters: (admitted, completed, tokens_out, peak_active).
-    pub fn stats(&self) -> (u64, u64, u64, u64) {
+    /// Point-in-time scheduler counters and gauges.
+    pub fn stats(&self) -> StatsSnapshot {
         self.state.batcher.stats().snapshot()
     }
 
@@ -251,6 +281,27 @@ pub fn http_post_json(addr: SocketAddr, path: &str, body: &str) -> Result<(u16, 
 /// `GET path` via [`http_roundtrip`] (one-shot connection).
 pub fn http_get_json(addr: SocketAddr, path: &str) -> Result<(u16, Json)> {
     http_roundtrip(addr, &format!("GET {path} HTTP/1.1\r\nHost: sct\r\nConnection: close\r\n\r\n"))
+}
+
+/// `GET path` returning the raw response body as text — the scrape client
+/// for `GET /metrics` (Prometheus exposition is not JSON).
+pub fn http_get_text(addr: SocketAddr, path: &str) -> Result<(u16, String)> {
+    let mut s = TcpStream::connect(addr).context("connecting to serve endpoint")?;
+    s.set_read_timeout(Some(Duration::from_secs(30))).ok();
+    s.write_all(
+        format!("GET {path} HTTP/1.1\r\nHost: sct\r\nConnection: close\r\n\r\n").as_bytes(),
+    )?;
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).context("reading response")?;
+    let text = String::from_utf8_lossy(&buf);
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .ok_or_else(|| anyhow!("malformed response: {text:?}"))?
+        .parse()
+        .context("non-numeric status code")?;
+    let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    Ok((status, body))
 }
 
 /// One request/response exchange over an already-open connection — the
@@ -453,17 +504,17 @@ fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<HttpRequest>
     Ok(Some(HttpRequest { method, path, keep_alive, body }))
 }
 
-fn write_response(
+fn write_raw_response(
     stream: &mut TcpStream,
     status: u16,
     reason: &str,
-    body: &Json,
+    content_type: &str,
+    payload: &str,
     keep_alive: bool,
 ) -> Result<()> {
-    let payload = body.to_string();
     let head = format!(
         "HTTP/1.1 {status} {reason}\r\n\
-         Content-Type: application/json\r\n\
+         Content-Type: {content_type}\r\n\
          Content-Length: {}\r\n\
          Connection: {}\r\n\r\n",
         payload.len(),
@@ -473,6 +524,16 @@ fn write_response(
     stream.write_all(payload.as_bytes())?;
     stream.flush()?;
     Ok(())
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    body: &Json,
+    keep_alive: bool,
+) -> Result<()> {
+    write_raw_response(stream, status, reason, "application/json", &body.to_string(), keep_alive)
 }
 
 /// Write one SSE frame as its own HTTP chunk and flush, so the client sees
@@ -518,8 +579,12 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState) -> Result<()> {
         // request so well-behaved clients reconnect instead of erroring
         let keep = req.keep_alive && served + 1 < KEEP_ALIVE_MAX_REQUESTS;
         match (req.method.as_str(), req.path.as_str()) {
-            ("POST", "/v1/generate") => handle_generate(&mut stream, &req.body, state, keep)?,
+            ("POST", "/v1/generate") => {
+                http_metrics().generate.inc();
+                handle_generate(&mut stream, &req.body, state, keep)?
+            }
             ("GET", "/healthz") => {
+                http_metrics().healthz.inc();
                 let body = json_obj![
                     ("status", "ok"),
                     ("uptime_s", state.started.elapsed().as_secs_f64()),
@@ -531,20 +596,35 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState) -> Result<()> {
                 write_response(&mut stream, 200, "OK", &body, keep)?;
             }
             ("GET", "/v1/stats") => {
-                let (admitted, completed, tokens_out, peak_active) =
-                    state.batcher.stats().snapshot();
+                http_metrics().stats.inc();
+                let s = state.batcher.stats().snapshot();
                 let body = json_obj![
-                    ("admitted", admitted as i64),
-                    ("completed", completed as i64),
-                    ("tokens_out", tokens_out as i64),
-                    ("peak_active", peak_active as i64),
-                    ("prefill_tokens", state.batcher.stats().prefill_tokens() as i64),
-                    ("cancelled", state.batcher.stats().cancelled() as i64),
-                    ("stopped", state.batcher.stats().stopped() as i64),
+                    ("admitted", s.admitted as i64),
+                    ("completed", s.completed as i64),
+                    ("tokens_out", s.tokens_out as i64),
+                    ("peak_active", s.peak_active as i64),
+                    ("prefill_tokens", s.prefill_tokens as i64),
+                    ("cancelled", s.cancelled as i64),
+                    ("stopped", s.stopped as i64),
+                    ("queue_depth", s.queue_depth as i64),
+                    ("active_slots", s.active_slots as i64),
                 ];
                 write_response(&mut stream, 200, "OK", &body, keep)?;
             }
+            ("GET", "/metrics") => {
+                http_metrics().metrics.inc();
+                let text = obs::registry().render_prometheus();
+                write_raw_response(
+                    &mut stream,
+                    200,
+                    "OK",
+                    "text/plain; version=0.0.4",
+                    &text,
+                    keep,
+                )?;
+            }
             ("POST", _) | ("GET", _) => {
+                http_metrics().other.inc();
                 write_response(&mut stream, 404, "Not Found", &error_json("no such route"), keep)?;
             }
             _ => {
@@ -635,16 +715,22 @@ fn completion_json(c: &Completion, state: &ServerState) -> Json {
     let text = state.tokenizer.decode(&c.tokens);
     let n = c.tokens.len();
     let tok_per_s = if c.decode_ms > 0.0 { n as f64 / (c.decode_ms / 1e3) } else { 0.0 };
-    json_obj![
+    let mut body = json_obj![
+        ("request_id", c.request_id as i64),
         ("completion", text),
         ("tokens", c.tokens.iter().map(|&t| Json::from(t as i64)).collect::<Vec<_>>()),
         ("prompt_tokens", c.prompt_len),
         ("finish_reason", c.finish_reason.as_str()),
         ("queue_ms", c.queue_ms),
-        ("ttft_ms", c.ttft_ms),
         ("decode_ms", c.decode_ms),
         ("tok_per_s", tok_per_s),
-    ]
+    ];
+    // `ttft_ms` is omitted (not 0, not null) when no token was sampled, so
+    // latency aggregators never absorb a fake zero.
+    if let (Json::Obj(fields), Some(t)) = (&mut body, c.ttft_ms) {
+        fields.push(("ttft_ms".to_string(), t.into()));
+    }
+    body
 }
 
 fn write_submit_error(stream: &mut TcpStream, e: &anyhow::Error, keep: bool) -> Result<()> {
@@ -669,8 +755,8 @@ fn handle_generate(
         }
     };
     if greq.stream {
-        match state.batcher.try_submit_streaming(greq.req) {
-            Ok(rx) => stream_sse(stream, rx, state, keep),
+        match state.batcher.try_submit_streaming_with_id(greq.req) {
+            Ok((req_id, rx)) => stream_sse(stream, req_id, rx, state, keep),
             Err(e) => write_submit_error(stream, &e, keep),
         }
     } else {
@@ -687,10 +773,13 @@ fn handle_generate(
 
 /// Relay a streaming generation as Server-Sent Events: one `data:` frame per
 /// token as it is sampled, a terminal frame with the usage stats, then the
-/// zero-length chunk. A write failure (client hung up) drops the event
-/// receiver, which cancels the sequence in the batcher at its next token.
+/// zero-length chunk. Every frame carries the `request_id` so clients can
+/// correlate a stream with its span record. A write failure (client hung up)
+/// drops the event receiver, which cancels the sequence in the batcher at
+/// its next token.
 fn stream_sse(
     stream: &mut TcpStream,
+    req_id: u64,
     rx: Receiver<StreamEvent>,
     state: &ServerState,
     keep: bool,
@@ -714,6 +803,7 @@ fn stream_sse(
                 // splits a multi-byte character renders as U+FFFD); the
                 // terminal frame carries the full, correctly-decoded text.
                 let frame = json_obj![
+                    ("request_id", req_id as i64),
                     ("token", t as i64),
                     ("index", index),
                     ("text", state.tokenizer.decode(&[t])),
@@ -725,16 +815,19 @@ fn stream_sse(
                 let n = c.tokens.len();
                 let tok_per_s =
                     if c.decode_ms > 0.0 { n as f64 / (c.decode_ms / 1e3) } else { 0.0 };
-                let frame = json_obj![
+                let mut frame = json_obj![
+                    ("request_id", c.request_id as i64),
                     ("done", true),
                     ("completion", state.tokenizer.decode(&c.tokens)),
                     ("prompt_tokens", c.prompt_len),
                     ("finish_reason", c.finish_reason.as_str()),
                     ("queue_ms", c.queue_ms),
-                    ("ttft_ms", c.ttft_ms),
                     ("decode_ms", c.decode_ms),
                     ("tok_per_s", tok_per_s),
                 ];
+                if let (Json::Obj(fields), Some(t)) = (&mut frame, c.ttft_ms) {
+                    fields.push(("ttft_ms".to_string(), t.into()));
+                }
                 write_sse_frame(stream, &frame)?;
                 finished = true;
                 break;
@@ -786,6 +879,30 @@ mod tests {
         assert_eq!(code, 200);
         assert_eq!(body.get("admitted").unwrap().as_i64().unwrap(), 0);
         assert_eq!(body.get("prefill_tokens").unwrap().as_i64().unwrap(), 0);
+        assert_eq!(body.get("queue_depth").unwrap().as_i64().unwrap(), 0);
+        assert_eq!(body.get("active_slots").unwrap().as_i64().unwrap(), 0);
+        srv.stop();
+    }
+
+    #[test]
+    fn metrics_exposition_responds_with_serve_series() {
+        let srv = test_server(2, 4);
+        let req = r#"{"prompt": "observe me", "tokens": 3, "temperature": 0}"#;
+        let (code, _) = http_post_json(srv.addr, "/v1/generate", req).unwrap();
+        assert_eq!(code, 200);
+        let (code, text) = http_get_text(srv.addr, "/metrics").unwrap();
+        assert_eq!(code, 200);
+        for series in [
+            "sct_serve_requests_total",
+            "sct_serve_completions_total",
+            "sct_serve_queue_depth",
+            "sct_serve_active_slots",
+            "sct_serve_ttft_ms_bucket",
+            "sct_serve_decode_step_ms_count",
+            "sct_http_requests_total{route=\"/v1/generate\"}",
+        ] {
+            assert!(text.contains(series), "missing series {series} in:\n{text}");
+        }
         srv.stop();
     }
 
@@ -798,6 +915,7 @@ mod tests {
         assert_eq!(a.get("tokens").unwrap().as_arr().unwrap().len(), 6);
         assert_eq!(a.get("prompt_tokens").unwrap().as_usize().unwrap(), 8);
         assert!(a.get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!(a.get("request_id").unwrap().as_i64().unwrap() > 0);
         let (_, b) = http_post_json(srv.addr, "/v1/generate", req).unwrap();
         assert_eq!(
             a.get("tokens").unwrap(),
@@ -919,6 +1037,15 @@ mod tests {
         let last = frames.last().unwrap();
         assert!(last.data.get("done").unwrap().as_bool().unwrap());
         assert!(last.data.get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
+        let id = last.data.get("request_id").unwrap().as_i64().unwrap();
+        assert!(id > 0);
+        for f in &frames {
+            assert_eq!(
+                f.data.get("request_id").unwrap().as_i64().unwrap(),
+                id,
+                "every frame of a stream carries the same request id"
+            );
+        }
         srv.stop();
     }
 }

@@ -17,11 +17,13 @@
 //! resumed run continues bit-for-bit.
 
 use std::path::Path;
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::checkpoint::format::{read_checkpoint, write_checkpoint, NamedTensor};
+use crate::obs::{self, Counter, Gauge, Histogram};
 use crate::serve::engine::{EngineConfig, SpectralModel};
 use crate::spectral::{qr_retract, AdamW, Matrix};
 use crate::util::pool;
@@ -117,6 +119,44 @@ impl Default for NativeTrainConfig {
     }
 }
 
+/// `sct_train_*` series published by every [`NativeTrainer::train_step`]:
+/// step/clip counters, loss and grad-norm gauges, and one latency histogram
+/// per phase of Table 2's `[forward, backward, optimizer, retract]` split.
+struct TrainMetrics {
+    steps: Counter,
+    clips: Counter,
+    loss: Gauge,
+    grad_norm: Gauge,
+    phase_ms: [Histogram; 4],
+}
+
+fn train_metrics() -> &'static TrainMetrics {
+    static METRICS: OnceLock<TrainMetrics> = OnceLock::new();
+    METRICS.get_or_init(|| {
+        let r = obs::registry();
+        let phase = |p: &str| {
+            r.histogram_with(
+                "sct_train_phase_ms",
+                &[("phase", p)],
+                "Per-phase train_step wall time, milliseconds",
+            )
+        };
+        TrainMetrics {
+            steps: r.counter("sct_train_steps_total", "Optimizer steps taken"),
+            clips: r.counter(
+                "sct_train_clip_total",
+                "Steps where the global grad norm exceeded grad_clip and was rescaled",
+            ),
+            loss: r.gauge("sct_train_loss", "Training cross-entropy of the latest step"),
+            grad_norm: r.gauge(
+                "sct_train_grad_norm",
+                "Pre-clip global gradient norm of the latest step (0 when clipping is off)",
+            ),
+            phase_ms: [phase("forward"), phase("backward"), phase("optimizer"), phase("retract")],
+        }
+    })
+}
+
 /// Model + optimizer state + RoPE tables: everything one training run owns.
 pub struct NativeTrainer {
     pub cfg: NativeTrainConfig,
@@ -191,11 +231,14 @@ impl NativeTrainer {
         let mut grads = decoder_bwd(&self.model, &self.rope, &inputs, b, t, &cache, &dlogits);
         let t_bwd = t1.elapsed().as_secs_f64();
 
+        let m = train_metrics();
         let t2 = Instant::now();
         if self.cfg.grad_clip > 0.0 {
             let norm = grads.global_norm();
+            m.grad_norm.set(norm as f64);
             if norm > self.cfg.grad_clip {
                 grads.scale(self.cfg.grad_clip / norm);
+                m.clips.inc();
             }
         }
         {
@@ -221,6 +264,12 @@ impl NativeTrainer {
             retract_model(&mut self.model);
         }
         let t_retract = t3.elapsed().as_secs_f64();
+
+        m.steps.inc();
+        m.loss.set(loss as f64);
+        for (h, secs) in m.phase_ms.iter().zip([t_fwd, t_bwd, t_opt, t_retract]) {
+            h.record(secs * 1e3);
+        }
 
         (loss, [t_fwd, t_bwd, t_opt, t_retract])
     }

@@ -26,8 +26,66 @@
 //! cores. Callers gate fan-out on [`parallel_worthwhile`] with a
 //! per-kernel work threshold, falling back to the serial kernel for small
 //! shapes where scoped-spawn overhead (tens of µs) would dominate.
+//!
+//! # Observability
+//!
+//! The pool publishes `sct_pool_*` series through [`crate::obs`]: the
+//! resolved `sct_pool_threads` gauge, parallel-vs-serial gate decisions
+//! (`sct_pool_decide_parallel_total` / `sct_pool_decide_serial_total`),
+//! fan-outs and spawned shards (`sct_pool_fanouts_total` /
+//! `sct_pool_tasks_total`), shard sizes (`sct_pool_shard_rows`), and
+//! per-worker busy time (`sct_pool_worker_busy_ms`). The serial fast paths
+//! record nothing beyond the gate counter, so single-threaded kernels stay
+//! uninstrumented.
 
+use crate::obs::{self, Counter, Gauge, Histogram};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct PoolMetrics {
+    decide_parallel: Counter,
+    decide_serial: Counter,
+    fanouts: Counter,
+    tasks: Counter,
+    shard_rows: Histogram,
+    worker_busy_ms: Histogram,
+    threads: Gauge,
+}
+
+fn pool_metrics() -> &'static PoolMetrics {
+    static METRICS: OnceLock<PoolMetrics> = OnceLock::new();
+    METRICS.get_or_init(|| {
+        let r = obs::registry();
+        PoolMetrics {
+            decide_parallel: r.counter(
+                "sct_pool_decide_parallel_total",
+                "Kernel fan-out gate decisions that took the parallel path",
+            ),
+            decide_serial: r.counter(
+                "sct_pool_decide_serial_total",
+                "Kernel fan-out gate decisions that stayed serial",
+            ),
+            fanouts: r.counter(
+                "sct_pool_fanouts_total",
+                "Scoped fan-outs (one spawn/join cycle across the pool)",
+            ),
+            tasks: r.counter(
+                "sct_pool_tasks_total",
+                "Worker shards spawned across all fan-outs",
+            ),
+            shard_rows: r.histogram(
+                "sct_pool_shard_rows",
+                "Work items per spawned shard (output rows for par_rows, task indices for par_tasks)",
+            ),
+            worker_busy_ms: r.histogram(
+                "sct_pool_worker_busy_ms",
+                "Per-worker busy time inside a fan-out, milliseconds",
+            ),
+            threads: r.gauge("sct_pool_threads", "Resolved worker pool size"),
+        }
+    })
+}
 
 /// Upper bound on the pool size (fan-out beyond this stops paying on any
 /// hardware this targets).
@@ -61,14 +119,18 @@ pub fn threads() -> usize {
     let n = resolve_default();
     // Benign race: concurrent first readers resolve the same value.
     let _ = THREADS.compare_exchange(0, n, Ordering::Relaxed, Ordering::Relaxed);
-    THREADS.load(Ordering::Relaxed)
+    let t = THREADS.load(Ordering::Relaxed);
+    pool_metrics().threads.set(t as f64);
+    t
 }
 
 /// Override the pool size (CLI `--threads` / `[runtime] threads`). Clamped
 /// to `1..=MAX_THREADS`. Safe to change at any time: results are
 /// bit-identical at every setting, so this is purely a throughput knob.
 pub fn set_threads(n: usize) {
-    THREADS.store(n.clamp(1, MAX_THREADS), Ordering::Relaxed);
+    let n = n.clamp(1, MAX_THREADS);
+    THREADS.store(n, Ordering::Relaxed);
+    pool_metrics().threads.set(n as f64);
 }
 
 /// Test hook (see `tests/parallel_determinism.rs`): bypass the work
@@ -81,7 +143,14 @@ pub fn set_force_parallel(on: bool) {
 /// pool has one thread or the shape is too small to amortize scoped-spawn
 /// overhead (unless the test hook forces it).
 pub fn parallel_worthwhile(work: usize, threshold: usize) -> bool {
-    threads() > 1 && (work >= threshold || FORCE_PARALLEL.load(Ordering::Relaxed))
+    let go = threads() > 1 && (work >= threshold || FORCE_PARALLEL.load(Ordering::Relaxed));
+    let m = pool_metrics();
+    if go {
+        m.decide_parallel.inc();
+    } else {
+        m.decide_serial.inc();
+    }
+    go
 }
 
 /// Chunk length that deals `n` work items evenly across the pool — the
@@ -108,10 +177,18 @@ where
         return;
     }
     let chunk_rows = rows.div_ceil(t);
+    let m = pool_metrics();
+    m.fanouts.inc();
     std::thread::scope(|s| {
         for (ti, block) in out.chunks_mut(chunk_rows * row_len).enumerate() {
+            m.tasks.inc();
+            m.shard_rows.record((block.len() / row_len) as f64);
             let body = &body;
-            s.spawn(move || body(ti * chunk_rows, block));
+            s.spawn(move || {
+                let t0 = Instant::now();
+                body(ti * chunk_rows, block);
+                m.worker_busy_ms.record(t0.elapsed().as_secs_f64() * 1e3);
+            });
         }
     });
 }
@@ -132,17 +209,23 @@ where
         return;
     }
     let chunk = n_tasks.div_ceil(t);
+    let m = pool_metrics();
+    m.fanouts.inc();
     std::thread::scope(|s| {
         for ti in 0..t {
             let (lo, hi) = (ti * chunk, ((ti + 1) * chunk).min(n_tasks));
             if lo >= hi {
                 break;
             }
+            m.tasks.inc();
+            m.shard_rows.record((hi - lo) as f64);
             let body = &body;
             s.spawn(move || {
+                let t0 = Instant::now();
                 for i in lo..hi {
                     body(i);
                 }
+                m.worker_busy_ms.record(t0.elapsed().as_secs_f64() * 1e3);
             });
         }
     });

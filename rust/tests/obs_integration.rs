@@ -1,0 +1,202 @@
+//! Cross-layer observability integration: the Prometheus exposition served
+//! over HTTP parses and its histograms are monotone, concurrent counter
+//! increments from pool workers are never lost, one process surfaces
+//! serve + pool + train + rank series on the shared registry, and every
+//! HTTP request produces one complete span record.
+//!
+//! The registry and the trace sink are process-global and tests run
+//! concurrently in one binary, so every assertion here is delta- or
+//! presence-based (never an exact global count), and span lookups filter by
+//! this test's own request ids.
+
+use std::collections::BTreeSet;
+
+use sct::data::Tokenizer;
+use sct::obs::{self, trace};
+use sct::serve::{
+    http_get_text, http_post_json, Engine, EngineConfig, ServeConfig, Server, SpectralModel,
+};
+use sct::train::{NativeTrainConfig, NativeTrainer};
+use sct::util::pool;
+
+fn start_server() -> Server {
+    let model = SpectralModel::init(EngineConfig::default(), 7);
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        slots: 2,
+        queue_depth: 8,
+        ..ServeConfig::default()
+    };
+    Server::start(&cfg, Engine::new(model), Tokenizer::byte_level()).unwrap()
+}
+
+/// Strip label set and histogram sub-series suffixes down to the logical
+/// metric name (`sct_serve_ttft_ms_bucket{le="1"}` -> `sct_serve_ttft_ms`).
+fn base_name(series: &str) -> &str {
+    let name = series.split('{').next().unwrap();
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(stripped) = name.strip_suffix(suffix) {
+            return stripped;
+        }
+    }
+    name
+}
+
+#[test]
+fn metrics_exposition_parses_and_histogram_buckets_are_monotone() {
+    let srv = start_server();
+    let req = r#"{"prompt": "exposition probe", "tokens": 3, "temperature": 0}"#;
+    let (code, _) = http_post_json(srv.addr, "/v1/generate", req).unwrap();
+    assert_eq!(code, 200);
+    let (code, text) = http_get_text(srv.addr, "/metrics").unwrap();
+    assert_eq!(code, 200);
+    srv.stop();
+
+    assert!(!text.is_empty());
+    // Every line is `# HELP ...`, `# TYPE ...`, or `series value`.
+    let mut samples = 0usize;
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            assert!(
+                rest.starts_with("HELP ") || rest.starts_with("TYPE "),
+                "unexpected comment line: {line}"
+            );
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').expect("sample lines are `series value`");
+        let name = series.split('{').next().unwrap();
+        assert!(
+            name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+            "bad metric name in: {line}"
+        );
+        assert!(value.parse::<f64>().is_ok(), "unparseable value in: {line}");
+        samples += 1;
+    }
+    assert!(samples > 0, "exposition must contain sample lines");
+
+    // Bucket lines of one histogram series are emitted consecutively and
+    // must be cumulative: group by everything before the le label.
+    let mut prev_key: Option<String> = None;
+    let mut last = 0u64;
+    for line in text.lines() {
+        let Some(pos) = line.find("le=\"") else {
+            prev_key = None;
+            continue;
+        };
+        let key = line[..pos].to_string();
+        let val: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+        if prev_key.as_deref() == Some(key.as_str()) {
+            assert!(val >= last, "non-monotone bucket counts at: {line}");
+        }
+        prev_key = Some(key);
+        last = val;
+    }
+}
+
+#[test]
+fn concurrent_pool_increments_are_not_lost() {
+    let c = obs::registry().counter("sct_test_obs_fanout_total", "test");
+    let before = c.get();
+    pool::par_tasks(1000, |_| c.inc());
+    assert_eq!(c.get(), before + 1000, "relaxed fetch_add must not drop increments");
+}
+
+#[test]
+fn one_process_surfaces_series_from_every_layer() {
+    // train: one step of a tiny native trainer.
+    let model_cfg = EngineConfig {
+        vocab: 64,
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ffn: 24,
+        rank: 3,
+        max_seq: 16,
+        tied: true,
+    };
+    let tcfg =
+        NativeTrainConfig { model: model_cfg, batch: 2, seq_len: 12, ..NativeTrainConfig::default() };
+    let mut trainer = NativeTrainer::new(tcfg, 0);
+    let tokens: Vec<i32> = (0..2 * 13).map(|i| (i % 64) as i32).collect();
+    trainer.train_step(&tokens, 1e-3, 3e-3);
+
+    // rank: publish an energy snapshot, the ortho gauge, and one event.
+    let stats = sct::rank::model_energy(&trainer.model, 0.25);
+    sct::rank::publish_energy(&stats);
+    sct::rank::publish_ortho_error(trainer.ortho_error());
+    sct::rank::RankEvent { step: 1, layer: 0, from: 3, to: 4, tail_share: 0.3, policy: "test" }
+        .publish();
+
+    // pool: force one real fan-out so the shard series exist even when the
+    // test host resolves to a single core.
+    let threads_before = pool::threads();
+    pool::set_threads(2);
+    pool::par_tasks(4, |_| {});
+    pool::set_threads(threads_before);
+
+    // serve: one request through the HTTP front-end.
+    let srv = start_server();
+    let req = r#"{"prompt": "layer sweep probe", "tokens": 3, "temperature": 0}"#;
+    let (code, _) = http_post_json(srv.addr, "/v1/generate", req).unwrap();
+    assert_eq!(code, 200);
+    let (code, text) = http_get_text(srv.addr, "/metrics").unwrap();
+    assert_eq!(code, 200);
+    srv.stop();
+
+    let mut names: BTreeSet<&str> = BTreeSet::new();
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        names.insert(base_name(line.rsplit_once(' ').unwrap().0));
+    }
+    assert!(names.len() >= 20, "only {} distinct series: {names:?}", names.len());
+    for prefix in ["sct_serve_", "sct_http_", "sct_pool_", "sct_train_", "sct_rank_"] {
+        assert!(
+            names.iter().any(|n| n.starts_with(prefix)),
+            "no {prefix} series in: {names:?}"
+        );
+    }
+}
+
+#[test]
+fn each_http_request_emits_one_complete_span() {
+    let buf = trace::install_memory();
+    let srv = start_server();
+    let req = r#"{"prompt": "span probe", "tokens": 5, "temperature": 0}"#;
+    let (code, body) = http_post_json(srv.addr, "/v1/generate", req).unwrap();
+    assert_eq!(code, 200);
+    let id = body.get("request_id").unwrap().as_i64().unwrap();
+    srv.stop();
+    let spans = buf.lock().unwrap().clone();
+    trace::uninstall();
+
+    // Other tests in this binary may have traced concurrently: filter by
+    // our own request id, and expect exactly one record for it.
+    let ours: Vec<_> = spans
+        .iter()
+        .filter(|s| s.get("request_id").and_then(|v| v.as_i64().ok()) == Some(id))
+        .collect();
+    assert_eq!(ours.len(), 1, "one span per request, got {ours:?}");
+    let span = ours[0];
+    for key in [
+        "prompt_tokens",
+        "queue_ms",
+        "prefill_chunks",
+        "prefill_tokens",
+        "decode_steps",
+        "tokens_out",
+        "decode_ms",
+        "finish_reason",
+        "ttft_ms",
+    ] {
+        assert!(span.get(key).is_some(), "span missing {key}: {span:?}");
+    }
+    assert_eq!(span.get("tokens_out").unwrap().as_i64().unwrap(), 5);
+    assert_eq!(span.get("decode_steps").unwrap().as_i64().unwrap(), 5);
+    assert!(span.get("prefill_chunks").unwrap().as_i64().unwrap() >= 1);
+    assert_eq!(span.get("finish_reason").unwrap().as_str().unwrap(), "length");
+}

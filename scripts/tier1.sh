@@ -18,9 +18,12 @@
 #          in smoke mode, writing BENCH_serve.json, BENCH_train.json,
 #          BENCH_rank.json and BENCH_kernels.json at the repo root (CI
 #          uploads them and diffs them against the base branch via
-#          scripts/bench_compare.sh). Runs with SCT_THREADS=2 unless the
-#          caller overrides it, so the parallel kernel paths are exercised
-#          in CI (results are bit-identical at any thread count).
+#          scripts/bench_compare.sh). The serve bench also scrapes the
+#          observability layer: BENCH_metrics.prom (GET /metrics dump,
+#          checked for the mandatory serve/pool/http series) and
+#          traces.jsonl (one span per request). Runs with SCT_THREADS=2
+#          unless the caller overrides it, so the parallel kernel paths are
+#          exercised in CI (results are bit-identical at any thread count).
 
 set -euo pipefail
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
@@ -71,8 +74,36 @@ run_bench() {
     echo "== tier1: bench smoke with SCT_THREADS=$SCT_THREADS =="
 
     echo "== tier1: serve bench smoke (BENCH_serve.json) =="
-    cargo bench --bench serve_throughput -- --smoke --json "$repo_root/BENCH_serve.json"
+    rm -f "$repo_root/traces.jsonl" # the trace sink appends; start clean
+    cargo bench --bench serve_throughput -- --smoke \
+        --json "$repo_root/BENCH_serve.json" \
+        --metrics-dump "$repo_root/BENCH_metrics.prom" \
+        --trace-out "$repo_root/traces.jsonl"
     echo "tier1: wrote $repo_root/BENCH_serve.json"
+
+    echo "== tier1: metrics scrape check (BENCH_metrics.prom) =="
+    for series in \
+        sct_serve_requests_total \
+        sct_serve_completions_total \
+        sct_serve_tokens_out_total \
+        sct_serve_queue_depth \
+        sct_serve_active_slots \
+        sct_serve_queue_wait_ms \
+        sct_serve_ttft_ms_bucket \
+        sct_serve_decode_step_ms \
+        sct_pool_fanouts_total \
+        sct_pool_tasks_total \
+        sct_http_requests_total; do
+        if ! grep -q "^$series" "$repo_root/BENCH_metrics.prom"; then
+            echo "tier1: mandatory series $series missing from BENCH_metrics.prom" >&2
+            exit 1
+        fi
+    done
+    if ! [ -s "$repo_root/traces.jsonl" ]; then
+        echo "tier1: traces.jsonl missing or empty after serve bench" >&2
+        exit 1
+    fi
+    echo "tier1: metrics + traces scrape OK"
 
     echo "== tier1: train bench smoke (BENCH_train.json) =="
     cargo bench --bench train_step -- --smoke --json "$repo_root/BENCH_train.json"
