@@ -1,8 +1,11 @@
 //! Serving latency + throughput: batched (continuous batching) vs
 //! sequential (1 slot) decode through the scheduler, with client-observed
 //! time-to-first-token (TTFT) and inter-token-latency (ITL) percentiles
-//! measured off the streaming channel, plus a chunked-prefill interleave
-//! probe (does a 512-token prompt admission stall an active decode?).
+//! measured off the streaming channel, plus a gateway worker ladder
+//! (the same batched workload across N engine-clone schedulers —
+//! `--workers N`, default 2 — with per-worker token splits and a T=0
+//! identical-output assertion) and a chunked-prefill interleave probe
+//! (does a 512-token prompt admission stall an active decode?).
 //!
 //! The batched win comes from weight reuse: one `step_batch` over B rows
 //! streams every projection matrix (and the logits head) once for B
@@ -30,7 +33,7 @@ use sct::json_obj;
 use sct::obs::trace;
 use sct::serve::{
     http_get_text, http_post_json, BatchConfig, Batcher, Completion, Engine, EngineConfig,
-    Request, SampleOpts, ServeConfig, Server, SpectralModel, StreamEvent,
+    Gateway, GatewayConfig, Request, SampleOpts, ServeConfig, Server, SpectralModel, StreamEvent,
 };
 use sct::util::bench::{table_header, table_row};
 use sct::util::json::Json;
@@ -123,7 +126,7 @@ fn run_workload(
     let engine = Engine::new(SpectralModel::init(cfg, 0));
     let batcher = Arc::new(Batcher::spawn_with(
         engine,
-        BatchConfig { slots, queue_depth: requests * 2, prefill_chunk },
+        BatchConfig { slots, queue_depth: requests * 2, prefill_chunk, ..BatchConfig::default() },
     ));
     let t0 = Instant::now();
     let handles: Vec<_> = (0..requests)
@@ -176,6 +179,75 @@ fn run_workload(
     }
 }
 
+struct GatewayResult {
+    workers: usize,
+    wall_s: f64,
+    tok_per_s: f64,
+    /// Decoded token ids per request index — identical across worker counts
+    /// at T=0 (the gateway's determinism contract).
+    outputs: Vec<Vec<i32>>,
+    /// `tokens_out` per worker, by worker index (placement spread).
+    per_worker_tokens: Vec<u64>,
+}
+
+/// Push the batched workload through a `workers`-wide gateway with blocking
+/// clients: aggregate decode throughput plus the per-worker token split.
+/// This is the ladder behind the `--workers` acceptance number — on a
+/// multi-core box two engine clones decode truly concurrently, so aggregate
+/// tok/s should scale well past one scheduler's.
+fn run_gateway_workload(
+    cfg: EngineConfig,
+    workers: usize,
+    slots: usize,
+    prefill_chunk: usize,
+    requests: usize,
+    tokens: usize,
+) -> GatewayResult {
+    let gw = Arc::new(Gateway::start(
+        Engine::new(SpectralModel::init(cfg, 0)),
+        &GatewayConfig {
+            workers,
+            batch: BatchConfig {
+                slots,
+                queue_depth: requests * 2,
+                prefill_chunk,
+                ..BatchConfig::default()
+            },
+        },
+    ));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..requests)
+        .map(|i| {
+            let g = gw.clone();
+            std::thread::spawn(move || {
+                let (_worker, c) = g
+                    .generate(Request {
+                        prompt: vec![(i as i32) + 1, 17, 42, 5],
+                        max_new: tokens,
+                        opts: SampleOpts { temperature: 0.0, top_k: 0, seed: 0 },
+                        stop: vec![],
+                    })
+                    .expect("gateway generate");
+                assert_eq!(c.tokens.len(), tokens);
+                (i, c.tokens)
+            })
+        })
+        .collect();
+    let mut outputs = vec![Vec::new(); requests];
+    for h in handles {
+        let (i, toks) = h.join().unwrap();
+        outputs[i] = toks;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    GatewayResult {
+        workers,
+        wall_s,
+        tok_per_s: (requests * tokens) as f64 / wall_s,
+        outputs,
+        per_worker_tokens: gw.worker_stats().iter().map(|s| s.tokens_out).collect(),
+    }
+}
+
 struct ProbeResult {
     prefill_chunk: usize,
     b_ttft_ms: f64,
@@ -195,7 +267,10 @@ fn prefill_probe(
     active_tokens: usize,
 ) -> ProbeResult {
     let engine = Engine::new(SpectralModel::init(cfg, 0));
-    let b = Batcher::spawn_with(engine, BatchConfig { slots: 2, queue_depth: 4, prefill_chunk });
+    let b = Batcher::spawn_with(
+        engine,
+        BatchConfig { slots: 2, queue_depth: 4, prefill_chunk, ..BatchConfig::default() },
+    );
     let greedy = SampleOpts { temperature: 0.0, top_k: 0, seed: 0 };
     let rxa = b
         .submit_streaming(Request {
@@ -272,6 +347,13 @@ fn main() {
         argv.iter().position(|a| a == "--trace-out").and_then(|i| argv.get(i + 1).cloned());
     let metrics_path =
         argv.iter().position(|a| a == "--metrics-dump").and_then(|i| argv.get(i + 1).cloned());
+    let workers_flag: usize = argv
+        .iter()
+        .position(|a| a == "--workers")
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2)
+        .max(1);
     if let Some(p) = &trace_path {
         trace::install_file(std::path::Path::new(p)).expect("installing trace sink");
     }
@@ -342,6 +424,67 @@ fn main() {
         }
     }
 
+    // -- gateway worker ladder -----------------------------------------------
+    // Same batched workload, now placed across N worker schedulers. The
+    // workers=1 rung is the pre-gateway baseline; T=0 outputs must be
+    // identical on every rung regardless of placement.
+    let ladder: Vec<usize> =
+        if workers_flag == 1 { vec![1] } else { vec![1, workers_flag] };
+    table_header(
+        "Gateway scaling (batched workload)",
+        &["workers", "wall s", "tok/s", "per-worker tokens", "speedup vs 1"],
+    );
+    let mut gateway_rows: Vec<Json> = Vec::new();
+    let mut base: Option<GatewayResult> = None;
+    for &n in &ladder {
+        let r = run_gateway_workload(
+            bench_cfg(&w, w.ranks[0]),
+            n,
+            w.slots_batched,
+            w.prefill_chunk,
+            w.requests,
+            w.tokens_per_request,
+        );
+        if let Some(b) = &base {
+            assert_eq!(
+                r.outputs, b.outputs,
+                "T=0 outputs must be identical at any worker count"
+            );
+        }
+        let speedup = base.as_ref().map(|b| b.wall_s / r.wall_s).unwrap_or(1.0);
+        table_row(&[
+            format!("{n}"),
+            format!("{:.3}", r.wall_s),
+            format!("{:.0}", r.tok_per_s),
+            format!("{:?}", r.per_worker_tokens),
+            format!("{speedup:.2}x"),
+        ]);
+        let per_worker: Vec<Json> = r
+            .per_worker_tokens
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| {
+                json_obj![
+                    ("worker", i),
+                    ("tokens_out", t as i64),
+                    ("tok_per_s", t as f64 / r.wall_s),
+                ]
+            })
+            .collect();
+        gateway_rows.push(json_obj![
+            ("workers", n),
+            ("rank", w.ranks[0]),
+            ("wall_s", r.wall_s),
+            ("tok_per_s", r.tok_per_s),
+            ("speedup_vs_1", speedup),
+            ("t0_identical_to_baseline", true),
+            ("per_worker", per_worker),
+        ]);
+        if base.is_none() {
+            base = Some(r);
+        }
+    }
+
     // -- chunked-prefill interleave probe ------------------------------------
     let probe_cfg = EngineConfig {
         max_seq: w.long_prompt + 2 * w.active_tokens,
@@ -373,6 +516,7 @@ fn main() {
             ("tokens_per_request", w.tokens_per_request),
             ("d_model", w.d_model),
             ("rows", rows),
+            ("gateway", json_obj![("workers_flag", workers_flag), ("rows", gateway_rows)]),
             (
                 "prefill_probe",
                 json_obj![
@@ -394,8 +538,14 @@ fn main() {
         // so every series the workloads above populated is in the scrape.
         let cfg = bench_cfg(&w, w.ranks[0]);
         let tokenizer = sct::data::tokenizer_for(cfg.vocab, 0);
+        // workers matches the ladder so the scrape carries a worker="i"
+        // label set per gateway worker.
         let server = Server::start(
-            &ServeConfig { addr: "127.0.0.1:0".into(), ..ServeConfig::default() },
+            &ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                workers: workers_flag,
+                ..ServeConfig::default()
+            },
             Engine::new(SpectralModel::init(cfg, 0)),
             tokenizer,
         )

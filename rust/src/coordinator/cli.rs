@@ -594,13 +594,21 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let spec = Command::new(
         "sct serve",
         "spectral inference server (KV cache + continuous batching + chunked \
-         prefill; POST /v1/generate with \"stream\": true answers Server-Sent \
-         Events, one data: frame per token over a keep-alive connection)",
+         prefill; --workers N shards requests across N engine clones behind a \
+         least-loaded gateway; POST /v1/generate with \"stream\": true answers \
+         Server-Sent Events, one data: frame per token over a keep-alive \
+         connection)",
     )
         .opt("config", "TOML config file ([serve] section)")
         .opt("addr", "listen address [default: 127.0.0.1:8077]")
-        .opt("slots", "concurrent decode slots (KV cache arena size) [default: 8]")
-        .opt("queue-depth", "bounded admission queue depth [default: 32]")
+        .opt(
+            "workers",
+            "independent worker schedulers behind the gateway, one engine \
+             clone + KV arena each; requests go to the least-loaded worker \
+             (also [serve] workers in TOML or SCT_WORKERS) [default: 1]",
+        )
+        .opt("slots", "concurrent decode slots (KV cache arena size) per worker [default: 8]")
+        .opt("queue-depth", "bounded admission queue depth per worker [default: 32]")
         .opt("max-new", "default tokens per request [default: 48]")
         .opt(
             "prefill-chunk",
@@ -675,11 +683,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if let Some(a) = args.get("addr") {
         serve_cfg.addr = a.to_string();
     }
+    serve_cfg.workers = args.parse_num("workers", serve_cfg.workers)?;
     serve_cfg.slots = args.parse_num("slots", serve_cfg.slots)?;
     serve_cfg.queue_depth = args.parse_num("queue-depth", serve_cfg.queue_depth)?;
     serve_cfg.max_new_default = args.parse_num("max-new", serve_cfg.max_new_default)?;
     serve_cfg.prefill_chunk = args.parse_num("prefill-chunk", serve_cfg.prefill_chunk)?;
     serve_cfg.keep_alive_ms = args.parse_num("keep-alive-ms", serve_cfg.keep_alive_ms)?;
+    anyhow::ensure!(serve_cfg.workers > 0, "--workers must be at least 1");
     anyhow::ensure!(serve_cfg.slots > 0, "--slots must be at least 1");
 
     let seed: u64 = args.parse_num("seed", 0)?;
@@ -711,10 +721,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 
     let server = serve::Server::start(&serve_cfg, serve::Engine::new(model), tokenizer)?;
     sct_info!(
-        "serving on http://{}  (slots={}, queue={}, prefill_chunk={}, keep_alive_ms={})\n\
+        "serving on http://{}  (workers={}, slots={}/worker, queue={}/worker, \
+         prefill_chunk={}, keep_alive_ms={})\n\
          routes: POST /v1/generate (\"stream\": true => SSE, one data: frame per \
          token), GET /healthz, GET /v1/stats, GET /metrics",
         server.addr,
+        serve_cfg.workers,
         serve_cfg.slots,
         serve_cfg.queue_depth,
         serve_cfg.prefill_chunk,

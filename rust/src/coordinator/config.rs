@@ -13,6 +13,13 @@
 //! bit-identical at any setting (the pool's determinism contract), so the
 //! knob only moves throughput.
 //!
+//! The `[serve]` section sizes the inference server
+//! ([`crate::serve::ServeConfig`]): `addr`, `workers` — worker schedulers
+//! behind the gateway, one engine clone + KV arena each (`--workers` flag >
+//! `[serve] workers` > `SCT_WORKERS` env > 1; like `threads`, the setting
+//! never changes T=0 output, only throughput), `slots` and `queue_depth`
+//! (both per worker), `max_new`, `prefill_chunk`, `keep_alive_ms`.
+//!
 //! The `[obs]` section configures the observability layer ([`crate::obs`]),
 //! shared by `sct train` and `sct serve` (flags win over the file):
 //! `log_level` — `quiet|error|warn|info|debug`, the `--log-level` default

@@ -17,10 +17,12 @@
 //! * [`coordinator`] — the training orchestrator: config, LR schedules,
 //!   trainer loop, rank-sweep / fine-tune drivers (drivers need `pjrt`).
 //! * [`serve`] — the pure-Rust spectral inference engine: KV-cached
-//!   incremental decoding, continuous-batching scheduler with chunked
-//!   prefill + stop sequences, and a std-net HTTP server with keep-alive +
-//!   SSE token streaming — the deployment side of "never materialized", no
-//!   PJRT required.
+//!   incremental decoding, continuous-batching schedulers with chunked
+//!   prefill + stop sequences, sharded across N engine-clone workers behind
+//!   a load-aware gateway (`--workers`), and a std-net HTTP server speaking
+//!   a typed versioned wire API (`serve::api`: request/response/error
+//!   envelope types) with keep-alive + SSE token streaming — the deployment
+//!   side of "never materialized", no PJRT required.
 //! * [`train`] — the pure-Rust **training** engine: the shared decoder
 //!   blocks (one forward implementation for serve and train), full
 //!   reverse-mode backward into compact factor gradients, per-tensor AdamW

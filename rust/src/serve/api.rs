@@ -1,0 +1,519 @@
+//! `serve::api` — the typed, versioned wire surface of the HTTP front-end.
+//!
+//! Everything the server reads off or writes onto a socket body is defined
+//! here as a plain Rust type with an explicit JSON mapping, instead of
+//! ad-hoc `json_obj!` construction scattered through `server.rs`:
+//!
+//! * [`GenerateRequest`] — the parsed `POST /v1/generate` body. Parsing is
+//!   split in two: [`GenerateRequest::parse`] validates JSON shape (types,
+//!   required fields), [`GenerateRequest::resolve`] binds it to a concrete
+//!   model (tokenizer, vocab size, default token budget) and produces the
+//!   scheduler-level [`Request`]. Both failure modes are client errors.
+//! * [`GenerateResponse`] — the non-streaming response document and the
+//!   terminal SSE usage frame, built from a scheduler [`Completion`] plus
+//!   the id of the worker that served it.
+//! * [`ErrorEnvelope`] — the ONE error shape every route returns, including
+//!   404/405/413/503: `{"code": "...", "message": "...", "request_id": N}`.
+//!   `code` is a stable machine-readable string from [`ErrorCode`] (the
+//!   HTTP status is derived from it, never free-floating), and
+//!   `request_id` is stamped at construction from the process-wide trace
+//!   counter so failed requests are log-correlatable too.
+//! * [`stats_json`] — the versioned `GET /v1/stats` document: the flat
+//!   aggregate fields are bit-compatible with the pre-gateway (workers=1)
+//!   schema, and a `workers: [...]` array adds one [`StatsSnapshot`] per
+//!   worker scheduler. Old clients keep reading the flat fields; new
+//!   clients read per-worker placement out of the array.
+//!
+//! The exact wire examples live in the [`crate::serve`] module docs.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::batcher::{Completion, Request, StatsSnapshot, SubmitError};
+use super::engine::SampleOpts;
+use crate::data::Tokenizer;
+use crate::json_obj;
+use crate::obs::trace;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// error envelope
+// ---------------------------------------------------------------------------
+
+/// Machine-readable error class. The HTTP status code and reason phrase are
+/// derived from this — there is no way to send an envelope whose `code`
+/// disagrees with its status line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed body, unknown fields of the wrong type, empty prompt.
+    BadRequest,
+    /// No such route.
+    NotFound,
+    /// Route exists, verb is wrong.
+    MethodNotAllowed,
+    /// Declared `Content-Length` beyond the request body cap.
+    PayloadTooLarge,
+    /// Every worker's bounded admission queue is full (load shed).
+    QueueFull,
+    /// Scheduler died or another server-side invariant broke.
+    Internal,
+}
+
+impl ErrorCode {
+    /// Stable wire identifier (the `"code"` field).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::NotFound => "not_found",
+            ErrorCode::MethodNotAllowed => "method_not_allowed",
+            ErrorCode::PayloadTooLarge => "payload_too_large",
+            ErrorCode::QueueFull => "queue_full",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ErrorCode::BadRequest => 400,
+            ErrorCode::NotFound => 404,
+            ErrorCode::MethodNotAllowed => 405,
+            ErrorCode::PayloadTooLarge => 413,
+            ErrorCode::QueueFull => 503,
+            ErrorCode::Internal => 500,
+        }
+    }
+
+    pub fn reason(&self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "Bad Request",
+            ErrorCode::NotFound => "Not Found",
+            ErrorCode::MethodNotAllowed => "Method Not Allowed",
+            ErrorCode::PayloadTooLarge => "Payload Too Large",
+            ErrorCode::QueueFull => "Service Unavailable",
+            ErrorCode::Internal => "Internal Server Error",
+        }
+    }
+}
+
+/// The uniform error body every route returns (including 404s on unknown
+/// paths): `{"code": "...", "message": "...", "request_id": N}`.
+#[derive(Debug, Clone)]
+pub struct ErrorEnvelope {
+    pub code: ErrorCode,
+    pub message: String,
+    /// Process-unique id (see [`crate::obs::trace`]). Errors that never
+    /// reached a scheduler still get one, so a client-reported failure can
+    /// be matched against server logs.
+    pub request_id: u64,
+}
+
+impl ErrorEnvelope {
+    /// Build an envelope, stamping a fresh request id.
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ErrorEnvelope {
+        ErrorEnvelope { code, message: message.into(), request_id: trace::next_request_id() }
+    }
+
+    /// Map a gateway/batcher submit failure onto the wire.
+    pub fn from_submit(e: SubmitError) -> ErrorEnvelope {
+        match e {
+            SubmitError::QueueFull => ErrorEnvelope::new(
+                ErrorCode::QueueFull,
+                "admission queue full on every worker (load shed)",
+            ),
+            SubmitError::Shutdown => {
+                ErrorEnvelope::new(ErrorCode::Internal, "scheduler is shut down")
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        json_obj![
+            ("code", self.code.as_str()),
+            ("message", self.message.as_str()),
+            ("request_id", self.request_id as i64),
+        ]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// generate request
+// ---------------------------------------------------------------------------
+
+/// One `"stop"` entry as it appears on the wire: a string (tokenized stop
+/// sequence) or a raw token id (EOS semantics).
+#[derive(Debug, Clone, PartialEq)]
+pub enum StopSpec {
+    Text(String),
+    Id(i64),
+}
+
+/// The parsed `POST /v1/generate` body, model-independent: token budgets are
+/// still optional and stop strings untokenized until
+/// [`GenerateRequest::resolve`] binds them to an engine's tokenizer/vocab.
+#[derive(Debug, Clone)]
+pub struct GenerateRequest {
+    /// Prompt text (tokenized at resolve time). Exactly one of `prompt` /
+    /// `prompt_ids` must be present.
+    pub prompt: Option<String>,
+    /// Explicit prompt token ids (wrapped into the vocab at resolve time).
+    pub prompt_ids: Option<Vec<i64>>,
+    /// Requested new tokens; `None` falls back to the server default.
+    pub tokens: Option<usize>,
+    pub temperature: f32,
+    pub top_k: usize,
+    pub seed: u64,
+    pub stop: Vec<StopSpec>,
+    /// `true` selects the SSE streaming response.
+    pub stream: bool,
+}
+
+impl GenerateRequest {
+    /// Parse and shape-validate a request body. Everything that can be
+    /// checked without a model is checked here; any error is a 400.
+    pub fn parse(body: &[u8]) -> Result<GenerateRequest> {
+        let j = Json::parse(std::str::from_utf8(body).context("body is not UTF-8")?)
+            .context("body is not valid JSON")?;
+
+        let prompt = match j.get("prompt") {
+            Some(v) => Some(v.as_str()?.to_string()),
+            None => None,
+        };
+        let prompt_ids: Option<Vec<i64>> = match j.get("prompt_ids") {
+            Some(ids) => {
+                Some(ids.as_arr()?.iter().map(|v| v.as_i64()).collect::<Result<_>>()?)
+            }
+            None => None,
+        };
+        if prompt.is_none() && prompt_ids.is_none() {
+            bail!("missing \"prompt\" (or \"prompt_ids\")");
+        }
+
+        let mut stop = Vec::new();
+        if let Some(list) = j.get("stop") {
+            for entry in list.as_arr().context("\"stop\" must be an array")? {
+                stop.push(match entry.as_str() {
+                    Ok(text) => StopSpec::Text(text.to_string()),
+                    Err(_) => StopSpec::Id(
+                        entry.as_i64().context("stop entries are strings or token ids")?,
+                    ),
+                });
+            }
+        }
+
+        Ok(GenerateRequest {
+            prompt,
+            prompt_ids,
+            tokens: j.get("tokens").map(|v| v.as_usize()).transpose()?,
+            temperature: j.get("temperature").map(|v| v.as_f64()).transpose()?.unwrap_or(0.8)
+                as f32,
+            top_k: j.get("top_k").map(|v| v.as_usize()).transpose()?.unwrap_or(40),
+            seed: j.get("seed").map(|v| v.as_i64()).transpose()?.unwrap_or(0) as u64,
+            stop,
+            stream: j.get("stream").map(|v| v.as_bool()).transpose()?.unwrap_or(false),
+        })
+    }
+
+    /// Bind the request to a concrete model, producing the scheduler-level
+    /// [`Request`]: the prompt is tokenized (or the explicit ids wrapped
+    /// into the vocab), stop strings are tokenized, and out-of-vocab stop
+    /// ids are dropped — an id the sampler can never produce must never
+    /// match, and wrapping it would silently turn a foreign tokenizer's EOS
+    /// into a real, spuriously-matching token.
+    pub fn resolve(
+        &self,
+        tokenizer: &Tokenizer,
+        vocab: usize,
+        max_new_default: usize,
+    ) -> Result<Request> {
+        let cap = vocab as i32;
+        let prompt: Vec<i32> = if let Some(ids) = &self.prompt_ids {
+            ids.iter().map(|&t| (t as i32).rem_euclid(cap)).collect()
+        } else {
+            let text = self.prompt.as_deref().ok_or_else(|| anyhow!("missing \"prompt\""))?;
+            if text.is_empty() {
+                bail!("empty prompt");
+            }
+            tokenizer.encode(text)
+        };
+        let mut stop: Vec<Vec<i32>> = Vec::new();
+        for spec in &self.stop {
+            let ids: Vec<i32> = match spec {
+                StopSpec::Text(text) => tokenizer.encode(text),
+                StopSpec::Id(id) => {
+                    if (0..cap as i64).contains(id) {
+                        vec![*id as i32]
+                    } else {
+                        vec![]
+                    }
+                }
+            };
+            if !ids.is_empty() {
+                stop.push(ids);
+            }
+        }
+        Ok(Request {
+            prompt,
+            max_new: self.tokens.unwrap_or(max_new_default),
+            opts: SampleOpts { temperature: self.temperature, top_k: self.top_k, seed: self.seed },
+            stop,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// generate response
+// ---------------------------------------------------------------------------
+
+/// The `POST /v1/generate` response document (and, minus the token array,
+/// the terminal SSE usage frame).
+#[derive(Debug, Clone)]
+pub struct GenerateResponse {
+    pub request_id: u64,
+    /// Gateway worker that ran the request (informational; at temperature 0
+    /// the output is token-identical regardless of placement).
+    pub worker: usize,
+    pub completion: String,
+    pub tokens: Vec<i32>,
+    pub prompt_tokens: usize,
+    pub finish_reason: &'static str,
+    pub queue_ms: f64,
+    pub decode_ms: f64,
+    pub tok_per_s: f64,
+    /// Omitted from the wire (not 0, not null) when no token was sampled,
+    /// so latency aggregators never absorb a fake zero.
+    pub ttft_ms: Option<f64>,
+}
+
+impl GenerateResponse {
+    pub fn new(c: &Completion, tokenizer: &Tokenizer, worker: usize) -> GenerateResponse {
+        let n = c.tokens.len();
+        GenerateResponse {
+            request_id: c.request_id,
+            worker,
+            completion: tokenizer.decode(&c.tokens),
+            tokens: c.tokens.clone(),
+            prompt_tokens: c.prompt_len,
+            finish_reason: c.finish_reason.as_str(),
+            queue_ms: c.queue_ms,
+            decode_ms: c.decode_ms,
+            tok_per_s: if c.decode_ms > 0.0 { n as f64 / (c.decode_ms / 1e3) } else { 0.0 },
+            ttft_ms: c.ttft_ms,
+        }
+    }
+
+    /// Usage fields shared by the one-shot document and the SSE done frame.
+    fn usage_fields(&self, body: &mut Json) {
+        if let (Json::Obj(fields), Some(t)) = (body, self.ttft_ms) {
+            fields.push(("ttft_ms".to_string(), t.into()));
+        }
+    }
+
+    /// The one-shot (non-streaming) response document.
+    pub fn to_json(&self) -> Json {
+        let mut body = json_obj![
+            ("request_id", self.request_id as i64),
+            ("worker", self.worker),
+            ("completion", self.completion.as_str()),
+            ("tokens", self.tokens.iter().map(|&t| Json::from(t as i64)).collect::<Vec<_>>()),
+            ("prompt_tokens", self.prompt_tokens),
+            ("finish_reason", self.finish_reason),
+            ("queue_ms", self.queue_ms),
+            ("decode_ms", self.decode_ms),
+            ("tok_per_s", self.tok_per_s),
+        ];
+        self.usage_fields(&mut body);
+        body
+    }
+
+    /// The terminal SSE frame: `done: true` plus the usage stats (the token
+    /// ids already went out one frame at a time, so no `tokens` array).
+    pub fn to_sse_done_json(&self) -> Json {
+        let mut body = json_obj![
+            ("request_id", self.request_id as i64),
+            ("done", true),
+            ("worker", self.worker),
+            ("completion", self.completion.as_str()),
+            ("prompt_tokens", self.prompt_tokens),
+            ("finish_reason", self.finish_reason),
+            ("queue_ms", self.queue_ms),
+            ("decode_ms", self.decode_ms),
+            ("tok_per_s", self.tok_per_s),
+        ];
+        self.usage_fields(&mut body);
+        body
+    }
+}
+
+/// One per-token SSE frame.
+pub fn sse_token_json(request_id: u64, token: i32, index: usize, text: &str) -> Json {
+    json_obj![
+        ("request_id", request_id as i64),
+        ("token", token as i64),
+        ("index", index),
+        ("text", text),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// versioned stats document
+// ---------------------------------------------------------------------------
+
+/// The nine counter/gauge fields of one [`StatsSnapshot`], in schema order.
+fn snapshot_fields(s: &StatsSnapshot) -> Vec<(&'static str, i64)> {
+    vec![
+        ("admitted", s.admitted as i64),
+        ("completed", s.completed as i64),
+        ("tokens_out", s.tokens_out as i64),
+        ("peak_active", s.peak_active as i64),
+        ("prefill_tokens", s.prefill_tokens as i64),
+        ("cancelled", s.cancelled as i64),
+        ("stopped", s.stopped as i64),
+        ("queue_depth", s.queue_depth as i64),
+        ("active_slots", s.active_slots as i64),
+    ]
+}
+
+/// Render the `GET /v1/stats` document. The flat top-level fields are the
+/// aggregate across workers — bit-compatible with the single-scheduler
+/// schema old clients parse — and `workers: [...]` carries one snapshot per
+/// worker (each tagged with its `worker` index, matching the `worker="i"`
+/// label on the `sct_serve_*` Prometheus series).
+pub fn stats_json(aggregate: &StatsSnapshot, workers: &[StatsSnapshot]) -> Json {
+    let mut fields: Vec<(String, Json)> = snapshot_fields(aggregate)
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), Json::from(v)))
+        .collect();
+    let worker_docs: Vec<Json> = workers
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let mut w: Vec<(String, Json)> = vec![("worker".to_string(), Json::from(i as i64))];
+            w.extend(snapshot_fields(s).into_iter().map(|(k, v)| (k.to_string(), Json::from(v))));
+            Json::Obj(w)
+        })
+        .collect();
+    fields.push(("workers".to_string(), Json::from(worker_docs)));
+    Json::Obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::batcher::FinishReason;
+
+    #[test]
+    fn parse_applies_sampling_defaults() {
+        let g = GenerateRequest::parse(br#"{"prompt": "hi"}"#).unwrap();
+        assert_eq!(g.prompt.as_deref(), Some("hi"));
+        assert_eq!(g.tokens, None);
+        assert_eq!(g.temperature, 0.8);
+        assert_eq!(g.top_k, 40);
+        assert_eq!(g.seed, 0);
+        assert!(g.stop.is_empty());
+        assert!(!g.stream);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_bodies() {
+        assert!(GenerateRequest::parse(b"{not json").is_err());
+        assert!(GenerateRequest::parse(br#"{"tokens": 4}"#).is_err(), "no prompt");
+        assert!(GenerateRequest::parse(br#"{"prompt": "x", "stop": 3}"#).is_err());
+        assert!(GenerateRequest::parse(br#"{"prompt": "x", "stop": [true]}"#).is_err());
+        assert!(GenerateRequest::parse(br#"{"prompt": "x", "tokens": "many"}"#).is_err());
+    }
+
+    #[test]
+    fn resolve_binds_tokenizer_vocab_and_defaults() {
+        let tok = Tokenizer::byte_level();
+        let g = GenerateRequest::parse(br#"{"prompt": "ab", "stop": ["a", 300, 65, -1]}"#).unwrap();
+        let r = g.resolve(&tok, 256, 48).unwrap();
+        assert_eq!(r.prompt, tok.encode("ab"));
+        assert_eq!(r.max_new, 48, "server default budget");
+        // "a" tokenizes, 65 is in-vocab; 300 and -1 are out-of-vocab ids and
+        // must be dropped, never wrapped.
+        assert_eq!(r.stop, vec![tok.encode("a"), vec![65]]);
+
+        let g = GenerateRequest::parse(br#"{"prompt_ids": [300, -1], "tokens": 3}"#).unwrap();
+        let r = g.resolve(&tok, 256, 48).unwrap();
+        assert_eq!(r.prompt, vec![44, 255], "prompt ids wrap into the vocab");
+        assert_eq!(r.max_new, 3);
+
+        let g = GenerateRequest::parse(br#"{"prompt": ""}"#).unwrap();
+        assert!(g.resolve(&tok, 256, 48).is_err(), "empty prompt is a client error");
+    }
+
+    #[test]
+    fn error_envelope_maps_codes_to_statuses() {
+        for (code, status) in [
+            (ErrorCode::BadRequest, 400),
+            (ErrorCode::NotFound, 404),
+            (ErrorCode::MethodNotAllowed, 405),
+            (ErrorCode::PayloadTooLarge, 413),
+            (ErrorCode::QueueFull, 503),
+            (ErrorCode::Internal, 500),
+        ] {
+            assert_eq!(code.http_status(), status);
+        }
+        let e = ErrorEnvelope::new(ErrorCode::QueueFull, "shed");
+        assert!(e.request_id > 0, "errors are log-correlatable too");
+        let j = e.to_json();
+        assert_eq!(j.get("code").unwrap().as_str().unwrap(), "queue_full");
+        assert_eq!(j.get("message").unwrap().as_str().unwrap(), "shed");
+        assert_eq!(j.get("request_id").unwrap().as_i64().unwrap(), e.request_id as i64);
+
+        let shed = ErrorEnvelope::from_submit(SubmitError::QueueFull);
+        assert_eq!(shed.code, ErrorCode::QueueFull);
+        assert!(shed.message.contains("admission queue full"), "legacy substring preserved");
+        assert_eq!(ErrorEnvelope::from_submit(SubmitError::Shutdown).code, ErrorCode::Internal);
+    }
+
+    #[test]
+    fn generate_response_omits_absent_ttft() {
+        let tok = Tokenizer::byte_level();
+        let c = Completion {
+            request_id: 9,
+            tokens: vec![104, 105],
+            prompt_len: 4,
+            queue_ms: 0.5,
+            ttft_ms: None,
+            decode_ms: 2.0,
+            finish_reason: FinishReason::Length,
+        };
+        let r = GenerateResponse::new(&c, &tok, 1);
+        let j = r.to_json();
+        assert!(j.get("ttft_ms").is_none(), "no fake zero TTFT");
+        assert_eq!(j.get("worker").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("completion").unwrap().as_str().unwrap(), tok.decode(&[104, 105]));
+        let done = r.to_sse_done_json();
+        assert!(done.get("done").unwrap().as_bool().unwrap());
+        assert!(done.get("tokens").is_none(), "SSE already streamed the ids");
+
+        let with_ttft = GenerateResponse::new(&Completion { ttft_ms: Some(1.5), ..c }, &tok, 0);
+        assert_eq!(with_ttft.to_json().get("ttft_ms").unwrap().as_f64().unwrap(), 1.5);
+    }
+
+    #[test]
+    fn stats_json_keeps_flat_aggregate_and_adds_workers() {
+        let w0 = StatsSnapshot { admitted: 3, completed: 2, tokens_out: 10, ..Default::default() };
+        let w1 = StatsSnapshot { admitted: 1, completed: 1, tokens_out: 4, ..Default::default() };
+        let agg = StatsSnapshot {
+            admitted: 4,
+            completed: 3,
+            tokens_out: 14,
+            ..Default::default()
+        };
+        let j = stats_json(&agg, &[w0, w1]);
+        // flat fields: the pre-gateway schema, bit-compatible
+        assert_eq!(j.get("admitted").unwrap().as_i64().unwrap(), 4);
+        assert_eq!(j.get("completed").unwrap().as_i64().unwrap(), 3);
+        assert_eq!(j.get("tokens_out").unwrap().as_i64().unwrap(), 14);
+        assert_eq!(j.get("active_slots").unwrap().as_i64().unwrap(), 0);
+        // per-worker array
+        let workers = j.get("workers").unwrap().as_arr().unwrap();
+        assert_eq!(workers.len(), 2);
+        assert_eq!(workers[0].get("worker").unwrap().as_i64().unwrap(), 0);
+        assert_eq!(workers[0].get("admitted").unwrap().as_i64().unwrap(), 3);
+        assert_eq!(workers[1].get("worker").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(workers[1].get("tokens_out").unwrap().as_i64().unwrap(), 4);
+    }
+}

@@ -43,7 +43,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -138,13 +138,39 @@ pub struct BatchConfig {
     /// absorbed in one step — the pre-chunking stall behavior, kept for
     /// A/B measurement in the throughput bench).
     pub prefill_chunk: usize,
+    /// Gateway worker index this scheduler runs as. Only observability
+    /// reads it: every `sct_serve_*` series the scheduler records carries a
+    /// `worker="<index>"` label, so a multi-worker gateway's metrics stay
+    /// separable per scheduler. A standalone batcher is worker 0.
+    pub worker: usize,
 }
 
 impl Default for BatchConfig {
     fn default() -> BatchConfig {
-        BatchConfig { slots: 8, queue_depth: 32, prefill_chunk: 64 }
+        BatchConfig { slots: 8, queue_depth: 32, prefill_chunk: 64, worker: 0 }
     }
 }
+
+/// Why a non-blocking submit was refused (typed, so the HTTP layer can map
+/// load shedding to 503 and a dead scheduler to 500 without string-matching).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded admission queue is at capacity (load shed; retry later).
+    QueueFull,
+    /// The scheduler thread is gone (shutdown or crash).
+    Shutdown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "admission queue full"),
+            SubmitError::Shutdown => write!(f, "batcher is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Shared scheduler counters (read via [`Batcher::stats`]).
 #[derive(Debug, Default)]
@@ -212,8 +238,13 @@ impl BatchStats {
     }
 }
 
-/// Registry handles for the serve-layer series, registered once and cached
-/// (recording is then wait-free — see [`crate::obs::metrics`]).
+/// Registry handles for one scheduler's serve-layer series, registered at
+/// spawn and cached (recording is then wait-free — see
+/// [`crate::obs::metrics`]). Every series carries a `worker="<index>"` label
+/// so a multi-worker gateway's schedulers stay separable on `/metrics`;
+/// the registry dedups by (name, labels), so two batchers sharing a worker
+/// index (tests, standalone use) share handles and accumulate jointly,
+/// exactly like the former process-global set.
 struct ServeMetrics {
     requests: Counter,
     completions: Counter,
@@ -229,33 +260,74 @@ struct ServeMetrics {
     prefill_chunk_ms: Histogram,
 }
 
-fn serve_metrics() -> &'static ServeMetrics {
-    static M: OnceLock<ServeMetrics> = OnceLock::new();
-    M.get_or_init(|| {
+impl ServeMetrics {
+    fn register(worker: usize) -> ServeMetrics {
         let r = obs::registry();
+        let w = worker.to_string();
+        let l: &[(&str, &str)] = &[("worker", w.as_str())];
         ServeMetrics {
-            requests: r.counter("sct_serve_requests_total", "Requests enqueued for admission"),
-            completions: r.counter("sct_serve_completions_total", "Requests finished (any reason)"),
-            tokens_out: r.counter("sct_serve_tokens_out_total", "Tokens sampled by batched decode"),
-            prefill_tokens: r
-                .counter("sct_serve_prefill_tokens_total", "Prompt tokens absorbed via prefill"),
-            cancelled: r.counter("sct_serve_cancelled_total", "Sequences cancelled by hung-up streams"),
-            stopped: r.counter("sct_serve_stopped_total", "Sequences ended by a stop-sequence match"),
-            queue_depth: r.gauge("sct_serve_queue_depth", "Requests waiting in the admission queue"),
-            active_slots: r.gauge("sct_serve_active_slots", "Sequences currently holding a KV slot"),
-            queue_wait_ms: r
-                .histogram("sct_serve_queue_wait_ms", "Enqueue-to-admission wait per request (ms)"),
-            ttft_ms: r.histogram("sct_serve_ttft_ms", "Enqueue to first sampled token (ms)"),
-            decode_step_ms: r.histogram(
+            requests: r.counter_with(
+                "sct_serve_requests_total",
+                l,
+                "Requests enqueued for admission",
+            ),
+            completions: r.counter_with(
+                "sct_serve_completions_total",
+                l,
+                "Requests finished (any reason)",
+            ),
+            tokens_out: r.counter_with(
+                "sct_serve_tokens_out_total",
+                l,
+                "Tokens sampled by batched decode",
+            ),
+            prefill_tokens: r.counter_with(
+                "sct_serve_prefill_tokens_total",
+                l,
+                "Prompt tokens absorbed via prefill",
+            ),
+            cancelled: r.counter_with(
+                "sct_serve_cancelled_total",
+                l,
+                "Sequences cancelled by hung-up streams",
+            ),
+            stopped: r.counter_with(
+                "sct_serve_stopped_total",
+                l,
+                "Sequences ended by a stop-sequence match",
+            ),
+            queue_depth: r.gauge_with(
+                "sct_serve_queue_depth",
+                l,
+                "Requests waiting in the admission queue",
+            ),
+            active_slots: r.gauge_with(
+                "sct_serve_active_slots",
+                l,
+                "Sequences currently holding a KV slot",
+            ),
+            queue_wait_ms: r.histogram_with(
+                "sct_serve_queue_wait_ms",
+                l,
+                "Enqueue-to-admission wait per request (ms)",
+            ),
+            ttft_ms: r.histogram_with(
+                "sct_serve_ttft_ms",
+                l,
+                "Enqueue to first sampled token (ms)",
+            ),
+            decode_step_ms: r.histogram_with(
                 "sct_serve_decode_step_ms",
+                l,
                 "Wall time of one batched decode step (ms) — the inter-token latency floor",
             ),
-            prefill_chunk_ms: r.histogram(
+            prefill_chunk_ms: r.histogram_with(
                 "sct_serve_prefill_chunk_ms",
+                l,
                 "Wall time of one fused prefill batch (ms)",
             ),
         }
-    })
+    }
 }
 
 /// Where a sequence's output goes: a one-shot completion channel or a
@@ -376,9 +448,14 @@ pub struct Batcher {
     tx: Mutex<Option<SyncSender<Job>>>,
     handle: Option<JoinHandle<()>>,
     stats: Arc<BatchStats>,
+    /// Worker-labeled metric handles (see [`ServeMetrics`]), shared with the
+    /// scheduler thread.
+    m: Arc<ServeMetrics>,
     pub slots: usize,
     pub queue_depth: usize,
     pub prefill_chunk: usize,
+    /// Gateway worker index (label value on this scheduler's series).
+    pub worker: usize,
 }
 
 impl Batcher {
@@ -394,18 +471,22 @@ impl Batcher {
         assert!(cfg.slots > 0, "need at least one decode slot");
         let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth.max(1));
         let stats = Arc::new(BatchStats::default());
+        let m = Arc::new(ServeMetrics::register(cfg.worker));
         let stats_worker = stats.clone();
+        let m_worker = m.clone();
         let handle = std::thread::Builder::new()
-            .name("sct-batcher".into())
-            .spawn(move || scheduler_loop(engine, cfg, rx, stats_worker))
+            .name(format!("sct-batcher-{}", cfg.worker))
+            .spawn(move || scheduler_loop(engine, cfg, rx, stats_worker, m_worker))
             .expect("spawn batcher thread");
         Batcher {
             tx: Mutex::new(Some(tx)),
             handle: Some(handle),
             stats,
+            m,
             slots: cfg.slots,
             queue_depth: cfg.queue_depth,
             prefill_chunk: cfg.prefill_chunk,
+            worker: cfg.worker,
         }
     }
 
@@ -424,12 +505,12 @@ impl Batcher {
     /// when the send errors.
     fn enqueue_started(&self) {
         self.stats.queue_depth.fetch_add(1, Ordering::Relaxed);
-        serve_metrics().queue_depth.set(self.stats.queue_depth.load(Ordering::Relaxed) as f64);
+        self.m.queue_depth.set(self.stats.queue_depth.load(Ordering::Relaxed) as f64);
     }
 
     fn enqueue_failed(&self) {
         self.stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
-        serve_metrics().queue_depth.set(self.stats.queue_depth.load(Ordering::Relaxed) as f64);
+        self.m.queue_depth.set(self.stats.queue_depth.load(Ordering::Relaxed) as f64);
     }
 
     /// Enqueue a request; blocks when the admission queue is full
@@ -452,35 +533,40 @@ impl Batcher {
             self.enqueue_failed();
             return Err(anyhow!("batcher thread died"));
         }
-        serve_metrics().requests.inc();
+        self.m.requests.inc();
         Ok((req_id, done_rx))
     }
 
     /// Non-blocking submit: errors immediately when the queue is full
     /// instead of applying backpressure (load-shedding for the server).
-    pub fn try_submit(&self, req: Request) -> Result<Receiver<Completion>> {
+    pub fn try_submit(&self, req: Request) -> Result<Receiver<Completion>, SubmitError> {
         Ok(self.try_submit_with_id(req)?.1)
     }
 
     /// Non-blocking [`Batcher::submit_with_id`] (load-shedding).
-    pub fn try_submit_with_id(&self, req: Request) -> Result<(u64, Receiver<Completion>)> {
-        let tx = self.sender()?;
+    pub fn try_submit_with_id(
+        &self,
+        req: Request,
+    ) -> Result<(u64, Receiver<Completion>), SubmitError> {
+        let Some(tx) = self.tx.lock().unwrap().as_ref().cloned() else {
+            return Err(SubmitError::Shutdown);
+        };
         let req_id = trace::next_request_id();
         let (done, done_rx) = mpsc::sync_channel(1);
         self.enqueue_started();
         match tx.try_send(Job { req, req_id, sink: Sink::Oneshot(done), enqueued: Instant::now() })
         {
             Ok(()) => {
-                serve_metrics().requests.inc();
+                self.m.requests.inc();
                 Ok((req_id, done_rx))
             }
             Err(TrySendError::Full(_)) => {
                 self.enqueue_failed();
-                Err(anyhow!("admission queue full"))
+                Err(SubmitError::QueueFull)
             }
             Err(TrySendError::Disconnected(_)) => {
                 self.enqueue_failed();
-                Err(anyhow!("batcher thread died"))
+                Err(SubmitError::Shutdown)
             }
         }
     }
@@ -508,12 +594,12 @@ impl Batcher {
             self.enqueue_failed();
             return Err(anyhow!("batcher thread died"));
         }
-        serve_metrics().requests.inc();
+        self.m.requests.inc();
         Ok((req_id, ev_rx))
     }
 
     /// Non-blocking [`Batcher::submit_streaming`] (load-shedding).
-    pub fn try_submit_streaming(&self, req: Request) -> Result<Receiver<StreamEvent>> {
+    pub fn try_submit_streaming(&self, req: Request) -> Result<Receiver<StreamEvent>, SubmitError> {
         Ok(self.try_submit_streaming_with_id(req)?.1)
     }
 
@@ -521,24 +607,26 @@ impl Batcher {
     pub fn try_submit_streaming_with_id(
         &self,
         req: Request,
-    ) -> Result<(u64, Receiver<StreamEvent>)> {
-        let tx = self.sender()?;
+    ) -> Result<(u64, Receiver<StreamEvent>), SubmitError> {
+        let Some(tx) = self.tx.lock().unwrap().as_ref().cloned() else {
+            return Err(SubmitError::Shutdown);
+        };
         let req_id = trace::next_request_id();
         let (ev_tx, ev_rx) = mpsc::channel();
         self.enqueue_started();
         match tx.try_send(Job { req, req_id, sink: Sink::Stream(ev_tx), enqueued: Instant::now() })
         {
             Ok(()) => {
-                serve_metrics().requests.inc();
+                self.m.requests.inc();
                 Ok((req_id, ev_rx))
             }
             Err(TrySendError::Full(_)) => {
                 self.enqueue_failed();
-                Err(anyhow!("admission queue full"))
+                Err(SubmitError::QueueFull)
             }
             Err(TrySendError::Disconnected(_)) => {
                 self.enqueue_failed();
-                Err(anyhow!("batcher thread died"))
+                Err(SubmitError::Shutdown)
             }
         }
     }
@@ -564,9 +652,14 @@ impl Drop for Batcher {
     }
 }
 
-fn scheduler_loop(engine: Engine, bcfg: BatchConfig, rx: Receiver<Job>, stats: Arc<BatchStats>) {
+fn scheduler_loop(
+    engine: Engine,
+    bcfg: BatchConfig,
+    rx: Receiver<Job>,
+    stats: Arc<BatchStats>,
+    m: Arc<ServeMetrics>,
+) {
     let cfg = *engine.cfg();
-    let m = serve_metrics();
     let mut kv = engine.new_kv(bcfg.slots);
     let mut active: Vec<ActiveSeq> = Vec::with_capacity(bcfg.slots);
     let mut step: usize = 0; // rotates the prefill round-robin start
@@ -1026,7 +1119,7 @@ mod tests {
 
         let b = Batcher::spawn_with(
             Engine::new(SpectralModel::init(cfg, 0)),
-            BatchConfig { slots: 2, queue_depth: 4, prefill_chunk: 4 },
+            BatchConfig { slots: 2, queue_depth: 4, prefill_chunk: 4, ..BatchConfig::default() },
         );
         let c = b.generate(greedy(prompt, 6)).unwrap();
         assert_eq!(c.tokens, baseline, "chunked prefill must not change the decode");

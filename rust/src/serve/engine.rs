@@ -156,6 +156,7 @@ impl EngineConfig {
 
 /// One decoder block's weights. Attention stays dense (the paper leaves it
 /// dense, §4.2); the SwiGLU MLP is spectral.
+#[derive(Clone)]
 pub struct LayerWeights {
     pub wq: Matrix,
     pub wk: Matrix,
@@ -170,6 +171,7 @@ pub struct LayerWeights {
 
 /// Full model: embeddings, per-layer weights, final norm, and an optional
 /// untied head (`None` = tied, `logits = x Eᵀ`).
+#[derive(Clone)]
 pub struct SpectralModel {
     pub cfg: EngineConfig,
     pub embed: Matrix,
@@ -418,7 +420,9 @@ impl SpectralModel {
 // engine
 // ---------------------------------------------------------------------------
 
-/// Model + precomputed RoPE tables, ready to decode.
+/// Model + precomputed RoPE tables, ready to decode. `Clone` replicates the
+/// model (compact factors — cheap) for the gateway's per-worker engines.
+#[derive(Clone)]
 pub struct Engine {
     pub model: SpectralModel,
     rope: Rope,

@@ -1,0 +1,380 @@
+//! `serve::gateway` — sharded multi-engine serving: N independent worker
+//! schedulers behind one load-aware placement front.
+//!
+//! One [`super::batcher::Batcher`] thread owns one engine and one KV arena —
+//! that is the whole machine when there is one of them. The gateway holds
+//! `workers` of them, each with its **own** [`Engine`] clone (the compact
+//! spectral factors make a full model replica cheap — that is the paper's
+//! economics applied to serving) and its own KV arena, scheduler thread,
+//! and bounded admission queue. The HTTP front-end stays single: it submits
+//! through [`Gateway::try_submit`] / [`Gateway::try_submit_streaming`] and
+//! the gateway picks the worker.
+//!
+//! # Placement
+//!
+//! Least-outstanding-tokens, queue-depth tiebreak, worker-index final tie:
+//! for each worker the gateway tracks an *outstanding token* gauge — the sum
+//! of `prompt_len + max_new` over requests placed there whose client is
+//! still attached — and places each request on the worker with the smallest
+//! gauge; among equals, the one with the shallowest admission queue; among
+//! those, the lowest index (deterministic). The gauge is charged *before*
+//! the submit (so concurrent placements observe each other) and released by
+//! a guard tied to the returned [`Placed`] handle — when the handler drops
+//! it (response written, or client hung up), the worker's load drains even
+//! if the sequence was cancelled server-side.
+//!
+//! A worker whose bounded queue is full is skipped and the next-least-loaded
+//! one tried; [`SubmitError::QueueFull`] comes back only when EVERY worker
+//! refused — the 503 load-shed surface is now the whole fleet's capacity.
+//!
+//! # Determinism
+//!
+//! Placement cannot change what a request decodes: every worker runs an
+//! identical engine clone built from the same weights, and the kernels
+//! underneath are bit-deterministic at any thread count (the
+//! `util::pool` contract from the parallel-kernel layer). A temperature-0
+//! request therefore returns token-identical output whether the gateway has
+//! 1 worker or 8, and whichever worker it lands on — pinned by unit tests
+//! here and over HTTP in `tests/serve_integration.rs`.
+//!
+//! # Observability
+//!
+//! Each worker's scheduler registers its `sct_serve_*` series with a
+//! `worker="<index>"` label (see [`super::batcher`]); [`Gateway::stats`]
+//! sums the per-worker [`StatsSnapshot`]s into the flat aggregate the
+//! legacy `/v1/stats` fields report, and [`Gateway::worker_stats`] feeds
+//! the versioned `workers: [...]` array ([`super::api::stats_json`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{
+    BatchConfig, Batcher, Completion, Request, StatsSnapshot, StreamEvent, SubmitError,
+};
+use super::engine::Engine;
+
+/// Gateway sizing: worker count plus the per-worker scheduler sizing.
+#[derive(Debug, Clone, Copy)]
+pub struct GatewayConfig {
+    /// Independent worker schedulers (engine clone + KV arena each).
+    pub workers: usize,
+    /// Applied to EVERY worker (`slots` decode slots and `queue_depth`
+    /// admission entries *per worker*; the `worker` field is overridden
+    /// with each worker's index).
+    pub batch: BatchConfig,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> GatewayConfig {
+        GatewayConfig { workers: 1, batch: BatchConfig::default() }
+    }
+}
+
+struct Worker {
+    batcher: Batcher,
+    /// Sum of `prompt_len + max_new` over placed requests whose client is
+    /// still attached (released by [`LoadGuard`]).
+    outstanding: Arc<AtomicU64>,
+}
+
+/// N worker schedulers behind least-outstanding-tokens placement. Dropping
+/// the gateway closes every worker's queue and joins their threads after
+/// in-flight sequences finish.
+pub struct Gateway {
+    workers: Vec<Worker>,
+}
+
+/// Releases a placement's token charge when dropped.
+struct LoadGuard {
+    outstanding: Arc<AtomicU64>,
+    cost: u64,
+}
+
+impl Drop for LoadGuard {
+    fn drop(&mut self) {
+        self.outstanding.fetch_sub(self.cost, Ordering::Relaxed);
+    }
+}
+
+/// A placed request: which worker took it, its request id, and the channel
+/// its output arrives on. Holding this handle keeps the request's token
+/// cost charged against the worker; drop it when done with the receiver.
+pub struct Placed<T> {
+    pub worker: usize,
+    pub request_id: u64,
+    pub rx: Receiver<T>,
+    _load: LoadGuard,
+}
+
+/// Estimated token footprint of a request: prompt to prefill + budgeted
+/// output. What the placement gauge charges.
+fn request_cost(req: &Request) -> u64 {
+    (req.prompt.len() + req.max_new).max(1) as u64
+}
+
+/// Worker indices in placement order for the observed `(outstanding_tokens,
+/// queue_depth)` loads: least outstanding first, shallower queue breaking
+/// ties, lower index breaking those (deterministic, and exhaustive — every
+/// worker appears, so a full best choice falls through to the next).
+fn placement_order(loads: &[(u64, u64)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..loads.len()).collect();
+    idx.sort_by_key(|&i| (loads[i].0, loads[i].1, i));
+    idx
+}
+
+/// Sum per-worker snapshots into the fleet-wide aggregate (the flat
+/// `/v1/stats` fields). Counters and live gauges add; `peak_active` is the
+/// sum of per-worker peaks — an upper bound on simultaneously active
+/// sequences, exact when there is one worker.
+pub fn aggregate_stats(workers: &[StatsSnapshot]) -> StatsSnapshot {
+    let mut a = StatsSnapshot::default();
+    for s in workers {
+        a.admitted += s.admitted;
+        a.completed += s.completed;
+        a.tokens_out += s.tokens_out;
+        a.peak_active += s.peak_active;
+        a.prefill_tokens += s.prefill_tokens;
+        a.cancelled += s.cancelled;
+        a.stopped += s.stopped;
+        a.queue_depth += s.queue_depth;
+        a.active_slots += s.active_slots;
+    }
+    a
+}
+
+impl Gateway {
+    /// Spawn `cfg.workers` schedulers, each with its own clone of `engine`
+    /// (the original is moved into the last worker, so a single-worker
+    /// gateway clones nothing).
+    pub fn start(engine: Engine, cfg: &GatewayConfig) -> Gateway {
+        let n = cfg.workers.max(1);
+        let mut engines = Vec::with_capacity(n);
+        for _ in 0..n - 1 {
+            engines.push(engine.clone());
+        }
+        engines.push(engine);
+        let workers = engines
+            .into_iter()
+            .enumerate()
+            .map(|(i, eng)| Worker {
+                batcher: Batcher::spawn_with(eng, BatchConfig { worker: i, ..cfg.batch }),
+                outstanding: Arc::new(AtomicU64::new(0)),
+            })
+            .collect();
+        Gateway { workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Point-in-time snapshot of every worker scheduler, by worker index.
+    pub fn worker_stats(&self) -> Vec<StatsSnapshot> {
+        self.workers.iter().map(|w| w.batcher.stats().snapshot()).collect()
+    }
+
+    /// Fleet-wide aggregate (see [`aggregate_stats`]).
+    pub fn stats(&self) -> StatsSnapshot {
+        aggregate_stats(&self.worker_stats())
+    }
+
+    /// Per-worker outstanding-token gauges (placement inputs; test hook).
+    pub fn outstanding_tokens(&self) -> Vec<u64> {
+        self.workers.iter().map(|w| w.outstanding.load(Ordering::Relaxed)).collect()
+    }
+
+    fn place<T>(
+        &self,
+        req: Request,
+        submit: impl Fn(&Batcher, Request) -> Result<(u64, Receiver<T>), SubmitError>,
+    ) -> Result<Placed<T>, SubmitError> {
+        let cost = request_cost(&req);
+        let loads: Vec<(u64, u64)> = self
+            .workers
+            .iter()
+            .map(|w| {
+                (w.outstanding.load(Ordering::Relaxed), w.batcher.stats().snapshot().queue_depth)
+            })
+            .collect();
+        for i in placement_order(&loads) {
+            let w = &self.workers[i];
+            // Charge the gauge BEFORE submitting so a concurrent placement
+            // sees this request's footprint; the guard refunds it if this
+            // worker refuses (and, on success, when the client detaches).
+            w.outstanding.fetch_add(cost, Ordering::Relaxed);
+            let guard = LoadGuard { outstanding: w.outstanding.clone(), cost };
+            match submit(&w.batcher, req.clone()) {
+                Ok((request_id, rx)) => {
+                    return Ok(Placed { worker: i, request_id, rx, _load: guard })
+                }
+                Err(SubmitError::QueueFull) => continue, // guard refunds; try next
+                Err(SubmitError::Shutdown) => return Err(SubmitError::Shutdown),
+            }
+        }
+        // Every worker's bounded queue refused: the fleet is at capacity.
+        Err(SubmitError::QueueFull)
+    }
+
+    /// Place a one-shot request on the least-loaded worker (load-shedding:
+    /// errors instead of blocking when every queue is full).
+    pub fn try_submit(&self, req: Request) -> Result<Placed<Completion>, SubmitError> {
+        self.place(req, |b, r| b.try_submit_with_id(r))
+    }
+
+    /// Place a streaming request (see [`Gateway::try_submit`]).
+    pub fn try_submit_streaming(&self, req: Request) -> Result<Placed<StreamEvent>, SubmitError> {
+        self.place(req, |b, r| b.try_submit_streaming_with_id(r))
+    }
+
+    /// Place, then block for the completion: `(worker, completion)`. The
+    /// demo/bench convenience path (size `queue_depth` for the burst —
+    /// placement still load-sheds).
+    pub fn generate(&self, req: Request) -> Result<(usize, Completion)> {
+        let placed = self.try_submit(req).map_err(|e| anyhow!(e))?;
+        let c = placed.rx.recv().map_err(|_| anyhow!("scheduler dropped the request"))?;
+        Ok((placed.worker, c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::{EngineConfig, SampleOpts, SpectralModel};
+
+    fn tiny_cfg() -> EngineConfig {
+        EngineConfig {
+            vocab: 50,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            d_ffn: 48,
+            rank: 4,
+            max_seq: 32,
+            tied: true,
+        }
+    }
+
+    fn gateway(workers: usize, slots: usize, queue_depth: usize) -> Gateway {
+        Gateway::start(
+            Engine::new(SpectralModel::init(tiny_cfg(), 0)),
+            &GatewayConfig {
+                workers,
+                batch: BatchConfig { slots, queue_depth, prefill_chunk: 4, worker: 0 },
+            },
+        )
+    }
+
+    fn greedy(prompt: Vec<i32>, n: usize) -> Request {
+        Request {
+            prompt,
+            max_new: n,
+            opts: SampleOpts { temperature: 0.0, top_k: 0, seed: 0 },
+            stop: vec![],
+        }
+    }
+
+    #[test]
+    fn placement_order_prefers_least_tokens_then_queue_then_index() {
+        // outstanding tokens dominate
+        assert_eq!(placement_order(&[(10, 0), (3, 9), (7, 0)]), vec![1, 2, 0]);
+        // queue depth breaks token ties
+        assert_eq!(placement_order(&[(5, 2), (5, 0), (5, 1)]), vec![1, 2, 0]);
+        // index breaks full ties (deterministic placement)
+        assert_eq!(placement_order(&[(5, 1), (5, 1), (0, 0)]), vec![2, 0, 1]);
+        assert_eq!(placement_order(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn placement_routes_around_a_loaded_worker() {
+        let g = gateway(2, 1, 4);
+        // First request lands on worker 0 (all loads equal, index tiebreak)
+        // and we HOLD its handle, keeping the charge outstanding.
+        let a = g.try_submit(greedy(vec![1, 2, 3], 8)).unwrap();
+        assert_eq!(a.worker, 0);
+        assert_eq!(g.outstanding_tokens()[0], 11, "prompt 3 + budget 8 charged");
+        // Second request must see worker 0's load and go to worker 1.
+        let b = g.try_submit(greedy(vec![4, 5, 6], 8)).unwrap();
+        assert_eq!(b.worker, 1, "least-outstanding-tokens placement");
+
+        let ca = a.rx.recv().unwrap();
+        let cb = b.rx.recv().unwrap();
+        assert_eq!(ca.tokens.len(), 8);
+        assert_eq!(cb.tokens.len(), 8);
+        drop(a);
+        drop(b);
+        assert_eq!(g.outstanding_tokens(), vec![0, 0], "guards drain the gauges");
+        let per_worker = g.worker_stats();
+        assert_eq!(per_worker[0].admitted, 1);
+        assert_eq!(per_worker[1].admitted, 1);
+        let agg = g.stats();
+        assert_eq!((agg.admitted, agg.completed), (2, 2));
+        assert_eq!(agg.tokens_out, 16);
+    }
+
+    #[test]
+    fn full_fleet_sheds_with_queue_full() {
+        // 2 workers x (1 slot + depth-1 queue) and slow requests: a burst
+        // larger than fleet capacity must eventually shed, and the error is
+        // QueueFull only (never a false Shutdown).
+        let g = gateway(2, 1, 1);
+        let mut pending = Vec::new();
+        let mut shed = None;
+        for i in 0..40 {
+            match g.try_submit(greedy(vec![i % 50], 20)) {
+                Ok(p) => pending.push(p),
+                Err(e) => {
+                    shed = Some(e);
+                    break;
+                }
+            }
+        }
+        assert_eq!(shed, Some(SubmitError::QueueFull), "full fleet sheds load");
+        assert!(pending.len() >= 2, "both workers took work before the shed");
+        let workers: Vec<usize> = pending.iter().map(|p| p.worker).collect();
+        assert!(workers.contains(&0) && workers.contains(&1), "placement spread: {workers:?}");
+        for p in pending {
+            assert!(p.rx.recv().is_ok(), "shed requests never cancel admitted ones");
+        }
+    }
+
+    #[test]
+    fn t0_output_is_identical_at_any_worker_count_and_placement() {
+        let solo = gateway(1, 1, 8);
+        let (w, base) = solo.generate(greedy(vec![7, 3, 1], 6)).unwrap();
+        assert_eq!(w, 0);
+
+        let sharded = gateway(2, 1, 8);
+        // Hold the first placement so the second lands on the other worker:
+        // the same prompt now decodes on BOTH workers.
+        let a = sharded.try_submit(greedy(vec![7, 3, 1], 6)).unwrap();
+        let b = sharded.try_submit(greedy(vec![7, 3, 1], 6)).unwrap();
+        assert_ne!(a.worker, b.worker, "both workers exercised");
+        let ca = a.rx.recv().unwrap();
+        let cb = b.rx.recv().unwrap();
+        assert_eq!(ca.tokens, base.tokens, "worker count must not change T=0 output");
+        assert_eq!(cb.tokens, base.tokens, "placement must not change T=0 output");
+    }
+
+    #[test]
+    fn refused_placement_refunds_the_load_charge() {
+        // Saturate a 1-worker gateway, then get refused: the failed
+        // placement must not leave a phantom charge on the gauge.
+        let g = gateway(1, 1, 1);
+        let mut pending = Vec::new();
+        loop {
+            match g.try_submit(greedy(vec![9], 20)) {
+                Ok(p) => pending.push(p),
+                Err(SubmitError::QueueFull) => break,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        let charged: u64 = pending.iter().map(|_| 21u64).sum();
+        assert_eq!(g.outstanding_tokens()[0], charged, "only live placements stay charged");
+        for p in pending {
+            assert!(p.rx.recv().is_ok());
+        }
+    }
+}

@@ -1,7 +1,8 @@
 //! `serve` — the pure-Rust spectral **inference engine**: KV-cached
-//! incremental decoding, a continuous-batching scheduler with chunked
-//! prefill, and a streaming HTTP/1.1 server, all built directly on the
-//! `spectral` substrate.
+//! incremental decoding, continuous-batching schedulers with chunked
+//! prefill — sharded across N engine-clone workers behind a load-aware
+//! gateway — and a streaming HTTP/1.1 server with a typed, versioned wire
+//! API, all built directly on the `spectral` substrate.
 //!
 //! The paper's storage claim — the dense `(m, n)` matrix never exists —
 //! holds on the serving path too: every MLP projection runs as
@@ -33,6 +34,16 @@
 //!   stop-sequence termination (matched stops are trimmed; possible stop
 //!   prefixes are held back from streams until decided), eviction of
 //!   finished, stopped or cancelled sequences with a [`FinishReason`].
+//! * [`gateway`] — **sharded multi-engine serving**: N independent worker
+//!   schedulers (one [`Batcher`] + KV arena + [`Engine`] clone each) behind
+//!   least-outstanding-tokens placement with a queue-depth tiebreak. A
+//!   request is shed with 503 only when EVERY worker's bounded queue is
+//!   full, and placement never changes T=0 output (every worker runs the
+//!   same bit-deterministic kernels on the same weights).
+//! * [`api`] — the typed wire surface: [`api::GenerateRequest`] /
+//!   [`api::GenerateResponse`] / [`api::ErrorEnvelope`] / the versioned
+//!   stats document ([`api::stats_json`]). Parsing and rendering live here;
+//!   the server only moves bytes.
 //! * [`server`] — `std::net` HTTP front-end (`POST /v1/generate`,
 //!   `GET /healthz`, `GET /v1/stats`, `GET /metrics`) using `util::json`,
 //!   with HTTP/1.1 keep-alive, a connection read deadline, and SSE
@@ -47,6 +58,61 @@
 //! `sct train --backend native` — or mid-run by its checkpoint manager —
 //! loads directly via `SpectralModel::load` / `sct serve --ckpt`, closing
 //! the train → checkpoint → serve loop.
+//!
+//! # Wire API (v1)
+//!
+//! Every body on the wire maps to a type in [`api`]. A one-shot generation:
+//!
+//! ```text
+//! POST /v1/generate
+//! {"prompt": "hi", "tokens": 4, "temperature": 0, "top_k": 0, "seed": 0,
+//!  "stop": ["\n", 0], "stream": false}
+//!
+//! 200 OK  (api::GenerateResponse)
+//! {"request_id": 7, "worker": 1, "completion": "...", "tokens": [104, ...],
+//!  "prompt_tokens": 2, "finish_reason": "length", "queue_ms": 0.1,
+//!  "decode_ms": 14.2, "tok_per_s": 140.8, "ttft_ms": 1.9}
+//! ```
+//!
+//! `prompt_ids` (an integer array) may replace `prompt`; all other request
+//! fields are optional (`temperature` 0.8, `top_k` 40, `seed` 0, `tokens`
+//! from the server's `max_new` default). `worker` is the gateway worker
+//! index that served the request — informational only, since placement
+//! cannot change T=0 output.
+//!
+//! **Errors.** Every non-2xx response — malformed bodies (400), unknown
+//! routes (404), wrong verbs (405), oversize bodies (413), fleet-wide load
+//! shed (503) — is one [`api::ErrorEnvelope`] with
+//! `Content-Type: application/json`:
+//!
+//! ```text
+//! 503 Service Unavailable
+//! {"code": "queue_full",
+//!  "message": "admission queue full on every worker (load shed)",
+//!  "request_id": 12}
+//! ```
+//!
+//! `code` is a stable machine-readable string (`bad_request`, `not_found`,
+//! `method_not_allowed`, `payload_too_large`, `queue_full`, `internal`);
+//! the HTTP status is derived from it. `request_id` is stamped on errors
+//! too, so failed requests correlate with server logs and spans.
+//!
+//! **Stats (versioned).** `GET /v1/stats` keeps the flat single-scheduler
+//! fields bit-compatible for old clients — now the aggregate across
+//! workers — and adds a `workers: [...]` array of per-worker snapshots:
+//!
+//! ```text
+//! {"admitted": 9, "completed": 9, "tokens_out": 72, "peak_active": 3,
+//!  "prefill_tokens": 41, "cancelled": 0, "stopped": 1, "queue_depth": 0,
+//!  "active_slots": 0,
+//!  "workers": [
+//!    {"worker": 0, "admitted": 5, "completed": 5, ...},
+//!    {"worker": 1, "admitted": 4, "completed": 4, ...}]}
+//! ```
+//!
+//! Counters and live gauges sum across workers; `peak_active` is the sum of
+//! per-worker peaks (an upper bound on simultaneously active sequences,
+//! exact when `workers = 1`).
 //!
 //! # Streaming wire format (SSE)
 //!
@@ -90,10 +156,13 @@
 //! # Streaming/serving config keys
 //!
 //! `[serve]` TOML section and `sct serve` flags (see [`ServeConfig`]):
-//! `addr`, `slots`, `queue_depth`, `max_new` — as before;
-//! `prefill_chunk` — prompt tokens absorbed per scheduler step (the
-//! chunked-prefill fairness budget; 0 = unchunked); `keep_alive_ms` — the
-//! connection read deadline / keep-alive idle window (0 = no deadline).
+//! `addr`; `workers` — worker schedulers behind the gateway, one engine
+//! clone + KV arena each (`--workers` flag > `[serve] workers` TOML >
+//! `SCT_WORKERS` env > 1); `slots` and `queue_depth` — **per worker**;
+//! `max_new` — default token budget; `prefill_chunk` — prompt tokens
+//! absorbed per scheduler step (the chunked-prefill fairness budget;
+//! 0 = unchunked); `keep_alive_ms` — the connection read deadline /
+//! keep-alive idle window (0 = no deadline).
 //!
 //! # Observability
 //!
@@ -101,9 +170,11 @@
 //! `tokens_out`, `peak_active`, `prefill_tokens`, `cancelled`, `stopped`)
 //! plus the **live** gauges `queue_depth` (requests accepted but not yet
 //! admitted to a slot) and `active_slots` (sequences currently decoding) —
-//! a [`batcher::StatsSnapshot`]. `GET /metrics` exposes the same signals as
-//! Prometheus series (`sct_serve_*`, `sct_http_requests_total{route=...}`)
-//! with queue-wait / TTFT / decode-step / prefill-chunk latency histograms;
+//! a [`batcher::StatsSnapshot`] per worker plus the aggregate (schema
+//! above). `GET /metrics` exposes the same signals as Prometheus series —
+//! every `sct_serve_*` series carries a `worker="i"` label matching the
+//! `workers` array index, plus `sct_http_requests_total{route=...}` — with
+//! queue-wait / TTFT / decode-step / prefill-chunk latency histograms;
 //! `sct serve --trace-out traces.jsonl` additionally records one span per
 //! request. See [`crate::obs`] for the registry and exposition format.
 //!
@@ -115,15 +186,20 @@
 //! latency are measured by `benches/serve_throughput.rs`, which emits
 //! `BENCH_serve.json` for the CI trajectory.
 
+pub mod api;
 pub mod batcher;
 pub mod engine;
+pub mod gateway;
 pub mod kv;
 pub mod server;
 
+pub use api::{ErrorCode, ErrorEnvelope, GenerateRequest, GenerateResponse};
 pub use batcher::{
     BatchConfig, Batcher, Completion, FinishReason, Request, StatsSnapshot, StreamEvent,
+    SubmitError,
 };
 pub use engine::{sample_logits, Engine, EngineConfig, SampleOpts, SpectralModel};
+pub use gateway::{Gateway, GatewayConfig, Placed};
 pub use kv::KvCache;
 pub use server::{
     http_exchange, http_get_json, http_get_text, http_post_json, http_post_sse, http_roundtrip,

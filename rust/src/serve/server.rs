@@ -11,43 +11,58 @@
 //! slow-drip clients). Pipelining is not supported: send one request, read
 //! its full response, then the next.
 //!
-//! Routes:
-//! * `POST /v1/generate` — body `{"prompt": "...", "tokens": N,
-//!   "temperature": T, "top_k": K, "seed": S, "stop": [...],
-//!   "stream": false}` (all but `prompt` optional; `prompt_ids` may replace
-//!   `prompt`). `stop` entries are strings (tokenized stop sequences) or
-//!   raw token ids (EOS); generation ends when the output ends with any of
-//!   them, the match is trimmed, and `finish_reason` reports `"stop"` vs
-//!   `"length"`. At most 8 stop sequences are honored (extras ignored);
-//!   out-of-vocab ids can never match and are dropped. Without `stream`, responds with one JSON document: the
-//!   completion text, token ids, finish reason, `request_id` (the same id
-//!   that keys the request's span record in `traces.jsonl`), and
-//!   queue/TTFT/decode latency (`ttft_ms` is omitted when no token was
-//!   sampled). With `"stream": true`, responds with Server-Sent Events over
-//!   chunked transfer encoding, every frame stamped with `request_id` — see
-//!   [`crate::serve`] module docs for the exact wire format.
-//! * `GET /healthz` — liveness + uptime + scheduler sizing.
-//! * `GET /v1/stats` — scheduler counters (admitted/completed/tokens/peak/
-//!   prefill/cancelled/stopped) plus the live `queue_depth` and
-//!   `active_slots` gauges.
-//! * `GET /metrics` — Prometheus text exposition of the process-global
-//!   [`crate::obs`] registry (serve, pool, train, and rank series).
+//! Requests are not handled by one scheduler anymore: the server fronts a
+//! [`Gateway`] of `workers` independent worker schedulers (one engine clone
+//! + KV arena each) and every `/v1/generate` is placed on the least-loaded
+//! worker (see [`crate::serve::gateway`]). The wire types themselves —
+//! request/response documents, the uniform [`ErrorEnvelope`], the versioned
+//! stats schema — live in [`crate::serve::api`]; this module is only the
+//! socket plumbing that moves them.
 //!
-//! A full admission queue answers `503` (load shedding) rather than holding
-//! the connection on the backpressured submit path.
+//! Routes:
+//! * `POST /v1/generate` — body parsed as an [`api::GenerateRequest`]
+//!   (`prompt` or `prompt_ids`, optional `tokens`/`temperature`/`top_k`/
+//!   `seed`/`stop`/`stream`). `stop` entries are strings (tokenized stop
+//!   sequences) or raw token ids (EOS); generation ends when the output
+//!   ends with any of them, the match is trimmed, and `finish_reason`
+//!   reports `"stop"` vs `"length"`. At most 8 stop sequences are honored
+//!   (extras ignored); out-of-vocab ids can never match and are dropped.
+//!   Without `stream`, responds with one [`api::GenerateResponse`]
+//!   document: the completion text, token ids, finish reason, the serving
+//!   `worker` index, `request_id` (the same id that keys the request's span
+//!   record in `traces.jsonl`), and queue/TTFT/decode latency (`ttft_ms` is
+//!   omitted when no token was sampled). With `"stream": true`, responds
+//!   with Server-Sent Events over chunked transfer encoding, every frame
+//!   stamped with `request_id` — see [`crate::serve`] module docs for the
+//!   exact wire format.
+//! * `GET /healthz` — liveness + uptime + worker count + per-worker sizing.
+//! * `GET /v1/stats` — versioned stats document ([`api::stats_json`]): flat
+//!   aggregate counters (bit-compatible with the pre-gateway schema) plus a
+//!   `workers: [...]` array of per-worker snapshots.
+//! * `GET /metrics` — Prometheus text exposition of the process-global
+//!   [`crate::obs`] registry (serve, pool, train, and rank series; the
+//!   `sct_serve_*` series carry a `worker="i"` label).
+//!
+//! Every non-2xx response — 400 parse failures, 404/405 route misses, 413
+//! oversize bodies, 503 load sheds — is one [`ErrorEnvelope`] JSON body
+//! written through one [`write_error`] path: correct `Content-Type`,
+//! status derived from the error code, `request_id` stamped. A full
+//! admission queue on EVERY worker answers `503` (load shedding) rather
+//! than holding the connection on the backpressured submit path.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::Receiver;
 use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::batcher::{BatchConfig, Batcher, Completion, Request, StatsSnapshot, StreamEvent};
-use super::engine::{Engine, SampleOpts};
+use super::api::{self, ErrorCode, ErrorEnvelope, GenerateRequest, GenerateResponse};
+use super::batcher::{BatchConfig, StatsSnapshot, StreamEvent};
+use super::engine::Engine;
+use super::gateway::{Gateway, GatewayConfig, Placed};
 use crate::coordinator::config::TomlDoc;
 use crate::data::Tokenizer;
 use crate::json_obj;
@@ -83,9 +98,12 @@ fn http_metrics() -> &'static HttpMetrics {
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub addr: String,
-    /// Concurrent decode slots (KV arena size).
+    /// Independent worker schedulers behind the gateway (one engine clone +
+    /// KV arena each). Default from `SCT_WORKERS`, else 1.
+    pub workers: usize,
+    /// Concurrent decode slots (KV arena size) — per worker.
     pub slots: usize,
-    /// Bounded admission queue depth.
+    /// Bounded admission queue depth — per worker.
     pub queue_depth: usize,
     /// Tokens per request when the body does not say.
     pub max_new_default: usize,
@@ -97,10 +115,22 @@ pub struct ServeConfig {
     pub keep_alive_ms: u64,
 }
 
+/// Worker-count default: the `SCT_WORKERS` env var when set to a positive
+/// integer, else a single worker (the pre-gateway behavior). Mirrors how
+/// `SCT_THREADS` sizes the kernel pool.
+fn default_workers() -> usize {
+    std::env::var("SCT_WORKERS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(1)
+}
+
 impl Default for ServeConfig {
     fn default() -> ServeConfig {
         ServeConfig {
             addr: "127.0.0.1:8077".into(),
+            workers: default_workers(),
             slots: 8,
             queue_depth: 32,
             max_new_default: 48,
@@ -118,6 +148,9 @@ impl ServeConfig {
         };
         if let Some(v) = s.get("addr") {
             self.addr = v.as_str()?.to_string();
+        }
+        if let Some(v) = s.get("workers") {
+            self.workers = v.as_usize()?;
         }
         if let Some(v) = s.get("slots") {
             self.slots = v.as_usize()?;
@@ -139,11 +172,10 @@ impl ServeConfig {
 }
 
 struct ServerState {
-    batcher: Batcher,
+    gateway: Gateway,
     tokenizer: Tokenizer,
     vocab: usize,
-    max_new_default: usize,
-    keep_alive_ms: u64,
+    cfg: ServeConfig,
     started: Instant,
 }
 
@@ -163,18 +195,21 @@ impl Server {
             .with_context(|| format!("binding {}", cfg.addr))?;
         let addr = listener.local_addr()?;
         let state = Arc::new(ServerState {
-            batcher: Batcher::spawn_with(
+            gateway: Gateway::start(
                 engine,
-                BatchConfig {
-                    slots: cfg.slots,
-                    queue_depth: cfg.queue_depth,
-                    prefill_chunk: cfg.prefill_chunk,
+                &GatewayConfig {
+                    workers: cfg.workers,
+                    batch: BatchConfig {
+                        slots: cfg.slots,
+                        queue_depth: cfg.queue_depth,
+                        prefill_chunk: cfg.prefill_chunk,
+                        worker: 0, // overridden per worker by the gateway
+                    },
                 },
             ),
             tokenizer,
             vocab,
-            max_new_default: cfg.max_new_default,
-            keep_alive_ms: cfg.keep_alive_ms,
+            cfg: cfg.clone(),
             started: Instant::now(),
         });
         let shutdown = Arc::new(AtomicBool::new(false));
@@ -204,9 +239,21 @@ impl Server {
         Ok(Server { addr, shutdown, accept: Some(accept), state })
     }
 
-    /// Point-in-time scheduler counters and gauges.
+    /// Point-in-time scheduler counters and gauges, aggregated across all
+    /// workers (bit-compatible with the single-scheduler snapshot when
+    /// `workers == 1`).
     pub fn stats(&self) -> StatsSnapshot {
-        self.state.batcher.stats().snapshot()
+        self.state.gateway.stats()
+    }
+
+    /// Per-worker snapshots, by worker index.
+    pub fn worker_stats(&self) -> Vec<StatsSnapshot> {
+        self.state.gateway.worker_stats()
+    }
+
+    /// Worker scheduler count behind the gateway.
+    pub fn workers(&self) -> usize {
+        self.state.gateway.workers()
     }
 
     /// Block until the accept loop exits (it only exits via [`Server::stop`]
@@ -225,7 +272,8 @@ impl Server {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
-        // `state` (and the Batcher in it) drops with self once handlers end.
+        // `state` (and the Gateway's workers in it) drops with self once
+        // handlers end.
     }
 }
 
@@ -435,6 +483,20 @@ const MAX_HEADERS: usize = 64;
 /// requests just under the read deadline pins a thread indefinitely.
 const KEEP_ALIVE_MAX_REQUESTS: usize = 1000;
 
+/// Declared `Content-Length` beyond [`MAX_BODY_BYTES`].
+#[derive(Debug)]
+struct RequestTooLarge {
+    bytes: usize,
+}
+
+impl std::fmt::Display for RequestTooLarge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "body too large ({} bytes > {} cap)", self.bytes, MAX_BODY_BYTES)
+    }
+}
+
+impl std::error::Error for RequestTooLarge {}
+
 /// Read one request off a (possibly reused) connection. `Ok(None)` is a
 /// clean end of the connection: the client closed it, reset it, or went
 /// idle past the read deadline without starting a request. Errors are
@@ -497,7 +559,9 @@ fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<HttpRequest>
         }
     }
     if content_length > MAX_BODY_BYTES {
-        bail!("body too large ({content_length} bytes)");
+        // Typed (not a bail! string) so the handler can answer 413 instead
+        // of folding it into the generic 400 read-error path.
+        return Err(anyhow::Error::new(RequestTooLarge { bytes: content_length }));
     }
     let mut body = vec![0u8; content_length];
     limited.read_exact(&mut body).context("reading body")?;
@@ -548,15 +612,27 @@ fn write_sse_frame(stream: &mut TcpStream, data: &Json) -> Result<()> {
     Ok(())
 }
 
-fn error_json(msg: &str) -> Json {
-    json_obj![("error", msg)]
+/// THE error write path: every non-2xx response is an [`ErrorEnvelope`]
+/// rendered as `application/json`, with the status line and reason phrase
+/// derived from its [`ErrorCode`] (no free-floating status/body pairs), and
+/// the connection's keep-alive state honored — an envelope is an answer,
+/// not an excuse to drop the connection.
+fn write_error(stream: &mut TcpStream, e: &ErrorEnvelope, keep_alive: bool) -> Result<()> {
+    write_raw_response(
+        stream,
+        e.code.http_status(),
+        e.code.reason(),
+        "application/json",
+        &e.to_json().to_string(),
+        keep_alive,
+    )
 }
 
 fn handle_connection(mut stream: TcpStream, state: &ServerState) -> Result<()> {
     // The read deadline is both the keep-alive idle window and the
     // stalled-client guard: a socket that opens and never sends a request
     // can no longer hold this thread forever.
-    let deadline = match state.keep_alive_ms {
+    let deadline = match state.cfg.keep_alive_ms {
         0 => None,
         ms => Some(Duration::from_millis(ms)),
     };
@@ -570,8 +646,15 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState) -> Result<()> {
             Ok(Some(r)) => r,
             Ok(None) => return Ok(()), // client closed / idle deadline
             Err(e) => {
-                let _ =
-                    write_response(&mut stream, 400, "Bad Request", &error_json(&e.to_string()), false);
+                // After a read failure the request framing is unknown, so
+                // the connection must close either way; the envelope still
+                // goes out first so the client sees a typed error.
+                let code = if e.downcast_ref::<RequestTooLarge>().is_some() {
+                    ErrorCode::PayloadTooLarge
+                } else {
+                    ErrorCode::BadRequest
+                };
+                let _ = write_error(&mut stream, &ErrorEnvelope::new(code, e.to_string()), false);
                 return Ok(());
             }
         };
@@ -588,28 +671,19 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState) -> Result<()> {
                 let body = json_obj![
                     ("status", "ok"),
                     ("uptime_s", state.started.elapsed().as_secs_f64()),
-                    ("slots", state.batcher.slots),
-                    ("queue_depth", state.batcher.queue_depth),
-                    ("prefill_chunk", state.batcher.prefill_chunk),
-                    ("keep_alive_ms", state.keep_alive_ms as i64),
+                    ("workers", state.gateway.workers()),
+                    ("slots", state.cfg.slots),
+                    ("queue_depth", state.cfg.queue_depth),
+                    ("prefill_chunk", state.cfg.prefill_chunk),
+                    ("keep_alive_ms", state.cfg.keep_alive_ms as i64),
                 ];
                 write_response(&mut stream, 200, "OK", &body, keep)?;
             }
             ("GET", "/v1/stats") => {
                 http_metrics().stats.inc();
-                let s = state.batcher.stats().snapshot();
-                let body = json_obj![
-                    ("admitted", s.admitted as i64),
-                    ("completed", s.completed as i64),
-                    ("tokens_out", s.tokens_out as i64),
-                    ("peak_active", s.peak_active as i64),
-                    ("prefill_tokens", s.prefill_tokens as i64),
-                    ("cancelled", s.cancelled as i64),
-                    ("stopped", s.stopped as i64),
-                    ("queue_depth", s.queue_depth as i64),
-                    ("active_slots", s.active_slots as i64),
-                ];
-                write_response(&mut stream, 200, "OK", &body, keep)?;
+                let per_worker = state.gateway.worker_stats();
+                let aggregate = state.gateway.stats();
+                write_response(&mut stream, 200, "OK", &api::stats_json(&aggregate, &per_worker), keep)?;
             }
             ("GET", "/metrics") => {
                 http_metrics().metrics.inc();
@@ -625,16 +699,19 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState) -> Result<()> {
             }
             ("POST", _) | ("GET", _) => {
                 http_metrics().other.inc();
-                write_response(&mut stream, 404, "Not Found", &error_json("no such route"), keep)?;
+                let e = ErrorEnvelope::new(
+                    ErrorCode::NotFound,
+                    format!("no such route: {} {}", req.method, req.path),
+                );
+                write_error(&mut stream, &e, keep)?;
             }
             _ => {
-                write_response(
-                    &mut stream,
-                    405,
-                    "Method Not Allowed",
-                    &error_json("use GET/POST"),
-                    keep,
-                )?;
+                http_metrics().other.inc();
+                let e = ErrorEnvelope::new(
+                    ErrorCode::MethodNotAllowed,
+                    format!("method {} not allowed (use GET/POST)", req.method),
+                );
+                write_error(&mut stream, &e, keep)?;
             }
         }
         if !keep {
@@ -644,129 +721,53 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState) -> Result<()> {
     Ok(())
 }
 
-/// A parsed `/v1/generate` body.
-struct GenRequest {
-    req: Request,
-    stream: bool,
-}
-
-fn parse_generate(body: &[u8], state: &ServerState) -> Result<GenRequest> {
-    let j = Json::parse(std::str::from_utf8(body).context("body is not UTF-8")?)
-        .context("body is not valid JSON")?;
-
-    // prompt: either text (tokenized here) or explicit ids
-    let prompt_ids: Vec<i32> = if let Some(ids) = j.get("prompt_ids") {
-        ids.as_arr()?
-            .iter()
-            .map(|v| Ok(v.as_i64()? as i32))
-            .collect::<Result<_>>()?
-    } else {
-        let text = j
-            .get("prompt")
-            .ok_or_else(|| anyhow!("missing \"prompt\" (or \"prompt_ids\")"))?
-            .as_str()?;
-        if text.is_empty() {
-            bail!("empty prompt");
-        }
-        state.tokenizer.encode(text)
-    };
-    let cap = state.vocab as i32;
-    let prompt_ids: Vec<i32> = prompt_ids.into_iter().map(|t| t.rem_euclid(cap)).collect();
-
-    let max_new = match j.get("tokens") {
-        Some(v) => v.as_usize()?,
-        None => state.max_new_default,
-    };
-    let opts = SampleOpts {
-        temperature: j.get("temperature").map(|v| v.as_f64()).transpose()?.unwrap_or(0.8) as f32,
-        top_k: j.get("top_k").map(|v| v.as_usize()).transpose()?.unwrap_or(40),
-        seed: j.get("seed").map(|v| v.as_i64()).transpose()?.unwrap_or(0) as u64,
-    };
-    // "stop": [...] — each entry is either a string (tokenized here, the
-    // OpenAI-style stop sequence) or an integer token id (raw EOS id). An
-    // out-of-vocab id can never be sampled, so it is dropped (never-match)
-    // rather than wrapped into the vocab — wrapping would silently turn a
-    // foreign tokenizer's EOS into a real, spuriously-matching token.
-    let mut stop: Vec<Vec<i32>> = Vec::new();
-    if let Some(list) = j.get("stop") {
-        for entry in list.as_arr().context("\"stop\" must be an array")? {
-            let ids: Vec<i32> = match entry.as_str() {
-                Ok(text) => state.tokenizer.encode(text),
-                Err(_) => {
-                    let id =
-                        entry.as_i64().context("stop entries are strings or token ids")? as i32;
-                    if (0..cap).contains(&id) {
-                        vec![id]
-                    } else {
-                        vec![]
-                    }
-                }
-            };
-            if !ids.is_empty() {
-                stop.push(ids);
-            }
-        }
-    }
-    let stream = j.get("stream").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
-    Ok(GenRequest { req: Request { prompt: prompt_ids, max_new, opts, stop }, stream })
-}
-
-fn completion_json(c: &Completion, state: &ServerState) -> Json {
-    let text = state.tokenizer.decode(&c.tokens);
-    let n = c.tokens.len();
-    let tok_per_s = if c.decode_ms > 0.0 { n as f64 / (c.decode_ms / 1e3) } else { 0.0 };
-    let mut body = json_obj![
-        ("request_id", c.request_id as i64),
-        ("completion", text),
-        ("tokens", c.tokens.iter().map(|&t| Json::from(t as i64)).collect::<Vec<_>>()),
-        ("prompt_tokens", c.prompt_len),
-        ("finish_reason", c.finish_reason.as_str()),
-        ("queue_ms", c.queue_ms),
-        ("decode_ms", c.decode_ms),
-        ("tok_per_s", tok_per_s),
-    ];
-    // `ttft_ms` is omitted (not 0, not null) when no token was sampled, so
-    // latency aggregators never absorb a fake zero.
-    if let (Json::Obj(fields), Some(t)) = (&mut body, c.ttft_ms) {
-        fields.push(("ttft_ms".to_string(), t.into()));
-    }
-    body
-}
-
-fn write_submit_error(stream: &mut TcpStream, e: &anyhow::Error, keep: bool) -> Result<()> {
-    let msg = e.to_string();
-    if msg.contains("admission queue full") {
-        write_response(stream, 503, "Service Unavailable", &error_json(&msg), keep)
-    } else {
-        write_response(stream, 400, "Bad Request", &error_json(&msg), keep)
-    }
-}
-
 fn handle_generate(
     stream: &mut TcpStream,
     body: &[u8],
     state: &ServerState,
     keep: bool,
 ) -> Result<()> {
-    let greq = match parse_generate(body, state) {
+    // Parse (shape) then resolve (bind to the model) — both failure modes
+    // are the client's, both answer 400 envelopes.
+    let parsed = match GenerateRequest::parse(body) {
         Ok(g) => g,
         Err(e) => {
-            return write_response(stream, 400, "Bad Request", &error_json(&e.to_string()), keep)
+            return write_error(
+                stream,
+                &ErrorEnvelope::new(ErrorCode::BadRequest, e.to_string()),
+                keep,
+            )
         }
     };
-    if greq.stream {
-        match state.batcher.try_submit_streaming_with_id(greq.req) {
-            Ok((req_id, rx)) => stream_sse(stream, req_id, rx, state, keep),
-            Err(e) => write_submit_error(stream, &e, keep),
+    let req = match parsed.resolve(&state.tokenizer, state.vocab, state.cfg.max_new_default) {
+        Ok(r) => r,
+        Err(e) => {
+            return write_error(
+                stream,
+                &ErrorEnvelope::new(ErrorCode::BadRequest, e.to_string()),
+                keep,
+            )
+        }
+    };
+    if parsed.stream {
+        match state.gateway.try_submit_streaming(req) {
+            Ok(placed) => stream_sse(stream, placed, state, keep),
+            Err(e) => write_error(stream, &ErrorEnvelope::from_submit(e), keep),
         }
     } else {
-        let completion = match state.batcher.try_submit(greq.req) {
-            Ok(rx) => rx.recv().map_err(|_| anyhow!("batcher dropped the request")),
-            Err(e) => Err(e),
-        };
-        match completion {
-            Ok(c) => write_response(stream, 200, "OK", &completion_json(&c, state), keep),
-            Err(e) => write_submit_error(stream, &e, keep),
+        match state.gateway.try_submit(req) {
+            Ok(placed) => match placed.rx.recv() {
+                Ok(c) => {
+                    let doc = GenerateResponse::new(&c, &state.tokenizer, placed.worker);
+                    write_response(stream, 200, "OK", &doc.to_json(), keep)
+                }
+                Err(_) => write_error(
+                    stream,
+                    &ErrorEnvelope::new(ErrorCode::Internal, "scheduler dropped the request"),
+                    keep,
+                ),
+            },
+            Err(e) => write_error(stream, &ErrorEnvelope::from_submit(e), keep),
         }
     }
 }
@@ -779,8 +780,7 @@ fn handle_generate(
 /// its next token.
 fn stream_sse(
     stream: &mut TcpStream,
-    req_id: u64,
-    rx: Receiver<StreamEvent>,
+    placed: Placed<StreamEvent>,
     state: &ServerState,
     keep: bool,
 ) -> Result<()> {
@@ -796,39 +796,21 @@ fn stream_sse(
     stream.flush()?;
     let mut index = 0usize;
     let mut finished = false;
-    for ev in rx {
+    let worker = placed.worker;
+    let req_id = placed.request_id;
+    for ev in &placed.rx {
         match ev {
             StreamEvent::Token(t) => {
                 // Per-token text is a best-effort lossy decode (a token that
                 // splits a multi-byte character renders as U+FFFD); the
                 // terminal frame carries the full, correctly-decoded text.
-                let frame = json_obj![
-                    ("request_id", req_id as i64),
-                    ("token", t as i64),
-                    ("index", index),
-                    ("text", state.tokenizer.decode(&[t])),
-                ];
+                let frame = api::sse_token_json(req_id, t, index, &state.tokenizer.decode(&[t]));
                 write_sse_frame(stream, &frame)?;
                 index += 1;
             }
             StreamEvent::Done(c) => {
-                let n = c.tokens.len();
-                let tok_per_s =
-                    if c.decode_ms > 0.0 { n as f64 / (c.decode_ms / 1e3) } else { 0.0 };
-                let mut frame = json_obj![
-                    ("request_id", c.request_id as i64),
-                    ("done", true),
-                    ("completion", state.tokenizer.decode(&c.tokens)),
-                    ("prompt_tokens", c.prompt_len),
-                    ("finish_reason", c.finish_reason.as_str()),
-                    ("queue_ms", c.queue_ms),
-                    ("decode_ms", c.decode_ms),
-                    ("tok_per_s", tok_per_s),
-                ];
-                if let (Json::Obj(fields), Some(t)) = (&mut frame, c.ttft_ms) {
-                    fields.push(("ttft_ms".to_string(), t.into()));
-                }
-                write_sse_frame(stream, &frame)?;
+                let doc = GenerateResponse::new(&c, &state.tokenizer, worker);
+                write_sse_frame(stream, &doc.to_sse_done_json())?;
                 finished = true;
                 break;
             }
@@ -855,6 +837,7 @@ mod tests {
         let engine = Engine::new(SpectralModel::init(cfg, 0));
         let serve_cfg = ServeConfig {
             addr: "127.0.0.1:0".into(),
+            workers: 1,
             slots,
             queue_depth: queue,
             max_new_default: 8,
@@ -874,13 +857,20 @@ mod tests {
         let (code, body) = http_get_json(srv.addr, "/healthz").unwrap();
         assert_eq!(code, 200);
         assert_eq!(body.get("status").unwrap().as_str().unwrap(), "ok");
+        assert_eq!(body.get("workers").unwrap().as_usize().unwrap(), 1);
         assert_eq!(body.get("prefill_chunk").unwrap().as_usize().unwrap(), 4);
         let (code, body) = http_get_json(srv.addr, "/v1/stats").unwrap();
         assert_eq!(code, 200);
+        // flat aggregate fields: the pre-gateway schema, still present
         assert_eq!(body.get("admitted").unwrap().as_i64().unwrap(), 0);
         assert_eq!(body.get("prefill_tokens").unwrap().as_i64().unwrap(), 0);
         assert_eq!(body.get("queue_depth").unwrap().as_i64().unwrap(), 0);
         assert_eq!(body.get("active_slots").unwrap().as_i64().unwrap(), 0);
+        // versioned addition: one snapshot per worker
+        let workers = body.get("workers").unwrap().as_arr().unwrap();
+        assert_eq!(workers.len(), 1);
+        assert_eq!(workers[0].get("worker").unwrap().as_i64().unwrap(), 0);
+        assert_eq!(workers[0].get("admitted").unwrap().as_i64().unwrap(), 0);
         srv.stop();
     }
 
@@ -916,6 +906,7 @@ mod tests {
         assert_eq!(a.get("prompt_tokens").unwrap().as_usize().unwrap(), 8);
         assert!(a.get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
         assert!(a.get("request_id").unwrap().as_i64().unwrap() > 0);
+        assert_eq!(a.get("worker").unwrap().as_i64().unwrap(), 0, "single-worker gateway");
         let (_, b) = http_post_json(srv.addr, "/v1/generate", req).unwrap();
         assert_eq!(
             a.get("tokens").unwrap(),
@@ -959,28 +950,46 @@ mod tests {
         srv.stop();
     }
 
+    /// Assert a response body is a well-formed [`ErrorEnvelope`] document.
+    fn assert_envelope(body: &Json, code: &str) {
+        assert_eq!(body.get("code").unwrap().as_str().unwrap(), code, "body: {body:?}");
+        assert!(!body.get("message").unwrap().as_str().unwrap().is_empty());
+        assert!(body.get("request_id").unwrap().as_i64().unwrap() > 0);
+    }
+
     #[test]
-    fn bad_requests_get_4xx() {
+    fn bad_requests_get_enveloped_4xx() {
         let srv = test_server(1, 2);
-        let (code, _) = http_post_json(srv.addr, "/v1/generate", "{not json").unwrap();
+        let (code, body) = http_post_json(srv.addr, "/v1/generate", "{not json").unwrap();
         assert_eq!(code, 400);
-        let (code, _) = http_post_json(srv.addr, "/v1/generate", r#"{"tokens": 4}"#).unwrap();
+        assert_envelope(&body, "bad_request");
+        let (code, body) = http_post_json(srv.addr, "/v1/generate", r#"{"tokens": 4}"#).unwrap();
         assert_eq!(code, 400, "missing prompt");
-        let (code, _) = http_get_json(srv.addr, "/nope").unwrap();
+        assert_envelope(&body, "bad_request");
+        let (code, body) = http_get_json(srv.addr, "/nope").unwrap();
         assert_eq!(code, 404);
+        assert_envelope(&body, "not_found");
+        let (code, body) = http_roundtrip(
+            srv.addr,
+            "DELETE /v1/generate HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+        )
+        .unwrap();
+        assert_eq!(code, 405);
+        assert_envelope(&body, "method_not_allowed");
         srv.stop();
     }
 
     #[test]
-    fn oversized_body_is_rejected() {
+    fn oversized_body_is_rejected_with_413() {
         let srv = test_server(1, 2);
         // Declared Content-Length beyond the cap: refused before allocation.
         let raw = format!(
             "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
             MAX_BODY_BYTES + 1
         );
-        let (code, _) = http_roundtrip(srv.addr, &raw).unwrap();
-        assert_eq!(code, 400);
+        let (code, body) = http_roundtrip(srv.addr, &raw).unwrap();
+        assert_eq!(code, 413);
+        assert_envelope(&body, "payload_too_large");
         srv.stop();
     }
 

@@ -106,6 +106,7 @@ pub fn dsilu(x: f32) -> f32 {
 
 /// Precomputed rotary-position tables, applied head-major: within each head
 /// the pair `(row[j], row[j + head_dim/2])` rotates by the position's angle.
+#[derive(Clone)]
 pub struct Rope {
     cos: Matrix,
     sin: Matrix,

@@ -1,7 +1,8 @@
 //! End-to-end tests of the `serve` subsystem: a real TCP server, concurrent
 //! HTTP clients, SSE streaming vs one-shot equivalence, chunked-prefill
-//! fairness, and the KV-cache-vs-re-encode equivalence through the public
-//! API. Pure std — no PJRT, no artifacts.
+//! fairness, sharded (multi-worker) serving determinism, the uniform error
+//! envelope on every failure route, and the KV-cache-vs-re-encode
+//! equivalence through the public API. Pure std — no PJRT, no artifacts.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
@@ -10,9 +11,10 @@ use std::time::Duration;
 
 use sct::data::Tokenizer;
 use sct::serve::{
-    http_get_json, http_post_json, http_post_sse, BatchConfig, Batcher, Engine, EngineConfig,
-    Request, SampleOpts, ServeConfig, Server, SpectralModel, StreamEvent,
+    http_get_json, http_get_text, http_post_json, http_post_sse, BatchConfig, Batcher, Engine,
+    EngineConfig, Request, SampleOpts, ServeConfig, Server, SpectralModel, StreamEvent,
 };
+use sct::util::json::Json;
 
 fn tiny_engine(seed: u64) -> Engine {
     let cfg = EngineConfig {
@@ -28,15 +30,22 @@ fn tiny_engine(seed: u64) -> Engine {
     Engine::new(SpectralModel::init(cfg, seed))
 }
 
-fn start_server(slots: usize, queue: usize) -> Server {
+fn start_server_workers(workers: usize, slots: usize, queue: usize) -> Server {
+    // `workers` is explicit (not `..default()`) so a stray SCT_WORKERS in
+    // the test environment cannot change the topology under test.
     let cfg = ServeConfig {
         addr: "127.0.0.1:0".into(),
+        workers,
         slots,
         queue_depth: queue,
         max_new_default: 8,
         ..ServeConfig::default()
     };
     Server::start(&cfg, tiny_engine(42), Tokenizer::byte_level()).unwrap()
+}
+
+fn start_server(slots: usize, queue: usize) -> Server {
+    start_server_workers(1, slots, queue)
 }
 
 #[test]
@@ -121,14 +130,27 @@ fn overload_returns_503_not_a_hang() {
                 let body = format!(
                     r#"{{"prompt": "burst {i}", "tokens": 30, "temperature": 0}}"#
                 );
-                http_post_json(addr, "/v1/generate", &body).unwrap().0
+                http_post_json(addr, "/v1/generate", &body).unwrap()
             })
         })
         .collect();
-    let codes: Vec<u16> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let responses: Vec<(u16, Json)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let codes: Vec<u16> = responses.iter().map(|r| r.0).collect();
     assert!(codes.iter().all(|&c| c == 200 || c == 503), "codes: {codes:?}");
     assert!(codes.contains(&200), "at least one request must be served: {codes:?}");
+    for (code, body) in &responses {
+        if *code == 503 {
+            assert_envelope(body, "queue_full");
+        }
+    }
     srv.stop();
+}
+
+/// Assert a response body is a well-formed error envelope with this code.
+fn assert_envelope(body: &Json, code: &str) {
+    assert_eq!(body.get("code").unwrap().as_str().unwrap(), code, "body: {body:?}");
+    assert!(!body.get("message").unwrap().as_str().unwrap().is_empty());
+    assert!(body.get("request_id").unwrap().as_i64().unwrap() > 0, "errors carry request ids");
 }
 
 #[test]
@@ -270,7 +292,7 @@ fn chunked_prefill_keeps_active_decodes_responsive() {
     };
     let b = Batcher::spawn_with(
         Engine::new(SpectralModel::init(cfg, 0)),
-        BatchConfig { slots: 2, queue_depth: 4, prefill_chunk: 8 },
+        BatchConfig { slots: 2, queue_depth: 4, prefill_chunk: 8, ..BatchConfig::default() },
     );
     let greedy = SampleOpts { temperature: 0.0, top_k: 0, seed: 0 };
 
@@ -315,4 +337,145 @@ fn chunked_prefill_keeps_active_decodes_responsive() {
     assert!(b.stats().prefill_tokens() >= 511);
     drop(rxa);
     drop(rxb);
+}
+
+#[test]
+fn t0_output_is_byte_identical_at_workers_1_and_2() {
+    // The sharding acceptance criterion, end to end over HTTP: the same
+    // fixed prompt at temperature 0 returns byte-identical completion text
+    // (and token ids) from a 1-worker and a 2-worker server, for every
+    // request of a concurrent burst — placement must be invisible in the
+    // output.
+    let body = r#"{"prompt": "sharding determinism probe", "tokens": 12, "temperature": 0}"#;
+
+    let solo = start_server_workers(1, 2, 16);
+    let (code, baseline) = http_post_json(solo.addr, "/v1/generate", body).unwrap();
+    assert_eq!(code, 200, "baseline: {baseline:?}");
+    solo.stop();
+    let base_text = baseline.get("completion").unwrap().as_str().unwrap().to_string();
+    let base_tokens = baseline.get("tokens").unwrap().clone();
+
+    let sharded = start_server_workers(2, 2, 16);
+    let addr = sharded.addr;
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            std::thread::spawn(move || {
+                http_post_json(
+                    addr,
+                    "/v1/generate",
+                    r#"{"prompt": "sharding determinism probe", "tokens": 12, "temperature": 0}"#,
+                )
+                .unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let (code, resp) = h.join().unwrap();
+        assert_eq!(code, 200, "resp: {resp:?}");
+        assert_eq!(
+            resp.get("completion").unwrap().as_str().unwrap(),
+            base_text,
+            "completion text must not depend on worker count or placement"
+        );
+        assert_eq!(resp.get("tokens").unwrap(), &base_tokens);
+        let worker = resp.get("worker").unwrap().as_i64().unwrap();
+        assert!((0..2).contains(&worker), "worker index on a 2-worker gateway: {worker}");
+    }
+
+    // the versioned stats document accounts for every request, per worker
+    let (code, stats) = http_get_json(addr, "/v1/stats").unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(stats.get("admitted").unwrap().as_i64().unwrap(), 8, "flat aggregate");
+    let workers = stats.get("workers").unwrap().as_arr().unwrap();
+    assert_eq!(workers.len(), 2);
+    let per_worker: i64 =
+        workers.iter().map(|w| w.get("admitted").unwrap().as_i64().unwrap()).sum();
+    assert_eq!(per_worker, 8, "per-worker snapshots sum to the aggregate");
+    sharded.stop();
+}
+
+#[test]
+fn sharded_server_exposes_per_worker_metric_series() {
+    let srv = start_server_workers(2, 2, 8);
+    let (code, _) = http_post_json(
+        srv.addr,
+        "/v1/generate",
+        r#"{"prompt": "label probe", "tokens": 3, "temperature": 0}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 200);
+    let (code, text) = http_get_text(srv.addr, "/metrics").unwrap();
+    assert_eq!(code, 200);
+    // Both workers register their label set at spawn, so the worker="1"
+    // series exists even if placement never reached worker 1 here.
+    for series in [
+        "sct_serve_requests_total{worker=\"0\"}",
+        "sct_serve_requests_total{worker=\"1\"}",
+        "sct_serve_tokens_out_total{worker=\"0\"}",
+        "sct_serve_tokens_out_total{worker=\"1\"}",
+        "sct_serve_queue_depth{worker=\"0\"}",
+        "sct_serve_queue_depth{worker=\"1\"}",
+    ] {
+        assert!(text.contains(series), "missing per-worker series {series}");
+    }
+    srv.stop();
+}
+
+#[test]
+fn every_error_path_returns_the_envelope() {
+    let srv = start_server(1, 2);
+    // 400: malformed JSON body
+    let (code, body) = http_post_json(srv.addr, "/v1/generate", "{nope").unwrap();
+    assert_eq!(code, 400);
+    assert_envelope(&body, "bad_request");
+    // 400: shape-valid JSON missing the prompt
+    let (code, body) = http_post_json(srv.addr, "/v1/generate", r#"{"seed": 1}"#).unwrap();
+    assert_eq!(code, 400);
+    assert_envelope(&body, "bad_request");
+    // 404: unknown route
+    let (code, body) = http_get_json(srv.addr, "/v2/unknown").unwrap();
+    assert_eq!(code, 404);
+    assert_envelope(&body, "not_found");
+    // 405: unknown method
+    let (code, body) = sct::serve::http_roundtrip(
+        srv.addr,
+        "PUT /v1/generate HTTP/1.1\r\nHost: t\r\nConnection: close\r\nContent-Length: 0\r\n\r\n",
+    )
+    .unwrap();
+    assert_eq!(code, 405);
+    assert_envelope(&body, "method_not_allowed");
+    // 413: declared body beyond the 1 MiB cap
+    let (code, body) = sct::serve::http_roundtrip(
+        srv.addr,
+        &format!(
+            "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+            (1 << 20) + 1
+        ),
+    )
+    .unwrap();
+    assert_eq!(code, 413);
+    assert_envelope(&body, "payload_too_large");
+    srv.stop();
+}
+
+#[test]
+fn error_responses_carry_json_content_type() {
+    // The envelope is only machine-readable if the headers say it is JSON:
+    // read an error response raw off the socket and check its head.
+    let srv = start_server(1, 2);
+    let mut conn = TcpStream::connect(srv.addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    conn.write_all(b"GET /no/such/route HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let mut text = String::new();
+    BufReader::new(conn).read_to_string(&mut text).unwrap();
+    let (head, payload) = text.split_once("\r\n\r\n").expect("head/body split");
+    assert!(head.starts_with("HTTP/1.1 404 Not Found"), "head: {head:?}");
+    assert!(
+        head.to_ascii_lowercase().contains("content-type: application/json"),
+        "error responses must declare application/json, head: {head:?}"
+    );
+    let body = Json::parse(payload).expect("error body must parse as JSON");
+    assert_envelope(&body, "not_found");
+    srv.stop();
 }

@@ -73,9 +73,10 @@ run_bench() {
     export SCT_THREADS="${SCT_THREADS:-2}"
     echo "== tier1: bench smoke with SCT_THREADS=$SCT_THREADS =="
 
-    echo "== tier1: serve bench smoke (BENCH_serve.json) =="
+    echo "== tier1: serve bench smoke (BENCH_serve.json, gateway --workers 2) =="
     rm -f "$repo_root/traces.jsonl" # the trace sink appends; start clean
     cargo bench --bench serve_throughput -- --smoke \
+        --workers 2 \
         --json "$repo_root/BENCH_serve.json" \
         --metrics-dump "$repo_root/BENCH_metrics.prom" \
         --trace-out "$repo_root/traces.jsonl"
@@ -96,6 +97,18 @@ run_bench() {
         sct_http_requests_total; do
         if ! grep -q "^$series" "$repo_root/BENCH_metrics.prom"; then
             echo "tier1: mandatory series $series missing from BENCH_metrics.prom" >&2
+            exit 1
+        fi
+    done
+    # Sharded serving: every per-worker scheduler labels its series, and the
+    # --workers 2 run above must have registered both label sets.
+    for series in \
+        'sct_serve_requests_total{worker="0"}' \
+        'sct_serve_requests_total{worker="1"}' \
+        'sct_serve_tokens_out_total{worker="0"}' \
+        'sct_serve_tokens_out_total{worker="1"}'; do
+        if ! grep -qF "$series" "$repo_root/BENCH_metrics.prom"; then
+            echo "tier1: mandatory worker-labeled series $series missing from BENCH_metrics.prom" >&2
             exit 1
         fi
     done
