@@ -9,12 +9,19 @@
 //! baseline.
 //!
 //! Run: `cargo bench --bench kernel_scaling`
-//! Flags: `--smoke` (small shapes, CI mode; also via `SCT_BENCH_SMOKE`) and
-//! `--json PATH` (write `BENCH_kernels.json` for the CI base-branch diff).
+//! Flags: `--smoke` (small shapes, CI mode; also via `SCT_BENCH_SMOKE`),
+//! `--json PATH` (write `BENCH_kernels.json` for the CI base-branch diff),
+//! and `--profile-json PATH` (run the `obs::prof` roofline pass — native
+//! train steps at ranks 32 and 128, profiler on — and write per-kernel
+//! achieved GFLOP/s + arithmetic intensity there, plus collapsed flamegraph
+//! stacks at the sibling `.folded` path; the profile pass runs at both
+//! ranks even in smoke mode, CI gates on the mandatory kernels being
+//! present).
 
 use std::time::Instant;
 
 use sct::json_obj;
+use sct::obs::prof;
 use sct::serve::{Engine, EngineConfig, SampleOpts, SpectralModel};
 use sct::spectral::{Matrix, SpectralLinear};
 use sct::train::blocks::causal_attention_fwd_batched;
@@ -73,6 +80,87 @@ const SMOKE: Workload = Workload {
     decode_tokens: 24,
 };
 
+/// Roofline pass: profiler on, a few full native train steps at ranks 32
+/// and 128 (always both, even in smoke — CI gates on these rows), then per-
+/// kernel achieved GFLOP/s / arithmetic intensity against the calibrated
+/// machine peak, written as `BENCH_profile.json` plus collapsed flamegraph
+/// stacks at the sibling `.folded` path.
+fn run_profile_pass(w: &Workload, path: &str) {
+    let peak = prof::machine_peak_gflops();
+    println!("\nprofile pass (machine peak {peak:.2} GFLOP/s):");
+    let mut rank_docs: Vec<Json> = Vec::new();
+    let mut folded = String::new();
+    for &rank in &[32usize, 128] {
+        let cfg = NativeTrainConfig {
+            model: EngineConfig {
+                vocab: 256,
+                d_model: w.d_model.max(rank),
+                n_layers: 2,
+                n_heads: w.n_heads,
+                d_ffn: w.d_ffn.max(rank),
+                rank,
+                max_seq: w.seq_len.max(2),
+                tied: true,
+            },
+            batch: w.batch,
+            seq_len: w.seq_len,
+            grad_clip: 1.0,
+            retract_every: 1,
+            weight_decay: 0.0,
+        };
+        let window = w.batch * (w.seq_len + 1);
+        let mut trainer = NativeTrainer::new(cfg, 0);
+        let mut rng = Rng::new(7);
+        prof::reset();
+        prof::enable();
+        {
+            // One static root per rank so the concatenated .folded keeps the
+            // two passes' stacks distinguishable.
+            let _root = prof::scope(if rank == 32 { "profile_r32" } else { "profile_r128" });
+            for _ in 0..w.steps.max(2) {
+                let b: Vec<i32> = (0..window).map(|_| rng.below(256) as i32).collect();
+                trainer.train_step(&b, 5e-4, 5e-4);
+            }
+        }
+        prof::disable();
+        let report = prof::snapshot();
+        folded.push_str(&report.render_folded());
+        let kernels: Vec<Json> = report
+            .kernel_stats()
+            .iter()
+            .map(|k| {
+                println!(
+                    "  r{rank} {:<14} {:>7.2} GFLOP/s  {:>6.3} FLOP/byte  {:>5.1}% peak",
+                    k.name,
+                    k.gflops(),
+                    k.intensity(),
+                    100.0 * k.gflops() / peak,
+                );
+                json_obj![
+                    ("kernel", k.name),
+                    ("calls", k.calls as i64),
+                    ("self_ms", k.self_ns as f64 / 1e6),
+                    ("flops", k.flops),
+                    ("bytes", k.bytes),
+                    ("gflops", k.gflops()),
+                    ("intensity", k.intensity()),
+                    ("peak_fraction", k.gflops() / peak),
+                ]
+            })
+            .collect();
+        rank_docs.push(json_obj![("rank", rank), ("kernels", kernels)]);
+    }
+    let doc = json_obj![
+        ("bench", "kernel_scaling_profile"),
+        ("machine_peak_gflops", peak),
+        ("ranks", rank_docs),
+    ];
+    std::fs::write(path, doc.to_string()).expect("writing profile JSON");
+    let folded_path = std::path::Path::new(path).with_extension("folded");
+    std::fs::write(&folded_path, folded).expect("writing profile folded stacks");
+    println!("wrote {path} and {}", folded_path.display());
+}
+
 /// Median-free simple timer: warmup once, then average `iters` runs.
 fn time_ms<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
     for _ in 0..warmup {
@@ -90,6 +178,10 @@ fn main() {
     let smoke = argv.iter().any(|a| a == "--smoke") || std::env::var("SCT_BENCH_SMOKE").is_ok();
     let json_path =
         argv.iter().position(|a| a == "--json").and_then(|i| argv.get(i + 1).cloned());
+    let profile_path = argv
+        .iter()
+        .position(|a| a == "--profile-json")
+        .and_then(|i| argv.get(i + 1).cloned());
     let w = if smoke { SMOKE } else { FULL };
 
     println!(
@@ -245,6 +337,10 @@ fn main() {
     }
 
     pool::set_threads(1);
+
+    if let Some(path) = profile_path {
+        run_profile_pass(&w, &path);
+    }
 
     if let Some(path) = json_path {
         let doc = json_obj![

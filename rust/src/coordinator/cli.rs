@@ -163,8 +163,33 @@ fn base_config(args: &Args) -> Result<RunConfig> {
         cfg.obs.metrics_out = Some(p.to_string());
     }
     cfg.obs.metrics_every = args.parse_num("metrics-every", cfg.obs.metrics_every)?.max(1);
+    if let Some(p) = args.get("profile-out") {
+        cfg.obs.profile_out = Some(p.to_string());
+    }
     cfg.obs.apply_log_level();
     Ok(cfg)
+}
+
+/// Turn the profiler on when `--profile-out` / `[obs] profile_out` asked for
+/// a report. Call before the run starts; pair with [`write_profile`].
+fn start_profile(obs: &super::config::ObsConfig) {
+    if obs.profile_out.is_some() {
+        crate::obs::prof::enable();
+    }
+}
+
+/// Persist the profiler report (JSON + sibling `.folded` collapsed stacks)
+/// and log the top of the phase/kernel table. No-op without `profile_out`.
+fn write_profile(obs: &super::config::ObsConfig) -> Result<()> {
+    if let Some(path) = &obs.profile_out {
+        let report = crate::obs::prof::write_report(std::path::Path::new(path))?;
+        sct_info!(
+            "profile: wrote {path} (+ {}):\n{}",
+            std::path::Path::new(path).with_extension("folded").display(),
+            report.render_table(8)
+        );
+    }
+    Ok(())
 }
 
 fn train_cmd_spec() -> Command {
@@ -221,6 +246,12 @@ fn train_cmd_spec() -> Command {
             "metrics-every",
             "snapshot cadence in optimizer steps, with --metrics-out \
              (TOML: [obs] metrics_every) [default: 10]",
+        )
+        .opt(
+            "profile-out",
+            "enable the phase/kernel profiler and write its report here as \
+             JSON, plus collapsed flamegraph stacks at the sibling .folded \
+             path (TOML: [obs] profile_out)",
         )
         .flag("untied", "untied LM head, native backend (default tied)")
         .flag("no-chunk", "dispatch per-step instead of fused K-step chunks (pjrt)")
@@ -281,11 +312,14 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let spec = train_cmd_spec();
     let args = spec.parse(argv)?;
     let cfg = base_config(&args)?;
+    start_profile(&cfg.obs);
+    let obs = cfg.obs.clone();
     match cfg.backend.as_str() {
-        "native" => cmd_train_native(cfg, args.flag("resume")),
-        "pjrt" => cmd_train_pjrt(cfg, args.flag("resume")),
+        "native" => cmd_train_native(cfg, args.flag("resume"))?,
+        "pjrt" => cmd_train_pjrt(cfg, args.flag("resume"))?,
         other => bail!("unknown train backend {other:?} (expected \"pjrt\" or \"native\")"),
     }
+    write_profile(&obs)
 }
 
 /// `sct train --backend native` — the pure-Rust training engine: shared
@@ -337,6 +371,11 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         .opt("out", "output dir")
         .opt_default("ranks", "comma-separated spectral ranks, native backend", "4,8,16,32")
         .opt("threads", "worker-pool threads for the parallel kernels (0 = auto)")
+        .opt(
+            "profile-out",
+            "enable the phase/kernel profiler across the whole sweep and \
+             write its report here (JSON + sibling .folded)",
+        )
         .flag("split-lr", "per-component LRs, pjrt backend (the paper's §5 proposal)")
         .flag("quick", "small steps count for smoke runs");
     let args = spec.parse(argv)?;
@@ -344,6 +383,8 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
     if args.flag("quick") {
         cfg.steps = 40;
     }
+    start_profile(&cfg.obs);
+    let obs = cfg.obs.clone();
     match cfg.backend.as_str() {
         "native" => {
             // opt_default guarantees the value exists; req avoids a second
@@ -358,11 +399,12 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
                 })
                 .collect::<Result<Vec<usize>>>()?;
             let result = sweep::run_sweep_native(&cfg, &ranks)?;
-            report_sweep(&result, &cfg)
+            report_sweep(&result, &cfg)?
         }
-        "pjrt" => cmd_sweep_pjrt(cfg, args.flag("split-lr")),
+        "pjrt" => cmd_sweep_pjrt(cfg, args.flag("split-lr"))?,
         other => bail!("unknown sweep backend {other:?} (expected \"pjrt\" or \"native\")"),
     }
+    write_profile(&obs)
 }
 
 /// Shared tail of both sweep backends: tables, figures, observation
@@ -640,6 +682,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "append one JSON span record per request to this path \
              (TOML: [obs] trace_out)",
         )
+        .opt(
+            "profile-out",
+            "enable the phase/kernel profiler (live snapshots at GET \
+             /v1/profile) and write the final report here on shutdown \
+             (JSON + sibling .folded; TOML: [obs] profile_out)",
+        )
         .opt_default("seed", "weight-init / tokenizer seed", "0")
         .opt_default("vocab", "vocab size (random-init model)", "256")
         .opt_default("d-model", "model width (random-init model)", "64")
@@ -679,6 +727,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if let Some(path) = &obs_cfg.trace_out {
         trace::install_file(std::path::Path::new(path))?;
         sct_info!("tracing request spans to {path}");
+    }
+    if let Some(path) = args.get("profile-out") {
+        obs_cfg.profile_out = Some(path.to_string());
+    }
+    start_profile(&obs_cfg);
+    if let Some(path) = &obs_cfg.profile_out {
+        sct_info!("profiling enabled; report goes to {path} on shutdown (live: GET /v1/profile)");
     }
     if let Some(a) = args.get("addr") {
         serve_cfg.addr = a.to_string();
@@ -724,7 +779,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         "serving on http://{}  (workers={}, slots={}/worker, queue={}/worker, \
          prefill_chunk={}, keep_alive_ms={})\n\
          routes: POST /v1/generate (\"stream\": true => SSE, one data: frame per \
-         token), GET /healthz, GET /v1/stats, GET /metrics",
+         token), GET /healthz, GET /v1/stats, GET /metrics, GET /v1/profile, \
+         GET /v1/version",
         server.addr,
         serve_cfg.workers,
         serve_cfg.slots,
@@ -733,7 +789,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         serve_cfg.keep_alive_ms,
     );
     server.join();
-    Ok(())
+    write_profile(&obs_cfg)
 }
 
 fn cmd_mem_report(argv: &[String]) -> Result<()> {

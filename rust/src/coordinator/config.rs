@@ -26,7 +26,10 @@
 //! (overrides `SCT_LOG`); `metrics_out` — path for registry JSONL snapshots
 //! during training (`--metrics-out`); `metrics_every` — snapshot cadence in
 //! optimizer steps (`--metrics-every`, default 10); `trace_out` — path for
-//! per-request span records during serving (`--trace-out`).
+//! per-request span records during serving (`--trace-out`); `profile_out` —
+//! path for the profiler report (`--profile-out`; enables
+//! [`crate::obs::prof`] for the run and writes JSON plus a sibling `.folded`
+//! flamegraph file at the end).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -201,11 +204,20 @@ pub struct ObsConfig {
     pub metrics_every: usize,
     /// Path for per-request span records (JSONL) during serving.
     pub trace_out: Option<String>,
+    /// Path for the profiler report: enables `obs::prof` for the run and
+    /// writes JSON there (plus `<path>.folded` collapsed stacks) at the end.
+    pub profile_out: Option<String>,
 }
 
 impl Default for ObsConfig {
     fn default() -> ObsConfig {
-        ObsConfig { log_level: None, metrics_out: None, metrics_every: 10, trace_out: None }
+        ObsConfig {
+            log_level: None,
+            metrics_out: None,
+            metrics_every: 10,
+            trace_out: None,
+            profile_out: None,
+        }
     }
 }
 
@@ -230,6 +242,9 @@ impl ObsConfig {
         }
         if let Some(v) = o.get("trace_out") {
             self.trace_out = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = o.get("profile_out") {
+            self.profile_out = Some(v.as_str()?.to_string());
         }
         Ok(())
     }
@@ -713,15 +728,18 @@ log_level = "debug"
 metrics_out = "runs/metrics.jsonl"
 metrics_every = 5
 trace_out = "traces.jsonl"
+profile_out = "profile.json"
 "#;
         let mut cfg = RunConfig::default();
         assert_eq!(cfg.obs, ObsConfig::default());
         assert_eq!(cfg.obs.metrics_every, 10, "default cadence");
+        assert_eq!(cfg.obs.profile_out, None, "profiling is off by default");
         cfg.apply_toml(&parse_toml(text).unwrap()).unwrap();
         assert_eq!(cfg.obs.log_level.as_deref(), Some("debug"));
         assert_eq!(cfg.obs.metrics_out.as_deref(), Some("runs/metrics.jsonl"));
         assert_eq!(cfg.obs.metrics_every, 5);
         assert_eq!(cfg.obs.trace_out.as_deref(), Some("traces.jsonl"));
+        assert_eq!(cfg.obs.profile_out.as_deref(), Some("profile.json"));
         // unknown level name is an error, not a silent skip
         let doc = parse_toml("[obs]\nlog_level = \"loud\"\n").unwrap();
         assert!(cfg.apply_toml(&doc).is_err());

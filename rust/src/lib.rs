@@ -49,9 +49,14 @@
 //!   lock-free counters/gauges/log-bucketed histograms with Prometheus text
 //!   exposition (`GET /metrics`, `sct train --metrics-out` JSONL), per-request
 //!   span tracing (`traces.jsonl`, request ids in SSE frames and
-//!   `/v1/generate` responses), and the leveled `SCT_LOG`/`--log-level`
-//!   logger behind `sct_info!`-family macros. Instruments serve, pool, train
-//!   and rank without touching the sequential hot paths.
+//!   `/v1/generate` responses, gateway→worker→prefill→decode span trees
+//!   linked by parent ids), the leveled `SCT_LOG`/`--log-level` logger
+//!   behind `sct_info!`-family macros, and the `obs::prof` performance
+//!   profiler (`--profile-out`, `GET /v1/profile`): a hierarchical
+//!   phase/kernel tree with per-kernel FLOP + byte work models, roofline
+//!   accounting against a calibrated machine peak, and flamegraph `.folded`
+//!   export. Instruments serve, pool, train and rank without touching the
+//!   sequential hot paths; profiling off is one relaxed atomic load.
 //! * [`checkpoint`] — binary checkpoint format for spectral factors (shared
 //!   by training sessions and serve models).
 //! * [`util`] — in-tree substrates that would normally be crates (args,

@@ -125,6 +125,41 @@ impl Histogram {
     pub fn bucket_counts(&self) -> [u64; HIST_BUCKETS] {
         std::array::from_fn(|i| self.0.buckets[i].load(Ordering::Relaxed))
     }
+
+    /// Estimated `q`-quantile (`0.0..=1.0`) interpolated from the log-spaced
+    /// buckets (see [`quantile_from_buckets`]). `0.0` with no samples.
+    pub fn quantile(&self, q: f64) -> f64 {
+        quantile_from_buckets(&self.bucket_counts(), q)
+    }
+}
+
+/// Estimate the `q`-quantile of a sample set from its log2-bucketed counts:
+/// find the bucket holding the target rank and interpolate linearly inside
+/// it. Resolution is therefore the bucket width (a factor of 2); the `+Inf`
+/// overflow bucket reports its lower bound. Returns `0.0` for an empty set.
+pub fn quantile_from_buckets(counts: &[u64; HIST_BUCKETS], q: f64) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        if cum + c >= target {
+            let lo = if i == 0 { 0.0 } else { bucket_upper_bound(i - 1) };
+            let hi = bucket_upper_bound(i);
+            if hi.is_infinite() {
+                return lo;
+            }
+            let frac = (target - cum) as f64 / c as f64;
+            return lo + (hi - lo) * frac;
+        }
+        cum += c;
+    }
+    0.0
 }
 
 #[derive(Clone)]
@@ -297,8 +332,10 @@ impl Registry {
     }
 
     /// Flat JSON snapshot: counters and gauges as numbers, histograms as
-    /// `{count, sum, buckets}` objects. Keys carry labels inline
-    /// (`name{k=v}`), matching the exposition identity.
+    /// `{count, sum, p50, p95, p99, buckets}` objects. Keys carry labels
+    /// inline (`name{k="v"}`, values escaped), matching the exposition
+    /// identity — escaping also keeps keys collision-free when a label
+    /// value contains the `","` separator or a quote.
     pub fn render_json(&self) -> Json {
         let entries = self.entries.lock().unwrap();
         let mut obj: Vec<(String, Json)> = Vec::with_capacity(entries.len());
@@ -307,18 +344,46 @@ impl Registry {
             let val = match &e.instrument {
                 Instrument::Counter(c) => Json::Num(c.get() as f64),
                 Instrument::Gauge(g) => Json::Num(g.get()),
-                Instrument::Histogram(h) => Json::Obj(vec![
-                    ("count".to_string(), Json::Num(h.count() as f64)),
-                    ("sum".to_string(), Json::Num(h.sum())),
-                    (
-                        "buckets".to_string(),
-                        Json::Arr(h.bucket_counts().iter().map(|&n| Json::Num(n as f64)).collect()),
-                    ),
-                ]),
+                Instrument::Histogram(h) => {
+                    let counts = h.bucket_counts();
+                    Json::Obj(vec![
+                        ("count".to_string(), Json::Num(h.count() as f64)),
+                        ("sum".to_string(), Json::Num(h.sum())),
+                        ("p50".to_string(), Json::Num(quantile_from_buckets(&counts, 0.50))),
+                        ("p95".to_string(), Json::Num(quantile_from_buckets(&counts, 0.95))),
+                        ("p99".to_string(), Json::Num(quantile_from_buckets(&counts, 0.99))),
+                        (
+                            "buckets".to_string(),
+                            Json::Arr(counts.iter().map(|&n| Json::Num(n as f64)).collect()),
+                        ),
+                    ])
+                }
             };
             obj.push((key, val));
         }
         Json::Obj(obj)
+    }
+
+    /// Merge the bucket counts of every label set registered under `name`
+    /// (e.g. one histogram per gateway worker) into one distribution and
+    /// return the requested quantiles. `None` when no histogram with that
+    /// name exists; all-zero estimates when none has samples.
+    pub fn histogram_quantiles(&self, name: &str, qs: &[f64]) -> Option<Vec<f64>> {
+        let entries = self.entries.lock().unwrap();
+        let mut merged = [0u64; HIST_BUCKETS];
+        let mut found = false;
+        for e in entries.iter().filter(|e| e.name == name) {
+            if let Instrument::Histogram(h) = &e.instrument {
+                found = true;
+                for (m, c) in merged.iter_mut().zip(h.bucket_counts()) {
+                    *m += c;
+                }
+            }
+        }
+        if !found {
+            return None;
+        }
+        Some(qs.iter().map(|&q| quantile_from_buckets(&merged, q)).collect())
     }
 }
 
@@ -327,12 +392,29 @@ fn labels_eq(have: &[(String, String)], want: &[(&str, &str)]) -> bool {
         && have.iter().zip(want).all(|((hk, hv), (wk, wv))| hk == wk && hv == wv)
 }
 
+/// Escape a label value per the Prometheus exposition format: backslash,
+/// double-quote, and line-feed. Also what keeps the rendered `name{k="v"}`
+/// identity collision-free — an unescaped value containing `","` or `"`
+/// could otherwise render identically to a different label set.
+fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
 fn fmt_labels(labels: &[(String, String)], le: Option<&str>) -> String {
     if labels.is_empty() && le.is_none() {
         return String::new();
     }
     let mut parts: Vec<String> =
-        labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label_value(v))).collect();
     if let Some(le) = le {
         parts.push(format!("le=\"{le}\""));
     }
@@ -445,6 +527,87 @@ mod tests {
         assert!(text.contains("sct_test_expo_ms_count"));
         assert!(text.contains("sct_test_expo_ms_sum"));
         assert_eq!(last, h.count(), "+Inf bucket must equal total count");
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_buckets() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram reports 0");
+        // 100 samples at ~1.5 (bucket (1.024, 2.048]), 10 at ~100 (bucket
+        // (65.5, 131.1]): p50 lands in the low bucket, p99 in the high one.
+        for _ in 0..100 {
+            h.record(1.5);
+        }
+        for _ in 0..10 {
+            h.record(100.0);
+        }
+        let p50 = h.quantile(0.50);
+        assert!((1.024..=2.048).contains(&p50), "p50 {p50} outside its bucket");
+        let p99 = h.quantile(0.99);
+        assert!((65.0..=132.0).contains(&p99), "p99 {p99} outside its bucket");
+        assert!(h.quantile(0.0) > 0.0, "q=0 clamps to the first sample's bucket");
+        // Overflow samples report the +Inf bucket's lower bound, not inf.
+        let o = Histogram::new();
+        o.record(1e12);
+        assert!(o.quantile(0.99).is_finite());
+    }
+
+    #[test]
+    fn label_values_are_escaped_and_collision_free() {
+        let r = registry();
+        // Raw formatting of these two would render the identical series
+        // `...{k="a",b="c"}`; escaping must keep them distinct and the
+        // exposition parseable.
+        let tricky = r.counter_with("sct_test_escape_total", &[("k", "a\",b=\"c")], "test");
+        let plain = r.counter_with("sct_test_escape_total", &[("k", "a"), ("b", "c")], "test");
+        tricky.add(1);
+        plain.add(2);
+        let text = r.render_prometheus();
+        assert!(text.contains(r#"sct_test_escape_total{k="a\",b=\"c"}"#), "escaped quote");
+        assert!(text.contains(r#"sct_test_escape_total{k="a",b="c"}"#), "plain series intact");
+        let esc = r.counter_with("sct_test_escape2_total", &[("k", "a\\b\nc")], "test");
+        esc.inc();
+        let text = r.render_prometheus();
+        assert!(text.contains(r#"{k="a\\b\nc"}"#), "backslash and newline escaped: {text}");
+        // The JSON snapshot uses the same identity: both keys present.
+        let json = registry().render_json();
+        if let Json::Obj(kv) = &json {
+            let keys: Vec<&str> =
+                kv.iter().map(|(k, _)| k.as_str()).filter(|k| k.contains("escape_total")).collect();
+            assert_eq!(keys.len(), 2, "escaped keys must not collide: {keys:?}");
+        } else {
+            panic!("render_json must be an object");
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles_aggregate_across_label_sets() {
+        let r = registry();
+        let a = r.histogram_with("sct_test_agg_ms", &[("worker", "0")], "test");
+        let b = r.histogram_with("sct_test_agg_ms", &[("worker", "1")], "test");
+        for _ in 0..50 {
+            a.record(1.0);
+            b.record(64.0);
+        }
+        let qs = r.histogram_quantiles("sct_test_agg_ms", &[0.25, 0.9]).unwrap();
+        assert!(qs[0] <= 2.1, "p25 from worker 0's samples, got {}", qs[0]);
+        assert!(qs[1] >= 30.0, "p90 from worker 1's samples, got {}", qs[1]);
+        assert!(r.histogram_quantiles("sct_test_absent_ms", &[0.5]).is_none());
+    }
+
+    #[test]
+    fn render_json_surfaces_histogram_quantiles() {
+        let r = registry();
+        let h = r.histogram("sct_test_json_quant_ms", "test");
+        for _ in 0..10 {
+            h.record(2.0);
+        }
+        let json = r.render_json();
+        let doc = json.get("sct_test_json_quant_ms").unwrap();
+        for key in ["p50", "p95", "p99"] {
+            let v = doc.get(key).unwrap().as_f64().unwrap();
+            assert!(v > 0.0 && v <= 4.1, "{key} = {v} for 2.0-valued samples");
+        }
     }
 
     #[test]

@@ -25,6 +25,11 @@
 //!   flag > `[obs] log_level` TOML > `SCT_LOG` env > `info`. Log lines go
 //!   to **stderr** so `--log-level quiet` leaves stdout machine-clean for
 //!   scripting (tables, generated text and JSON outputs stay on stdout).
+//! * [`prof`] — the performance-attribution profiler: scoped hierarchical
+//!   phase/kernel tree with declared FLOP + byte work models, roofline
+//!   accounting against a calibrated machine peak, flamegraph `.folded`
+//!   and JSON renders. Off by default; a disabled scope is one relaxed
+//!   atomic load.
 //!
 //! Instrumented layers (all registered under the `sct_` prefix):
 //! serve (`sct_serve_*`: queue depth, active slots, admission wait,
@@ -34,10 +39,56 @@
 //! step-time histograms, grad norm, clip events), and the rank subsystem
 //! (`sct_rank_*`: per-layer rank and tail-energy gauges, transition
 //! counters, ortho error).
+//!
+//! # Observability — worked examples
+//!
+//! **Metrics (scrape).** Every subsystem registers on the process-global
+//! [`metrics::registry`]; `sct serve` exposes it at `GET /metrics` in the
+//! Prometheus text format:
+//!
+//! ```text
+//! $ curl -s localhost:8077/metrics | grep sct_serve_ttft
+//! sct_serve_ttft_ms_bucket{worker="0",le="0.004"} 2
+//! sct_serve_ttft_ms_sum{worker="0"} 0.0061
+//! sct_serve_ttft_ms_count{worker="0"} 2
+//! ```
+//!
+//! Histogram JSON snapshots (`sct train --metrics-out`, `GET /v1/stats`)
+//! additionally carry `p50`/`p95`/`p99` estimates interpolated from the 32
+//! log-spaced buckets ([`metrics::Histogram::quantile`]).
+//!
+//! **Tracing (follow one request).** `sct serve --trace-out traces.jsonl`
+//! emits hierarchical spans linked by `span_id`/`parent_id`, all stamped
+//! with the `request_id` the client saw on the wire: the gateway placement
+//! span is the root (its `span_id` *is* the request id), the worker-side
+//! request span points at it, and queue-wait / per-chunk prefill / decode
+//! spans point at the request span:
+//!
+//! ```text
+//! $ grep '"request_id":7' traces.jsonl | python3 -c 'import json,sys
+//! for l in sys.stdin: s=json.loads(l); print(s["kind"], s["span_id"], s.get("parent_id"))'
+//! gateway 7 None
+//! queue_wait 31 9
+//! prefill_chunk 32 9
+//! decode 33 9
+//! request 9 7
+//! ```
+//!
+//! **Profiling (read a flamegraph).** `sct train --backend native
+//! --profile-out prof.json` writes the phase tree as JSON plus collapsed
+//! stacks at `prof.folded` — one `path;to;frame <self-µs>` line each, so
+//! `flamegraph.pl prof.folded > prof.svg` (or speedscope) renders it
+//! directly. Frame width is self time: a wide `train_step;forward;matmul`
+//! box says the forward matmuls dominate the step; the JSON `kernels` rows
+//! give the same kernels as achieved GFLOP/s and FLOPs/byte against the
+//! calibrated machine peak (how far each kernel sits from roofline). The
+//! server surface is `GET /v1/profile` (per-worker attribution under
+//! `worker0..N` roots when `sct serve --profile-out` enabled it).
 
 pub mod log;
 pub mod metrics;
+pub mod prof;
 pub mod trace;
 
 pub use metrics::{registry, Counter, Gauge, Histogram, Registry};
-pub use trace::next_request_id;
+pub use trace::{next_request_id, next_span_id};

@@ -1,15 +1,27 @@
-//! Per-request span tracing.
+//! Hierarchical per-request span tracing.
 //!
 //! Every request admitted through the batcher gets a process-unique id from
 //! [`next_request_id`]; the id flows into `/v1/generate` responses and SSE
-//! frames, and when a sink is installed the batcher emits one complete span
-//! record per request at eviction time:
+//! frames. When a sink is installed, a served request produces a **span
+//! tree** linked by `span_id`/`parent_id`, every record also stamped with
+//! the request id that went out on the wire:
+//!
+//! * `kind:"gateway"` — the placement decision (root; its `span_id` **is**
+//!   the request id, so children link to it without cross-thread plumbing)
+//! * `kind:"request"` — the worker-side summary emitted at eviction time
+//!   (`parent_id` = the gateway span), carrying the flat fields the
+//!   pre-hierarchical schema had:
 //!
 //! ```json
-//! {"request_id":7,"prompt_tokens":12,"queue_ms":0.4,"prefill_chunks":1,
+//! {"kind":"request","span_id":9,"parent_id":7,"request_id":7,"worker":0,
+//!  "prompt_tokens":12,"queue_ms":0.4,"prefill_chunks":1,
 //!  "prefill_tokens":11,"decode_steps":16,"tokens_out":16,"ttft_ms":3.1,
 //!  "decode_ms":12.8,"finish_reason":"length"}
 //! ```
+//!
+//! * `kind:"queue_wait"` / `kind:"prefill_chunk"` / `kind:"decode"` —
+//!   admission wait, one span per fused prefill chunk, and the decode
+//!   phase, each with `parent_id` pointing at the request span.
 //!
 //! (`ttft_ms` is omitted when the request produced no tokens.)
 //!
@@ -29,6 +41,13 @@ static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
 /// Allocate the next request id (monotonic, process-wide, starts at 1).
 pub fn next_request_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Allocate a span id for a non-root span. Drawn from the same process-wide
+/// sequence as request ids, so a request id doubles as its gateway (root)
+/// span id without ever colliding with a child span's id.
+pub fn next_span_id() -> u64 {
     NEXT_ID.fetch_add(1, Ordering::Relaxed)
 }
 

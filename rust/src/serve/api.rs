@@ -20,9 +20,14 @@
 //!   counter so failed requests are log-correlatable too.
 //! * [`stats_json`] — the versioned `GET /v1/stats` document: the flat
 //!   aggregate fields are bit-compatible with the pre-gateway (workers=1)
-//!   schema, and a `workers: [...]` array adds one [`StatsSnapshot`] per
-//!   worker scheduler. Old clients keep reading the flat fields; new
-//!   clients read per-worker placement out of the array.
+//!   schema, a `workers: [...]` array adds one [`StatsSnapshot`] per
+//!   worker scheduler, and a `latency: {...}` object summarizes the merged
+//!   serve histograms as p50/p95/p99 (same buckets `/metrics` exposes).
+//!   Old clients keep reading the flat fields; new clients read per-worker
+//!   placement out of the array.
+//! * [`version_json`] — the `GET /v1/version` document: crate identity plus
+//!   build/runtime shape (compiled features, kernel-pool threads, gateway
+//!   worker count).
 //!
 //! The exact wire examples live in the [`crate::serve`] module docs.
 
@@ -392,7 +397,46 @@ pub fn stats_json(aggregate: &StatsSnapshot, workers: &[StatsSnapshot]) -> Json 
         })
         .collect();
     fields.push(("workers".to_string(), Json::from(worker_docs)));
+    fields.push(("latency".to_string(), latency_json()));
     Json::Obj(fields)
+}
+
+/// p50/p95/p99 of the serve latency histograms, merged across every worker
+/// label set — the machine summary of the same log2 buckets `/metrics`
+/// exposes raw. Histograms not yet registered (no request served) are
+/// simply absent from the object.
+pub fn latency_json() -> Json {
+    let reg = crate::obs::registry();
+    let mut out: Vec<(String, Json)> = Vec::new();
+    for name in [
+        "sct_serve_queue_wait_ms",
+        "sct_serve_ttft_ms",
+        "sct_serve_prefill_chunk_ms",
+        "sct_serve_decode_step_ms",
+    ] {
+        if let Some(q) = reg.histogram_quantiles(name, &[0.5, 0.95, 0.99]) {
+            let key = name.trim_start_matches("sct_serve_").to_string();
+            out.push((key, json_obj![("p50", q[0]), ("p95", q[1]), ("p99", q[2])]));
+        }
+    }
+    Json::Obj(out)
+}
+
+/// Render the `GET /v1/version` document: crate identity (name, version)
+/// plus the build/runtime shape a client needs to interpret benchmarks —
+/// compiled cargo features, kernel-pool thread count, gateway worker count.
+pub fn version_json(workers: usize) -> Json {
+    let mut features: Vec<Json> = Vec::new();
+    if cfg!(feature = "pjrt") {
+        features.push(Json::Str("pjrt".to_string()));
+    }
+    json_obj![
+        ("name", env!("CARGO_PKG_NAME")),
+        ("version", env!("CARGO_PKG_VERSION")),
+        ("features", features),
+        ("threads", crate::util::pool::threads()),
+        ("workers", workers),
+    ]
 }
 
 #[cfg(test)]
@@ -515,5 +559,32 @@ mod tests {
         assert_eq!(workers[0].get("admitted").unwrap().as_i64().unwrap(), 3);
         assert_eq!(workers[1].get("worker").unwrap().as_i64().unwrap(), 1);
         assert_eq!(workers[1].get("tokens_out").unwrap().as_i64().unwrap(), 4);
+        // latency summary object is always present (possibly empty before
+        // any request registered the serve histograms)
+        assert!(matches!(j.get("latency"), Some(Json::Obj(_))));
+    }
+
+    #[test]
+    fn latency_json_reports_quantiles_once_histograms_exist() {
+        let r = crate::obs::registry();
+        let h = r.histogram_with("sct_serve_ttft_ms", &[("worker", "91")], "test");
+        for _ in 0..100 {
+            h.record(1.5);
+        }
+        let j = latency_json();
+        let ttft = j.get("ttft_ms").expect("registered histogram summarized");
+        let p50 = ttft.get("p50").unwrap().as_f64().unwrap();
+        assert!(p50 > 0.0 && p50 <= 2.1, "p50 within the recorded bucket, got {p50}");
+        assert!(ttft.get("p99").unwrap().as_f64().unwrap() >= p50);
+    }
+
+    #[test]
+    fn version_json_reports_crate_identity_and_runtime_shape() {
+        let j = version_json(3);
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "sct");
+        assert_eq!(j.get("version").unwrap().as_str().unwrap(), env!("CARGO_PKG_VERSION"));
+        assert!(j.get("features").unwrap().as_arr().is_ok());
+        assert!(j.get("threads").unwrap().as_usize().unwrap() >= 1);
+        assert_eq!(j.get("workers").unwrap().as_usize().unwrap(), 3);
     }
 }

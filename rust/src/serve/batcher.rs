@@ -51,7 +51,7 @@ use anyhow::{anyhow, Result};
 
 use super::engine::{sample_logits, Engine, SampleOpts};
 use super::kv::SlotId;
-use crate::obs::{self, trace, Counter, Gauge, Histogram};
+use crate::obs::{self, prof, trace, Counter, Gauge, Histogram};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -386,6 +386,9 @@ struct ActiveSeq {
     /// Request id (see [`crate::obs::trace`]); keys this request's span
     /// record and appears in its completion.
     req_id: u64,
+    /// Span id of this request's worker-side `kind:"request"` span; the
+    /// queue_wait/prefill_chunk/decode child spans parent to it.
+    span_id: u64,
     /// Fused prefill batches this sequence took part in (span field).
     prefill_chunks: u64,
     /// Batched decode steps that sampled a token for this sequence — unlike
@@ -659,6 +662,10 @@ fn scheduler_loop(
     stats: Arc<BatchStats>,
     m: Arc<ServeMetrics>,
 ) {
+    // Frames this thread records (prefill/decode scopes and the kernels
+    // under them) root under a per-worker label, so `/v1/profile` attributes
+    // scheduler time to the right worker.
+    prof::set_thread_label(prof::worker_label(bcfg.worker));
     let cfg = *engine.cfg();
     let mut kv = engine.new_kv(bcfg.slots);
     let mut active: Vec<ActiveSeq> = Vec::with_capacity(bcfg.slots);
@@ -683,6 +690,19 @@ fn scheduler_loop(
             m.queue_depth.set(stats.queue_depth.load(Ordering::Relaxed) as f64);
             let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
             m.queue_wait_ms.record(queue_ms);
+            // Worker-side span id for this request: child spans (queue_wait,
+            // prefill_chunk, decode) parent to it, and it parents to the
+            // gateway root span, whose id IS the request id.
+            let span_id = trace::next_span_id();
+            if trace::enabled() {
+                trace::emit(&crate::json_obj![
+                    ("kind", "queue_wait"),
+                    ("span_id", trace::next_span_id() as i64),
+                    ("parent_id", span_id as i64),
+                    ("request_id", job.req_id as i64),
+                    ("queue_ms", queue_ms),
+                ]);
+            }
             let slot = kv.alloc().expect("active < slots implies a free slot");
 
             // budget the context window: cap the generation length, keep the
@@ -716,6 +736,7 @@ fn scheduler_loop(
             active.push(ActiveSeq {
                 slot,
                 req_id: job.req_id,
+                span_id,
                 prefill_chunks: 0,
                 decode_steps: 0,
                 cur: prompt[total],
@@ -804,10 +825,31 @@ fn scheduler_loop(
             }
             if !toks.is_empty() {
                 let t0 = Instant::now();
-                engine.prefill_batch(&toks, &seq_slots, &mut kv);
-                m.prefill_chunk_ms.record(t0.elapsed().as_secs_f64() * 1e3);
+                {
+                    let _p = prof::scope("prefill_chunk");
+                    engine.prefill_batch(&toks, &seq_slots, &mut kv);
+                }
+                let chunk_ms = t0.elapsed().as_secs_f64() * 1e3;
+                m.prefill_chunk_ms.record(chunk_ms);
                 stats.prefill_tokens.fetch_add(toks.len() as u64, Ordering::Relaxed);
                 m.prefill_tokens.add(toks.len() as u64);
+                if trace::enabled() {
+                    // One span per sequence that took tokens in this fused
+                    // chunk; chunk_ms is the fused batch's wall time (shared).
+                    for (&i, &take) in order.iter().zip(&takes) {
+                        if take == 0 {
+                            continue;
+                        }
+                        trace::emit(&crate::json_obj![
+                            ("kind", "prefill_chunk"),
+                            ("span_id", trace::next_span_id() as i64),
+                            ("parent_id", active[i].span_id as i64),
+                            ("request_id", active[i].req_id as i64),
+                            ("tokens", take),
+                            ("chunk_ms", chunk_ms),
+                        ]);
+                    }
+                }
             }
         }
 
@@ -819,6 +861,7 @@ fn scheduler_loop(
             .map(|(i, _)| i)
             .collect();
         if !decode_idx.is_empty() {
+            let _p = prof::scope("decode_step");
             // ONE timestamp pair per batched step (not per token) keeps the
             // ITL histogram off the per-token hot path.
             let t_step = Instant::now();
@@ -905,7 +948,21 @@ fn scheduler_loop(
                 // One complete span per request, emitted exactly once, at
                 // eviction (no-op unless a trace sink is installed).
                 if trace::enabled() {
+                    if seq.decode_steps > 0 {
+                        trace::emit(&crate::json_obj![
+                            ("kind", "decode"),
+                            ("span_id", trace::next_span_id() as i64),
+                            ("parent_id", seq.span_id as i64),
+                            ("request_id", seq.req_id as i64),
+                            ("decode_steps", seq.decode_steps as i64),
+                            ("tokens_out", seq.produced.len()),
+                            ("decode_ms", decode_ms),
+                        ]);
+                    }
                     let mut span = crate::json_obj![
+                        ("kind", "request"),
+                        ("span_id", seq.span_id as i64),
+                        ("parent_id", seq.req_id as i64),
                         ("request_id", seq.req_id as i64),
                         ("prompt_tokens", seq.prompt.len()),
                         ("queue_ms", seq.queue_ms),

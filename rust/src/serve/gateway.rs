@@ -55,6 +55,7 @@ use super::batcher::{
     BatchConfig, Batcher, Completion, Request, StatsSnapshot, StreamEvent, SubmitError,
 };
 use super::engine::Engine;
+use crate::obs::trace;
 
 /// Gateway sizing: worker count plus the per-worker scheduler sizing.
 #[derive(Debug, Clone, Copy)]
@@ -208,6 +209,20 @@ impl Gateway {
             let guard = LoadGuard { outstanding: w.outstanding.clone(), cost };
             match submit(&w.batcher, req.clone()) {
                 Ok((request_id, rx)) => {
+                    // Root span of the request's trace tree: its span_id IS
+                    // the request id, so worker-side spans parent to it
+                    // without any cross-thread plumbing.
+                    if trace::enabled() {
+                        trace::emit(&crate::json_obj![
+                            ("kind", "gateway"),
+                            ("span_id", request_id as i64),
+                            ("request_id", request_id as i64),
+                            ("worker", i as i64),
+                            ("queue_depth", loads[i].1 as i64),
+                            ("outstanding_tokens", loads[i].0 as i64),
+                            ("cost_tokens", cost as i64),
+                        ]);
+                    }
                     return Ok(Placed { worker: i, request_id, rx, _load: guard })
                 }
                 Err(SubmitError::QueueFull) => continue, // guard refunds; try next

@@ -42,6 +42,16 @@
 //! * `GET /metrics` — Prometheus text exposition of the process-global
 //!   [`crate::obs`] registry (serve, pool, train, and rank series; the
 //!   `sct_serve_*` series carry a `worker="i"` label).
+//! * `GET /v1/profile` — point-in-time snapshot of the [`crate::obs::prof`]
+//!   phase tree as JSON: per-worker roots (`worker0 → prefill_chunk →
+//!   matmul`, ...), per-kernel roofline rows (achieved GFLOP/s, arithmetic
+//!   intensity, fraction of calibrated peak), and whether profiling is
+//!   currently enabled (`sct serve --profile-out` / `[obs] profile_out`
+//!   enables it; the endpoint answers either way — disabled and empty is a
+//!   valid snapshot).
+//! * `GET /v1/version` — crate name + version, compiled features, kernel
+//!   pool thread count, gateway worker count ([`api::version_json`]).
+//!   `/v1/profile` and `/v1/version` answer `POST` with a 405 envelope.
 //!
 //! Every non-2xx response — 400 parse failures, 404/405 route misses, 413
 //! oversize bodies, 503 load sheds — is one [`ErrorEnvelope`] JSON body
@@ -66,7 +76,7 @@ use super::gateway::{Gateway, GatewayConfig, Placed};
 use crate::coordinator::config::TomlDoc;
 use crate::data::Tokenizer;
 use crate::json_obj;
-use crate::obs::{self, Counter};
+use crate::obs::{self, prof, Counter};
 use crate::util::json::Json;
 
 /// Per-route request counters (registered once, cached for the accept path).
@@ -75,6 +85,8 @@ struct HttpMetrics {
     healthz: Counter,
     stats: Counter,
     metrics: Counter,
+    profile: Counter,
+    version: Counter,
     other: Counter,
 }
 
@@ -88,6 +100,8 @@ fn http_metrics() -> &'static HttpMetrics {
             healthz: r.counter_with("sct_http_requests_total", &[("route", "/healthz")], HELP),
             stats: r.counter_with("sct_http_requests_total", &[("route", "/v1/stats")], HELP),
             metrics: r.counter_with("sct_http_requests_total", &[("route", "/metrics")], HELP),
+            profile: r.counter_with("sct_http_requests_total", &[("route", "/v1/profile")], HELP),
+            version: r.counter_with("sct_http_requests_total", &[("route", "/v1/version")], HELP),
             other: r.counter_with("sct_http_requests_total", &[("route", "other")], HELP),
         }
     })
@@ -697,6 +711,28 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState) -> Result<()> {
                     keep,
                 )?;
             }
+            ("GET", "/v1/profile") => {
+                http_metrics().profile.inc();
+                // Snapshot of whatever has been collected so far; when
+                // profiling is off the tree is simply empty (enabled: false
+                // tells the client why).
+                write_response(&mut stream, 200, "OK", &prof::snapshot().to_json(), keep)?;
+            }
+            ("GET", "/v1/version") => {
+                http_metrics().version.inc();
+                let body = api::version_json(state.gateway.workers());
+                write_response(&mut stream, 200, "OK", &body, keep)?;
+            }
+            // Read-only introspection routes reject writes with a typed 405
+            // (not the 404 the generic POST fallback would give).
+            ("POST", "/v1/profile" | "/v1/version") => {
+                http_metrics().other.inc();
+                let e = ErrorEnvelope::new(
+                    ErrorCode::MethodNotAllowed,
+                    format!("{} only supports GET", req.path),
+                );
+                write_error(&mut stream, &e, keep)?;
+            }
             ("POST", _) | ("GET", _) => {
                 http_metrics().other.inc();
                 let e = ErrorEnvelope::new(
@@ -947,6 +983,52 @@ mod tests {
             assert_eq!(body.get("finish_reason").unwrap().as_str().unwrap(), "stop");
             assert_eq!(body.get("tokens").unwrap().as_arr().unwrap().len(), first);
         }
+        srv.stop();
+    }
+
+    #[test]
+    fn profile_and_version_endpoints_respond() {
+        let srv = test_server(2, 4);
+        let (code, body) = http_get_json(srv.addr, "/v1/version").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body.get("name").unwrap().as_str().unwrap(), "sct");
+        assert_eq!(body.get("version").unwrap().as_str().unwrap(), env!("CARGO_PKG_VERSION"));
+        assert_eq!(body.get("workers").unwrap().as_usize().unwrap(), 1);
+        assert!(body.get("threads").unwrap().as_usize().unwrap() >= 1);
+
+        let (code, body) = http_get_json(srv.addr, "/v1/profile").unwrap();
+        assert_eq!(code, 200);
+        // Profiling may or may not be enabled by a concurrent test; the
+        // snapshot document is well-formed either way.
+        assert!(body.get("enabled").is_some());
+        assert!(body.get("tree").unwrap().as_arr().is_ok());
+        assert!(body.get("kernels").unwrap().as_arr().is_ok());
+
+        // Read-only routes answer POST with a typed 405, not a 404.
+        let (code, body) = http_post_json(srv.addr, "/v1/version", "{}").unwrap();
+        assert_eq!(code, 405);
+        assert_envelope(&body, "method_not_allowed");
+        let (code, body) = http_post_json(srv.addr, "/v1/profile", "{}").unwrap();
+        assert_eq!(code, 405);
+        assert_envelope(&body, "method_not_allowed");
+        srv.stop();
+    }
+
+    #[test]
+    fn stats_carry_latency_quantiles_after_traffic() {
+        let srv = test_server(2, 4);
+        let req = r#"{"prompt": "quantile me", "tokens": 3, "temperature": 0}"#;
+        let (code, _) = http_post_json(srv.addr, "/v1/generate", req).unwrap();
+        assert_eq!(code, 200);
+        let (code, body) = http_get_json(srv.addr, "/v1/stats").unwrap();
+        assert_eq!(code, 200);
+        let latency = body.get("latency").expect("latency summary present");
+        let ttft = latency.get("ttft_ms").expect("ttft histogram summarized after a request");
+        assert!(ttft.get("p50").unwrap().as_f64().unwrap() > 0.0);
+        assert!(
+            ttft.get("p99").unwrap().as_f64().unwrap()
+                >= ttft.get("p50").unwrap().as_f64().unwrap()
+        );
         srv.stop();
     }
 

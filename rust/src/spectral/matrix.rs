@@ -16,6 +16,7 @@
 //! trailing zero singular values after a rank-grow — goes through the
 //! dedicated [`Matrix::matmul_t_prefix`] path instead.
 
+use crate::obs::prof;
 use crate::util::pool;
 use crate::util::rng::Rng;
 
@@ -102,6 +103,7 @@ impl Matrix {
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, kdim, n) = (self.rows, self.cols, other.cols);
+        let _prof = prof::kernel("matmul", || prof::matmul_work(m, kdim, n));
         let mut out = Matrix::zeros(m, n);
         if self.data.is_empty() || other.data.is_empty() {
             return out;
@@ -133,6 +135,7 @@ impl Matrix {
     pub fn t_matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
         let (m, n) = (self.cols, other.cols);
+        let _prof = prof::kernel("t_matmul", || prof::matmul_work(m, self.rows, n));
         let mut out = Matrix::zeros(m, n);
         if self.data.is_empty() || other.data.is_empty() {
             return out;
@@ -177,6 +180,7 @@ impl Matrix {
         assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
         assert!(k_eff <= self.cols, "prefix {k_eff} beyond inner dim {}", self.cols);
         let (m, n) = (self.rows, other.rows);
+        let _prof = prof::kernel("matmul_t", || prof::matmul_work(m, k_eff, n));
         let mut out = Matrix::zeros(m, n);
         if m == 0 || n == 0 || k_eff == 0 {
             return out;

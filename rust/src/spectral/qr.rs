@@ -12,6 +12,7 @@
 //! is the unique positive-diagonal QR of the input.
 
 use super::matrix::{dot, Matrix};
+use crate::obs::prof;
 use crate::util::pool;
 
 /// Accuracy-preserving fast dot: plain f32 accumulation over m ~ 3e4 rows
@@ -53,6 +54,11 @@ fn dot64(a: &[f32], b: &[f32]) -> f64 {
 /// for the `retraction_ablation` bench. Factor-level parallelism (U ∥ V,
 /// see `SpectralLinear::retract`) is where threads actually pay off.
 pub fn qr_retract(a: &Matrix) -> Matrix {
+    // CGS2 work model: two projection passes, each ~k^2/2 dots + axpys of
+    // length m (2 FLOPs per MAC each) => ~4*m*k^2 FLOPs; the panel is
+    // re-read once per prior column per pass => ~4*m*k^2 bytes streamed.
+    let (m, k) = (a.rows as f64, a.cols as f64);
+    let _prof = prof::kernel("qr_retract", || (4.0 * m * k * k, 4.0 * m * k * k));
     qr_retract_serial(a)
 }
 

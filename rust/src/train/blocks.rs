@@ -13,6 +13,7 @@
 //! accumulation order), so a full-sequence training forward is bit-identical
 //! to the incremental KV decode the serve tests pin against it.
 
+use crate::obs::prof;
 use crate::spectral::matrix::{axpy, dot, Matrix};
 use crate::util::pool;
 
@@ -348,6 +349,10 @@ pub fn causal_attention_fwd_batched(
         attention_head_seq_fwd(qs, ks, vs, h * hd, hd, d_model, t_len, scale, probs_head, &out_seq);
     };
     let work = bsz * n_heads * t_len * t_len * hd;
+    // Causal triangle: ~work/2 (i, j) context pairs, each a score dot plus a
+    // value axpy over hd lanes (2 FLOPs/lane each) => 2*work FLOPs, with a
+    // K and a V stripe (8 bytes/lane) streamed per pair => 4*work bytes.
+    let _prof = prof::kernel("attention_fwd", || (2.0 * work as f64, 4.0 * work as f64));
     if tasks > 1 && pool::parallel_worthwhile(work, ATTN_PAR_WORK) {
         pool::par_tasks(tasks, run);
     } else {
@@ -441,6 +446,10 @@ pub fn causal_attention_bwd_batched(
         }
     };
     let work = bsz * n_heads * t_len * t_len * hd;
+    // Per context pair: a dp dot plus three axpys into dq/dk/dv over hd
+    // lanes => ~4*work FLOPs; six stripes (q/k/v/dout reads, dq/dk/dv
+    // read-modify-writes) stream ~12*work bytes.
+    let _prof = prof::kernel("attention_bwd", || (4.0 * work as f64, 12.0 * work as f64));
     if tasks > 1 && pool::parallel_worthwhile(work, ATTN_PAR_WORK) {
         pool::par_tasks(tasks, run);
     } else {

@@ -23,7 +23,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::checkpoint::format::{read_checkpoint, write_checkpoint, NamedTensor};
-use crate::obs::{self, Counter, Gauge, Histogram};
+use crate::obs::{self, prof, Counter, Gauge, Histogram};
 use crate::serve::engine::{EngineConfig, SpectralModel};
 use crate::spectral::{qr_retract, AdamW, Matrix};
 use crate::util::pool;
@@ -222,26 +222,38 @@ impl NativeTrainer {
         let (b, t) = (self.cfg.batch, self.cfg.seq_len);
         let (inputs, targets) = self.split_window(tokens);
 
+        // Profiler root covering exactly the four timed phases below, so the
+        // phase tree's train_step wall agrees with the returned split.
+        let _prof_step = prof::scope("train_step");
+
         let t0 = Instant::now();
-        let (logits, cache) = decoder_fwd(&self.model, &self.rope, &inputs, b, t);
-        let (loss, dlogits) = cross_entropy(&logits, &targets);
+        let (cache, loss, dlogits) = {
+            let _p = prof::scope("forward");
+            let (logits, cache) = decoder_fwd(&self.model, &self.rope, &inputs, b, t);
+            let (loss, dlogits) = cross_entropy(&logits, &targets);
+            (cache, loss, dlogits)
+        };
         let t_fwd = t0.elapsed().as_secs_f64();
 
         let t1 = Instant::now();
-        let mut grads = decoder_bwd(&self.model, &self.rope, &inputs, b, t, &cache, &dlogits);
+        let mut grads = {
+            let _p = prof::scope("backward");
+            decoder_bwd(&self.model, &self.rope, &inputs, b, t, &cache, &dlogits)
+        };
         let t_bwd = t1.elapsed().as_secs_f64();
 
         let m = train_metrics();
         let t2 = Instant::now();
-        if self.cfg.grad_clip > 0.0 {
-            let norm = grads.global_norm();
-            m.grad_norm.set(norm as f64);
-            if norm > self.cfg.grad_clip {
-                grads.scale(self.cfg.grad_clip / norm);
-                m.clips.inc();
-            }
-        }
         {
+            let _p = prof::scope("optimizer");
+            if self.cfg.grad_clip > 0.0 {
+                let norm = grads.global_norm();
+                m.grad_norm.set(norm as f64);
+                if norm > self.cfg.grad_clip {
+                    grads.scale(self.cfg.grad_clip / norm);
+                    m.clips.inc();
+                }
+            }
             let params = params_mut(&mut self.model);
             let gs = grads.slices();
             debug_assert_eq!(params.len(), gs.len());
@@ -261,6 +273,7 @@ impl NativeTrainer {
         let t3 = Instant::now();
         self.step += 1;
         if self.step % self.cfg.retract_every as u64 == 0 {
+            let _p = prof::scope("retract");
             retract_model(&mut self.model);
         }
         let t_retract = t3.elapsed().as_secs_f64();
@@ -434,9 +447,12 @@ fn retract_model(model: &mut SpectralModel) {
         return;
     }
     let chunk = pool::chunk_len(factors.len());
+    let prof_ctx = prof::fork_ctx();
     std::thread::scope(|s| {
         for group in factors.chunks_mut(chunk) {
+            let prof_ctx = &prof_ctx;
             s.spawn(move || {
+                let _prof = prof::attach(prof_ctx);
                 for f in group.iter_mut() {
                     **f = qr_retract(&**f);
                 }

@@ -38,7 +38,7 @@
 //! record nothing beyond the gate counter, so single-threaded kernels stay
 //! uninstrumented.
 
-use crate::obs::{self, Counter, Gauge, Histogram};
+use crate::obs::{self, prof, Counter, Gauge, Histogram};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
@@ -179,12 +179,17 @@ where
     let chunk_rows = rows.div_ceil(t);
     let m = pool_metrics();
     m.fanouts.inc();
+    // Workers inherit the spawning thread's profiler path, so frames they
+    // record attach under the scope that fanned out (obs::prof contract).
+    let prof_ctx = prof::fork_ctx();
     std::thread::scope(|s| {
         for (ti, block) in out.chunks_mut(chunk_rows * row_len).enumerate() {
             m.tasks.inc();
             m.shard_rows.record((block.len() / row_len) as f64);
             let body = &body;
+            let prof_ctx = &prof_ctx;
             s.spawn(move || {
+                let _prof = prof::attach(prof_ctx);
                 let t0 = Instant::now();
                 body(ti * chunk_rows, block);
                 m.worker_busy_ms.record(t0.elapsed().as_secs_f64() * 1e3);
@@ -211,6 +216,7 @@ where
     let chunk = n_tasks.div_ceil(t);
     let m = pool_metrics();
     m.fanouts.inc();
+    let prof_ctx = prof::fork_ctx();
     std::thread::scope(|s| {
         for ti in 0..t {
             let (lo, hi) = (ti * chunk, ((ti + 1) * chunk).min(n_tasks));
@@ -220,7 +226,9 @@ where
             m.tasks.inc();
             m.shard_rows.record((hi - lo) as f64);
             let body = &body;
+            let prof_ctx = &prof_ctx;
             s.spawn(move || {
+                let _prof = prof::attach(prof_ctx);
                 let t0 = Instant::now();
                 for i in lo..hi {
                     body(i);

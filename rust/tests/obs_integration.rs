@@ -4,20 +4,29 @@
 //! serve + pool + train + rank series on the shared registry, and every
 //! HTTP request produces one complete span record.
 //!
-//! The registry and the trace sink are process-global and tests run
-//! concurrently in one binary, so every assertion here is delta- or
-//! presence-based (never an exact global count), and span lookups filter by
-//! this test's own request ids.
+//! The registry, the trace sink, and the profiler are process-global and
+//! tests run concurrently in one binary, so every test serializes on
+//! [`obs_lock`], every assertion is delta- or presence-based (never an
+//! exact global count), and span lookups filter by this test's own request
+//! ids.
 
 use std::collections::BTreeSet;
+use std::sync::Mutex;
 
 use sct::data::Tokenizer;
-use sct::obs::{self, trace};
+use sct::obs::{self, prof, trace};
 use sct::serve::{
     http_get_text, http_post_json, Engine, EngineConfig, ServeConfig, Server, SpectralModel,
 };
 use sct::train::{NativeTrainConfig, NativeTrainer};
 use sct::util::pool;
+
+/// Serialize tests that touch the process-global profiler / trace / metric
+/// state (all of them, for simplicity — the binary is small).
+fn obs_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 fn start_server() -> Server {
     let model = SpectralModel::init(EngineConfig::default(), 7);
@@ -44,6 +53,7 @@ fn base_name(series: &str) -> &str {
 
 #[test]
 fn metrics_exposition_parses_and_histogram_buckets_are_monotone() {
+    let _g = obs_lock();
     let srv = start_server();
     let req = r#"{"prompt": "exposition probe", "tokens": 3, "temperature": 0}"#;
     let (code, _) = http_post_json(srv.addr, "/v1/generate", req).unwrap();
@@ -98,6 +108,7 @@ fn metrics_exposition_parses_and_histogram_buckets_are_monotone() {
 
 #[test]
 fn concurrent_pool_increments_are_not_lost() {
+    let _g = obs_lock();
     let c = obs::registry().counter("sct_test_obs_fanout_total", "test");
     let before = c.get();
     pool::par_tasks(1000, |_| c.inc());
@@ -106,6 +117,7 @@ fn concurrent_pool_increments_are_not_lost() {
 
 #[test]
 fn one_process_surfaces_series_from_every_layer() {
+    let _g = obs_lock();
     // train: one step of a tiny native trainer.
     let model_cfg = EngineConfig {
         vocab: 64,
@@ -163,7 +175,8 @@ fn one_process_surfaces_series_from_every_layer() {
 }
 
 #[test]
-fn each_http_request_emits_one_complete_span() {
+fn each_http_request_emits_a_linked_span_tree() {
+    let _g = obs_lock();
     let buf = trace::install_memory();
     let srv = start_server();
     let req = r#"{"prompt": "span probe", "tokens": 5, "temperature": 0}"#;
@@ -175,13 +188,32 @@ fn each_http_request_emits_one_complete_span() {
     trace::uninstall();
 
     // Other tests in this binary may have traced concurrently: filter by
-    // our own request id, and expect exactly one record for it.
+    // our own request id. One request now yields a span tree — a gateway
+    // root, a per-sequence request summary, and queue/prefill/decode
+    // children — all linked by parent ids.
     let ours: Vec<_> = spans
         .iter()
         .filter(|s| s.get("request_id").and_then(|v| v.as_i64().ok()) == Some(id))
         .collect();
-    assert_eq!(ours.len(), 1, "one span per request, got {ours:?}");
-    let span = ours[0];
+    let kind_of = |s: &&sct::util::json::Json| {
+        s.get("kind").and_then(|v| v.as_str().ok()).unwrap_or_default().to_string()
+    };
+
+    // Root: the gateway placement span reuses the request id as its span id.
+    let gateway = ours
+        .iter()
+        .find(|s| kind_of(s) == "gateway")
+        .unwrap_or_else(|| panic!("no gateway span for request {id}: {ours:?}"));
+    assert_eq!(gateway.get("span_id").unwrap().as_i64().unwrap(), id);
+    assert!(gateway.get("worker").is_some(), "gateway span missing worker: {gateway:?}");
+
+    // One request-summary span per request, parented to the gateway root.
+    let summaries: Vec<_> = ours.iter().filter(|s| kind_of(s) == "request").collect();
+    assert_eq!(summaries.len(), 1, "one request-summary span, got {ours:?}");
+    let span = summaries[0];
+    assert_eq!(span.get("parent_id").unwrap().as_i64().unwrap(), id);
+    let seq_span = span.get("span_id").unwrap().as_i64().unwrap();
+    assert!(seq_span > 0 && seq_span != id, "summary span needs its own id: {span:?}");
     for key in [
         "prompt_tokens",
         "queue_ms",
@@ -199,4 +231,80 @@ fn each_http_request_emits_one_complete_span() {
     assert_eq!(span.get("decode_steps").unwrap().as_i64().unwrap(), 5);
     assert!(span.get("prefill_chunks").unwrap().as_i64().unwrap() >= 1);
     assert_eq!(span.get("finish_reason").unwrap().as_str().unwrap(), "length");
+
+    // Children: queue wait, at least one prefill chunk, and the decode span
+    // all hang off the per-sequence summary span.
+    for kind in ["queue_wait", "prefill_chunk", "decode"] {
+        let children: Vec<_> = ours.iter().filter(|s| kind_of(s) == kind).collect();
+        assert!(!children.is_empty(), "no {kind} span for request {id}: {ours:?}");
+        for child in &children {
+            assert_eq!(
+                child.get("parent_id").unwrap().as_i64().unwrap(),
+                seq_span,
+                "{kind} span not parented to the request summary: {child:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn train_profile_tree_matches_trainer_timing() {
+    let _g = obs_lock();
+    let tcfg = NativeTrainConfig {
+        model: EngineConfig::default(),
+        batch: 2,
+        seq_len: 16,
+        ..NativeTrainConfig::default()
+    };
+    let mut trainer = NativeTrainer::new(tcfg, 3);
+    let vocab = trainer.model.cfg.vocab as i32;
+    let tokens: Vec<i32> = (0..2 * 17).map(|i| i % vocab).collect();
+
+    prof::reset();
+    prof::enable();
+    let steps = 5u64;
+    let mut phase_sum = 0f64;
+    for _ in 0..steps {
+        let (_, phases) = trainer.train_step(&tokens, 1e-3, 3e-3);
+        phase_sum += phases.iter().sum::<f64>();
+    }
+    prof::disable();
+    let report = prof::snapshot();
+    prof::reset();
+
+    let root = report.root("train_step").expect("train_step root in profile tree");
+    assert_eq!(root.calls, steps);
+    for phase in ["forward", "backward", "optimizer", "retract"] {
+        assert!(
+            root.children.iter().any(|c| c.name == phase),
+            "phase {phase} missing under train_step: {report:?}"
+        );
+    }
+
+    // Acceptance: the profiler's root wall time agrees with the trainer's
+    // own per-phase Instant timing to within 5%.
+    let root_secs = root.wall_ns as f64 / 1e9;
+    let rel = (root_secs - phase_sum).abs() / phase_sum.max(1e-9);
+    assert!(
+        rel < 0.05,
+        "profiler root {root_secs:.6}s vs trainer phase sum {phase_sum:.6}s ({:.2}% apart)",
+        rel * 100.0
+    );
+
+    // At least four distinct kernels must carry a work model: nonzero FLOPs
+    // and a finite achieved GFLOP/s.
+    let kernels = report.kernel_stats();
+    let with_work: Vec<_> =
+        kernels.iter().filter(|k| k.flops > 0.0 && k.gflops() > 0.0).collect();
+    assert!(
+        with_work.len() >= 4,
+        "expected >=4 kernels with FLOP models, got: {:?}",
+        kernels.iter().map(|k| (k.name, k.flops)).collect::<Vec<_>>()
+    );
+    for name in ["matmul", "attention_fwd", "attention_bwd", "adamw", "qr_retract"] {
+        assert!(
+            kernels.iter().any(|k| k.name == name && k.flops > 0.0),
+            "kernel {name} missing from profile: {kernels:?}"
+        );
+    }
 }

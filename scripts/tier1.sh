@@ -126,9 +126,26 @@ run_bench() {
     cargo bench --bench rank_transition -- --smoke --json "$repo_root/BENCH_rank.json"
     echo "tier1: wrote $repo_root/BENCH_rank.json"
 
-    echo "== tier1: kernel-scaling bench smoke (BENCH_kernels.json) =="
-    cargo bench --bench kernel_scaling -- --smoke --json "$repo_root/BENCH_kernels.json"
+    echo "== tier1: kernel-scaling bench smoke (BENCH_kernels.json + BENCH_profile.json) =="
+    cargo bench --bench kernel_scaling -- --smoke \
+        --json "$repo_root/BENCH_kernels.json" \
+        --profile-json "$repo_root/BENCH_profile.json"
     echo "tier1: wrote $repo_root/BENCH_kernels.json"
+
+    echo "== tier1: profiler roofline check (BENCH_profile.json) =="
+    # The roofline pass must attribute work to every mandatory kernel; a
+    # missing name means its instrumentation was dropped.
+    for kernel in matmul attention_fwd attention_bwd adamw qr_retract; do
+        if ! grep -q "\"kernel\": *\"$kernel\"" "$repo_root/BENCH_profile.json"; then
+            echo "tier1: mandatory kernel $kernel missing from BENCH_profile.json" >&2
+            exit 1
+        fi
+    done
+    if ! [ -s "$repo_root/BENCH_profile.folded" ]; then
+        echo "tier1: BENCH_profile.folded missing or empty after profile pass" >&2
+        exit 1
+    fi
+    echo "tier1: profiler roofline OK"
 }
 
 case "$stage" in
