@@ -15,6 +15,10 @@
 //!   (`--rank-schedule` reports peak memory across milestone ranks)
 //! * `serve`        — pure-Rust spectral inference server (KV cache +
 //!   continuous batching + chunked prefill + SSE streaming; no PJRT needed)
+//! * `doctor`       — offline spectral-health report over a `.sct`
+//!   checkpoint: the same per-layer diagnostics `sct train --spectra-out`
+//!   streams live (spectrum, tail energy, effective rank, condition,
+//!   factor orthogonality), plus a NaN/Inf parameter scan
 //! * `info`         — list presets in the artifact manifest
 //!
 //! PJRT-backed paths (finetune, and train/sweep/generate with the default
@@ -54,6 +58,7 @@ pub fn run() -> Result<()> {
         "finetune" => cmd_finetune(&rest),
         "generate" => cmd_generate(&rest),
         "serve" => cmd_serve(&rest),
+        "doctor" => cmd_doctor(&rest),
         "mem-report" => cmd_mem_report(&rest),
         "info" => cmd_info(&rest),
         "help" | "--help" | "-h" => {
@@ -75,6 +80,7 @@ fn print_usage() {
          \x20 finetune      gradient-integrity fine-tune: Table 4\n\
          \x20 generate      sample text from a (trained) spectral model (--backend native)\n\
          \x20 serve         spectral inference server (batching + chunked prefill + SSE streaming)\n\
+         \x20 doctor        offline spectral-health report over a .sct checkpoint\n\
          \x20 mem-report    analytic memory model: Table 1 / Figure 1 (--rank-schedule: peak)\n\
          \x20 info          list presets in the manifest\n\n\
          `sct <subcommand> --help` for options"
@@ -166,6 +172,25 @@ fn base_config(args: &Args) -> Result<RunConfig> {
     if let Some(p) = args.get("profile-out") {
         cfg.obs.profile_out = Some(p.to_string());
     }
+    // spectral-health telemetry + training watchdog (native backend)
+    if let Some(p) = args.get("spectra-out") {
+        cfg.obs.spectra_out = Some(p.to_string());
+    }
+    cfg.obs.spectra_every = args.parse_num("spectra-every", cfg.obs.spectra_every)?.max(1);
+    if let Some(w) = args.get("watchdog") {
+        w.parse::<crate::obs::health::Policy>()
+            .map_err(|e| anyhow::anyhow!("--watchdog: {e}"))?;
+        cfg.obs.watchdog = Some(w.to_string());
+    }
+    cfg.obs.watchdog_spike_factor =
+        args.parse_num("watchdog-spike-factor", cfg.obs.watchdog_spike_factor)?;
+    cfg.obs.watchdog_grad_max = args.parse_num("watchdog-grad-max", cfg.obs.watchdog_grad_max)?;
+    if let Some(s) = args.get("watchdog-inject-nan") {
+        let step: u64 = s
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--watchdog-inject-nan {s:?}: {e}"))?;
+        cfg.obs.watchdog_inject_nan = Some(step);
+    }
     cfg.obs.apply_log_level();
     Ok(cfg)
 }
@@ -252,6 +277,39 @@ fn train_cmd_spec() -> Command {
             "enable the phase/kernel profiler and write its report here as \
              JSON, plus collapsed flamegraph stacks at the sibling .folded \
              path (TOML: [obs] profile_out)",
+        )
+        .opt(
+            "spectra-out",
+            "append per-layer spectral-health JSONL samples (full spectrum, \
+             tail-energy curve, effective rank, condition, ortho error, \
+             subspace drift) to this path, native backend (TOML: [obs] \
+             spectra_out)",
+        )
+        .opt(
+            "spectra-every",
+            "spectral-health sampling cadence in optimizer steps, with \
+             --spectra-out (TOML: [obs] spectra_every) [default: 25]",
+        )
+        .opt(
+            "watchdog",
+            "arm the training watchdog, native backend: warn|skip|halt on \
+             NaN/Inf loss/grads/params, loss spikes, gradient explosions and \
+             dead spectra (TOML: [obs] watchdog)",
+        )
+        .opt(
+            "watchdog-spike-factor",
+            "loss counts as a spike above this multiple of the rolling-window \
+             mean (TOML: [obs] watchdog_spike_factor) [default: 3]",
+        )
+        .opt(
+            "watchdog-grad-max",
+            "global gradient norm above this is an explosion anomaly \
+             (TOML: [obs] watchdog_grad_max) [default: 1000]",
+        )
+        .opt(
+            "watchdog-inject-nan",
+            "test hook: inject a NaN loss into the watchdog at this step \
+             (CI smoke for the halt path; needs --watchdog)",
         )
         .flag("untied", "untied LM head, native backend (default tied)")
         .flag("no-chunk", "dispatch per-step instead of fused K-step chunks (pjrt)")
@@ -670,7 +728,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         )
         .opt(
             "ckpt",
-            ".sct checkpoint (SpectralModel::save or `sct train --backend native`)",
+            ".sct checkpoint (SpectralModel::save or `sct train --backend \
+             native`; TOML: [serve] ckpt)",
         )
         .opt(
             "log-level",
@@ -748,8 +807,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     anyhow::ensure!(serve_cfg.slots > 0, "--slots must be at least 1");
 
     let seed: u64 = args.parse_num("seed", 0)?;
-    let model = if let Some(ckpt) = args.get("ckpt") {
-        let m = serve::SpectralModel::load(std::path::Path::new(ckpt))?;
+    if let Some(c) = args.get("ckpt") {
+        serve_cfg.ckpt = Some(c.to_string());
+    }
+    let model = if let Some(ckpt) = serve_cfg.ckpt.clone() {
+        let m = serve::SpectralModel::load(std::path::Path::new(&ckpt))?;
         sct_info!("restored serve checkpoint {ckpt}");
         m
     } else {
@@ -779,8 +841,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         "serving on http://{}  (workers={}, slots={}/worker, queue={}/worker, \
          prefill_chunk={}, keep_alive_ms={})\n\
          routes: POST /v1/generate (\"stream\": true => SSE, one data: frame per \
-         token), GET /healthz, GET /v1/stats, GET /metrics, GET /v1/profile, \
-         GET /v1/version",
+         token), GET /healthz, GET /v1/health, GET /v1/stats, GET /metrics, \
+         GET /v1/profile, GET /v1/version",
         server.addr,
         serve_cfg.workers,
         serve_cfg.slots,
@@ -790,6 +852,85 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     );
     server.join();
     write_profile(&obs_cfg)
+}
+
+/// `sct doctor <ckpt.sct>` — the offline twin of `sct train --spectra-out`:
+/// load a checkpoint, run the same per-layer spectral diagnostics the live
+/// sampler streams (identical code path, so the numbers are comparable to
+/// the digit), print a per-layer table, and exit non-zero if any parameter
+/// tensor holds a non-finite value.
+fn cmd_doctor(argv: &[String]) -> Result<()> {
+    let spec = Command::new(
+        "sct doctor <ckpt.sct>",
+        "offline spectral-health report over a checkpoint: per-triple \
+         spectrum diagnostics (energy, tail share, effective rank, condition \
+         number, factor orthogonality) plus a NaN/Inf parameter scan; the \
+         same code path as `sct train --spectra-out`, so live and post-hoc \
+         numbers agree exactly",
+    )
+        .opt_default("tail-frac", "tail fraction for the tail-energy share", "0.25")
+        .opt("json", "also write the full record (all singular spectra) to this path")
+        .opt("log-level", "logger verbosity: quiet|error|warn|info|debug (also SCT_LOG)");
+    let args = spec.parse(argv)?;
+    if let Some(l) = args.get("log-level") {
+        let level = obs_log::parse_level(l)
+            .ok_or_else(|| anyhow::anyhow!("--log-level {l:?} unknown"))?;
+        obs_log::set_level(level);
+    }
+    let [ckpt] = args.positional.as_slice() else {
+        bail!("usage: sct doctor <ckpt.sct> [--tail-frac f] [--json path]\n\n{}", spec.usage());
+    };
+    let tail_frac: f32 = args.parse_num("tail-frac", 0.25)?;
+    let model = serve::SpectralModel::load(std::path::Path::new(ckpt))?;
+    let spectra = crate::rank::model_spectra(&model, tail_frac);
+
+    println!(
+        "{ckpt}: {} params, d={} layers={} ranks {:?}",
+        model.param_count(),
+        model.cfg.d_model,
+        model.cfg.n_layers,
+        model.layer_ranks(),
+    );
+    println!(
+        "{:<5} {:<6} {:>4} {:>12} {:>11} {:>9} {:>10} {:>9} {:>9}",
+        "layer", "triple", "rank", "energy", "tail_share", "eff_rank", "cond", "ortho_u", "ortho_v"
+    );
+    for l in &spectra {
+        for t in &l.triples {
+            println!(
+                "{:<5} {:<6} {:>4} {:>12.4} {:>11.3e} {:>9.2} {:>10.3e} {:>9.1e} {:>9.1e}",
+                l.layer,
+                t.name,
+                t.rank,
+                t.energy,
+                t.tail_share,
+                t.effective_rank,
+                t.condition,
+                t.ortho_u,
+                t.ortho_v,
+            );
+        }
+    }
+
+    if let Some(path) = args.get("json") {
+        use crate::util::json::Json;
+        let mut report = crate::rank::spectra_json(0, &spectra);
+        if let Json::Obj(fields) = &mut report {
+            fields.retain(|(k, _)| k != "step");
+            fields.insert(0, ("params".to_string(), Json::Num(model.param_count() as f64)));
+            fields.insert(0, ("checkpoint".to_string(), Json::Str(ckpt.to_string())));
+        }
+        std::fs::write(path, report.to_string() + "\n")?;
+        sct_info!("wrote {path}");
+    }
+
+    // The health verdict is the exit status: a poisoned checkpoint must not
+    // pass silently through scripts that chain on `sct doctor && ...`.
+    if let Some(detail) = super::trainer::non_finite_param(&model) {
+        bail!("{ckpt}: {detail}");
+    }
+    sct_info!("{ckpt}: all parameter tensors finite");
+    Ok(())
 }
 
 fn cmd_mem_report(argv: &[String]) -> Result<()> {

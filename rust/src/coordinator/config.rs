@@ -29,7 +29,12 @@
 //! per-request span records during serving (`--trace-out`); `profile_out` —
 //! path for the profiler report (`--profile-out`; enables
 //! [`crate::obs::prof`] for the run and writes JSON plus a sibling `.folded`
-//! flamegraph file at the end).
+//! flamegraph file at the end); `spectra_out` / `spectra_every` — per-layer
+//! spectral-health JSONL snapshots during native training
+//! (`--spectra-out`, cadence default 25); `watchdog` — arm the training
+//! watchdog with policy `warn|skip|halt`, tuned by `watchdog_spike_factor`
+//! (loss spike vs rolling-window mean, default 3.0) and `watchdog_grad_max`
+//! (gradient-norm explosion threshold, default 1e3).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -207,6 +212,21 @@ pub struct ObsConfig {
     /// Path for the profiler report: enables `obs::prof` for the run and
     /// writes JSON there (plus `<path>.folded` collapsed stacks) at the end.
     pub profile_out: Option<String>,
+    /// Path for per-layer spectral-health JSONL snapshots during native
+    /// training (`rank::spectra`: spectrum, tail curve, effective rank,
+    /// condition, ortho error, subspace drift).
+    pub spectra_out: Option<String>,
+    /// Spectra sampling cadence in optimizer steps (with `spectra_out`).
+    pub spectra_every: usize,
+    /// Training-watchdog policy (`warn|skip|halt`); `None` = watchdog off.
+    pub watchdog: Option<String>,
+    /// Loss counts as a spike above `factor x` the rolling-window mean.
+    pub watchdog_spike_factor: f32,
+    /// Gradient global norm above this is an explosion anomaly.
+    pub watchdog_grad_max: f64,
+    /// Test hook: feed the watchdog a synthetic NaN loss at this step (the
+    /// CI watchdog smoke; CLI-only, not a TOML key).
+    pub watchdog_inject_nan: Option<u64>,
 }
 
 impl Default for ObsConfig {
@@ -217,6 +237,12 @@ impl Default for ObsConfig {
             metrics_every: 10,
             trace_out: None,
             profile_out: None,
+            spectra_out: None,
+            spectra_every: 25,
+            watchdog: None,
+            watchdog_spike_factor: 3.0,
+            watchdog_grad_max: 1e3,
+            watchdog_inject_nan: None,
         }
     }
 }
@@ -246,7 +272,39 @@ impl ObsConfig {
         if let Some(v) = o.get("profile_out") {
             self.profile_out = Some(v.as_str()?.to_string());
         }
+        if let Some(v) = o.get("spectra_out") {
+            self.spectra_out = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = o.get("spectra_every") {
+            self.spectra_every = v.as_usize()?.max(1);
+        }
+        if let Some(v) = o.get("watchdog") {
+            let policy = v.as_str()?;
+            if policy.parse::<crate::obs::health::Policy>().is_err() {
+                bail!("[obs] watchdog {policy:?} unknown (expected warn|skip|halt)");
+            }
+            self.watchdog = Some(policy.to_string());
+        }
+        if let Some(v) = o.get("watchdog_spike_factor") {
+            self.watchdog_spike_factor = v.as_f32()?;
+        }
+        if let Some(v) = o.get("watchdog_grad_max") {
+            self.watchdog_grad_max = v.as_f32()? as f64;
+        }
         Ok(())
+    }
+
+    /// The armed watchdog configuration, or `None` when the watchdog is off.
+    /// Policy strings are validated at parse time, so this never fails on a
+    /// config that passed `apply_toml` / CLI validation.
+    pub fn watchdog_config(&self) -> Option<crate::obs::health::WatchdogConfig> {
+        let policy = self.watchdog.as_deref()?.parse().ok()?;
+        Some(crate::obs::health::WatchdogConfig {
+            policy,
+            spike_factor: self.watchdog_spike_factor,
+            grad_max: self.watchdog_grad_max,
+            ..Default::default()
+        })
     }
 
     /// Apply the configured level to the global logger (call after flags
@@ -729,19 +787,37 @@ metrics_out = "runs/metrics.jsonl"
 metrics_every = 5
 trace_out = "traces.jsonl"
 profile_out = "profile.json"
+spectra_out = "spectra.jsonl"
+spectra_every = 7
+watchdog = "skip"
+watchdog_spike_factor = 4.5
+watchdog_grad_max = 250.0
 "#;
         let mut cfg = RunConfig::default();
         assert_eq!(cfg.obs, ObsConfig::default());
         assert_eq!(cfg.obs.metrics_every, 10, "default cadence");
         assert_eq!(cfg.obs.profile_out, None, "profiling is off by default");
+        assert_eq!(cfg.obs.spectra_every, 25, "default spectra cadence");
+        assert!(cfg.obs.watchdog.is_none(), "watchdog is off by default");
+        assert!(cfg.obs.watchdog_config().is_none());
         cfg.apply_toml(&parse_toml(text).unwrap()).unwrap();
         assert_eq!(cfg.obs.log_level.as_deref(), Some("debug"));
         assert_eq!(cfg.obs.metrics_out.as_deref(), Some("runs/metrics.jsonl"));
         assert_eq!(cfg.obs.metrics_every, 5);
         assert_eq!(cfg.obs.trace_out.as_deref(), Some("traces.jsonl"));
         assert_eq!(cfg.obs.profile_out.as_deref(), Some("profile.json"));
+        assert_eq!(cfg.obs.spectra_out.as_deref(), Some("spectra.jsonl"));
+        assert_eq!(cfg.obs.spectra_every, 7);
+        assert_eq!(cfg.obs.watchdog.as_deref(), Some("skip"));
+        let wd = cfg.obs.watchdog_config().expect("watchdog armed");
+        assert_eq!(wd.policy, crate::obs::health::Policy::Skip);
+        assert!((wd.spike_factor - 4.5).abs() < 1e-6);
+        assert!((wd.grad_max - 250.0).abs() < 1e-6);
         // unknown level name is an error, not a silent skip
         let doc = parse_toml("[obs]\nlog_level = \"loud\"\n").unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
+        // unknown watchdog policy is an error, not a silent skip
+        let doc = parse_toml("[obs]\nwatchdog = \"loud\"\n").unwrap();
         assert!(cfg.apply_toml(&doc).is_err());
     }
 

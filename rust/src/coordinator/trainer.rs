@@ -23,12 +23,16 @@ use super::config::RunConfig;
 use crate::checkpoint::CheckpointManager;
 use crate::data::build_dataset;
 use crate::metrics::{export, Tracker};
-use crate::obs;
-use crate::rank::{model_energy, publish_energy, publish_ortho_error, RankEvent};
+use crate::obs::{self, health};
+use crate::rank::{
+    model_energy, model_spectra, publish_energy, publish_ortho_error, spectra_json, DriftTracker,
+    RankEvent,
+};
+use crate::serve::SpectralModel;
 use crate::train::{NativeTrainConfig, NativeTrainer};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::{sct_info, sct_warn};
+use crate::{sct_error, sct_info, sct_warn};
 
 #[cfg(feature = "pjrt")]
 use crate::data::Prefetcher;
@@ -122,9 +126,38 @@ pub fn run_native(cfg: &RunConfig, resume: bool) -> Result<(RunSummary, Tracker)
     let mut rank_events: Vec<RankEvent> = Vec::new();
 
     // `--metrics-out`: append one flat registry snapshot per cadence step,
-    // keyed by the optimizer step — the offline twin of `GET /metrics`.
+    // keyed by the optimizer step — the offline twin of `GET /metrics`. The
+    // closure dedups by step so the unconditional final flush (loop exit,
+    // watchdog halt, resume-already-done) never writes the same step twice.
     let metrics_out = cfg.obs.metrics_out.as_ref().map(std::path::PathBuf::from);
     let metrics_every = cfg.obs.metrics_every.max(1);
+    let mut last_metrics_step: Option<usize> = None;
+    let mut flush_metrics = move |step: usize| -> Result<()> {
+        if let Some(path) = &metrics_out {
+            if last_metrics_step != Some(step) {
+                last_metrics_step = Some(step);
+                let row = Json::Obj(vec![
+                    ("step".to_string(), Json::Num(step as f64)),
+                    ("metrics".to_string(), obs::registry().render_json()),
+                ]);
+                export::append_jsonl(path, &row)?;
+            }
+        }
+        Ok(())
+    };
+
+    // `--spectra-out`: per-layer spectral-health snapshots on their own
+    // cadence, sharing the rank policy's tail fraction so tail energies in
+    // spectra.jsonl agree with the monitor/policy numbers exactly. The
+    // watchdog (if armed) runs its deep parameter scan on the same cadence.
+    let spectra_out = cfg.obs.spectra_out.as_ref().map(std::path::PathBuf::from);
+    let spectra_every = cfg.obs.spectra_every.max(1);
+    let mut drift = DriftTracker::new();
+    if let Some(wd) = cfg.obs.watchdog_config() {
+        sct_info!("[watchdog] armed with policy {}", wd.policy.as_str());
+        health::configure(wd);
+        trainer.watchdog = true;
+    }
 
     while step < cfg.steps {
         if rank_policy.wants_stats(step as u64) {
@@ -180,6 +213,43 @@ pub fn run_native(cfg: &RunConfig, resume: bool) -> Result<(RunSummary, Tracker)
         tracker.record(loss, t0.elapsed().as_secs_f64());
         step += 1;
 
+        // Watchdog: fold in the step's verdict from train_step, the deep
+        // parameter scan (spectra cadence), and the CI smoke's synthetic
+        // NaN injection.
+        let mut verdict = trainer.last_verdict;
+        if cfg.obs.watchdog_inject_nan == Some(step as u64) {
+            sct_warn!("[watchdog] injecting synthetic NaN loss at step {step} (test hook)");
+            verdict = verdict.max(health::check_loss(step as u64, f32::NAN));
+        }
+        if trainer.watchdog && (step % spectra_every == 0 || step == cfg.steps) {
+            verdict =
+                verdict.max(health::check_params(step as u64, || non_finite_param(&trainer.model)));
+        }
+        let halted = verdict.halts();
+
+        if let Some(path) = &spectra_out {
+            if step % spectra_every == 0 || step == cfg.steps || halted {
+                let mut spectra = model_spectra(&trainer.model, tail_frac);
+                drift.observe(&trainer.model, &mut spectra);
+                crate::rank::spectra::publish(&spectra);
+                export::append_jsonl(path, &spectra_json(step as u64, &spectra))?;
+            }
+        }
+
+        if halted {
+            // Diagnostic dump, then a non-zero exit. The checkpoint cadence
+            // below is never reached, so no checkpoint is written from the
+            // anomalous state (and skip semantics already kept the model at
+            // its pre-step values).
+            flush_metrics(step)?;
+            let report = health::report_json();
+            sct_error!("[watchdog] halting at step {step}: {}", report.to_string());
+            let detail = health::last_anomaly()
+                .map(|a| format!("{} ({})", a.kind.name(), a.detail))
+                .unwrap_or_else(|| "anomaly".to_string());
+            anyhow::bail!("watchdog halted training at step {step}: {detail}");
+        }
+
         if cfg.eval_every > 0 && step % cfg.eval_every == 0 {
             last_eval = Some(trainer.eval_loss(&eval_batch));
         }
@@ -197,16 +267,13 @@ pub fn run_native(cfg: &RunConfig, resume: bool) -> Result<(RunSummary, Tracker)
                 mgr.save_tensors(trainer.step, &trainer.checkpoint_tensors())?;
             }
         }
-        if let Some(path) = &metrics_out {
-            if step % metrics_every == 0 || step == cfg.steps {
-                let row = Json::Obj(vec![
-                    ("step".to_string(), Json::Num(step as f64)),
-                    ("metrics".to_string(), obs::registry().render_json()),
-                ]);
-                export::append_jsonl(path, &row)?;
-            }
+        if step % metrics_every == 0 {
+            flush_metrics(step)?;
         }
     }
+    // Final flush even when the step count is not a multiple of the cadence
+    // (and when a resumed run was already done, so the loop never ran).
+    flush_metrics(step)?;
     let final_err = trainer.ortho_error();
     publish_ortho_error(final_err);
     last_ortho = Some(final_err);
@@ -231,6 +298,51 @@ pub fn run_native(cfg: &RunConfig, resume: bool) -> Result<(RunSummary, Tracker)
         layer_ranks: trainer.layer_ranks(),
     };
     Ok((summary, tracker))
+}
+
+/// Scan every parameter tensor for a non-finite value — the watchdog's deep
+/// check, run on the spectra cadence (the per-step check inside
+/// `train_step` covers only the O(rank) `s` vectors). `sct doctor` runs the
+/// same scan offline over a loaded checkpoint.
+pub(crate) fn non_finite_param(model: &SpectralModel) -> Option<String> {
+    fn scan(name: String, data: &[f32]) -> Option<String> {
+        if data.iter().any(|v| !v.is_finite()) {
+            Some(format!("non-finite value in {name}"))
+        } else {
+            None
+        }
+    }
+    if let Some(d) = scan("embed".into(), &model.embed.data) {
+        return Some(d);
+    }
+    for (i, l) in model.layers.iter().enumerate() {
+        for (nm, w) in [("wq", &l.wq), ("wk", &l.wk), ("wv", &l.wv), ("wo", &l.wo)] {
+            if let Some(d) = scan(format!("layers/{i}/attn/{nm}"), &w.data) {
+                return Some(d);
+            }
+        }
+        for (nm, v) in [("ln1", &l.ln1), ("ln2", &l.ln2)] {
+            if let Some(d) = scan(format!("layers/{i}/{nm}"), v) {
+                return Some(d);
+            }
+        }
+        for (nm, sl) in [("gate", &l.gate), ("up", &l.up), ("down", &l.down)] {
+            for (f, data) in [("u", &sl.u.data), ("s", &sl.s), ("v", &sl.v.data)] {
+                if let Some(d) = scan(format!("layers/{i}/mlp/{nm}/{f}"), data) {
+                    return Some(d);
+                }
+            }
+        }
+    }
+    if let Some(d) = scan("ln_f".into(), &model.ln_f) {
+        return Some(d);
+    }
+    if let Some(h) = &model.head {
+        if let Some(d) = scan("head".into(), &h.data) {
+            return Some(d);
+        }
+    }
+    None
 }
 
 // ---------------------------------------------------------------------------
@@ -453,6 +565,153 @@ mod tests {
         // resuming with the same step target does no additional work
         let (resumed, _) = run_native(&cfg, true).unwrap();
         assert_eq!(resumed.steps, 6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn tiny_run_cfg(dir: &std::path::Path) -> RunConfig {
+        RunConfig {
+            backend: "native".into(),
+            steps: 7,
+            eval_every: 0,
+            ortho_every: 0,
+            corpus_bytes: 60_000,
+            ckpt_dir: Some(dir.join("ckpt").to_string_lossy().into_owned()),
+            ckpt_every: 3,
+            batch: 2,
+            seq_len: 12,
+            native_model: EngineConfig {
+                vocab: 256,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                d_ffn: 24,
+                rank: 3,
+                max_seq: 16,
+                tied: true,
+            },
+            ..RunConfig::default()
+        }
+    }
+
+    #[test]
+    fn run_native_streams_spectra_matching_the_checkpointed_model() {
+        let dir = std::env::temp_dir().join(format!("sct_spectra_run_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let spectra_path = dir.join("spectra.jsonl");
+        let mut cfg = tiny_run_cfg(&dir);
+        cfg.steps = 6; // multiple of ckpt_every: final ckpt == final sample state
+        cfg.obs.spectra_out = Some(spectra_path.to_string_lossy().into_owned());
+        cfg.obs.spectra_every = 2;
+        let (summary, _) = run_native(&cfg, false).unwrap();
+        assert_eq!(summary.steps, 6);
+
+        let text = std::fs::read_to_string(&spectra_path).unwrap();
+        let rows: Vec<Json> =
+            text.lines().map(|l| Json::parse(l).expect("each line parses")).collect();
+        assert_eq!(rows.len(), 3, "cadence 2 over 6 steps -> samples at 2, 4, 6");
+        let last = rows.last().unwrap();
+        assert_eq!(last.get("step").unwrap(), &Json::Num(6.0));
+        let layers = match last.get("layers").unwrap() {
+            Json::Arr(a) => a,
+            other => panic!("layers not an array: {other:?}"),
+        };
+        assert_eq!(layers.len(), 2);
+        // Drift is measured from the second sample on.
+        let t0 = match rows[1].get("layers").unwrap() {
+            Json::Arr(a) => a[0].get("triples").unwrap().clone(),
+            other => panic!("layers not an array: {other:?}"),
+        };
+        if let Json::Arr(ts) = &t0 {
+            assert!(ts[0].get("drift_u").unwrap().as_f64().unwrap() >= 0.0);
+        } else {
+            panic!("triples not an array");
+        }
+
+        // The acceptance contract: tail energies in spectra.jsonl match the
+        // rank monitor's values on the checkpointed model (saved at step 6,
+        // the same state the final sample observed).
+        let mgr = CheckpointManager::new(dir.join("ckpt"), 3).unwrap();
+        let (ckpt_step, path) = mgr.latest().unwrap().expect("ckpt at step 6");
+        assert_eq!(ckpt_step, 6);
+        let model = SpectralModel::load(&path).unwrap();
+        let energy = model_energy(&model, 0.25);
+        for (l, e) in layers.iter().zip(&energy) {
+            let tail = l.get("tail_share").unwrap().as_f64().unwrap();
+            assert!(
+                (tail - e.tail_share as f64).abs() < 1e-6,
+                "spectra tail {tail} vs monitor {}",
+                e.tail_share
+            );
+            let en = l.get("energy").unwrap().as_f64().unwrap();
+            assert!((en - e.energy as f64).abs() <= 1e-6 * e.energy as f64);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn run_native_flushes_final_metrics_off_cadence() {
+        let dir = std::env::temp_dir().join(format!("sct_metrics_flush_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let metrics_path = dir.join("metrics.jsonl");
+        let mut cfg = tiny_run_cfg(&dir);
+        cfg.steps = 7; // NOT a multiple of the cadence
+        cfg.obs.metrics_out = Some(metrics_path.to_string_lossy().into_owned());
+        cfg.obs.metrics_every = 5;
+        let (summary, _) = run_native(&cfg, false).unwrap();
+        assert_eq!(summary.steps, 7);
+        let text = std::fs::read_to_string(&metrics_path).unwrap();
+        let steps: Vec<f64> = text
+            .lines()
+            .map(|l| Json::parse(l).unwrap().get("step").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(steps, vec![5.0, 7.0], "cadence row + final partial-window row");
+
+        // A resumed run that is already done still appends its final record
+        // (the loop body never runs).
+        let (resumed, _) = run_native(&cfg, true).unwrap();
+        assert_eq!(resumed.steps, 7);
+        let text = std::fs::read_to_string(&metrics_path).unwrap();
+        assert_eq!(text.lines().count(), 3, "resume-done run flushes exactly one record");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn run_native_watchdog_halts_without_poisoning_the_checkpoint() {
+        let _g = health::test_guard();
+        let dir = std::env::temp_dir().join(format!("sct_watchdog_halt_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let metrics_path = dir.join("metrics.jsonl");
+        let mut cfg = tiny_run_cfg(&dir);
+        cfg.steps = 7;
+        cfg.obs.metrics_out = Some(metrics_path.to_string_lossy().into_owned());
+        cfg.obs.metrics_every = 100;
+        cfg.obs.watchdog = Some("halt".into());
+        cfg.obs.watchdog_inject_nan = Some(4);
+        let before = health::anomaly_total();
+        let err = run_native(&cfg, false).expect_err("halt policy must error out");
+        assert!(err.to_string().contains("watchdog halted training at step 4"), "{err}");
+        assert!(health::anomaly_total() > before, "anomaly counter must increment");
+
+        // ckpt_every = 3: the step-3 checkpoint landed, the halt at step 4
+        // prevented any later save — the checkpoint predates the anomaly.
+        let mgr = CheckpointManager::new(dir.join("ckpt"), 3).unwrap();
+        let (ckpt_step, path) = mgr.latest().unwrap().expect("pre-halt ckpt");
+        assert_eq!(ckpt_step, 3);
+        let model = SpectralModel::load(&path).unwrap();
+        assert!(super::non_finite_param(&model).is_none(), "checkpoint must be clean");
+
+        // The halt path still flushed a final metrics record (cadence 100
+        // never fired on its own).
+        let text = std::fs::read_to_string(&metrics_path).unwrap();
+        let steps: Vec<f64> = text
+            .lines()
+            .map(|l| Json::parse(l).unwrap().get("step").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(steps, vec![4.0], "halt flushes the partial window");
+        health::disable();
         std::fs::remove_dir_all(&dir).ok();
     }
 }

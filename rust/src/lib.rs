@@ -55,8 +55,14 @@
 //!   profiler (`--profile-out`, `GET /v1/profile`): a hierarchical
 //!   phase/kernel tree with per-kernel FLOP + byte work models, roofline
 //!   accounting against a calibrated machine peak, and flamegraph `.folded`
-//!   export. Instruments serve, pool, train and rank without touching the
-//!   sequential hot paths; profiling off is one relaxed atomic load.
+//!   export. `obs::health` adds the training watchdog (NaN/Inf, loss-spike,
+//!   grad-explosion and dead-spectrum checks with warn/skip/halt policies,
+//!   `sct_health_*` counters, `GET /v1/health` readiness) and
+//!   `rank::spectra` the per-layer spectral diagnostics behind
+//!   `sct train --spectra-out` / `sct doctor` (`sct_spectral_*` gauges).
+//!   Instruments serve, pool, train and rank without touching the
+//!   sequential hot paths; profiling, tracing and a disarmed watchdog are
+//!   one relaxed atomic load each.
 //! * [`checkpoint`] — binary checkpoint format for spectral factors (shared
 //!   by training sessions and serve models).
 //! * [`util`] — in-tree substrates that would normally be crates (args,

@@ -1,0 +1,553 @@
+//! Training watchdog + process health state — the reaction half of the
+//! spectral-health subsystem (`rank::spectra` is the measurement half).
+//!
+//! Native low-rank pretraining fails in characteristic numerical ways that
+//! the loss curve alone hides: NaN/Inf leaking from an overflowed forward,
+//! a gradient-norm explosion one step before the loss shows it, singular
+//! values collapsing to zero (a dead subspace that QR retraction happily
+//! keeps orthonormal). The watchdog checks for each of these at step
+//! granularity and reacts per the configured [`Policy`]:
+//!
+//! * `warn`  — log + count, keep training;
+//! * `skip`  — additionally drop the optimizer update for the anomalous
+//!   step (the model is left exactly as it was before the step, so a NaN
+//!   gradient can never poison the factors or the Adam moments);
+//! * `halt`  — additionally stop the run: the trainer returns an error, the
+//!   CLI exits non-zero after a final diagnostic dump, and no checkpoint is
+//!   written from the anomalous state.
+//!
+//! Every anomaly increments `sct_health_anomalies_total{kind=...}`, emits a
+//! leveled log line and a trace event, and is kept as the process-wide
+//! "last anomaly" surfaced by `GET /v1/health` and the halt dump.
+//!
+//! Disabled cost: each check is one relaxed atomic load (the same contract
+//! as `obs::prof` — see the overhead test). The lazy-closure form
+//! [`check_params`] never evaluates its closure while disabled, so a full
+//! parameter scan can sit on the step path unguarded.
+
+use crate::util::json::Json;
+use crate::{json_obj, obs, sct_error, sct_warn};
+use std::collections::VecDeque;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// What to do when an anomaly fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Policy {
+    /// Log + count only.
+    #[default]
+    Warn,
+    /// Also skip the optimizer update for the anomalous step.
+    Skip,
+    /// Also stop the run with a non-zero exit and a diagnostic dump.
+    Halt,
+}
+
+impl Policy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Policy::Warn => "warn",
+            Policy::Skip => "skip",
+            Policy::Halt => "halt",
+        }
+    }
+}
+
+impl FromStr for Policy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Policy, String> {
+        match s {
+            "warn" => Ok(Policy::Warn),
+            "skip" => Ok(Policy::Skip),
+            "halt" => Ok(Policy::Halt),
+            other => Err(format!("unknown watchdog policy '{other}' (use warn|skip|halt)")),
+        }
+    }
+}
+
+/// Watchdog thresholds. `Default` matches the CLI/TOML defaults.
+#[derive(Debug, Clone)]
+pub struct WatchdogConfig {
+    pub policy: Policy,
+    /// A finite loss counts as a spike when it exceeds `spike_factor` times
+    /// the rolling-window mean (once the window holds [`MIN_WINDOW`] steps).
+    pub spike_factor: f32,
+    /// Rolling loss-window length, in steps.
+    pub window: usize,
+    /// Gradient global norm above this is an explosion.
+    pub grad_max: f64,
+    /// A triple whose largest |s| is at or below this is a dead spectrum.
+    pub dead_eps: f32,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> WatchdogConfig {
+        WatchdogConfig {
+            policy: Policy::Warn,
+            spike_factor: 3.0,
+            window: 50,
+            grad_max: 1e3,
+            dead_eps: 1e-8,
+        }
+    }
+}
+
+/// Steps the rolling window must hold before loss-spike detection arms
+/// (early training is noisy by construction).
+pub const MIN_WINDOW: usize = 10;
+
+/// Outcome of a check, already resolved against the policy. Ordered by
+/// severity so a step can fold multiple checks with `max`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Verdict {
+    #[default]
+    Ok,
+    /// Anomaly recorded; keep going.
+    Warn,
+    /// Skip this step's optimizer update.
+    Skip,
+    /// Stop the run.
+    Halt,
+}
+
+impl Verdict {
+    /// Should the optimizer update be dropped? (True for halt too — a
+    /// halting run must not apply the poisoned update first.)
+    pub fn skips_update(self) -> bool {
+        self >= Verdict::Skip
+    }
+
+    pub fn halts(self) -> bool {
+        self == Verdict::Halt
+    }
+}
+
+/// The anomaly taxonomy. `name()` is the metric label value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AnomalyKind {
+    NanLoss,
+    LossSpike,
+    NanGrad,
+    GradExplosion,
+    NanParam,
+    DeadSpectrum,
+}
+
+/// Every kind, for zero-state metric pre-registration (so the series exist
+/// in a scrape before anything went wrong).
+pub const ANOMALY_KINDS: [AnomalyKind; 6] = [
+    AnomalyKind::NanLoss,
+    AnomalyKind::LossSpike,
+    AnomalyKind::NanGrad,
+    AnomalyKind::GradExplosion,
+    AnomalyKind::NanParam,
+    AnomalyKind::DeadSpectrum,
+];
+
+impl AnomalyKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            AnomalyKind::NanLoss => "nan_loss",
+            AnomalyKind::LossSpike => "loss_spike",
+            AnomalyKind::NanGrad => "nan_grad",
+            AnomalyKind::GradExplosion => "grad_explosion",
+            AnomalyKind::NanParam => "nan_param",
+            AnomalyKind::DeadSpectrum => "dead_spectrum",
+        }
+    }
+}
+
+/// One recorded anomaly — the `/v1/health` "last anomaly" payload.
+#[derive(Debug, Clone)]
+pub struct Anomaly {
+    pub step: u64,
+    pub kind: AnomalyKind,
+    pub detail: String,
+}
+
+struct State {
+    cfg: WatchdogConfig,
+    window: VecDeque<f64>,
+    window_sum: f64,
+    last: Option<Anomaly>,
+    anomalies: u64,
+    skipped: u64,
+}
+
+impl Default for State {
+    fn default() -> State {
+        State {
+            cfg: WatchdogConfig::default(),
+            window: VecDeque::new(),
+            window_sum: 0.0,
+            last: None,
+            anomalies: 0,
+            skipped: 0,
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<State>> = Mutex::new(None);
+
+fn with_state<R>(f: impl FnOnce(&mut State) -> R) -> R {
+    let mut guard = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    f(guard.get_or_insert_with(State::default))
+}
+
+/// Is the watchdog armed? One relaxed load — the whole cost of a disarmed
+/// check.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Arm the watchdog with the given thresholds, resetting the rolling
+/// window (anomaly counters and the last-anomaly record persist — they are
+/// process-lifetime health state).
+pub fn configure(cfg: WatchdogConfig) {
+    with_state(|s| {
+        s.cfg = cfg;
+        s.window.clear();
+        s.window_sum = 0.0;
+    });
+    register_metrics();
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Disarm the watchdog. Already-recorded health state survives for
+/// reporting.
+pub fn disable() {
+    ENABLED.store(false, Ordering::Release);
+}
+
+/// The armed policy ([`Policy::Warn`] when disarmed).
+pub fn policy() -> Policy {
+    with_state(|s| s.cfg.policy)
+}
+
+fn metrics_counter(kind: &str) -> obs::Counter {
+    obs::registry().counter_with(
+        "sct_health_anomalies_total",
+        &[("kind", kind)],
+        "Training anomalies detected by the watchdog, by kind",
+    )
+}
+
+fn skipped_counter() -> obs::Counter {
+    obs::registry().counter_with(
+        "sct_health_skipped_steps_total",
+        &[],
+        "Optimizer updates dropped by the watchdog skip/halt policies",
+    )
+}
+
+/// Pre-register every `sct_health_*` series at zero so scrapes (and the CI
+/// metrics gate) see them before any anomaly fires. Called by `configure`
+/// and at serve startup.
+pub fn register_metrics() {
+    for kind in ANOMALY_KINDS {
+        metrics_counter(kind.name());
+    }
+    skipped_counter();
+}
+
+fn record(s: &mut State, step: u64, kind: AnomalyKind, detail: String) -> Verdict {
+    let verdict = match s.cfg.policy {
+        Policy::Warn => Verdict::Warn,
+        Policy::Skip => Verdict::Skip,
+        Policy::Halt => Verdict::Halt,
+    };
+    metrics_counter(kind.name()).inc();
+    s.anomalies += 1;
+    obs::trace::emit(&json_obj![
+        ("kind", "anomaly"),
+        ("anomaly", kind.name()),
+        ("step", step as usize),
+        ("policy", s.cfg.policy.as_str()),
+        ("detail", detail.as_str()),
+    ]);
+    if verdict.halts() {
+        sct_error!("watchdog: {} at step {step}: {detail} (policy halt)", kind.name());
+    } else {
+        sct_warn!(
+            "watchdog: {} at step {step}: {detail} (policy {})",
+            kind.name(),
+            s.cfg.policy.as_str()
+        );
+    }
+    s.last = Some(Anomaly { step, kind, detail });
+    verdict
+}
+
+/// Check a step's training loss: NaN/Inf, then spike vs the rolling-window
+/// mean. Finite losses (spiking or not) enter the window.
+pub fn check_loss(step: u64, loss: f32) -> Verdict {
+    if !enabled() {
+        return Verdict::Ok;
+    }
+    with_state(|s| {
+        if !loss.is_finite() {
+            return record(s, step, AnomalyKind::NanLoss, format!("loss = {loss}"));
+        }
+        let mut verdict = Verdict::Ok;
+        if s.window.len() >= MIN_WINDOW {
+            let mean = s.window_sum / s.window.len() as f64;
+            if mean > 0.0 && loss as f64 > mean * s.cfg.spike_factor as f64 {
+                verdict = record(
+                    s,
+                    step,
+                    AnomalyKind::LossSpike,
+                    format!("loss {loss:.4} > {:.1}x window mean {mean:.4}", s.cfg.spike_factor),
+                );
+            }
+        }
+        s.window.push_back(loss as f64);
+        s.window_sum += loss as f64;
+        while s.window.len() > s.cfg.window.max(1) {
+            if let Some(old) = s.window.pop_front() {
+                s.window_sum -= old;
+            }
+        }
+        verdict
+    })
+}
+
+/// Check the gradient global norm: NaN/Inf, then explosion threshold.
+pub fn check_grad_norm(step: u64, norm: f64) -> Verdict {
+    if !enabled() {
+        return Verdict::Ok;
+    }
+    with_state(|s| {
+        if !norm.is_finite() {
+            return record(s, step, AnomalyKind::NanGrad, format!("grad norm = {norm}"));
+        }
+        if norm > s.cfg.grad_max {
+            return record(
+                s,
+                step,
+                AnomalyKind::GradExplosion,
+                format!("grad norm {norm:.3e} > max {:.3e}", s.cfg.grad_max),
+            );
+        }
+        Verdict::Ok
+    })
+}
+
+/// Check one triple's singular values: NaN poisons, all-(near-)zero is a
+/// collapsed/dead spectrum.
+pub fn check_spectrum(step: u64, layer: usize, name: &str, s_vals: &[f32]) -> Verdict {
+    if !enabled() {
+        return Verdict::Ok;
+    }
+    with_state(|s| {
+        if s_vals.iter().any(|v| !v.is_finite()) {
+            return record(
+                s,
+                step,
+                AnomalyKind::NanParam,
+                format!("non-finite singular value in layer {layer} {name}"),
+            );
+        }
+        let s_max = s_vals.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        if s_max <= s.cfg.dead_eps {
+            return record(
+                s,
+                step,
+                AnomalyKind::DeadSpectrum,
+                format!("layer {layer} {name}: max |s| = {s_max:.3e} (collapsed spectrum)"),
+            );
+        }
+        Verdict::Ok
+    })
+}
+
+/// Lazy full-parameter scan: `scan` runs only while the watchdog is armed
+/// (never while disabled — see the overhead test) and returns a detail
+/// string when it finds a non-finite parameter.
+pub fn check_params<F: FnOnce() -> Option<String>>(step: u64, scan: F) -> Verdict {
+    if !enabled() {
+        return Verdict::Ok;
+    }
+    match scan() {
+        Some(detail) => with_state(|s| record(s, step, AnomalyKind::NanParam, detail)),
+        None => Verdict::Ok,
+    }
+}
+
+/// Count an optimizer update dropped by the skip/halt policies.
+pub fn note_skipped_step() {
+    skipped_counter().inc();
+    with_state(|s| s.skipped += 1);
+}
+
+/// The most recent anomaly (process-lifetime), for `/v1/health` and the
+/// halt dump.
+pub fn last_anomaly() -> Option<Anomaly> {
+    with_state(|s| s.last.clone())
+}
+
+/// Total anomalies recorded over the process lifetime.
+pub fn anomaly_total() -> u64 {
+    with_state(|s| s.anomalies)
+}
+
+/// Health report object: watchdog arming, policy, counts and the last
+/// anomaly — embedded in `/v1/health` and the halt-time diagnostic dump.
+pub fn report_json() -> Json {
+    with_state(|s| {
+        let last = match &s.last {
+            Some(a) => json_obj![
+                ("step", a.step as usize),
+                ("kind", a.kind.name()),
+                ("detail", a.detail.as_str()),
+            ],
+            None => Json::Null,
+        };
+        json_obj![
+            ("enabled", enabled()),
+            ("policy", s.cfg.policy.as_str()),
+            ("anomalies_total", s.anomalies as usize),
+            ("skipped_steps", s.skipped as usize),
+            ("last_anomaly", last),
+        ]
+    })
+}
+
+/// Serialize tests (and any test arming the global watchdog elsewhere in
+/// the crate) against each other.
+#[doc(hidden)]
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arm(policy: Policy) {
+        configure(WatchdogConfig { policy, ..WatchdogConfig::default() });
+    }
+
+    #[test]
+    fn disarmed_checks_are_noops_and_cheap() {
+        let _g = test_guard();
+        disable();
+        let before = anomaly_total();
+        let mut evaluated = false;
+        let v = check_params(1, || {
+            evaluated = true;
+            Some("never".to_string())
+        });
+        assert_eq!(v, Verdict::Ok);
+        assert!(!evaluated, "disarmed check_params must not run the scan");
+        assert_eq!(check_loss(1, f32::NAN), Verdict::Ok);
+        assert_eq!(check_grad_norm(1, f64::INFINITY), Verdict::Ok);
+        assert_eq!(check_spectrum(1, 0, "gate", &[f32::NAN]), Verdict::Ok);
+        assert_eq!(anomaly_total(), before, "disarmed checks must not record");
+
+        // The disarmed fast path is one relaxed load — same budget as the
+        // profiler's overhead test.
+        let n = 2_000_000u64;
+        let t0 = std::time::Instant::now();
+        for i in 0..n {
+            let _ = check_loss(i, 1.0);
+        }
+        let per_call = t0.elapsed().as_secs_f64() / n as f64;
+        assert!(per_call < 500e-9, "disarmed watchdog check cost {per_call:.3e}s per call");
+    }
+
+    #[test]
+    fn policy_resolves_verdicts() {
+        let _g = test_guard();
+        arm(Policy::Warn);
+        assert_eq!(check_loss(5, f32::NAN), Verdict::Warn);
+        arm(Policy::Skip);
+        assert_eq!(check_loss(6, f32::NAN), Verdict::Skip);
+        arm(Policy::Halt);
+        let v = check_loss(7, f32::INFINITY);
+        assert_eq!(v, Verdict::Halt);
+        assert!(v.halts() && v.skips_update());
+        let last = last_anomaly().unwrap();
+        assert_eq!(last.step, 7);
+        assert_eq!(last.kind, AnomalyKind::NanLoss);
+        disable();
+    }
+
+    #[test]
+    fn loss_spike_arms_after_min_window() {
+        let _g = test_guard();
+        arm(Policy::Warn);
+        // Below MIN_WINDOW: even a huge loss is not a spike yet.
+        assert_eq!(check_loss(0, 100.0), Verdict::Ok);
+        for step in 1..=(MIN_WINDOW as u64) {
+            assert_eq!(check_loss(step, 2.0), Verdict::Ok);
+        }
+        // Window mean is ~ 10.9 (one 100 + ten 2.0); 4x mean is a spike at
+        // the default factor 3.0 only if > 3*mean — use a clear spike.
+        let v = check_loss(99, 1000.0);
+        assert_eq!(v, Verdict::Warn);
+        assert_eq!(last_anomaly().unwrap().kind, AnomalyKind::LossSpike);
+        // The spike entered the window; a normal loss right after is fine.
+        assert_eq!(check_loss(100, 2.0), Verdict::Ok);
+        disable();
+    }
+
+    #[test]
+    fn grad_and_spectrum_checks_fire() {
+        let _g = test_guard();
+        configure(WatchdogConfig { policy: Policy::Skip, grad_max: 10.0, ..Default::default() });
+        assert_eq!(check_grad_norm(3, 5.0), Verdict::Ok);
+        assert_eq!(check_grad_norm(3, 50.0), Verdict::Skip);
+        assert_eq!(last_anomaly().unwrap().kind, AnomalyKind::GradExplosion);
+        assert_eq!(check_grad_norm(4, f64::NAN), Verdict::Skip);
+        assert_eq!(last_anomaly().unwrap().kind, AnomalyKind::NanGrad);
+
+        assert_eq!(check_spectrum(5, 1, "up", &[0.5, 0.1]), Verdict::Ok);
+        assert_eq!(check_spectrum(5, 1, "up", &[0.0, 0.0]), Verdict::Skip);
+        assert_eq!(last_anomaly().unwrap().kind, AnomalyKind::DeadSpectrum);
+        assert_eq!(check_spectrum(6, 2, "down", &[1.0, f32::NAN]), Verdict::Skip);
+        assert_eq!(last_anomaly().unwrap().kind, AnomalyKind::NanParam);
+
+        let mut ran = false;
+        let v = check_params(7, || {
+            ran = true;
+            None
+        });
+        assert!(ran, "armed check_params must run the scan");
+        assert_eq!(v, Verdict::Ok);
+        disable();
+    }
+
+    #[test]
+    fn report_and_metrics_surface() {
+        let _g = test_guard();
+        arm(Policy::Halt);
+        let _ = check_loss(42, f32::NAN);
+        note_skipped_step();
+        let report = report_json();
+        assert_eq!(report.get("policy").unwrap(), &Json::Str("halt".into()));
+        let last = report.get("last_anomaly").unwrap();
+        assert_eq!(last.get("kind").unwrap(), &Json::Str("nan_loss".into()));
+        assert!(report.get("anomalies_total").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(report.get("skipped_steps").unwrap().as_f64().unwrap() >= 1.0);
+
+        let text = obs::registry().render_prometheus();
+        assert!(text.contains("sct_health_anomalies_total{kind=\"nan_loss\"}"));
+        // Pre-registered at zero even though this kind never fired here.
+        assert!(text.contains("sct_health_anomalies_total{kind=\"grad_explosion\"}"));
+        assert!(text.contains("sct_health_skipped_steps_total"));
+        disable();
+    }
+
+    #[test]
+    fn policy_parses() {
+        assert_eq!("warn".parse::<Policy>().unwrap(), Policy::Warn);
+        assert_eq!("skip".parse::<Policy>().unwrap(), Policy::Skip);
+        assert_eq!("halt".parse::<Policy>().unwrap(), Policy::Halt);
+        assert!("loud".parse::<Policy>().is_err());
+    }
+}

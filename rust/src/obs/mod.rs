@@ -30,6 +30,11 @@
 //!   accounting against a calibrated machine peak, flamegraph `.folded`
 //!   and JSON renders. Off by default; a disabled scope is one relaxed
 //!   atomic load.
+//! * [`health`] — the training watchdog and process health state:
+//!   NaN/Inf, loss-spike, gradient-explosion and dead-spectrum checks at
+//!   step granularity with `warn`/`skip`/`halt` policies, the
+//!   `sct_health_*` anomaly counters, and the last-anomaly record behind
+//!   `GET /v1/health`. Disarmed checks are one relaxed atomic load.
 //!
 //! Instrumented layers (all registered under the `sct_` prefix):
 //! serve (`sct_serve_*`: queue depth, active slots, admission wait,
@@ -84,7 +89,39 @@
 //! calibrated machine peak (how far each kernel sits from roofline). The
 //! server surface is `GET /v1/profile` (per-worker attribution under
 //! `worker0..N` roots when `sct serve --profile-out` enabled it).
+//!
+//! **Spectral health (watch the factors themselves).** `sct train
+//! --backend native --spectra-out spectra.jsonl --spectra-every 25`
+//! samples per-layer diagnostics from the live factors — the full
+//! singular spectrum, tail-energy curve, effective rank (spectral
+//! entropy), condition number, factor ortho error, and principal-angle
+//! drift vs the previous sample — as one JSON line per sample, and
+//! publishes the same numbers as `sct_spectral_*{layer=...}` gauges:
+//!
+//! ```text
+//! $ tail -1 spectra.jsonl | python3 -c 'import json,sys
+//! r=json.load(sys.stdin); t=r["layers"][0]["triples"][0]
+//! print(r["step"], t["name"], t["effective_rank"], t["drift_u"])'
+//! 50 gate 7.82 0.031
+//! ```
+//!
+//! `sct doctor ckpt.sct` runs the same diagnostics offline over any
+//! checkpoint (per-layer table on stdout, `--json report.json` for the
+//! full record) — rank-sweep artifacts become comparable post hoc.
+//!
+//! **Watchdog (react to anomalies).** `sct train --backend native
+//! --watchdog skip` arms the [`health`] checks: NaN/Inf loss or
+//! gradients, loss spikes vs a rolling window (`--watchdog-spike-factor`),
+//! gradient-norm explosions (`--watchdog-grad-max`), and collapsed
+//! spectra. Policy `warn` logs + counts
+//! (`sct_health_anomalies_total{kind="nan_loss"|...}`), `skip` also drops
+//! the anomalous optimizer update (the factors and Adam moments stay at
+//! their pre-step values), `halt` stops the run: non-zero exit, final
+//! diagnostic dump, no checkpoint written from the poisoned state. The
+//! serve-side readiness report `GET /v1/health` carries the last-anomaly
+//! record, worker liveness and KV-slot pressure.
 
+pub mod health;
 pub mod log;
 pub mod metrics;
 pub mod prof;

@@ -27,6 +27,12 @@
 //!   ([`monitor::LayerEnergy`]) that feed the adaptive policy, and
 //!   [`monitor::RankEvent`] records surfaced through the metrics layer
 //!   (`rank_events.jsonl` next to the loss CSVs).
+//! * [`spectra`] — the full spectral-health diagnostics built on the same
+//!   tail-energy math: per-triple spectrum + tail curve, effective rank
+//!   (spectral entropy), condition number, factor ortho error, and
+//!   principal-angle subspace drift between samples. Feeds
+//!   `spectra.jsonl` (`--spectra-out`), the `sct_spectral_*` gauges, and
+//!   the offline `sct doctor` report.
 //!
 //! Wiring: `train::NativeTrainer::set_layer_rank` applies a transition to
 //! one layer (all three MLP triples + Adam moments); the
@@ -38,9 +44,14 @@
 pub mod monitor;
 pub mod policy;
 pub mod resize;
+pub mod spectra;
 
 pub use monitor::{
     layer_energy, model_energy, publish_energy, publish_ortho_error, LayerEnergy, RankEvent,
+};
+pub use spectra::{
+    max_principal_angle, model_spectra, principal_angles, spectra_json, DriftTracker,
+    LayerSpectrum, TripleSpectrum,
 };
 pub use policy::{Fixed, RankPolicy, RankPolicyConfig, StepSchedule, TailEnergy};
 pub use resize::{grow_triple, resize_triple, shrink_triple, RankResize};

@@ -31,9 +31,11 @@ pub struct LayerEnergy {
     pub tail_share: f32,
 }
 
-/// Tail share of one triple: energy fraction of the `tail_count`
-/// smallest-|s| entries.
-fn triple_tail_share(s: &[f32], tail_frac: f32) -> (f32, f32) {
+/// Tail share of one triple: `(total energy, energy fraction of the
+/// `tail_count` smallest-|s| entries)`. Public so [`super::spectra`]
+/// reports byte-identical tail energies (the doctor/monitor agreement
+/// contract).
+pub fn triple_tail_share(s: &[f32], tail_frac: f32) -> (f32, f32) {
     let k = s.len();
     let mut e: Vec<f64> = s.iter().map(|&x| (x as f64) * (x as f64)).collect();
     let total: f64 = e.iter().sum();
@@ -178,6 +180,31 @@ mod tests {
         // rank 1: the tail is the whole spectrum
         let (_, t3) = triple_tail_share(&[2.0], 0.25);
         assert!((t3 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tail_share_matches_the_analytic_fixture() {
+        // s = [4, 3, 2, 1]: energies 16, 9, 4, 1, total 30. Every value
+        // below is exact in f64, so 1e-6 is a real agreement bound — the
+        // same bound the spectra.jsonl/doctor acceptance contract uses.
+        let s = [4.0f32, 3.0, 2.0, 1.0];
+        for (frac, expect) in [
+            (0.25, 1.0 / 30.0),  // 1 smallest entry
+            (0.5, 5.0 / 30.0),   // 1 + 4
+            (0.75, 14.0 / 30.0), // 1 + 4 + 9
+            (1.0, 1.0),          // the whole spectrum
+        ] {
+            let (e, t) = triple_tail_share(&s, frac);
+            assert!((e - 30.0).abs() < 1e-6, "energy at frac {frac}: {e}");
+            assert!((t - expect as f32).abs() < 1e-6, "tail at frac {frac}: {t} vs {expect}");
+        }
+        // order-invariant: the tail is defined on sorted energies
+        let shuffled = [1.0f32, 4.0, 3.0, 2.0];
+        assert_eq!(triple_tail_share(&s, 0.5), triple_tail_share(&shuffled, 0.5));
+        // negative entries contribute their square (s may hold signed
+        // values mid-transition)
+        let signed = [-4.0f32, 3.0, -2.0, 1.0];
+        assert_eq!(triple_tail_share(&s, 0.25), triple_tail_share(&signed, 0.25));
     }
 
     #[test]

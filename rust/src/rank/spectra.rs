@@ -1,0 +1,463 @@
+//! Per-layer spectral-health diagnostics — the measurement half of the
+//! spectral-health subsystem (`obs::health` is the reaction half).
+//!
+//! Because every SCT weight is stored *as* its factorization
+//! `W = U diag(s) Vᵀ` with orthonormal `U`, `V`, the singular spectrum is
+//! just the `s` vector: no SVD is needed to observe it live. This module
+//! turns the raw factors into the quantities the paper's analysis (and the
+//! TailEnergy-calibration roadmap item) needs:
+//!
+//! * the full spectrum (sorted descending) and its **tail-energy curve**
+//!   (suffix energy shares) — tail shares are computed by
+//!   [`super::monitor::triple_tail_share`], so `spectra.jsonl`, the live
+//!   rank policy and `sct doctor` report *identical* numbers;
+//! * **effective rank** — `exp(H)` for the spectral entropy
+//!   `H = -Σ pᵢ ln pᵢ`, `pᵢ = sᵢ²/Σs²` (k for a flat spectrum, 1 for a
+//!   rank-1 one);
+//! * **condition number** `s_max/s_min` and the per-factor orthonormality
+//!   error `max|QᵀQ − I|`;
+//! * **subspace drift**: principal angles between the current `U` (resp.
+//!   `V`) and the factor at the previous sample — for orthonormal bases the
+//!   cosines are the singular values of `U_prevᵀ U_now`, so a k×k Jacobi
+//!   SVD per factor measures how fast training rotates the subspace.
+//!
+//! Snapshots stream to `spectra.jsonl` ([`spectra_json`]), to
+//! `sct_spectral_*` gauges ([`publish`]), and to the offline
+//! `sct doctor <ckpt.sct>` report.
+
+use crate::json_obj;
+use crate::obs;
+use crate::rank::monitor;
+use crate::serve::engine::{LayerWeights, SpectralModel};
+use crate::spectral::{svd, Matrix, SpectralLinear};
+use crate::util::json::Json;
+
+/// Names of the three spectral triples of a decoder layer, in report order.
+pub const TRIPLE_NAMES: [&str; 3] = ["gate", "up", "down"];
+
+/// Diagnostics for one spectral triple `W = U diag(s) Vᵀ`.
+#[derive(Debug, Clone)]
+pub struct TripleSpectrum {
+    /// `"gate"`, `"up"` or `"down"`.
+    pub name: &'static str,
+    pub rank: usize,
+    /// Singular values sorted descending.
+    pub spectrum: Vec<f32>,
+    /// Total spectral energy `Σ sᵢ²` (== `||W||_F²` for orthonormal factors).
+    pub energy: f32,
+    /// Tail-energy share at the monitor's tail fraction — bit-identical to
+    /// [`monitor::triple_tail_share`].
+    pub tail_share: f32,
+    /// `tail_curve[i]` = share of energy in `spectrum[i..]`; `[0]` is 1.
+    pub tail_curve: Vec<f32>,
+    /// `exp` of the spectral entropy of `s²` — k if flat, 1 if rank-1.
+    pub effective_rank: f32,
+    /// `s_max / s_min` (infinite when the smallest singular value is 0).
+    pub condition: f32,
+    /// `max|UᵀU − I|`.
+    pub ortho_u: f32,
+    /// `max|VᵀV − I|`.
+    pub ortho_v: f32,
+    /// Largest principal angle (radians) between the current U and the
+    /// previous sample's U; `None` on the first sample.
+    pub drift_u: Option<f32>,
+    /// Same for V.
+    pub drift_v: Option<f32>,
+}
+
+/// Diagnostics for one decoder layer. The layer-level `energy`/`tail_share`
+/// are exactly [`monitor::layer_energy`]'s values (the acceptance contract
+/// between `spectra.jsonl` and the rank monitor).
+#[derive(Debug, Clone)]
+pub struct LayerSpectrum {
+    pub layer: usize,
+    pub rank: usize,
+    pub energy: f32,
+    pub tail_share: f32,
+    pub triples: Vec<TripleSpectrum>,
+}
+
+/// Principal angles (radians, ascending) between the column spaces of two
+/// orthonormal-column matrices: `cos θᵢ` are the singular values of `AᵀB`.
+/// Defined for differing ranks (`min(k_a, k_b)` angles), which is what a
+/// drift sample straddling a rank transition produces.
+pub fn principal_angles(a: &Matrix, b: &Matrix) -> Vec<f32> {
+    let gram = a.t_matmul(b); // k_a x k_b
+    let mut angles: Vec<f32> =
+        svd::svd(&gram).s.iter().map(|c| c.clamp(-1.0, 1.0).acos()).collect();
+    angles.sort_by(|x, y| x.partial_cmp(y).unwrap_or(std::cmp::Ordering::Equal));
+    angles
+}
+
+/// Largest principal angle — the scalar "how far did the subspace move"
+/// drift signal. 0 for identical spans, π/2 for orthogonal ones.
+pub fn max_principal_angle(a: &Matrix, b: &Matrix) -> f32 {
+    principal_angles(a, b).last().copied().unwrap_or(0.0)
+}
+
+/// Diagnostics for one triple (drift left unset — see [`DriftTracker`]).
+pub fn triple_spectrum(name: &'static str, sl: &SpectralLinear, tail_frac: f32) -> TripleSpectrum {
+    let mut spectrum = sl.s.clone();
+    spectrum.sort_by(|a, b| b.abs().partial_cmp(&a.abs()).unwrap_or(std::cmp::Ordering::Equal));
+    let (energy, tail_share) = monitor::triple_tail_share(&sl.s, tail_frac);
+
+    // Suffix energy shares over the descending spectrum, accumulated in f64
+    // from the small end so the tiny tail entries are not absorbed.
+    let e2: Vec<f64> = spectrum.iter().map(|&x| (x as f64) * (x as f64)).collect();
+    let total: f64 = e2.iter().sum();
+    let mut tail_curve = vec![0.0f32; spectrum.len()];
+    if total > 0.0 {
+        let mut acc = 0.0f64;
+        for i in (0..e2.len()).rev() {
+            acc += e2[i];
+            tail_curve[i] = (acc / total) as f32;
+        }
+    }
+
+    // Spectral entropy -> effective rank.
+    let effective_rank = if total > 0.0 {
+        let mut h = 0.0f64;
+        for &e in &e2 {
+            let p = e / total;
+            if p > 0.0 {
+                h -= p * p.ln();
+            }
+        }
+        h.exp() as f32
+    } else {
+        0.0
+    };
+
+    let s_max = spectrum.first().map(|s| s.abs()).unwrap_or(0.0);
+    let s_min = spectrum.last().map(|s| s.abs()).unwrap_or(0.0);
+    let condition = if s_min > 0.0 { s_max / s_min } else { f32::INFINITY };
+
+    TripleSpectrum {
+        name,
+        rank: sl.k(),
+        spectrum,
+        energy,
+        tail_share,
+        tail_curve,
+        effective_rank,
+        condition,
+        ortho_u: sl.u.ortho_error(),
+        ortho_v: sl.v.ortho_error(),
+        drift_u: None,
+        drift_v: None,
+    }
+}
+
+/// Full diagnostics for one decoder layer.
+pub fn layer_spectrum(idx: usize, layer: &LayerWeights, tail_frac: f32) -> LayerSpectrum {
+    let le = monitor::layer_energy(idx, layer, tail_frac);
+    let triples = vec![
+        triple_spectrum("gate", &layer.gate, tail_frac),
+        triple_spectrum("up", &layer.up, tail_frac),
+        triple_spectrum("down", &layer.down, tail_frac),
+    ];
+    LayerSpectrum { layer: idx, rank: le.rank, energy: le.energy, tail_share: le.tail_share, triples }
+}
+
+/// Diagnostics for every layer of a model (training snapshot or a
+/// checkpoint loaded by `sct doctor`).
+pub fn model_spectra(model: &SpectralModel, tail_frac: f32) -> Vec<LayerSpectrum> {
+    model.layers.iter().enumerate().map(|(i, l)| layer_spectrum(i, l, tail_frac)).collect()
+}
+
+/// Remembers the last-sampled U/V factors and fills in principal-angle
+/// drift on each new snapshot. One tracker per training run; memory cost is
+/// one factor copy per triple (k(m+n) floats — the compact factors, never a
+/// dense matrix).
+#[derive(Default)]
+pub struct DriftTracker {
+    /// `prev[layer][triple] = (U, V)` at the previous sample.
+    prev: Vec<Vec<Option<(Matrix, Matrix)>>>,
+}
+
+impl DriftTracker {
+    pub fn new() -> DriftTracker {
+        DriftTracker::default()
+    }
+
+    /// Fill `drift_u`/`drift_v` on `spectra` against the previous sample of
+    /// `model`, then remember the current factors for the next call.
+    pub fn observe(&mut self, model: &SpectralModel, spectra: &mut [LayerSpectrum]) {
+        self.prev.resize_with(model.layers.len(), Vec::new);
+        for (li, layer) in model.layers.iter().enumerate() {
+            let slot = &mut self.prev[li];
+            slot.resize_with(TRIPLE_NAMES.len(), || None);
+            let triples = [&layer.gate, &layer.up, &layer.down];
+            for (ti, sl) in triples.iter().enumerate() {
+                if let Some(ts) = spectra.get_mut(li).and_then(|l| l.triples.get_mut(ti)) {
+                    if let Some((pu, pv)) = &slot[ti] {
+                        ts.drift_u = Some(max_principal_angle(pu, &sl.u));
+                        ts.drift_v = Some(max_principal_angle(pv, &sl.v));
+                    }
+                }
+                slot[ti] = Some((sl.u.clone(), sl.v.clone()));
+            }
+        }
+    }
+}
+
+fn finite_num(v: f32) -> Json {
+    if v.is_finite() {
+        Json::Num(v as f64)
+    } else {
+        Json::Null
+    }
+}
+
+fn opt_num(v: Option<f32>) -> Json {
+    match v {
+        Some(x) => finite_num(x),
+        None => Json::Null,
+    }
+}
+
+/// One snapshot as a `spectra.jsonl` row.
+pub fn spectra_json(step: u64, spectra: &[LayerSpectrum]) -> Json {
+    let layers: Vec<Json> = spectra
+        .iter()
+        .map(|l| {
+            let triples: Vec<Json> = l
+                .triples
+                .iter()
+                .map(|t| {
+                    json_obj![
+                        ("name", t.name),
+                        ("rank", t.rank),
+                        (
+                            "spectrum",
+                            Json::Arr(t.spectrum.iter().map(|&s| Json::Num(s as f64)).collect())
+                        ),
+                        ("energy", t.energy as f64),
+                        ("tail_share", t.tail_share as f64),
+                        (
+                            "tail_curve",
+                            Json::Arr(t.tail_curve.iter().map(|&s| Json::Num(s as f64)).collect())
+                        ),
+                        ("effective_rank", t.effective_rank as f64),
+                        ("condition", finite_num(t.condition)),
+                        ("ortho_u", t.ortho_u as f64),
+                        ("ortho_v", t.ortho_v as f64),
+                        ("drift_u", opt_num(t.drift_u)),
+                        ("drift_v", opt_num(t.drift_v)),
+                    ]
+                })
+                .collect();
+            json_obj![
+                ("layer", l.layer),
+                ("rank", l.rank),
+                ("energy", l.energy as f64),
+                ("tail_share", l.tail_share as f64),
+                ("triples", triples),
+            ]
+        })
+        .collect();
+    json_obj![("step", step as usize), ("layers", layers)]
+}
+
+/// Publish a snapshot as per-layer `sct_spectral_*` gauges on the global
+/// registry. Runs at the spectra cadence (and once at serve startup), so
+/// the registration mutex is off every hot path.
+pub fn publish(spectra: &[LayerSpectrum]) {
+    let r = obs::registry();
+    for l in spectra {
+        let layer = l.layer.to_string();
+        let layer_s: &str = &layer;
+        let lbl: &[(&str, &str)] = &[("layer", layer_s)];
+        r.gauge_with("sct_spectral_energy", lbl, "Total spectral energy of the layer's MLP triples")
+            .set(l.energy as f64);
+        r.gauge_with(
+            "sct_spectral_tail_share",
+            lbl,
+            "Tail energy share of the layer's spectrum (matches sct_rank_tail_energy)",
+        )
+        .set(l.tail_share as f64);
+        let mut eff = 0.0f64;
+        let mut cond = 0.0f64;
+        let mut ortho = 0.0f64;
+        let mut drift = None::<f64>;
+        for t in &l.triples {
+            eff += t.effective_rank as f64 / l.triples.len() as f64;
+            if t.condition.is_finite() {
+                cond = cond.max(t.condition as f64);
+            }
+            ortho = ortho.max(t.ortho_u.max(t.ortho_v) as f64);
+            if let Some(d) = t.drift_u.into_iter().chain(t.drift_v).reduce(f32::max) {
+                drift = Some(drift.unwrap_or(0.0).max(d as f64));
+            }
+        }
+        r.gauge_with(
+            "sct_spectral_effective_rank",
+            lbl,
+            "exp(spectral entropy), averaged over the layer's triples",
+        )
+        .set(eff);
+        r.gauge_with(
+            "sct_spectral_condition",
+            lbl,
+            "Worst finite condition number s_max/s_min across the layer's triples",
+        )
+        .set(cond);
+        r.gauge_with(
+            "sct_spectral_ortho_error",
+            lbl,
+            "Worst factor orthonormality error max|QtQ-I| across the layer's triples",
+        )
+        .set(ortho);
+        if let Some(d) = drift {
+            r.gauge_with(
+                "sct_spectral_drift",
+                lbl,
+                "Largest principal angle (radians) vs the previous sample's subspaces",
+            )
+            .set(d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::EngineConfig;
+    use crate::util::rng::Rng;
+
+    fn tiny_model() -> SpectralModel {
+        let cfg = EngineConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ffn: 24,
+            rank: 4,
+            max_seq: 16,
+            tied: true,
+        };
+        SpectralModel::init(cfg, 7)
+    }
+
+    #[test]
+    fn principal_angles_identical_and_orthogonal() {
+        // Identical spans -> every angle 0.
+        let mut rng = Rng::new(3);
+        let q = crate::spectral::qr_retract(&Matrix::randn(&mut rng, 8, 3, 1.0));
+        for a in principal_angles(&q, &q) {
+            assert!(a.abs() < 1e-3, "identical factors should have zero drift, got {a}");
+        }
+        assert!(max_principal_angle(&q, &q) < 1e-3);
+
+        // span{e1,e2} vs span{e3,e4} in R^4 -> both angles are pi/2.
+        let mut a = Matrix::zeros(4, 2);
+        a[(0, 0)] = 1.0;
+        a[(1, 1)] = 1.0;
+        let mut b = Matrix::zeros(4, 2);
+        b[(2, 0)] = 1.0;
+        b[(3, 1)] = 1.0;
+        let angles = principal_angles(&a, &b);
+        assert_eq!(angles.len(), 2);
+        for ang in angles {
+            assert!((ang - std::f32::consts::FRAC_PI_2).abs() < 1e-6, "got {ang}");
+        }
+    }
+
+    #[test]
+    fn analytic_spectrum_diagnostics() {
+        // Known spectrum s = [4,3,2,1]: energy 30, tail(0.25) = 1/30,
+        // condition 4, and the tail curve is the exact suffix shares.
+        let mut rng = Rng::new(1);
+        let mut sl = SpectralLinear::init(&mut rng, 8, 6, 4);
+        sl.s = vec![4.0, 3.0, 2.0, 1.0];
+        let t = triple_spectrum("gate", &sl, 0.25);
+        assert_eq!(t.spectrum, vec![4.0, 3.0, 2.0, 1.0]);
+        assert!((t.energy - 30.0).abs() < 1e-4);
+        assert!((t.tail_share - 1.0 / 30.0).abs() < 1e-6);
+        let expect_curve = [30.0 / 30.0, 14.0 / 30.0, 5.0 / 30.0, 1.0 / 30.0];
+        for (got, want) in t.tail_curve.iter().zip(expect_curve) {
+            assert!((got - want).abs() < 1e-6, "curve {got} vs {want}");
+        }
+        assert!((t.condition - 4.0).abs() < 1e-5);
+        // Entropy of p = [16,9,4,1]/30 -> effective rank exp(H).
+        let p = [16.0f64 / 30.0, 9.0 / 30.0, 4.0 / 30.0, 1.0 / 30.0];
+        let h: f64 = -p.iter().map(|x| x * x.ln()).sum::<f64>();
+        assert!((t.effective_rank as f64 - h.exp()).abs() < 1e-4);
+        // Factors from init are orthonormal.
+        assert!(t.ortho_u < 2e-6 && t.ortho_v < 2e-6);
+
+        // Flat spectrum: effective rank == k, condition == 1.
+        sl.s = vec![2.0; 4];
+        let flat = triple_spectrum("up", &sl, 0.25);
+        assert!((flat.effective_rank - 4.0).abs() < 1e-4);
+        assert!((flat.condition - 1.0).abs() < 1e-6);
+
+        // Dead spectrum: condition is infinite -> rendered as JSON null.
+        sl.s = vec![1.0, 0.0, 0.0, 0.0];
+        let dead = triple_spectrum("down", &sl, 0.25);
+        assert!(dead.condition.is_infinite());
+        assert!((dead.effective_rank - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn layer_values_match_rank_monitor_exactly() {
+        let model = tiny_model();
+        let spectra = model_spectra(&model, 0.25);
+        let energy = monitor::model_energy(&model, 0.25);
+        assert_eq!(spectra.len(), energy.len());
+        for (s, e) in spectra.iter().zip(&energy) {
+            assert_eq!(s.layer, e.layer);
+            assert_eq!(s.rank, e.rank);
+            // Same code path, so bit-identical — the 1e-6 acceptance bound
+            // holds trivially.
+            assert_eq!(s.energy, e.energy);
+            assert_eq!(s.tail_share, e.tail_share);
+        }
+    }
+
+    #[test]
+    fn drift_tracker_zero_on_unchanged_model() {
+        let model = tiny_model();
+        let mut tracker = DriftTracker::new();
+        let mut first = model_spectra(&model, 0.25);
+        tracker.observe(&model, &mut first);
+        for t in first.iter().flat_map(|l| &l.triples) {
+            assert!(t.drift_u.is_none() && t.drift_v.is_none(), "no drift on first sample");
+        }
+        let mut second = model_spectra(&model, 0.25);
+        tracker.observe(&model, &mut second);
+        for t in second.iter().flat_map(|l| &l.triples) {
+            assert!(t.drift_u.unwrap() < 1e-3, "unchanged U drifted {:?}", t.drift_u);
+            assert!(t.drift_v.unwrap() < 1e-3, "unchanged V drifted {:?}", t.drift_v);
+        }
+    }
+
+    #[test]
+    fn spectra_json_round_trips_and_publishes() {
+        let model = tiny_model();
+        let mut tracker = DriftTracker::new();
+        let mut spectra = model_spectra(&model, 0.25);
+        tracker.observe(&model, &mut spectra);
+        let row = spectra_json(12, &spectra);
+        let parsed = Json::parse(&row.to_string()).unwrap();
+        assert_eq!(parsed.get("step").unwrap(), &Json::Num(12.0));
+        let layers = match parsed.get("layers").unwrap() {
+            Json::Arr(a) => a,
+            other => panic!("layers not an array: {other:?}"),
+        };
+        assert_eq!(layers.len(), 2);
+        let triple0 = match layers[0].get("triples").unwrap() {
+            Json::Arr(a) => &a[0],
+            other => panic!("triples not an array: {other:?}"),
+        };
+        assert_eq!(triple0.get("name").unwrap(), &Json::Str("gate".into()));
+        assert_eq!(triple0.get("drift_u").unwrap(), &Json::Null);
+
+        publish(&spectra);
+        let text = obs::registry().render_prometheus();
+        assert!(text.contains("sct_spectral_tail_share{layer=\"0\"}"));
+        assert!(text.contains("sct_spectral_effective_rank{layer=\"1\"}"));
+        assert!(text.contains("sct_spectral_condition{layer=\"0\"}"));
+        assert!(text.contains("sct_spectral_ortho_error{layer=\"0\"}"));
+    }
+}

@@ -21,8 +21,10 @@
 //! * [`stats_json`] — the versioned `GET /v1/stats` document: the flat
 //!   aggregate fields are bit-compatible with the pre-gateway (workers=1)
 //!   schema, a `workers: [...]` array adds one [`StatsSnapshot`] per
-//!   worker scheduler, and a `latency: {...}` object summarizes the merged
-//!   serve histograms as p50/p95/p99 (same buckets `/metrics` exposes).
+//!   worker scheduler, a `latency: {...}` object summarizes the merged
+//!   serve histograms as p50/p95/p99 (same buckets `/metrics` exposes),
+//!   `uptime_seconds` counts from server start, and `model: {...}` is the
+//!   served model's identity (checkpoint path, params, per-layer ranks).
 //!   Old clients keep reading the flat fields; new clients read per-worker
 //!   placement out of the array.
 //! * [`version_json`] — the `GET /v1/version` document: crate identity plus
@@ -381,8 +383,15 @@ fn snapshot_fields(s: &StatsSnapshot) -> Vec<(&'static str, i64)> {
 /// aggregate across workers — bit-compatible with the single-scheduler
 /// schema old clients parse — and `workers: [...]` carries one snapshot per
 /// worker (each tagged with its `worker` index, matching the `worker="i"`
-/// label on the `sct_serve_*` Prometheus series).
-pub fn stats_json(aggregate: &StatsSnapshot, workers: &[StatsSnapshot]) -> Json {
+/// label on the `sct_serve_*` Prometheus series). `uptime_seconds` and the
+/// `model` identity document (checkpoint path, params, per-layer ranks)
+/// tie a scrape to the process and weights that produced it.
+pub fn stats_json(
+    aggregate: &StatsSnapshot,
+    workers: &[StatsSnapshot],
+    uptime_seconds: f64,
+    model: &Json,
+) -> Json {
     let mut fields: Vec<(String, Json)> = snapshot_fields(aggregate)
         .into_iter()
         .map(|(k, v)| (k.to_string(), Json::from(v)))
@@ -398,6 +407,8 @@ pub fn stats_json(aggregate: &StatsSnapshot, workers: &[StatsSnapshot]) -> Json 
         .collect();
     fields.push(("workers".to_string(), Json::from(worker_docs)));
     fields.push(("latency".to_string(), latency_json()));
+    fields.push(("uptime_seconds".to_string(), Json::Num(uptime_seconds)));
+    fields.push(("model".to_string(), model.clone()));
     Json::Obj(fields)
 }
 
@@ -546,7 +557,8 @@ mod tests {
             tokens_out: 14,
             ..Default::default()
         };
-        let j = stats_json(&agg, &[w0, w1]);
+        let model = json_obj![("checkpoint", Json::Null), ("params", 1234usize)];
+        let j = stats_json(&agg, &[w0, w1], 12.5, &model);
         // flat fields: the pre-gateway schema, bit-compatible
         assert_eq!(j.get("admitted").unwrap().as_i64().unwrap(), 4);
         assert_eq!(j.get("completed").unwrap().as_i64().unwrap(), 3);
@@ -562,6 +574,9 @@ mod tests {
         // latency summary object is always present (possibly empty before
         // any request registered the serve histograms)
         assert!(matches!(j.get("latency"), Some(Json::Obj(_))));
+        // identity fields ride along verbatim
+        assert_eq!(j.get("uptime_seconds").unwrap().as_f64().unwrap(), 12.5);
+        assert_eq!(j.get("model").unwrap().get("params").unwrap().as_usize().unwrap(), 1234);
     }
 
     #[test]

@@ -36,9 +36,16 @@
 //!   stamped with `request_id` — see [`crate::serve`] module docs for the
 //!   exact wire format.
 //! * `GET /healthz` — liveness + uptime + worker count + per-worker sizing.
+//! * `GET /v1/health` — the readiness report `/healthz` only hints at:
+//!   model identity (checkpoint path, params, per-layer ranks), worker
+//!   liveness, KV-slot pressure (active slots vs total arena capacity),
+//!   and the training watchdog's last-anomaly state
+//!   ([`crate::obs::health::report_json`]). `status` is `"degraded"` once
+//!   any anomaly has been recorded in this process, else `"ok"`.
 //! * `GET /v1/stats` — versioned stats document ([`api::stats_json`]): flat
 //!   aggregate counters (bit-compatible with the pre-gateway schema) plus a
-//!   `workers: [...]` array of per-worker snapshots.
+//!   `workers: [...]` array of per-worker snapshots, `uptime_seconds`, and
+//!   the served model's identity under `model`.
 //! * `GET /metrics` — Prometheus text exposition of the process-global
 //!   [`crate::obs`] registry (serve, pool, train, and rank series; the
 //!   `sct_serve_*` series carry a `worker="i"` label).
@@ -83,6 +90,7 @@ use crate::util::json::Json;
 struct HttpMetrics {
     generate: Counter,
     healthz: Counter,
+    health: Counter,
     stats: Counter,
     metrics: Counter,
     profile: Counter,
@@ -98,6 +106,7 @@ fn http_metrics() -> &'static HttpMetrics {
         HttpMetrics {
             generate: r.counter_with("sct_http_requests_total", &[("route", "/v1/generate")], HELP),
             healthz: r.counter_with("sct_http_requests_total", &[("route", "/healthz")], HELP),
+            health: r.counter_with("sct_http_requests_total", &[("route", "/v1/health")], HELP),
             stats: r.counter_with("sct_http_requests_total", &[("route", "/v1/stats")], HELP),
             metrics: r.counter_with("sct_http_requests_total", &[("route", "/metrics")], HELP),
             profile: r.counter_with("sct_http_requests_total", &[("route", "/v1/profile")], HELP),
@@ -127,6 +136,10 @@ pub struct ServeConfig {
     /// Read deadline on accepted connections, which doubles as the
     /// keep-alive idle window (0 = no deadline).
     pub keep_alive_ms: u64,
+    /// Checkpoint path the served model was restored from (`None` for a
+    /// random-init model). Surfaced as model identity in `GET /v1/stats`
+    /// and `GET /v1/health`.
+    pub ckpt: Option<String>,
 }
 
 /// Worker-count default: the `SCT_WORKERS` env var when set to a positive
@@ -150,6 +163,7 @@ impl Default for ServeConfig {
             max_new_default: 48,
             prefill_chunk: 64,
             keep_alive_ms: 15_000,
+            ckpt: None,
         }
     }
 }
@@ -181,6 +195,9 @@ impl ServeConfig {
         if let Some(v) = s.get("keep_alive_ms") {
             self.keep_alive_ms = v.as_usize()? as u64;
         }
+        if let Some(v) = s.get("ckpt") {
+            self.ckpt = Some(v.as_str()?.to_string());
+        }
         Ok(())
     }
 }
@@ -191,6 +208,10 @@ struct ServerState {
     vocab: usize,
     cfg: ServeConfig,
     started: Instant,
+    /// Identity of the served model (checkpoint path, params, per-layer
+    /// ranks, dims), captured at startup before the gateway consumes the
+    /// engine. Served verbatim in `/v1/stats` and `/v1/health`.
+    model_info: Json,
 }
 
 /// A running server: accept loop + batcher, stoppable for tests.
@@ -205,6 +226,26 @@ impl Server {
     /// Bind `cfg.addr` (port 0 picks a free port) and start serving.
     pub fn start(cfg: &ServeConfig, engine: Engine, tokenizer: Tokenizer) -> Result<Server> {
         let vocab = engine.cfg().vocab;
+        // Capture model identity and publish the spectral-health baseline
+        // before the gateway consumes the engine: the `sct_spectral_*`
+        // gauges and zero-valued `sct_health_*` counters are then part of
+        // every /metrics scrape from the first request on.
+        let model_info = {
+            let m = &engine.model;
+            let ranks: Vec<Json> =
+                m.layer_ranks().iter().map(|&r| Json::Num(r as f64)).collect();
+            json_obj![
+                ("checkpoint", cfg.ckpt.clone().map(Json::Str).unwrap_or(Json::Null)),
+                ("params", m.param_count()),
+                ("d_model", m.cfg.d_model),
+                ("n_layers", m.cfg.n_layers),
+                ("vocab", m.cfg.vocab),
+                ("max_seq", m.cfg.max_seq),
+                ("layer_ranks", Json::Arr(ranks)),
+            ]
+        };
+        obs::health::register_metrics();
+        crate::rank::spectra::publish(&crate::rank::model_spectra(&engine.model, 0.25));
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding {}", cfg.addr))?;
         let addr = listener.local_addr()?;
@@ -225,6 +266,7 @@ impl Server {
             vocab,
             cfg: cfg.clone(),
             started: Instant::now(),
+            model_info,
         });
         let shutdown = Arc::new(AtomicBool::new(false));
         let accept = {
@@ -693,11 +735,53 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState) -> Result<()> {
                 ];
                 write_response(&mut stream, 200, "OK", &body, keep)?;
             }
+            ("GET", "/v1/health") => {
+                http_metrics().health.inc();
+                let per_worker = state.gateway.worker_stats();
+                let workers_n = state.gateway.workers();
+                let slots_total = state.cfg.slots.saturating_mul(workers_n);
+                let active: u64 = per_worker.iter().map(|w| w.active_slots).sum();
+                let queued: u64 = per_worker.iter().map(|w| w.queue_depth).sum();
+                let anomalous = obs::health::last_anomaly().is_some();
+                let body = json_obj![
+                    ("status", if anomalous { "degraded" } else { "ok" }),
+                    ("uptime_seconds", state.started.elapsed().as_secs_f64()),
+                    ("model", state.model_info.clone()),
+                    (
+                        "workers",
+                        json_obj![("count", workers_n), ("live", per_worker.len())]
+                    ),
+                    (
+                        "kv",
+                        json_obj![
+                            ("slots_total", slots_total),
+                            ("slots_active", active as usize),
+                            ("queued", queued as usize),
+                            (
+                                "pressure",
+                                if slots_total > 0 {
+                                    active as f64 / slots_total as f64
+                                } else {
+                                    0.0
+                                }
+                            ),
+                        ]
+                    ),
+                    ("watchdog", obs::health::report_json()),
+                ];
+                write_response(&mut stream, 200, "OK", &body, keep)?;
+            }
             ("GET", "/v1/stats") => {
                 http_metrics().stats.inc();
                 let per_worker = state.gateway.worker_stats();
                 let aggregate = state.gateway.stats();
-                write_response(&mut stream, 200, "OK", &api::stats_json(&aggregate, &per_worker), keep)?;
+                let body = api::stats_json(
+                    &aggregate,
+                    &per_worker,
+                    state.started.elapsed().as_secs_f64(),
+                    &state.model_info,
+                );
+                write_response(&mut stream, 200, "OK", &body, keep)?;
             }
             ("GET", "/metrics") => {
                 http_metrics().metrics.inc();
@@ -725,7 +809,7 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState) -> Result<()> {
             }
             // Read-only introspection routes reject writes with a typed 405
             // (not the 404 the generic POST fallback would give).
-            ("POST", "/v1/profile" | "/v1/version") => {
+            ("POST", "/v1/profile" | "/v1/version" | "/v1/health") => {
                 http_metrics().other.inc();
                 let e = ErrorEnvelope::new(
                     ErrorCode::MethodNotAllowed,
@@ -879,6 +963,7 @@ mod tests {
             max_new_default: 8,
             prefill_chunk: 4,
             keep_alive_ms,
+            ckpt: None,
         };
         Server::start(&serve_cfg, engine, Tokenizer::byte_level()).unwrap()
     }
@@ -907,6 +992,72 @@ mod tests {
         assert_eq!(workers.len(), 1);
         assert_eq!(workers[0].get("worker").unwrap().as_i64().unwrap(), 0);
         assert_eq!(workers[0].get("admitted").unwrap().as_i64().unwrap(), 0);
+        srv.stop();
+    }
+
+    #[test]
+    fn v1_health_reports_readiness_and_model_identity() {
+        let srv = test_server(2, 4);
+        let (code, body) = http_get_json(srv.addr, "/v1/health").unwrap();
+        assert_eq!(code, 200);
+        // status reflects process-lifetime watchdog state; another test in
+        // the same binary may have recorded an anomaly on purpose.
+        assert!(matches!(
+            body.get("status").unwrap().as_str().unwrap(),
+            "ok" | "degraded"
+        ));
+        assert!(body.get("uptime_seconds").unwrap().as_f64().unwrap() >= 0.0);
+        let model = body.get("model").unwrap();
+        assert_eq!(model.get("checkpoint").unwrap(), &Json::Null, "random-init model");
+        assert!(model.get("params").unwrap().as_usize().unwrap() > 0);
+        let ranks = model.get("layer_ranks").unwrap().as_arr().unwrap();
+        assert_eq!(ranks.len(), EngineConfig::default().n_layers);
+        let workers = body.get("workers").unwrap();
+        assert_eq!(workers.get("count").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(workers.get("live").unwrap().as_usize().unwrap(), 1);
+        let kv = body.get("kv").unwrap();
+        assert_eq!(kv.get("slots_total").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(kv.get("slots_active").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(kv.get("pressure").unwrap().as_f64().unwrap(), 0.0);
+        let wd = body.get("watchdog").unwrap();
+        assert!(wd.get("enabled").unwrap().as_bool().is_ok());
+
+        // read-only: POST answers a typed 405
+        let (code, body) = http_post_json(srv.addr, "/v1/health", "{}").unwrap();
+        assert_eq!(code, 405);
+        assert_envelope(&body, "method_not_allowed");
+        srv.stop();
+    }
+
+    #[test]
+    fn stats_carry_uptime_and_model_identity() {
+        let srv = test_server(2, 4);
+        let (code, body) = http_get_json(srv.addr, "/v1/stats").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.get("uptime_seconds").unwrap().as_f64().unwrap() >= 0.0);
+        let model = body.get("model").unwrap();
+        assert!(model.get("params").unwrap().as_usize().unwrap() > 0);
+        assert_eq!(
+            model.get("layer_ranks").unwrap().as_arr().unwrap().len(),
+            EngineConfig::default().n_layers
+        );
+        srv.stop();
+    }
+
+    #[test]
+    fn metrics_expose_spectral_and_health_series_from_startup() {
+        let srv = test_server(2, 4);
+        let (code, text) = http_get_text(srv.addr, "/metrics").unwrap();
+        assert_eq!(code, 200);
+        for series in [
+            "sct_spectral_energy",
+            "sct_spectral_tail_share",
+            "sct_spectral_effective_rank",
+            "sct_health_anomalies_total",
+            "sct_health_skipped_steps_total",
+        ] {
+            assert!(text.contains(series), "missing series {series} in:\n{text}");
+        }
         srv.stop();
     }
 

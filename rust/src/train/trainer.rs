@@ -23,7 +23,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::checkpoint::format::{read_checkpoint, write_checkpoint, NamedTensor};
-use crate::obs::{self, prof, Counter, Gauge, Histogram};
+use crate::obs::{self, health, prof, Counter, Gauge, Histogram};
 use crate::serve::engine::{EngineConfig, SpectralModel};
 use crate::spectral::{qr_retract, AdamW, Matrix};
 use crate::util::pool;
@@ -166,6 +166,13 @@ pub struct NativeTrainer {
     kinds: Vec<(String, ParamKind, bool)>,
     /// Optimizer steps taken (also the checkpoint step).
     pub step: u64,
+    /// Consult the armed [`health`] watchdog inside [`train_step`]
+    /// (off by default; the run driver opts in per run so a watchdog armed
+    /// elsewhere in the process never perturbs an unrelated trainer).
+    pub watchdog: bool,
+    /// The watchdog verdict of the most recent step ([`health::Verdict::Ok`]
+    /// when the watchdog is off) — the run driver reads this to halt.
+    pub last_verdict: health::Verdict,
 }
 
 impl NativeTrainer {
@@ -191,7 +198,16 @@ impl NativeTrainer {
         let lens: Vec<usize> = params_mut(&mut model).iter().map(|s| s.len()).collect();
         assert_eq!(lens.len(), kinds.len(), "param enumeration out of sync");
         let opts = lens.into_iter().map(|n| AdamW::new(n, 0.0)).collect();
-        NativeTrainer { cfg, model, rope, opts, kinds, step: 0 }
+        NativeTrainer {
+            cfg,
+            model,
+            rope,
+            opts,
+            kinds,
+            step: 0,
+            watchdog: false,
+            last_verdict: health::Verdict::Ok,
+        }
     }
 
     /// Unpack a packed `batch x (seq_len + 1)` window (the
@@ -235,6 +251,15 @@ impl NativeTrainer {
         };
         let t_fwd = t0.elapsed().as_secs_f64();
 
+        // Watchdog (off by default): fold every check of this step into one
+        // policy-resolved verdict; `skip`/`halt` drop the update below so an
+        // anomalous step can never poison the factors or the Adam moments.
+        let mut verdict = if self.watchdog {
+            health::check_loss(self.step + 1, loss)
+        } else {
+            health::Verdict::Ok
+        };
+
         let t1 = Instant::now();
         let mut grads = {
             let _p = prof::scope("backward");
@@ -246,37 +271,56 @@ impl NativeTrainer {
         let t2 = Instant::now();
         {
             let _p = prof::scope("optimizer");
-            if self.cfg.grad_clip > 0.0 {
+            if self.cfg.grad_clip > 0.0 || self.watchdog {
                 let norm = grads.global_norm();
                 m.grad_norm.set(norm as f64);
-                if norm > self.cfg.grad_clip {
+                if self.watchdog {
+                    verdict = verdict.max(health::check_grad_norm(self.step + 1, norm as f64));
+                }
+                if self.cfg.grad_clip > 0.0 && norm > self.cfg.grad_clip {
                     grads.scale(self.cfg.grad_clip / norm);
                     m.clips.inc();
                 }
             }
-            let params = params_mut(&mut self.model);
-            let gs = grads.slices();
-            debug_assert_eq!(params.len(), gs.len());
-            for (i, (p, g)) in params.into_iter().zip(gs).enumerate() {
-                let (_, kind, decays) = &self.kinds[i];
-                let opt = &mut self.opts[i];
-                opt.lr = match kind {
-                    ParamKind::Spectral => lr_spectral,
-                    ParamKind::Dense => lr_dense,
-                };
-                opt.weight_decay = if *decays { self.cfg.weight_decay } else { 0.0 };
-                opt.step(p, g);
+            if verdict.skips_update() {
+                health::note_skipped_step();
+            } else {
+                let params = params_mut(&mut self.model);
+                let gs = grads.slices();
+                debug_assert_eq!(params.len(), gs.len());
+                for (i, (p, g)) in params.into_iter().zip(gs).enumerate() {
+                    let (_, kind, decays) = &self.kinds[i];
+                    let opt = &mut self.opts[i];
+                    opt.lr = match kind {
+                        ParamKind::Spectral => lr_spectral,
+                        ParamKind::Dense => lr_dense,
+                    };
+                    opt.weight_decay = if *decays { self.cfg.weight_decay } else { 0.0 };
+                    opt.step(p, g);
+                }
             }
         }
         let t_opt = t2.elapsed().as_secs_f64();
 
         let t3 = Instant::now();
         self.step += 1;
-        if self.step % self.cfg.retract_every as u64 == 0 {
+        if !verdict.skips_update() && self.step % self.cfg.retract_every as u64 == 0 {
             let _p = prof::scope("retract");
             retract_model(&mut self.model);
         }
         let t_retract = t3.elapsed().as_secs_f64();
+
+        // Post-step spectrum scan: NaN leaked into s, or a collapsed
+        // (all-zero) spectrum. The s vectors are k floats per triple, so
+        // this stays O(rank) per layer.
+        if self.watchdog {
+            for (li, l) in self.model.layers.iter().enumerate() {
+                for (nm, sl) in [("gate", &l.gate), ("up", &l.up), ("down", &l.down)] {
+                    verdict = verdict.max(health::check_spectrum(self.step, li, nm, &sl.s));
+                }
+            }
+        }
+        self.last_verdict = verdict;
 
         m.steps.inc();
         m.loss.set(loss as f64);
@@ -740,6 +784,55 @@ mod tests {
         let c = mlp_compression(&cfg);
         // 3*8192*28672 / (3*32*(8192+28672+1)) ~ 199x
         assert!((c - 199.0).abs() < 1.0, "compression {c}");
+    }
+
+    #[test]
+    fn watchdog_skip_leaves_model_untouched() {
+        let _g = health::test_guard();
+        // A grad-norm ceiling of ~0 makes the very first step anomalous.
+        health::configure(health::WatchdogConfig {
+            policy: health::Policy::Skip,
+            grad_max: 1e-12,
+            ..Default::default()
+        });
+        let cfg = tiny_cfg();
+        let mut trainer = NativeTrainer::new(cfg, 12);
+        trainer.watchdog = true;
+        let embed_before = trainer.model.embed.data.clone();
+        let s_before = trainer.model.layers[0].gate.s.clone();
+        let u_before = trainer.model.layers[0].gate.u.data.clone();
+        let (loss, _) = trainer.train_step(&cyclic_batch(&cfg, 0), 5e-3, 5e-3);
+        assert!(loss.is_finite());
+        assert_eq!(trainer.last_verdict, health::Verdict::Skip);
+        assert_eq!(trainer.step, 1, "a skipped step still advances the step counter");
+        assert_eq!(trainer.model.embed.data, embed_before, "skip must not touch dense params");
+        assert_eq!(trainer.model.layers[0].gate.s, s_before, "skip must not touch s");
+        assert_eq!(trainer.model.layers[0].gate.u.data, u_before, "skip must not retract U");
+        health::disable();
+    }
+
+    #[test]
+    fn watchdog_halt_verdict_surfaces_without_applying_the_update() {
+        let _g = health::test_guard();
+        health::configure(health::WatchdogConfig {
+            policy: health::Policy::Halt,
+            grad_max: 1e-12,
+            ..Default::default()
+        });
+        let cfg = tiny_cfg();
+        let mut trainer = NativeTrainer::new(cfg, 13);
+        trainer.watchdog = true;
+        let s_before = trainer.model.layers[0].gate.s.clone();
+        let (_, _) = trainer.train_step(&cyclic_batch(&cfg, 0), 5e-3, 5e-3);
+        assert!(trainer.last_verdict.halts());
+        assert_eq!(trainer.model.layers[0].gate.s, s_before, "halt must not apply the update");
+        health::disable();
+
+        // With the watchdog disarmed (the default), an armed-elsewhere
+        // policy is irrelevant: verdict stays Ok.
+        let mut plain = NativeTrainer::new(cfg, 13);
+        plain.train_step(&cyclic_batch(&cfg, 0), 5e-3, 5e-3);
+        assert_eq!(plain.last_verdict, health::Verdict::Ok);
     }
 
     #[test]

@@ -20,10 +20,15 @@
 #          uploads them and diffs them against the base branch via
 #          scripts/bench_compare.sh). The serve bench also scrapes the
 #          observability layer: BENCH_metrics.prom (GET /metrics dump,
-#          checked for the mandatory serve/pool/http series) and
-#          traces.jsonl (one span per request). Runs with SCT_THREADS=2
-#          unless the caller overrides it, so the parallel kernel paths are
-#          exercised in CI (results are bit-identical at any thread count).
+#          checked for the mandatory serve/pool/http/spectral/health
+#          series) and traces.jsonl (one span per request), then runs the
+#          spectral-health smoke: a short native train with --spectra-out
+#          (spectra.jsonl, uploaded by CI), `sct doctor` over the produced
+#          checkpoint, and an injected-NaN watchdog run that must halt
+#          with a non-zero exit and a counted anomaly. Runs with
+#          SCT_THREADS=2 unless the caller overrides it, so the parallel
+#          kernel paths are exercised in CI (results are bit-identical at
+#          any thread count).
 
 set -euo pipefail
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
@@ -94,7 +99,12 @@ run_bench() {
         sct_serve_decode_step_ms \
         sct_pool_fanouts_total \
         sct_pool_tasks_total \
-        sct_http_requests_total; do
+        sct_http_requests_total \
+        sct_spectral_energy \
+        sct_spectral_tail_share \
+        sct_spectral_effective_rank \
+        sct_health_anomalies_total \
+        sct_health_skipped_steps_total; do
         if ! grep -q "^$series" "$repo_root/BENCH_metrics.prom"; then
             echo "tier1: mandatory series $series missing from BENCH_metrics.prom" >&2
             exit 1
@@ -117,6 +127,52 @@ run_bench() {
         exit 1
     fi
     echo "tier1: metrics + traces scrape OK"
+
+    echo "== tier1: spectral-health smoke (spectra.jsonl + sct doctor + watchdog halt) =="
+    smoke_dir="$repo_root/tier1_health_smoke"
+    rm -rf "$smoke_dir" "$repo_root/spectra.jsonl"
+    mkdir -p "$smoke_dir"
+    # Short native train streaming spectral diagnostics; watchdog disarmed,
+    # so this run also covers the zero-overhead-when-disabled path.
+    cargo run -q --release --bin sct -- train --backend native \
+        --steps 30 --batch 2 --seq-len 16 \
+        --d-model 16 --layers 2 --heads 2 --ffn 24 --rank 4 --max-seq 32 \
+        --out "$smoke_dir" --ckpt-dir "$smoke_dir/ckpt" --ckpt-every 10 \
+        --spectra-out "$repo_root/spectra.jsonl" --spectra-every 10 \
+        --log-level warn
+    if ! [ -s "$repo_root/spectra.jsonl" ]; then
+        echo "tier1: spectra.jsonl missing or empty after --spectra-out train" >&2
+        exit 1
+    fi
+    for key in tail_share effective_rank condition ortho_u drift_u; do
+        if ! grep -q "\"$key\"" "$repo_root/spectra.jsonl"; then
+            echo "tier1: spectra.jsonl rows carry no $key field" >&2
+            exit 1
+        fi
+    done
+    ckpt="$(ls "$smoke_dir"/ckpt/step_*.sct | sort | tail -1)"
+    cargo run -q --release --bin sct -- doctor "$ckpt" \
+        --json "$smoke_dir/doctor.json" --log-level warn
+    if ! grep -q '"tail_share"' "$smoke_dir/doctor.json"; then
+        echo "tier1: sct doctor wrote no tail_share diagnostics" >&2
+        exit 1
+    fi
+    # Injected-NaN watchdog run: MUST exit non-zero (halt policy) and flush
+    # a final metrics record carrying the anomaly counter.
+    if cargo run -q --release --bin sct -- train --backend native \
+        --steps 20 --batch 2 --seq-len 16 \
+        --d-model 16 --layers 2 --heads 2 --ffn 24 --rank 4 --max-seq 32 \
+        --out "$smoke_dir/halt" \
+        --metrics-out "$smoke_dir/metrics.jsonl" --metrics-every 100 \
+        --watchdog halt --watchdog-inject-nan 7 --log-level error; then
+        echo "tier1: watchdog halt run exited 0 (must be non-zero)" >&2
+        exit 1
+    fi
+    if ! grep -q 'sct_health_anomalies_total' "$smoke_dir/metrics.jsonl"; then
+        echo "tier1: anomaly counter missing from the halt run's metrics flush" >&2
+        exit 1
+    fi
+    echo "tier1: spectral-health smoke OK"
 
     echo "== tier1: train bench smoke (BENCH_train.json) =="
     cargo bench --bench train_step -- --smoke --json "$repo_root/BENCH_train.json"
