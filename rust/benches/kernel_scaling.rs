@@ -17,6 +17,13 @@
 //! stacks at the sibling `.folded` path; the profile pass runs at both
 //! ranks even in smoke mode, CI gates on the mandatory kernels being
 //! present).
+//!
+//! The `matmul_gflops` section measures single-thread blocked-kernel
+//! GFLOP/s at ranks 32 AND 128 regardless of smoke mode: its rank-128 rows
+//! feed the CI kernel-regression gate (`scripts/bench_diff.py --gate`,
+//! fail if GFLOP/s drops >15% vs the base branch). Both JSON docs record
+//! the detected SIMD feature set (`"simd"`) next to the numbers so a
+//! regression on a differently-featured runner is attributable.
 
 use std::time::Instant;
 
@@ -153,6 +160,7 @@ fn run_profile_pass(w: &Workload, path: &str) {
     let doc = json_obj![
         ("bench", "kernel_scaling_profile"),
         ("machine_peak_gflops", peak),
+        ("simd", sct::spectral::microkernel::detected_features()),
         ("ranks", rank_docs),
     ];
     std::fs::write(path, doc.to_string()).expect("writing profile JSON");
@@ -336,7 +344,44 @@ fn main() {
         }
     }
 
+    // -- single-thread blocked-kernel GFLOP/s (CI regression gate) -----------
+    // Runs ranks 32 AND 128 even in smoke mode: scripts/bench_diff.py gates
+    // on the rank-128 rows (CI fails if matmul GFLOP/s drops >15% vs the
+    // base branch), so they must exist in every BENCH_kernels.json.
     pool::set_threads(1);
+    for &rank in &[32usize, 128] {
+        let mut rng = Rng::new(3);
+        let x = Matrix::randn(&mut rng, w.mm_rows, w.d_model, 1.0);
+        let u = Matrix::randn(&mut rng, w.d_model, rank, 1.0);
+        let hs = Matrix::randn(&mut rng, w.mm_rows, rank, 1.0);
+        let v = Matrix::randn(&mut rng, w.d_ffn, rank, 1.0);
+        let mm_flops = 2.0 * w.mm_rows as f64 * w.d_model as f64 * rank as f64;
+        let mt_flops = 2.0 * w.mm_rows as f64 * rank as f64 * w.d_ffn as f64;
+        let mm_ms = time_ms(2, 10, || {
+            std::hint::black_box(&x.matmul(&u));
+        });
+        let mt_ms = time_ms(2, 10, || {
+            std::hint::black_box(&hs.matmul_t(&v));
+        });
+        let g_mm = mm_flops / (mm_ms * 1e6);
+        let g_mt = mt_flops / (mt_ms * 1e6);
+        println!(
+            "| matmul_gflops | {rank} | 1 | {mm_ms:.3} | {g_mm:.2} GF/s mm / {g_mt:.2} GF/s mmT | - |"
+        );
+        rows.push(json_obj![
+            ("section", "matmul_gflops"),
+            ("mode", format!("matmul_gflops@r{rank}")),
+            ("rank", rank),
+            ("threads", 1usize),
+            ("ms", mm_ms),
+            ("matmul_t_ms", mt_ms),
+            ("gflops_matmul", g_mm),
+            ("gflops_matmul_t", g_mt),
+        ]);
+    }
+
+    let simd = sct::spectral::microkernel::detected_features();
+    println!("simd: {simd}");
 
     if let Some(path) = profile_path {
         run_profile_pass(&w, &path);
@@ -346,6 +391,7 @@ fn main() {
         let doc = json_obj![
             ("bench", "kernel_scaling"),
             ("smoke", smoke),
+            ("simd", simd),
             ("d_model", w.d_model),
             ("d_ffn", w.d_ffn),
             ("n_heads", w.n_heads),

@@ -157,6 +157,11 @@ fn base_config(args: &Args) -> Result<RunConfig> {
     if cfg.threads > 0 {
         crate::util::pool::set_threads(cfg.threads);
     }
+    // matmul fan-out threshold: [runtime] TOML > SCT_PAR_THRESHOLD env >
+    // pool default (the pool resolves the last two itself)
+    if cfg.par_threshold > 0 {
+        crate::util::pool::set_par_threshold(cfg.par_threshold);
+    }
     // observability knobs: flag > [obs] TOML > SCT_LOG env
     if let Some(l) = args.get("log-level") {
         anyhow::ensure!(
@@ -759,17 +764,22 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 
     let mut serve_cfg = serve::ServeConfig::default();
     let mut threads = 0usize;
+    let mut par_threshold = 0usize;
     let mut obs_cfg = super::config::ObsConfig::default();
     if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path)?;
         let doc = super::config::parse_toml(&text)?;
         serve_cfg.apply_toml(&doc)?;
         threads = super::config::runtime_threads(&doc)?;
+        par_threshold = super::config::runtime_par_threshold(&doc)?;
         obs_cfg.apply_toml(&doc)?;
     }
     threads = args.parse_num("threads", threads)?;
     if threads > 0 {
         crate::util::pool::set_threads(threads);
+    }
+    if par_threshold > 0 {
+        crate::util::pool::set_par_threshold(par_threshold);
     }
     // observability: flags > [obs] TOML > SCT_LOG env
     if let Some(l) = args.get("log-level") {

@@ -7,11 +7,14 @@
 //! integers, floats, booleans and flat arrays, plus `#` comments.
 //!
 //! The `[runtime]` section holds execution knobs shared by every
-//! subcommand; today that is `threads` — the worker-pool size for the
-//! parallel kernels (`util::pool`), resolved as `--threads` flag >
-//! `[runtime] threads` > `SCT_THREADS` env > all cores. Results are
-//! bit-identical at any setting (the pool's determinism contract), so the
-//! knob only moves throughput.
+//! subcommand: `threads` — the worker-pool size for the parallel kernels
+//! (`util::pool`), resolved as `--threads` flag > `[runtime] threads` >
+//! `SCT_THREADS` env > all cores — and `par_threshold` — the matmul
+//! fan-out threshold in inner-loop MACs, resolved as `[runtime]
+//! par_threshold` > `SCT_PAR_THRESHOLD` env > the pool default calibrated
+//! for the blocked SIMD microkernels. Results are bit-identical at any
+//! setting of either knob (the pool's determinism contract), so both only
+//! move throughput.
 //!
 //! The `[serve]` section sizes the inference server
 //! ([`crate::serve::ServeConfig`]): `addr`, `workers` — worker schedulers
@@ -133,6 +136,17 @@ pub fn parse_toml(text: &str) -> Result<TomlDoc> {
 /// serve CLI path (which carries no `RunConfig`).
 pub fn runtime_threads(doc: &TomlDoc) -> Result<usize> {
     match doc.get("runtime").and_then(|r| r.get("threads")) {
+        Some(v) => v.as_usize(),
+        None => Ok(0),
+    }
+}
+
+/// Read `[runtime] par_threshold` (0 = absent/auto) — the matmul fan-out
+/// threshold for `util::pool::set_par_threshold`, shared by
+/// [`RunConfig::apply_toml`] and the serve CLI path like
+/// [`runtime_threads`].
+pub fn runtime_par_threshold(doc: &TomlDoc) -> Result<usize> {
+    match doc.get("runtime").and_then(|r| r.get("par_threshold")) {
         Some(v) => v.as_usize(),
         None => Ok(0),
     }
@@ -359,6 +373,11 @@ pub struct RunConfig {
     /// `--threads`; 0 = auto: `SCT_THREADS` env, else all cores). Purely a
     /// throughput knob — results are bit-identical at any setting.
     pub threads: usize,
+    /// Matmul fan-out threshold in inner-loop MACs (`[runtime]
+    /// par_threshold`; 0 = auto: `SCT_PAR_THRESHOLD` env, else the pool's
+    /// default calibrated for the blocked SIMD kernels). Like `threads`,
+    /// purely a throughput knob.
+    pub par_threshold: usize,
     /// Observability knobs (`[obs]` section / `--log-level`,
     /// `--metrics-out`, `--metrics-every` flags).
     pub obs: ObsConfig,
@@ -388,6 +407,7 @@ impl Default for RunConfig {
             native_model: EngineConfig::default(),
             rank_policy: RankPolicyConfig::Fixed,
             threads: 0,
+            par_threshold: 0,
             obs: ObsConfig::default(),
         }
     }
@@ -450,6 +470,10 @@ impl RunConfig {
         let rt_threads = runtime_threads(doc)?;
         if rt_threads > 0 {
             self.threads = rt_threads;
+        }
+        let rt_par = runtime_par_threshold(doc)?;
+        if rt_par > 0 {
+            self.par_threshold = rt_par;
         }
         // [obs] section: logging / metrics / tracing knobs.
         self.obs.apply_toml(doc)?;
@@ -776,6 +800,21 @@ check_every = 25
         // bad value is an error, not a silent skip
         let doc = parse_toml("[runtime]\nthreads = \"many\"\n").unwrap();
         assert!(cfg.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn runtime_par_threshold_section_applies() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.par_threshold, 0, "default is auto");
+        let doc = parse_toml("[runtime]\nthreads = 2\npar_threshold = 65536\n").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.par_threshold, 65536);
+        assert_eq!(cfg.threads, 2, "both runtime keys coexist");
+        let bad = parse_toml("[runtime]\npar_threshold = \"lots\"\n").unwrap();
+        assert!(cfg.apply_toml(&bad).is_err());
+        // the standalone reader used by the serve path
+        assert_eq!(runtime_par_threshold(&doc).unwrap(), 65536);
+        assert_eq!(runtime_par_threshold(&parse_toml("").unwrap()).unwrap(), 0);
     }
 
     #[test]

@@ -38,7 +38,13 @@
 //! * [`spectral`] — pure-Rust spectral linear algebra substrate (matrix ops,
 //!   Householder QR, Jacobi SVD, AdamW, a native SpectralLinear layer) used
 //!   for baselines, property tests, true-shape 70B phase benchmarks, and
-//!   the train/serve forward paths.
+//!   the train/serve forward paths. Its hot loops are
+//!   [`spectral::microkernel`]'s cache-blocked GEBP tiles and fused
+//!   dot/axpy kernels: AVX2+FMA paths behind runtime feature detection
+//!   with bit-identical fused-scalar fallbacks, packed k-panels, and two
+//!   canonical accumulation orders that every matmul, attention row and
+//!   CGS2 update realizes — the SIMD dispatch is a speed knob, never a
+//!   numerics fork.
 //! * [`memmodel`] — the analytic training-memory model that regenerates the
 //!   paper's Table 1 / Table 2 / Figure 1 numbers exactly.
 //! * [`data`] — tokenizer, synthetic instruction corpus (Alpaca substitute),
@@ -70,8 +76,9 @@
 //!   the parallel kernel layer: every hot matmul, the head-parallel
 //!   attention kernels, the AdamW update and the per-factor QR retraction
 //!   fan out through it (`--threads` / `[runtime] threads` / `SCT_THREADS`
-//!   sized), sharded by disjoint output rows so results are bit-identical
-//!   at any thread count.
+//!   sized; fan-out threshold via `[runtime] par_threshold` /
+//!   `SCT_PAR_THRESHOLD`), sharded by disjoint output rows so results are
+//!   bit-identical at any thread count.
 
 pub mod checkpoint;
 pub mod coordinator;

@@ -624,6 +624,17 @@ pub fn matmul_work(m: usize, k: usize, n: usize) -> (f64, f64) {
     (2.0 * m as f64 * k as f64 * n as f64, 4.0 * (m * k + k * n + m * n) as f64)
 }
 
+/// `(flops, bytes)` of the packed-GEBP matmul path
+/// (`spectral::microkernel`): same FLOPs as [`matmul_work`], plus the panel
+/// packing traffic — both operands are rewritten into packed panels (one
+/// write) and the kernel reads the packed copies instead of re-streaming
+/// the originals per tile, so A and B each cost one extra write + read:
+/// `+ 8*(m*k + k*n)` bytes.
+pub fn matmul_packed_work(m: usize, k: usize, n: usize) -> (f64, f64) {
+    let (flops, bytes) = matmul_work(m, k, n);
+    (flops, bytes + 8.0 * (m * k + k * n) as f64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

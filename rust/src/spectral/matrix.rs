@@ -2,27 +2,50 @@
 //! the native SCT implementation (QR retraction, truncated SVD, AdamW).
 //!
 //! Deliberately not a general BLAS: only what the spectral math needs, with
-//! a cache-blocked `matmul` for the hot paths (the 70B-shape retraction
+//! cache-blocked SIMD matmuls for the hot paths (the 70B-shape retraction
 //! benches run through this code).
 //!
-//! The three matmuls dispatch through `util::pool`: above a work threshold
-//! the **output rows** are sharded across the scoped worker pool, each row
-//! computed by the same serial kernel in the same accumulation order — so
-//! results are bit-identical at any thread count (see the pool module docs
-//! for the determinism contract). Small shapes take the serial kernel
-//! directly. The inner loops are branch-free on purpose: a zero test per
-//! FLOP costs more than it saves on dense data and makes timing
-//! data-dependent; the one place exact zeros systematically occur —
-//! trailing zero singular values after a rank-grow — goes through the
-//! dedicated [`Matrix::matmul_t_prefix`] path instead.
+//! # Kernel structure and the determinism contract
+//!
+//! The inner loops live in [`super::microkernel`]: register-tiled GEBP
+//! kernels over packed k-panels, with AVX2+FMA paths behind runtime feature
+//! detection and bit-identical fused-scalar fallbacks. Each matmul realizes
+//! one of the two **canonical accumulation orders** defined there:
+//!
+//! * `matmul` / `t_matmul` — the broadcast-FMA fold: every output element is
+//!   `acc = fma(a_ik, b_kj, acc)` over the shared dimension ascending. The
+//!   fold depends on nothing but the shared-dimension length — not on the
+//!   output shape, the MR×NR tiling, the packed-vs-stream path choice, or
+//!   the `par_rows` shard decomposition — so results are bit-identical at
+//!   any thread count *and* across the fused/per-position prefill split in
+//!   serve (same per-element bits whether a row is computed in an m=19
+//!   batch or an m=1 decode step).
+//! * `matmul_t` / `matmul_t_prefix` — the 8-lane fused [`dot`], whose
+//!   structure depends only on the dotted length `k_eff`; see
+//!   [`Matrix::matmul_t_prefix`] for why that carries the rank-grow
+//!   invariant.
+//!
+//! Above a work threshold ([`pool::par_threshold`], tunable via
+//! `SCT_PAR_THRESHOLD` / `[runtime] par_threshold`) the **output rows**
+//! shard across the scoped worker pool; B-operand panels are packed once
+//! before the dispatch so both arms run the identical blocked kernel
+//! against shared panels (see the pool module docs for the contract).
+//! Outputs thinner than [`microkernel::MIN_PACK_ROWS`] rows — the decode
+//! hot path — take an unpacked stream kernel with the same per-element
+//! fold.
+//!
+//! The inner loops are branch-free on purpose: a zero test per FLOP costs
+//! more than it saves on dense data and makes timing data-dependent; the
+//! one place exact zeros systematically occur — trailing zero singular
+//! values after a rank-grow — goes through the dedicated
+//! [`Matrix::matmul_t_prefix`] path instead.
 
+use super::microkernel;
 use crate::obs::prof;
 use crate::util::pool;
 use crate::util::rng::Rng;
 
-/// Inner-loop multiply-accumulate count below which the matmuls stay
-/// serial (scoped-spawn overhead dominates under ~10^5 FLOPs).
-const PAR_FLOPS: usize = 1 << 17;
+pub use super::microkernel::{axpy, dot};
 
 /// Row-major matrix of f32.
 #[derive(Debug, Clone, PartialEq)]
@@ -76,87 +99,206 @@ impl Matrix {
     /// Copy column `c` into `buf`, clearing it first and reusing its
     /// capacity — the allocation-free twin of [`Matrix::col`] for hot loops
     /// (the CGS2 retraction refills one column buffer per panel column).
+    /// One strided pass over `data` — no per-element bounds-checked `Index`.
     pub fn col_into(&self, c: usize, buf: &mut Vec<f32>) {
         debug_assert!(c < self.cols);
         buf.clear();
-        buf.reserve(self.rows);
-        for r in 0..self.rows {
-            buf.push(self[(r, c)]);
+        if self.rows == 0 {
+            return;
         }
+        buf.reserve(self.rows);
+        buf.extend(self.data[c..].iter().step_by(self.cols).copied());
     }
 
+    /// Cache-blocked transpose: walk 32×32 tiles so both the read and the
+    /// write side stay within a few cache lines per tile (the naive strided
+    /// loop thrashes on the tall factor matrices in checkpoint load and
+    /// SVD shrink).
     pub fn transpose(&self) -> Matrix {
-        let mut t = Matrix::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                t[(c, r)] = self[(r, c)];
+        const TB: usize = 32;
+        let (rows, cols) = (self.rows, self.cols);
+        let mut t = Matrix::zeros(cols, rows);
+        let mut r0 = 0;
+        while r0 < rows {
+            let rmax = (r0 + TB).min(rows);
+            let mut c0 = 0;
+            while c0 < cols {
+                let cmax = (c0 + TB).min(cols);
+                for r in r0..rmax {
+                    let src = &self.data[r * cols..r * cols + cmax];
+                    for c in c0..cmax {
+                        t.data[c * rows + r] = src[c];
+                    }
+                }
+                c0 += TB;
             }
+            r0 += TB;
         }
         t
     }
 
-    /// `self @ other`, cache-blocked (i,k,j loop order keeps the inner loop
-    /// streaming over contiguous rows of both output and `other`). Output
-    /// rows are sharded across the worker pool above the work threshold;
-    /// each row runs the identical serial kernel, so results are
-    /// bit-identical at any thread count.
+    /// `self @ other` through the blocked GEBP microkernel: B is packed
+    /// once into k-major NR-column panels, A row tiles are packed per MR
+    /// rows, and `microkernel::gebp_tile` computes MR×NR register tiles.
+    /// Output rows shard across the worker pool above the work threshold;
+    /// both dispatch arms run the identical kernel against the shared
+    /// packed panels, so results are bit-identical at any thread count.
+    /// Outputs under `MIN_PACK_ROWS` rows (the decode path) take the
+    /// unpacked row-stream kernel — same per-element fold, same bits.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, kdim, n) = (self.rows, self.cols, other.cols);
-        let _prof = prof::kernel("matmul", || prof::matmul_work(m, kdim, n));
+        let packed = m >= microkernel::MIN_PACK_ROWS;
+        let _prof = prof::kernel("matmul", || {
+            if packed {
+                prof::matmul_packed_work(m, kdim, n)
+            } else {
+                prof::matmul_work(m, kdim, n)
+            }
+        });
         let mut out = Matrix::zeros(m, n);
         if self.data.is_empty() || other.data.is_empty() {
             return out;
         }
-        if m > 1 && pool::parallel_worthwhile(m * kdim * n, PAR_FLOPS) {
-            pool::par_rows(&mut out.data, n, |r0, block| self.matmul_block(other, r0, block));
+        if packed {
+            let bpanels = microkernel::pack_b_panels(&other.data, kdim, n);
+            if pool::parallel_worthwhile(m * kdim * n, pool::par_threshold()) {
+                pool::par_rows(&mut out.data, n, |r0, block| {
+                    self.matmul_block(&bpanels, n, r0, block)
+                });
+            } else {
+                self.matmul_block(&bpanels, n, 0, &mut out.data);
+            }
         } else {
-            self.matmul_block(other, 0, &mut out.data);
+            self.matmul_stream(other, &mut out.data);
         }
         out
     }
 
     /// Rows `r0..r0 + block.len()/n` of `self @ other` into `block` — the
-    /// shared serial kernel of both matmul dispatch arms.
-    fn matmul_block(&self, other: &Matrix, r0: usize, block: &mut [f32]) {
+    /// GEBP kernel shared by both matmul dispatch arms. `bpanels` is the
+    /// packed B operand (`microkernel::pack_b_panels`), shared read-only
+    /// across shards.
+    fn matmul_block(&self, bpanels: &[f32], n: usize, r0: usize, block: &mut [f32]) {
+        let kdim = self.cols;
+        let mb = block.len() / n;
+        let mut apanel: Vec<f32> = Vec::new();
+        let mut ib = 0;
+        while ib < mb {
+            let mr = (mb - ib).min(microkernel::MR);
+            microkernel::pack_a_rows(&self.data, kdim, r0 + ib, mr, &mut apanel);
+            let mut j0 = 0;
+            while j0 < n {
+                let nr = (n - j0).min(microkernel::NR);
+                let panel_len = kdim * microkernel::NR;
+                let bpanel = &bpanels[(j0 / microkernel::NR) * panel_len..][..panel_len];
+                microkernel::gebp_tile(
+                    &apanel,
+                    mr,
+                    bpanel,
+                    kdim,
+                    nr,
+                    &mut block[ib * n + j0..],
+                    n,
+                );
+                j0 += microkernel::NR;
+            }
+            ib += mr;
+        }
+    }
+
+    /// Thin-output `self @ other` (fewer than `MIN_PACK_ROWS` rows): fused
+    /// row-axpy stream over `other`'s rows, no packing. Per-element this is
+    /// the same broadcast-FMA fold over k ascending as the GEBP path — the
+    /// decode step (m = 1) produces bit-identical logits to the same row
+    /// computed inside a fused prefill batch.
+    fn matmul_stream(&self, other: &Matrix, out: &mut [f32]) {
         let n = other.cols;
-        for (bi, out_row) in block.chunks_mut(n).enumerate() {
-            let a_row = self.row(r0 + bi);
+        for (bi, out_row) in out.chunks_mut(n).enumerate() {
+            let a_row = self.row(bi);
             for (k, &a_ik) in a_row.iter().enumerate() {
                 axpy(a_ik, other.row(k), out_row);
             }
         }
     }
 
-    /// `self^T @ other` without materializing the transpose. Output rows
-    /// (columns of `self`) shard across the pool; within each output row
-    /// the accumulation order over the shared dimension is the serial
-    /// kernel's, so results are bit-identical at any thread count.
+    /// `self^T @ other` without materializing the transpose, through the
+    /// same GEBP microkernel as [`Matrix::matmul`]: the shared dimension is
+    /// `self.rows`, A "row tiles" are column slivers of `self` packed by
+    /// `microkernel::pack_a_cols` (contiguous reads per source row), B
+    /// packs exactly as in matmul. Output rows (columns of `self`) shard
+    /// across the pool; the per-element fold over the shared dimension is
+    /// shard-independent, so results are bit-identical at any thread count.
     pub fn t_matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
-        let (m, n) = (self.cols, other.cols);
-        let _prof = prof::kernel("t_matmul", || prof::matmul_work(m, self.rows, n));
+        let (rdim, m, n) = (self.rows, self.cols, other.cols);
+        let packed = m >= microkernel::MIN_PACK_ROWS;
+        let _prof = prof::kernel("t_matmul", || {
+            if packed {
+                prof::matmul_packed_work(m, rdim, n)
+            } else {
+                prof::matmul_work(m, rdim, n)
+            }
+        });
         let mut out = Matrix::zeros(m, n);
         if self.data.is_empty() || other.data.is_empty() {
             return out;
         }
-        if m > 1 && pool::parallel_worthwhile(self.rows * m * n, PAR_FLOPS) {
-            pool::par_rows(&mut out.data, n, |i0, block| self.t_matmul_block(other, i0, block));
+        if packed {
+            let bpanels = microkernel::pack_b_panels(&other.data, rdim, n);
+            if pool::parallel_worthwhile(rdim * m * n, pool::par_threshold()) {
+                pool::par_rows(&mut out.data, n, |i0, block| {
+                    self.t_matmul_block(&bpanels, n, i0, block)
+                });
+            } else {
+                self.t_matmul_block(&bpanels, n, 0, &mut out.data);
+            }
         } else {
-            self.t_matmul_block(other, 0, &mut out.data);
+            self.t_matmul_stream(other, &mut out.data);
         }
         out
     }
 
     /// Output rows `i0..i0 + block.len()/n` of `self^T @ other` into
-    /// `block`, streaming over the shared `r` dimension in order.
-    fn t_matmul_block(&self, other: &Matrix, i0: usize, block: &mut [f32]) {
+    /// `block` via GEBP over packed panels (shared dimension `self.rows`).
+    fn t_matmul_block(&self, bpanels: &[f32], n: usize, i0: usize, block: &mut [f32]) {
+        let rdim = self.rows;
+        let mb = block.len() / n;
+        let mut apanel: Vec<f32> = Vec::new();
+        let mut ib = 0;
+        while ib < mb {
+            let mr = (mb - ib).min(microkernel::MR);
+            microkernel::pack_a_cols(&self.data, self.cols, rdim, i0 + ib, mr, &mut apanel);
+            let mut j0 = 0;
+            while j0 < n {
+                let nr = (n - j0).min(microkernel::NR);
+                let panel_len = rdim * microkernel::NR;
+                let bpanel = &bpanels[(j0 / microkernel::NR) * panel_len..][..panel_len];
+                microkernel::gebp_tile(
+                    &apanel,
+                    mr,
+                    bpanel,
+                    rdim,
+                    nr,
+                    &mut block[ib * n + j0..],
+                    n,
+                );
+                j0 += microkernel::NR;
+            }
+            ib += mr;
+        }
+    }
+
+    /// Thin-output `self^T @ other`: stream over the shared `r` dimension
+    /// in order with fused axpy — the same per-element fold as the GEBP
+    /// path.
+    fn t_matmul_stream(&self, other: &Matrix, out: &mut [f32]) {
         let n = other.cols;
         for r in 0..self.rows {
             let a_row = self.row(r);
             let b_row = other.row(r);
-            for (bi, out_row) in block.chunks_mut(n).enumerate() {
-                axpy(a_row[i0 + bi], b_row, out_row);
+            for (i, out_row) in out.chunks_mut(n).enumerate() {
+                axpy(a_row[i], b_row, out_row);
             }
         }
     }
@@ -173,9 +315,10 @@ impl Matrix {
     /// exactly zero until the optimizer moves them; `SpectralLinear::forward`
     /// skips that block here instead of burning FLOPs on it (and instead of
     /// a per-element zero branch inside the dense kernels). With
-    /// `k_eff == cols` this IS `matmul_t`. The prefix dot uses the same
-    /// lane grouping as the pre-grow full dot, so a grown layer's forward
-    /// stays bit-identical to its pre-grow forward.
+    /// `k_eff == cols` this IS `matmul_t`. Every output element is the
+    /// canonical 8-lane fused [`dot`] of length `k_eff` — its lane grouping
+    /// depends only on that length, so a grown layer's forward stays
+    /// bit-identical to its pre-grow forward.
     pub fn matmul_t_prefix(&self, other: &Matrix, k_eff: usize) -> Matrix {
         assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
         assert!(k_eff <= self.cols, "prefix {k_eff} beyond inner dim {}", self.cols);
@@ -185,7 +328,7 @@ impl Matrix {
         if m == 0 || n == 0 || k_eff == 0 {
             return out;
         }
-        if m > 1 && pool::parallel_worthwhile(m * k_eff * n, PAR_FLOPS) {
+        if m > 1 && pool::parallel_worthwhile(m * k_eff * n, pool::par_threshold()) {
             pool::par_rows(&mut out.data, n, |r0, block| {
                 self.matmul_t_block(other, k_eff, r0, block)
             });
@@ -196,13 +339,33 @@ impl Matrix {
     }
 
     /// Rows `r0..` of `self @ other^T` (inner dimension truncated to
-    /// `k_eff`) into `block`.
+    /// `k_eff`) into `block`. Columns are tiled by NR so each 8-row tile of
+    /// `other` stays cache-hot across the whole row block
+    /// (`microkernel::dot8_rows` — eight canonical dots sharing the A-row
+    /// loads); remainder columns fall back to single [`dot`] calls with
+    /// identical per-element bits.
     fn matmul_t_block(&self, other: &Matrix, k_eff: usize, r0: usize, block: &mut [f32]) {
         let n = other.rows;
-        for (bi, out_row) in block.chunks_mut(n).enumerate() {
-            let a_row = &self.row(r0 + bi)[..k_eff];
-            for (j, o) in out_row.iter_mut().enumerate() {
-                *o = dot(a_row, &other.row(j)[..k_eff]);
+        let mb = block.len() / n;
+        let mut j0 = 0;
+        while j0 + microkernel::NR <= n {
+            for bi in 0..mb {
+                let a_row = &self.row(r0 + bi)[..k_eff];
+                let o = bi * n + j0;
+                microkernel::dot8_rows(
+                    a_row,
+                    &other.data,
+                    other.cols,
+                    j0,
+                    &mut block[o..o + microkernel::NR],
+                );
+            }
+            j0 += microkernel::NR;
+        }
+        for j in j0..n {
+            let b_row = &other.row(j)[..k_eff];
+            for bi in 0..mb {
+                block[bi * n + j] = dot(&self.row(r0 + bi)[..k_eff], b_row);
             }
         }
     }
@@ -263,32 +426,6 @@ impl std::ops::IndexMut<(usize, usize)> for Matrix {
     }
 }
 
-#[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    // 4-lane unrolling; LLVM vectorizes this reliably.
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        for l in 0..4 {
-            acc[l] += a[i * 4 + l] * b[i * 4 + l];
-        }
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for i in chunks * 4..a.len() {
-        s += a[i] * b[i];
-    }
-    s
-}
-
-#[inline]
-pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -306,6 +443,15 @@ mod tests {
         let mut rng = Rng::new(0);
         let a = Matrix::randn(&mut rng, 5, 7, 1.0);
         assert_eq!(a.transpose().transpose(), a);
+        // shapes straddling the 32-tile boundary
+        let b = Matrix::randn(&mut rng, 33, 65, 1.0);
+        let bt = b.transpose();
+        assert_eq!(bt.transpose(), b);
+        for r in 0..b.rows {
+            for c in 0..b.cols {
+                assert_eq!(bt[(c, r)], b[(r, c)]);
+            }
+        }
     }
 
     #[test]
@@ -355,6 +501,44 @@ mod tests {
     }
 
     #[test]
+    fn packed_and_streamed_matmul_bit_identical() {
+        // The fused-vs-per-position prefill invariant at the kernel level:
+        // rows of a packed-GEBP matmul (m >= MIN_PACK_ROWS) must equal the
+        // same rows computed by the thin-output stream kernel (m = 1)
+        // bit-for-bit — path selection is a data-movement decision, never a
+        // numerics fork.
+        let mut rng = Rng::new(11);
+        let a = Matrix::randn(&mut rng, 12, 19, 1.0); // 19: ragged k
+        let b = Matrix::randn(&mut rng, 19, 23, 1.0); // 23: ragged n
+        let fused = a.matmul(&b);
+        for r in 0..a.rows {
+            let row = Matrix::from_vec(1, a.cols, a.row(r).to_vec());
+            let single = row.matmul(&b);
+            assert_eq!(
+                single.data, fused.data[r * b.cols..(r + 1) * b.cols],
+                "row {r}: packed GEBP and stream kernels diverged"
+            );
+        }
+
+        // Same invariant for t_matmul: a 3-column slice (stream path)
+        // against the matching columns of the full product (packed path).
+        let c = Matrix::randn(&mut rng, 19, 9, 1.0);
+        let full = c.t_matmul(&b);
+        let mut thin = Matrix::zeros(c.rows, 3);
+        for r in 0..c.rows {
+            thin.row_mut(r).copy_from_slice(&c.row(r)[4..7]);
+        }
+        let part = thin.t_matmul(&b);
+        for i in 0..3 {
+            assert_eq!(
+                part.row(i),
+                full.row(4 + i),
+                "t_matmul col {i}: packed and stream kernels diverged"
+            );
+        }
+    }
+
+    #[test]
     fn col_into_reuses_buffer_and_matches_col() {
         let mut rng = Rng::new(8);
         let a = Matrix::randn(&mut rng, 9, 4, 1.0);
@@ -364,6 +548,8 @@ mod tests {
         assert_eq!(buf.len(), 9);
         a.col_into(0, &mut buf); // reuse for another column
         assert_eq!(buf, a.col(0));
+        a.col_into(3, &mut buf); // last column: strided walk must not overrun
+        assert_eq!(buf, a.col(3));
     }
 
     #[test]

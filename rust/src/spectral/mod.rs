@@ -16,6 +16,7 @@
 pub mod adamw;
 pub mod layer;
 pub mod matrix;
+pub mod microkernel;
 pub mod qr;
 pub mod svd;
 

@@ -11,7 +11,7 @@
 //! construction, so `Q * sign(diag(R))` is the identity fix — the retraction
 //! is the unique positive-diagonal QR of the input.
 
-use super::matrix::{dot, Matrix};
+use super::matrix::{axpy, dot, Matrix};
 use crate::obs::prof;
 use crate::util::pool;
 
@@ -77,9 +77,8 @@ pub fn qr_retract_serial(a: &Matrix) -> Matrix {
         for _pass in 0..2 {
             for q in &q_cols {
                 let c = dot64(q, &v) as f32;
-                for (vi, qi) in v.iter_mut().zip(q) {
-                    *vi -= c * qi;
-                }
+                // fused v -= c*q through the SIMD microkernel axpy
+                axpy(-c, q, &mut v);
             }
         }
         let norm = dot64(&v, &v).sqrt();
@@ -190,9 +189,7 @@ pub fn qr_retract_parallel(a: &Matrix) -> Matrix {
                                 for (j, fcol) in fin_ref.iter().enumerate() {
                                     let c = coeffs_ref[j][p] as f32;
                                     if c != 0.0 {
-                                        for (sv, fv) in seg.iter_mut().zip(&fcol[lo..hi]) {
-                                            *sv -= c * fv;
-                                        }
+                                        axpy(-c, &fcol[lo..hi], seg);
                                     }
                                 }
                             }
@@ -210,9 +207,7 @@ pub fn qr_retract_parallel(a: &Matrix) -> Matrix {
                 for prev in done..j {
                     let (a_, b_) = cols.split_at_mut(j);
                     let c = dot64(&a_[prev], &b_[0]) as f32;
-                    for (vi, qi) in b_[0].iter_mut().zip(&a_[prev]) {
-                        *vi -= c * qi;
-                    }
+                    axpy(-c, &a_[prev], &mut b_[0]);
                 }
             }
             let norm = dot64(&cols[j], &cols[j]).sqrt();

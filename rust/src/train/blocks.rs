@@ -11,7 +11,12 @@
 //! Numerics note: [`causal_attention_fwd`] mirrors [`attend_row`]'s exact
 //! arithmetic (same `dot`, same running max, same `w * inv` weights, same
 //! accumulation order), so a full-sequence training forward is bit-identical
-//! to the incremental KV decode the serve tests pin against it.
+//! to the incremental KV decode the serve tests pin against it. The `dot` /
+//! `axpy` primitives are `spectral::microkernel`'s canonical fused SIMD
+//! kernels (AVX2+FMA with a bit-identical fused-scalar fallback), so
+//! [`attend_head_row`]'s score and value loops run on the same microkernel
+//! layer as the matmuls — one set of canonical accumulation orders across
+//! the whole stack.
 
 use crate::obs::prof;
 use crate::spectral::matrix::{axpy, dot, Matrix};
@@ -179,11 +184,12 @@ impl Rope {
 // ---------------------------------------------------------------------------
 
 /// One head's attention for ONE query row over `n_ctx` context rows stored
-/// `[pos][d_model]`-major: scores via [`dot`], running max, exp-normalize,
-/// then `w * (1/denom)`-weighted value accumulation — THE attention
-/// arithmetic, shared by [`attend_row`] (serving decode),
-/// [`causal_attention_fwd`] (training) and the head-parallel batched
-/// variants, so every path is bit-identical by construction. `scores`
+/// `[pos][d_model]`-major: scores via the SIMD [`dot`], running max,
+/// exp-normalize, then `w * (1/denom)`-weighted value accumulation through
+/// the fused [`axpy`] — THE attention arithmetic, shared by [`attend_row`]
+/// (serving decode), [`causal_attention_fwd`] (training) and the
+/// head-parallel batched variants, so every path is bit-identical by
+/// construction. `scores`
 /// (length >= n_ctx) receives the normalized softmax weights; `oh`
 /// (head_dim, zero-initialized) accumulates the head's output.
 #[allow(clippy::too_many_arguments)]

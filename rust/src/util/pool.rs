@@ -19,13 +19,29 @@
 //! resume bit-for-bit regardless of the machine, and the determinism tests
 //! in `tests/parallel_determinism.rs` pin this invariant.
 //!
+//! The canonical serial kernel under this contract is the cache-blocked
+//! SIMD microkernel layer (`spectral::microkernel`): each output element's
+//! accumulation order is fixed by the shared-dimension length alone —
+//! register tiling, panel packing, shard boundaries and the AVX2-vs-scalar
+//! dispatch all preserve it, because the fused-multiply-add lane ops are
+//! exactly specified by IEEE-754 on both paths. A shard starting at any
+//! `first_row` therefore reproduces the exact bits of the full serial run's
+//! rows, which is what makes the row-sharding here sufficient for the
+//! contract (no constraint on *how many* rows land in a shard).
+//!
 //! # Sizing
 //!
 //! Thread count resolves as: [`set_threads`] (the `--threads` flag /
 //! `[runtime] threads` TOML key) > the `SCT_THREADS` env var > all available
 //! cores. Callers gate fan-out on [`parallel_worthwhile`] with a
 //! per-kernel work threshold, falling back to the serial kernel for small
-//! shapes where scoped-spawn overhead (tens of µs) would dominate.
+//! shapes where scoped-spawn overhead (tens of µs) would dominate. The
+//! matmul threshold is itself a tunable ([`par_threshold`]:
+//! [`set_par_threshold`] / `[runtime] par_threshold` TOML key >
+//! `SCT_PAR_THRESHOLD` env var > [`DEFAULT_PAR_THRESHOLD`]) — the blocked
+//! microkernels retire FLOPs ~4× faster than the old scalar loops, moving
+//! the break-even shape upward; like the thread count it is purely a
+//! throughput knob, never a numerics one.
 //!
 //! # Observability
 //!
@@ -94,6 +110,15 @@ pub const MAX_THREADS: usize = 64;
 /// 0 = unresolved; first reader resolves env/cores and caches the result.
 static THREADS: AtomicUsize = AtomicUsize::new(0);
 
+/// Default matmul fan-out threshold (inner-loop multiply-accumulates).
+/// Re-calibrated for the blocked SIMD microkernels: the old scalar loops
+/// broke even near 2^17 MACs, but the GEBP kernels retire FLOPs ~4× faster,
+/// so scoped-spawn overhead (tens of µs) isn't amortized until ~2^19.
+pub const DEFAULT_PAR_THRESHOLD: usize = 1 << 19;
+
+/// 0 = unresolved; first reader resolves override/env and caches.
+static PAR_THRESHOLD: AtomicUsize = AtomicUsize::new(0);
+
 /// Test hook: when set, [`parallel_worthwhile`] ignores work thresholds so
 /// determinism tests exercise the parallel kernels on tiny shapes.
 static FORCE_PARALLEL: AtomicBool = AtomicBool::new(false);
@@ -137,6 +162,39 @@ pub fn set_threads(n: usize) {
 /// thresholds so tiny shapes take the parallel code paths.
 pub fn set_force_parallel(on: bool) {
     FORCE_PARALLEL.store(on, Ordering::Relaxed);
+}
+
+/// The matmul fan-out threshold (inner-loop multiply-accumulates below
+/// which the matmuls stay serial). Resolution order: [`set_par_threshold`]
+/// override (`[runtime] par_threshold`) > `SCT_PAR_THRESHOLD` env var >
+/// [`DEFAULT_PAR_THRESHOLD`]. Always >= 1.
+pub fn par_threshold() -> usize {
+    let t = PAR_THRESHOLD.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let n = resolve_par_threshold_default();
+    // Benign race: concurrent first readers resolve the same value.
+    let _ = PAR_THRESHOLD.compare_exchange(0, n, Ordering::Relaxed, Ordering::Relaxed);
+    PAR_THRESHOLD.load(Ordering::Relaxed)
+}
+
+fn resolve_par_threshold_default() -> usize {
+    if let Ok(s) = std::env::var("SCT_PAR_THRESHOLD") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    DEFAULT_PAR_THRESHOLD
+}
+
+/// Override the matmul fan-out threshold (`[runtime] par_threshold`).
+/// Clamped to >= 1. Purely a throughput knob: results are bit-identical
+/// whichever dispatch arm a shape lands on.
+pub fn set_par_threshold(n: usize) {
+    PAR_THRESHOLD.store(n.max(1), Ordering::Relaxed);
 }
 
 /// Should a kernel with `work` inner-loop operations fan out? False when the
@@ -313,5 +371,16 @@ mod tests {
         set_threads(1_000_000);
         assert_eq!(threads(), MAX_THREADS);
         set_threads(before);
+    }
+
+    #[test]
+    fn par_threshold_resolves_and_overrides() {
+        let before = par_threshold();
+        assert!(before >= 1);
+        set_par_threshold(12345);
+        assert_eq!(par_threshold(), 12345);
+        set_par_threshold(0); // clamped up, never disables the gate entirely
+        assert_eq!(par_threshold(), 1);
+        set_par_threshold(before);
     }
 }

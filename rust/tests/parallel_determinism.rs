@@ -4,6 +4,16 @@
 //! at any thread count, because work is sharded by disjoint output rows /
 //! stripes with the serial kernel's accumulation order preserved.
 //!
+//! The canonical serial kernel these tests pin is `spectral::microkernel`'s
+//! cache-blocked GEBP / fused-dot layer: the invariant is "bit-identical at
+//! any thread count against the blocked accumulation order", NOT
+//! "bit-identical to the old scalar loops" (this file was re-pinned when
+//! the blocked kernels replaced them). The blocked order is fixed by the
+//! shared-dimension length alone, so shard boundaries, MR×NR tile
+//! remainders, the packed-vs-stream path split and the AVX2-vs-scalar
+//! dispatch all reproduce the same bits — the shape sweep below includes
+//! tile-remainder edges (m % 8 ≠ 0, n % 8 ≠ 0, k ragged) to prove it.
+//!
 //! `pool::set_force_parallel(true)` bypasses the work thresholds so the
 //! parallel code paths run even at test-sized shapes. The pool size is a
 //! process-global, so every test in this file serializes on [`lock`]: a
@@ -53,26 +63,49 @@ fn matmul_kernels_bit_identical_across_thread_counts() {
     let _gate = lock();
     pool::set_force_parallel(true);
     let mut rng = Rng::new(1);
-    let a = Matrix::randn(&mut rng, 37, 19, 1.0);
-    let b = Matrix::randn(&mut rng, 19, 23, 1.0);
-    let c = Matrix::randn(&mut rng, 37, 23, 1.0);
-    let d = Matrix::randn(&mut rng, 11, 19, 1.0);
+    // (m, k, n) sweep hitting the blocked kernel's edges: ragged k, both
+    // tile remainders (m % 8, n % 8), exact-tile shapes, fewer rows than
+    // the MIN_PACK_ROWS stream/pack split, single-row, and n < NR so
+    // matmul_t's dot8 column tiling never engages.
+    for &(m, k, n) in &[
+        (37usize, 19usize, 23usize),
+        (8, 8, 8),
+        (64, 33, 32),
+        (9, 17, 5),
+        (5, 1, 9),
+        (3, 7, 16),
+        (1, 7, 3),
+    ] {
+        let a = Matrix::randn(&mut rng, m, k, 1.0);
+        let b = Matrix::randn(&mut rng, k, n, 1.0);
+        let c = Matrix::randn(&mut rng, m, n, 1.0); // t_matmul: shared dim m
+        let d = Matrix::randn(&mut rng, n, k, 1.0); // matmul_t: n output cols
+        let k_eff = k.div_ceil(2);
 
-    pool::set_threads(1);
-    let mm = a.matmul(&b);
-    let tm = a.t_matmul(&c);
-    let mt = a.matmul_t(&d);
-    let mtp = a.matmul_t_prefix(&d, 7);
-    for &t in &THREAD_COUNTS[1..] {
-        pool::set_threads(t);
-        assert_eq!(a.matmul(&b).data, mm.data, "matmul diverged at {t} threads");
-        assert_eq!(a.t_matmul(&c).data, tm.data, "t_matmul diverged at {t} threads");
-        assert_eq!(a.matmul_t(&d).data, mt.data, "matmul_t diverged at {t} threads");
-        assert_eq!(
-            a.matmul_t_prefix(&d, 7).data,
-            mtp.data,
-            "matmul_t_prefix diverged at {t} threads"
-        );
+        pool::set_threads(1);
+        let mm = a.matmul(&b);
+        let tm = a.t_matmul(&c);
+        let mt = a.matmul_t(&d);
+        let mtp = a.matmul_t_prefix(&d, k_eff);
+        for &t in &THREAD_COUNTS[1..] {
+            pool::set_threads(t);
+            assert_eq!(a.matmul(&b).data, mm.data, "matmul {m}x{k}x{n} diverged at {t} threads");
+            assert_eq!(
+                a.t_matmul(&c).data,
+                tm.data,
+                "t_matmul {m}x{k}x{n} diverged at {t} threads"
+            );
+            assert_eq!(
+                a.matmul_t(&d).data,
+                mt.data,
+                "matmul_t {m}x{k}x{n} diverged at {t} threads"
+            );
+            assert_eq!(
+                a.matmul_t_prefix(&d, k_eff).data,
+                mtp.data,
+                "matmul_t_prefix {m}x{k}x{n} (k_eff {k_eff}) diverged at {t} threads"
+            );
+        }
     }
 }
 

@@ -7,13 +7,119 @@ use sct::coordinator::config::{parse_toml, TomlValue};
 use sct::coordinator::schedule::Schedule;
 use sct::data::{Dataset, Tokenizer};
 use sct::memmodel::layer::{LayerMemory, TrainRegime};
-use sct::spectral::{qr_householder, qr_retract, svd, SpectralLinear};
-use sct::testkit::Prop;
+use sct::spectral::{qr_householder, qr_retract, svd, Matrix, SpectralLinear};
+use sct::testkit::{Gen, Prop};
 use sct::util::json::Json;
 
 // ---------------------------------------------------------------------------
 // spectral math
 // ---------------------------------------------------------------------------
+
+/// Per-element check of a blocked-kernel product against an exact f64
+/// triple-loop reference, under a k-scaled ulp bound: a fused f32 fold of
+/// length `kdim` carries at most ~`kdim` roundings of the running sum (plus
+/// the 8-lane reduction tree), each bounded by eps times the partial-sum
+/// magnitude, so `|got - exact| <= (kdim + 8) * eps * Σ_k |a_ik * b_kj|`
+/// (plus a denormal floor). `a_at(i, k)` / `b_at(k, j)` index the logical
+/// operands of `got[i][j] = Σ_k a_at(i,k) * b_at(k,j)`.
+fn check_against_naive(
+    g: &mut Gen,
+    label: &str,
+    got: &Matrix,
+    kdim: usize,
+    a_at: &dyn Fn(usize, usize) -> f32,
+    b_at: &dyn Fn(usize, usize) -> f32,
+) {
+    for i in 0..got.rows {
+        for j in 0..got.cols {
+            let mut exact = 0.0f64;
+            let mut abs = 0.0f64;
+            for k in 0..kdim {
+                let p = a_at(i, k) as f64 * b_at(k, j) as f64;
+                exact += p;
+                abs += p.abs();
+            }
+            let tol = (kdim as f64 + 8.0) * f32::EPSILON as f64 * abs + 1e-30;
+            let err = (got[(i, j)] as f64 - exact).abs();
+            g.check(err <= tol, &format!("{label} ({i},{j}): err {err} > tol {tol}"));
+        }
+    }
+}
+
+#[test]
+fn prop_blocked_matmuls_match_naive_reference() {
+    Prop::new("blocked kernels == naive triple loop").cases(150).run(|g| {
+        // Inclusive ranges from 0 hit the degenerates (0×n, 1×1, k=1) and
+        // every tile-remainder class (m%8 ≠ 0, n%8 ≠ 0, ragged k) over the
+        // run, on both sides of the pack/stream and dot8/remainder splits.
+        let m = g.usize(0, 21);
+        let kdim = g.usize(0, 35);
+        let n = g.usize(0, 19);
+        let a = g.matrix(m, kdim, 1.0);
+        let b = g.matrix(kdim, n, 1.0);
+        check_against_naive(g, "matmul", &a.matmul(&b), kdim, &|i, k| a[(i, k)], &|k, j| {
+            b[(k, j)]
+        });
+
+        let at = g.matrix(kdim, m, 1.0); // t_matmul: shared dim = rows
+        check_against_naive(g, "t_matmul", &at.t_matmul(&b), kdim, &|i, k| at[(k, i)], &|k, j| {
+            b[(k, j)]
+        });
+
+        let bt = g.matrix(n, kdim, 1.0);
+        check_against_naive(g, "matmul_t", &a.matmul_t(&bt), kdim, &|i, k| a[(i, k)], &|k, j| {
+            bt[(j, k)]
+        });
+    });
+}
+
+#[test]
+fn prop_matmul_t_prefix_bitwise_equals_truncated() {
+    Prop::new("prefix == truncated matmul_t (bitwise)").cases(120).run(|g| {
+        let m = g.usize(0, 16);
+        let kdim = g.usize(0, 24);
+        let n = g.usize(0, 14);
+        let k_eff = g.usize(0, kdim);
+        let a = g.matrix(m, kdim, 1.0);
+        let b = g.matrix(n, kdim, 1.0);
+        // The canonical dot's structure depends only on the dotted length,
+        // so the prefix product must be bit-identical to physically
+        // truncating both operands to k_eff columns first.
+        let truncate = |src: &Matrix| {
+            let mut t = Matrix::zeros(src.rows, k_eff);
+            for r in 0..src.rows {
+                t.row_mut(r).copy_from_slice(&src.row(r)[..k_eff]);
+            }
+            t
+        };
+        let pref = a.matmul_t_prefix(&b, k_eff);
+        let trunc = truncate(&a).matmul_t(&truncate(&b));
+        g.check(pref.data == trunc.data, "prefix product != truncated product (bitwise)");
+        check_against_naive(g, "matmul_t_prefix", &pref, k_eff, &|i, k| a[(i, k)], &|k, j| {
+            b[(j, k)]
+        });
+    });
+}
+
+#[test]
+fn prop_blocked_transpose_exact() {
+    Prop::new("blocked transpose exact + involutive").cases(80).run(|g| {
+        // up to 70: straddles the 32-wide tile boundary in both dimensions
+        let m = g.usize(0, 70);
+        let n = g.usize(0, 70);
+        let a = g.matrix(m, n, 1.0);
+        let t = a.transpose();
+        g.check(t.rows == n && t.cols == m, "transpose shape wrong");
+        let mut exact = true;
+        for r in 0..m {
+            for c in 0..n {
+                exact &= t[(c, r)].to_bits() == a[(r, c)].to_bits();
+            }
+        }
+        g.check(exact, "transpose moved bits");
+        g.check(t.transpose() == a, "transpose not involutive");
+    });
+}
 
 #[test]
 fn prop_qr_retract_orthonormal_and_span() {

@@ -3,10 +3,15 @@
 #
 # Builds the base ref in a temporary git worktree (sharing the PR's cargo
 # target dir so only changed crates rebuild), runs the same smoke benches
-# there, and prints a field-by-field diff via scripts/bench_diff.py. The
-# PR-side JSONs must already exist at the repo root (scripts/tier1.sh
-# bench). Advisory: a bench missing on the base branch is reported and
-# skipped, not an error — CI runs this step with continue-on-error anyway.
+# there, and prints a field-by-field diff via scripts/bench_diff.py.
+#
+# Most diffs are advisory (a bench missing on the base branch is reported
+# and skipped, not an error), with one hard gate: the kernels diff fails
+# this script — and CI — if the single-thread rank-128 matmul GFLOP/s rows
+# in BENCH_kernels.json regress more than 15% against the base branch
+# (`bench_diff.py --gate`). The gate keys on the `].gflops` leaves only, so
+# a wall-time improvement (ms dropping) can never trip it, and it skips
+# metrics the base branch doesn't emit yet.
 #
 # Usage: scripts/bench_compare.sh [base-ref]   (default: origin/main)
 
@@ -40,14 +45,26 @@ for pair in serve_throughput:serve train_step:train rank_transition:rank kernel_
     fi
 done
 
+gate_failed=0
 for name in serve train rank kernels; do
     base_json="$worktree/BENCH_$name.json"
     pr_json="$repo_root/BENCH_$name.json"
     if [[ -f "$base_json" && -f "$pr_json" ]]; then
         echo
         echo "== BENCH_$name.json: $base_ref vs PR =="
-        python3 "$repo_root/scripts/bench_diff.py" "$base_json" "$pr_json"
+        if [[ "$name" == kernels ]]; then
+            # Hard gate: rank-128 single-thread GFLOP/s must not drop >15%.
+            python3 "$repo_root/scripts/bench_diff.py" "$base_json" "$pr_json" \
+                --gate "matmul_gflops@r128].gflops:15" || gate_failed=1
+        else
+            python3 "$repo_root/scripts/bench_diff.py" "$base_json" "$pr_json"
+        fi
     else
         echo "bench_compare: BENCH_$name.json missing on one side; skipping"
     fi
 done
+
+if [[ "$gate_failed" -ne 0 ]]; then
+    echo "bench_compare: kernel-regression gate failed"
+    exit 1
+fi

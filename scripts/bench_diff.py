@@ -1,12 +1,19 @@
 #!/usr/bin/env python3
 """Compare two bench JSON documents (base vs PR) field by field.
 
-Usage: bench_diff.py BASE.json PR.json
+Usage: bench_diff.py BASE.json PR.json [--gate SUBSTR:PCT ...]
 
 Flattens every numeric leaf to a dotted path (array entries keyed by their
 "rank"/"mode" fields when present, else by index) and prints a base/PR/delta
-table. Advisory output only — it never fails the build; the point is a
-readable perf trajectory in the CI log instead of archive-only artifacts.
+table. The table itself is advisory — a readable perf trajectory in the CI
+log instead of archive-only artifacts.
+
+Each `--gate SUBSTR:PCT` turns one slice of the diff into a hard regression
+gate: every flattened key containing SUBSTR that exists in BOTH documents
+must not drop by more than PCT percent (higher-is-better metrics, e.g.
+GFLOP/s). Exit code 1 if any gated metric regresses past the threshold.
+Keys present only in the PR doc are skipped with an advisory note, so the
+PR that introduces a metric cannot fail its own gate.
 """
 
 import json
@@ -36,13 +43,71 @@ def flatten(node, prefix=""):
     return out
 
 
+def parse_gates(args):
+    """['SUBSTR:PCT', ...] -> [(substr, pct), ...]; exits 2 on malformed."""
+    gates = []
+    for spec in args:
+        substr, sep, pct = spec.rpartition(":")
+        if not sep or not substr:
+            print(f"bench_diff: bad --gate spec '{spec}' (want SUBSTR:PCT)",
+                  file=sys.stderr)
+            sys.exit(2)
+        try:
+            gates.append((substr, float(pct)))
+        except ValueError:
+            print(f"bench_diff: bad --gate threshold in '{spec}'",
+                  file=sys.stderr)
+            sys.exit(2)
+    return gates
+
+
+def apply_gates(gates, base, pr):
+    """Returns the number of gate failures; prints a verdict per gated key."""
+    failures = 0
+    for substr, pct in gates:
+        hits = sorted(k for k in pr if substr in k)
+        if not hits:
+            # Gate keyed on a metric the PR doc doesn't emit: that IS a
+            # regression (the bench row was dropped), fail loudly.
+            print(f"gate '{substr}': no matching metric in PR doc — FAIL")
+            failures += 1
+            continue
+        for k in hits:
+            if k not in base:
+                print(f"gate '{substr}': {k} absent on base branch; "
+                      "skipping (new metric)")
+                continue
+            b, p = base[k], pr[k]
+            if b <= 0.0:
+                print(f"gate '{substr}': {k} base value {b} not positive; "
+                      "skipping")
+                continue
+            delta = (p - b) / b * 100.0
+            verdict = "FAIL" if delta < -pct else "ok"
+            print(f"gate '{substr}': {k} {b:.3f} -> {p:.3f} "
+                  f"({delta:+.1f}%, floor -{pct:.0f}%) {verdict}")
+            if delta < -pct:
+                failures += 1
+    return failures
+
+
 def main():
-    if len(sys.argv) != 3:
+    argv = sys.argv[1:]
+    gate_specs = []
+    while "--gate" in argv:
+        i = argv.index("--gate")
+        if i + 1 >= len(argv):
+            print("bench_diff: --gate needs an argument", file=sys.stderr)
+            return 2
+        gate_specs.append(argv[i + 1])
+        del argv[i:i + 2]
+    if len(argv) != 2:
         print(__doc__, file=sys.stderr)
         return 2
-    with open(sys.argv[1]) as f:
+    gates = parse_gates(gate_specs)
+    with open(argv[0]) as f:
         base = flatten(json.load(f))
-    with open(sys.argv[2]) as f:
+    with open(argv[1]) as f:
         pr = flatten(json.load(f))
 
     keys = sorted(set(base) | set(pr))
@@ -56,6 +121,13 @@ def main():
             continue
         delta = f"{(p - b) / b * 100.0:+7.1f}%" if b else "    n/a"
         print(f"{k:<{width}}  {b:>12.3f}  {p:>12.3f}  {delta:>8}")
+
+    if gates:
+        print()
+        failures = apply_gates(gates, base, pr)
+        if failures:
+            print(f"bench_diff: {failures} gated metric(s) regressed")
+            return 1
     return 0
 
 

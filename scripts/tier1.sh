@@ -25,10 +25,15 @@
 #          spectral-health smoke: a short native train with --spectra-out
 #          (spectra.jsonl, uploaded by CI), `sct doctor` over the produced
 #          checkpoint, and an injected-NaN watchdog run that must halt
-#          with a non-zero exit and a counted anomaly. Runs with
-#          SCT_THREADS=2 unless the caller overrides it, so the parallel
-#          kernel paths are exercised in CI (results are bit-identical at
-#          any thread count).
+#          with a non-zero exit and a counted anomaly. The kernel bench's
+#          matmul_gflops rows (single-thread blocked-kernel GFLOP/s at
+#          ranks 32 and 128, run even in smoke mode) feed the
+#          kernel-regression gate in scripts/bench_compare.sh; this stage
+#          checks both kernel JSONs record the detected SIMD feature set
+#          ("simd" field) and echoes it so perf numbers are attributable
+#          to the runner's ISA. Runs with SCT_THREADS=2 unless the caller
+#          overrides it, so the parallel kernel paths are exercised in CI
+#          (results are bit-identical at any thread count).
 
 set -euo pipefail
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
@@ -187,6 +192,21 @@ run_bench() {
         --json "$repo_root/BENCH_kernels.json" \
         --profile-json "$repo_root/BENCH_profile.json"
     echo "tier1: wrote $repo_root/BENCH_kernels.json"
+
+    # Both kernel JSONs must record the detected SIMD feature set so a
+    # GFLOP/s delta in the regression gate is attributable to the runner.
+    for bj in BENCH_kernels.json BENCH_profile.json; do
+        if ! grep -q '"simd"' "$repo_root/$bj"; then
+            echo "tier1: SIMD feature set missing from $bj" >&2
+            exit 1
+        fi
+    done
+    simd_label="$(grep -o '"simd": *"[^"]*"' "$repo_root/BENCH_kernels.json" | head -1)"
+    echo "tier1: kernel bench SIMD feature set: ${simd_label:-unknown}"
+    if ! grep -q 'matmul_gflops@r128' "$repo_root/BENCH_kernels.json"; then
+        echo "tier1: rank-128 matmul_gflops rows missing from BENCH_kernels.json" >&2
+        exit 1
+    fi
 
     echo "== tier1: profiler roofline check (BENCH_profile.json) =="
     # The roofline pass must attribute work to every mandatory kernel; a
